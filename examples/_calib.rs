@@ -1,0 +1,54 @@
+//! Model-calibration report (dev tool): prints the gpusim model's values
+//! next to every paper-measured number it is fitted against. Re-run after
+//! touching `gpusim::device` constants.
+fn main() {
+    use ftgemm::codegen::ShapeClass;
+    use ftgemm::figures::*;
+    use ftgemm::gpusim::cublas::cublas_gflops;
+    use ftgemm::gpusim::device::{A100, T4};
+    use ftgemm::gpusim::ft_model::{overhead_pct, FtLevel, FtVariant};
+    use ftgemm::gpusim::stepwise::{average_gflops, ladder};
+
+    println!("== Fig 9 ladder (T4) ==");
+    for s in ladder() {
+        let g = average_gflops(&T4, &s.config);
+        println!(
+            "{:14} model {:7.0}  paper {:7.0}  ({:+.1}%)",
+            s.name,
+            g,
+            s.paper_t4_gflops,
+            (g / s.paper_t4_gflops - 1.0) * 100.0
+        );
+    }
+    let huge = ShapeClass::Huge.params();
+    let sizes = [1024usize, 2048, 3072, 4096, 5120, 6144];
+    for dev in [&T4, &A100] {
+        println!("== FT overheads vs base ({}) avg 1024..6144 ==", dev.name);
+        for (name, v) in [
+            ("tb", FtVariant::Fused(FtLevel::Tb)),
+            ("warp", FtVariant::Fused(FtLevel::Warp)),
+            ("thread", FtVariant::Fused(FtLevel::Thread)),
+            ("detect", FtVariant::DetectOnly),
+            ("nonfused", FtVariant::NonFused { ks: 256 }),
+        ] {
+            let avg: f64 =
+                sizes.iter().map(|&s| overhead_pct(dev, huge, s, s, s, v)).sum::<f64>() / 6.0;
+            println!("  {name:9} {avg:+6.2}%");
+        }
+        let base: f64 = sizes
+            .iter()
+            .map(|&s| preset_gflops(dev, huge, s, s, s))
+            .sum::<f64>()
+            / 6.0;
+        let cb: f64 = sizes.iter().map(|&s| cublas_gflops(dev, s, s, s)).sum::<f64>() / 6.0;
+        println!("  ours {base:.0} GF vs cublas {cb:.0} GF -> ours/cublas = {:.3}", base / cb);
+    }
+    for (dev, nm) in [(&T4, "T4"), (&A100, "A100")] {
+        let avg: f64 = irregular_sizes()
+            .iter()
+            .map(|&m| generated_gflops(dev, m, m, 256) / cublas_gflops(dev, m, m, 256))
+            .sum::<f64>()
+            / irregular_sizes().len() as f64;
+        println!("{nm}: generated/cublas (K=256 sweep) avg {avg:.3}  [paper: T4 1.1821, A100 1.2245]");
+    }
+}

@@ -1,0 +1,85 @@
+//! Error-storm campaign: the paper's abstract claim — "minimal overhead
+//! ... even with hundreds of errors injected per minute" — exercised for
+//! real on the serving stack.
+//!
+//!     make artifacts && cargo run --release --example error_storm
+//!
+//! Runs three campaigns over the same workload: unprotected (to size the
+//! baseline), online ABFT under a Poisson SEU storm, and offline ABFT
+//! under the same storm (counting its recomputes). Every result is
+//! checked against the host matmul.
+
+use std::time::Instant;
+
+use ftgemm::faults::{FaultCampaign, SeuModel};
+use ftgemm::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::start(EngineConfig::default())?;
+    let coord = Coordinator::new(engine, CoordinatorConfig::default());
+    let (m, n, k) = (128usize, 128usize, 128usize);
+    let rounds = 30;
+
+    // baseline: unprotected, fault-free
+    let t0 = Instant::now();
+    let clean = FaultCampaign::new(coord.clone(), SeuModel::None, FtPolicy::None, 1)
+        .run(m, n, k, rounds)?;
+    let t_base = t0.elapsed();
+    println!(
+        "baseline  : {rounds} GEMMs in {t_base:?}, max err {:.1e}",
+        clean.max_error_vs_reference
+    );
+
+    // online ABFT under a storm: 4 SEUs per GEMM
+    let storm = SeuModel::PerGemm { count: 4 };
+    let t1 = Instant::now();
+    let online = FaultCampaign::new(coord.clone(), storm, FtPolicy::Online, 2)
+        .run(m, n, k, rounds)?;
+    let t_online = t1.elapsed();
+    println!(
+        "online FT : {rounds} GEMMs in {t_online:?}; injected {} detected {} corrected {} ({:.0} errors/min), max err {:.1e}",
+        online.injected,
+        online.detected,
+        online.corrected,
+        online.errors_per_minute(),
+        online.max_error_vs_reference
+    );
+    // `corrected` can exceed `injected`: correcting a 2^20-magnitude offset
+    // leaves an O(eps*mag) residue that the next verification refines again.
+    assert!(online.corrected >= online.injected, "online must correct everything");
+    assert_eq!(online.recomputes, 0, "online never recomputes");
+    assert!(online.max_error_vs_reference < 0.5);
+
+    // offline ABFT under a lighter storm (1 SEU/GEMM): every detection is
+    // a full recompute
+    let t2 = Instant::now();
+    let offline = FaultCampaign::new(
+        coord.clone(),
+        SeuModel::PerGemm { count: 1 },
+        FtPolicy::Offline,
+        3,
+    )
+    .run(m, n, k, rounds)?;
+    let t_offline = t2.elapsed();
+    println!(
+        "offline FT: {rounds} GEMMs in {t_offline:?}; injected {} detected {} recomputes {} (2x work per hit), max err {:.1e}",
+        offline.injected,
+        offline.detected,
+        offline.recomputes,
+        offline.max_error_vs_reference
+    );
+    assert_eq!(offline.recomputes as usize, rounds, "1 SEU/GEMM -> 1 recompute each");
+    assert!(offline.max_error_vs_reference < 1e-3);
+
+    println!(
+        "\nonline overhead vs baseline: {:+.1}% | offline (under storm): {:+.1}%",
+        (t_online.as_secs_f64() / t_base.as_secs_f64() - 1.0) * 100.0,
+        (t_offline.as_secs_f64() / t_base.as_secs_f64() - 1.0) * 100.0
+    );
+    println!(
+        "coordinator counters: {:?}",
+        coord.counters().snapshot()
+    );
+    println!("error_storm OK");
+    Ok(())
+}

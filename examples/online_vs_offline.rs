@@ -1,0 +1,64 @@
+//! Online vs offline ABFT (paper §5.5 / Fig 22) — both the live-system
+//! comparison and the analytical crossover.
+//!
+//!     make artifacts && cargo run --release --example online_vs_offline
+//!
+//! Live: runs both policies on the serving stack under increasing error
+//! rates and reports effective work (kernel launches) per correct result.
+//! Model: prints the Fig 22 overhead curves and the crossover size.
+
+use ftgemm::codegen::ShapeClass;
+use ftgemm::faults::model::{expected_offline_runs, overall_error_rate};
+use ftgemm::faults::{FaultCampaign, SeuModel};
+use ftgemm::gpusim::analytic;
+use ftgemm::gpusim::device::T4;
+use ftgemm::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::start(EngineConfig::default())?;
+    let coord = Coordinator::new(engine, CoordinatorConfig::default());
+    let (m, n, k) = (128usize, 128usize, 128usize);
+    let rounds = 20;
+
+    println!("live comparison @ {m}x{n}x{k}, {rounds} GEMMs per cell");
+    println!("{:>10} {:>8} {:>10} {:>12} {:>12}", "SEUs/GEMM", "policy", "detected", "recomputes", "launches");
+    for count in [0usize, 1, 2] {
+        for policy in [FtPolicy::Online, FtPolicy::Offline] {
+            let model = if count == 0 {
+                SeuModel::None
+            } else {
+                SeuModel::PerGemm { count }
+            };
+            let rep = FaultCampaign::new(coord.clone(), model, policy, 11 + count as u64)
+                .run(m, n, k, rounds)?;
+            println!(
+                "{count:>10} {:>8} {:>10} {:>12} {:>12}",
+                policy.name(),
+                rep.detected,
+                rep.recomputes,
+                rep.kernel_launches
+            );
+            assert!(rep.max_error_vs_reference < 0.5);
+        }
+    }
+    println!("-> online: constant launches regardless of errors;");
+    println!("   offline: launches grow ~(1 + detections) — the §5.5 trade-off.\n");
+
+    // analytical Fig 22
+    let p = ShapeClass::Huge.params();
+    let gamma0 = 1.0 / 256.0;
+    println!("modeled T4 overhead vs unprotected (gamma0 = 1/256):");
+    println!("{:>8} {:>10} {:>11} {:>9} {:>14}", "M=N=K", "online %", "offline %", "gamma", "E[offline runs]");
+    for s in [256usize, 512, 1024, 2048, 4096, 6144] {
+        let on = analytic::online_overhead_pct(&T4, p, s, s, s);
+        let off = analytic::offline_overhead_pct(&T4, p, s, s, s, gamma0);
+        let gamma = overall_error_rate(gamma0, s, s, p.m_tb, p.n_tb);
+        let runs = if gamma < 0.499 { expected_offline_runs(gamma) } else { f64::NAN };
+        println!("{s:>8} {on:>10.2} {off:>11.2} {gamma:>9.4} {runs:>14.3}");
+    }
+    if let Some(x) = analytic::crossover_size(&T4, p, gamma0) {
+        println!("\ncrossover: online becomes cheaper at M=N=K ≈ {x}");
+    }
+    println!("online_vs_offline OK");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+"""AOT pipeline: lower every registry variant to HLO text + manifest.
+
+Python runs ONCE, here. The interchange format is HLO *text*, not a
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly.
+
+    cd python && python -m compile.aot --out ../artifacts
+
+writes  <out>/<name>.hlo.txt        one per ArtifactSpec
+        <out>/manifest.json         shapes + roles + metadata for rust
+
+Lowering goes through stablehlo -> XlaComputation with return_tuple=True;
+the rust runtime unwraps the tuple (Literal::to_tuple).
+"""
+
+import argparse
+import hashlib
+import json
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import REGISTRY, ArtifactSpec
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: ArtifactSpec) -> str:
+    lowered = jax.jit(spec.fn).lower(*spec.args)
+    return to_hlo_text(lowered)
+
+
+def _shape_entry(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def _out_shapes(spec: ArtifactSpec) -> list[dict]:
+    outs = jax.eval_shape(spec.fn, *spec.args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    assert len(outs) == len(spec.outputs), (
+        f"{spec.name}: {len(outs)} outputs but {len(spec.outputs)} roles"
+    )
+    return [
+        {"role": role, **_shape_entry(o)} for role, o in zip(spec.outputs, outs)
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="AOT-lower all kernel variants")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="comma-separated subset of names")
+    args = ap.parse_args(argv)
+
+    import os
+
+    os.makedirs(args.out, exist_ok=True)
+    names = list(REGISTRY) if args.only is None else args.only.split(",")
+
+    manifest = {"format": 1, "artifacts": []}
+    t_all = time.time()
+    for name in names:
+        spec = REGISTRY[name]
+        t0 = time.time()
+        hlo = lower_spec(spec)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(hlo)
+        entry = {
+            "name": name,
+            "file": fname,
+            "sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+            "inputs": [_shape_entry(a) for a in spec.args],
+            "outputs": _out_shapes(spec),
+            "meta": spec.meta,
+        }
+        manifest["artifacts"].append(entry)
+        print(f"  {name:28s} {len(hlo)/1024:8.1f} KiB  {time.time()-t0:5.1f}s")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"{len(names)} artifacts in {time.time()-t_all:.1f}s -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,141 @@
+"""Kernel parameterization — the paper's Table 1.
+
+The code-generation template (template.py) takes the 7 tile parameters the
+paper uses for its SGEMM codegen (§3.2.1):
+
+    m_tb, n_tb, k_tb : threadblock-level tile     (grid program tile on TPU)
+    m_w,  n_w        : warp-level tile            (checksum sub-tile on TPU)
+    m_t,  n_t        : thread-level tile          (micro-tile / register block)
+
+plus FT-related parameters that the paper bakes into its FT-SGEMM template
+(§4.3): the fault-tolerance granularity level and the verification interval.
+
+Table 1 presets (T4) are reproduced verbatim; the same presets drive both
+the python codegen and the rust-side selection heuristic + gpusim model
+(rust/src/codegen/params.rs mirrors this table — keep them in sync).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class KernelParams:
+    """The 7 codegen parameters of the paper's SGEMM template (Table 1)."""
+
+    m_tb: int
+    n_tb: int
+    k_tb: int
+    m_w: int
+    n_w: int
+    m_t: int
+    n_t: int
+
+    def validate(self) -> None:
+        """Divisibility constraints the CUDA template needs (warp layout,
+        vectorized loads) and that our Pallas template needs (sub-tile
+        reshapes)."""
+        if self.m_tb % self.m_w or self.n_tb % self.n_w:
+            raise ValueError(f"warp tile must divide threadblock tile: {self}")
+        if self.m_w % self.m_t or self.n_w % self.n_t:
+            raise ValueError(f"thread tile must divide warp tile: {self}")
+        for v in (self.m_tb, self.n_tb, self.k_tb, self.m_w, self.n_w, self.m_t, self.n_t):
+            if v <= 0 or (v & (v - 1)) != 0:
+                raise ValueError(f"tile sizes must be positive powers of two: {self}")
+
+    @property
+    def warps_per_block(self) -> int:
+        return (self.m_tb // self.m_w) * (self.n_tb // self.n_w)
+
+    @property
+    def threads_per_block(self) -> int:
+        # In CUDA terms: each thread owns an m_t x n_t micro-tile.
+        return (self.m_tb // self.m_t) * (self.n_tb // self.n_t)
+
+    def sub_tile(self, level: str):
+        """Checksum granularity for an FT level (paper §4.2):
+        thread-level ABFT verifies per m_t x n_t micro-tile, warp-level per
+        m_w x n_w sub-tile, threadblock-level per full m_tb x n_tb tile."""
+        if level == "thread":
+            return self.m_t, self.n_t
+        if level == "warp":
+            return self.m_w, self.n_w
+        if level == "tb":
+            return self.m_tb, self.n_tb
+        raise ValueError(f"unknown FT level {level!r}")
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Table 1: SGEMM kernel parameter setup on a Tesla T4 GPU (verbatim).
+# ---------------------------------------------------------------------------
+TABLE1: dict[str, KernelParams] = {
+    "small": KernelParams(16, 16, 16, 8, 16, 2, 2),
+    "medium": KernelParams(32, 32, 8, 16, 32, 4, 4),
+    "large": KernelParams(64, 64, 8, 32, 64, 8, 8),
+    "tall": KernelParams(32, 128, 8, 16, 64, 4, 8),  # "tall and skinny"
+    "huge": KernelParams(128, 128, 8, 32, 64, 8, 8),
+}
+
+
+def select_class(m: int, n: int, k: int) -> str:
+    """The paper's semi-empirical shape-class heuristic (§3.2.2): the four
+    square-ish classes split at 128/256/512, plus `tall` for strongly
+    rectangular outputs (one output dim >= 4x the other)."""
+    lo, hi = sorted((m, n))
+    if hi >= 4 * lo and hi >= 128:
+        return "tall"
+    size = max(m, n)
+    if size <= 128:
+        return "small"
+    if size <= 256:
+        return "medium"
+    if size <= 512:
+        return "large"
+    return "huge"
+
+
+def select_params(m: int, n: int, k: int) -> KernelParams:
+    return TABLE1[select_class(m, n, k)]
+
+
+# ---------------------------------------------------------------------------
+# Artifact shape buckets: HLO is fixed-shape, so the AOT pipeline lowers one
+# kernel per (class, concrete bucket shape); the rust router pads requests up
+# to the bucket. Buckets are chosen so each class's preset parameters divide
+# the bucket dims exactly.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Bucket:
+    name: str
+    m: int
+    n: int
+    k: int
+    params: KernelParams = field(compare=False)
+
+    def __post_init__(self):
+        p = self.params
+        p.validate()
+        if self.m % p.m_tb or self.n % p.n_tb or self.k % p.k_tb:
+            raise ValueError(f"bucket {self.name} not divisible by its tile params")
+
+
+BUCKETS: dict[str, Bucket] = {
+    "small": Bucket("small", 64, 64, 64, TABLE1["small"]),
+    "medium": Bucket("medium", 128, 128, 128, TABLE1["medium"]),
+    "large": Bucket("large", 256, 256, 256, TABLE1["large"]),
+    "tall": Bucket("tall", 128, 512, 256, TABLE1["tall"]),
+    "huge": Bucket("huge", 512, 512, 512, TABLE1["huge"]),
+}
+
+# Fused-FT kernels track up to MAX_INJ injected errors per execution; the
+# injection descriptor is a dense (MAX_INJ, 6) f32 input (see template.py).
+MAX_INJ = 8
+
+# Default verification interval (in k-steps): checksums are *updated* every
+# k_tb step; verification + correction fire every VERIFY_EVERY steps and on
+# the final step. This is the paper's "error detection and correction
+# period" (§4.1) — SEU is assumed per interval, matching Ding's K_s protocol
+# in the Fig 16 comparison.
+VERIFY_EVERY = 8

@@ -1,0 +1,160 @@
+"""Pure-jnp oracles for the GEMM + ABFT kernels.
+
+Everything in this file is the *specification*: plain jax.numpy with no
+pallas, no tiling, no cleverness. pytest checks every pallas kernel and
+every lowered artifact against these functions.
+
+Checksum algebra (paper §2.2, eq. 1-3):
+
+    A^c = [A; e^T A]        (column-checksum encoding: extra row)
+    B^r = [B, B e]          (row-checksum encoding: extra column)
+    C^f = A^c B^r = [[C, Ce], [e^T C, *]]
+
+so `Ce` (row sums of C) and `e^T C` (column sums of C) are carried along by
+the multiplication itself; a mismatch between recomputed sums of C and the
+carried checksums locates an error: the faulty row from the Ce residual,
+the faulty column from the e^T C residual, and the magnitude from either.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gemm(a, b):
+    """C = A @ B in f32 — the semantic baseline for everything."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Encodings
+# ---------------------------------------------------------------------------
+def encode_a(a):
+    """A -> A^c: append the column-sum row e^T A (eq. 1)."""
+    return jnp.vstack([a, jnp.sum(a, axis=0, keepdims=True)])
+
+
+def encode_b(b):
+    """B -> B^r: append the row-sum column B e (eq. 2)."""
+    return jnp.hstack([b, jnp.sum(b, axis=1, keepdims=True)])
+
+
+def full_checksum_product(a, b):
+    """C^f = A^c B^r (eq. 3) — the (M+1) x (N+1) checksummed product."""
+    return gemm(encode_a(a), encode_b(b))
+
+
+def row_checksum(c):
+    """C e — per-row sums (the paper's C^r)."""
+    return jnp.sum(c, axis=1)
+
+
+def col_checksum(c):
+    """e^T C — per-column sums (the paper's C^c)."""
+    return jnp.sum(c, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Sub-tile checksums: the unified view of thread/warp/threadblock-level ABFT.
+# A (sm, sn) granularity partitions C into (M/sm, N/sn) sub-tiles, each
+# carrying its own row/col checksums (thread level: sm,sn = m_t,n_t; warp:
+# m_w,n_w; threadblock: m_tb,n_tb).
+# ---------------------------------------------------------------------------
+def subtile_row_checksums(c, sm, sn):
+    """(M/sm, sm, N/sn): row sums within each (sm, sn) sub-tile."""
+    m, n = c.shape
+    return c.reshape(m // sm, sm, n // sn, sn).sum(axis=3)
+
+
+def subtile_col_checksums(c, sm, sn):
+    """(M/sm, N/sn, sn): column sums within each (sm, sn) sub-tile."""
+    m, n = c.shape
+    return c.reshape(m // sm, sm, n // sn, sn).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Injection + detection/correction oracle
+# ---------------------------------------------------------------------------
+def apply_injections(c, injections):
+    """Apply additive SEU offsets (the paper's §5.3 protocol) to a C matrix.
+
+    injections: iterable of (row, col, magnitude) in *global* coordinates.
+    """
+    c = np.asarray(c).copy()
+    for r, col, mag in injections:
+        c[int(r), int(col)] += mag
+    return jnp.asarray(c)
+
+
+def detect_and_correct(c_faulty, cr, cc, rel=1e-4, abs_=1e-3):
+    """Offline single-error detect + correct over a full matrix given carried
+    checksums cr = (true C) e and cc = e^T (true C).
+
+    Returns (corrected C, n_corrected). Mirrors the in-kernel logic at
+    threadblock granularity but for whole matrices — used to cross-check the
+    kernels and by the rust host-side re-verification tests.
+    """
+    c = np.asarray(c_faulty).astype(np.float64)
+    cr = np.asarray(cr, dtype=np.float64)
+    cc = np.asarray(cc, dtype=np.float64)
+    dr = c.sum(axis=1) - cr
+    dc = c.sum(axis=0) - cc
+    tr = rel * (np.abs(c).sum(axis=1) + np.abs(cr)) + abs_
+    tc = rel * (np.abs(c).sum(axis=0) + np.abs(cc)) + abs_
+    row_bad = np.abs(dr) > tr
+    col_bad = np.abs(dc) > tc
+    n = 0
+    if row_bad.any() and col_bad.any():
+        r = int(np.argmax(np.abs(dr)))
+        col = int(np.argmax(np.abs(dc)))
+        c[r, col] -= dr[r]
+        n = 1
+    return jnp.asarray(c.astype(np.float32)), n
+
+
+# ---------------------------------------------------------------------------
+# Ding et al. 2011 non-fused outer-product ABFT oracle (the baseline the
+# paper compares against in Figs 12-16). The output matrix is accumulated
+# over a series of (M x K_s) @ (K_s x N) products; checksums are verified
+# after every step.
+# ---------------------------------------------------------------------------
+def ding_outer_product(a, b, ks):
+    """Reference for the non-fused pipeline: returns the final C^f after
+    accumulating K/ks encoded outer-product steps."""
+    m, k = a.shape
+    _, n = b.shape
+    ac = encode_a(a)  # (M+1, K)
+    br = encode_b(b)  # (K, N+1)
+    cf = jnp.zeros((m + 1, n + 1), dtype=jnp.float32)
+    for s in range(0, k, ks):
+        cf = cf + gemm(ac[:, s : s + ks], br[s : s + ks, :])
+    return cf
+
+
+def ding_verify(cf, rel=1e-4, abs_=1e-3):
+    """Check the C^f invariants: C row sums vs the checksum column, C column
+    sums vs the checksum row. Returns (row_residual, col_residual, ok)."""
+    c = cf[:-1, :-1]
+    dr = jnp.sum(c, axis=1) - cf[:-1, -1]
+    dc = jnp.sum(c, axis=0) - cf[-1, :-1]
+    tr = rel * (jnp.sum(jnp.abs(c), axis=1) + jnp.abs(cf[:-1, -1])) + abs_
+    tc = rel * (jnp.sum(jnp.abs(c), axis=0) + jnp.abs(cf[-1, :-1])) + abs_
+    ok = (jnp.abs(dr) <= tr).all() & (jnp.abs(dc) <= tc).all()
+    return dr, dc, ok
+
+
+# ---------------------------------------------------------------------------
+# FLOP accounting (shared with gpusim; keep formulas in sync with
+# rust/src/gpusim/kernel_model.rs)
+# ---------------------------------------------------------------------------
+def gemm_flops(m, n, k):
+    return 2.0 * m * n * k
+
+
+def checksum_encode_flops(m, n, k, sm, sn):
+    """Extra FLOPs for maintaining sub-tile checksums at (sm, sn)
+    granularity: encoding e^T A and B e per sub-tile row/column band plus the
+    two rank-update products (paper §4.2.2: thread level costs 2/n_t of the
+    GEMM; this generalizes that ratio)."""
+    enc = k * (n / sn) + k * (m / sm)
+    acc = 2.0 * m * k * (n / sn) + 2.0 * n * k * (m / sm)
+    return enc + acc

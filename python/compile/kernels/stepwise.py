@@ -1,0 +1,123 @@
+"""Step-wise SGEMM optimization variants (paper §3.1 / Fig 9).
+
+The paper walks seven steps from a naive CUDA kernel to one that beats
+cuBLAS. Steps differ in *where data is reused*, which on TPU maps to block
+shapes and scheduling rather than explicit shared-memory code; the variants
+below reproduce the three *structurally distinct* stages as real Pallas
+kernels (all numerically identical to C = A·B — pytest asserts that), and
+the remaining stages (vectorized load/store, the two prefetch pipelines)
+are pure scheduling concerns, modeled analytically in
+rust/src/gpusim/stepwise.rs which regenerates the Fig 9 GFLOPS series.
+
+    v0 naive        : no operand reuse — each program streams a full K-row /
+                      K-column per tiny output tile (the O(n^3) global
+                      traffic of §3.1.1).
+    v1 tb-tiling    : threadblock tile + k-loop accumulation (shared-memory
+                      reuse of §3.1.2).
+    v2 thread-tiling: micro-tile (m_t, n_t) structure inside the tile
+                      (register reuse of §3.1.3); expressed as a blocked
+                      einsum so the register-block structure is explicit in
+                      the lowered HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .params import KernelParams
+
+
+def make_naive(m: int, n: int, k: int, tile: int = 8):
+    """§3.1.1: each program owns a tile x tile output block and reads the
+    full K extent of A and B from "global memory" (no k-blocking, no reuse
+    across programs)."""
+    if m % tile or n % tile:
+        raise ValueError("naive tile must divide m, n")
+
+    def kernel(a_ref, b_ref, c_ref):
+        c_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tile, n // tile),
+        in_specs=[
+            pl.BlockSpec((tile, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )
+
+
+def make_tb_tiled(m: int, n: int, k: int, p: KernelParams):
+    """§3.1.2: threadblock tiling — k becomes a grid dimension, operand
+    tiles are VMEM-resident and reused across the tile's output elements."""
+
+    def kernel(a_ref, b_ref, c_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _():
+            c_ref[...] = jnp.zeros(c_ref.shape, jnp.float32)
+
+        c_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // p.m_tb, n // p.n_tb, k // p.k_tb),
+        in_specs=[
+            pl.BlockSpec((p.m_tb, p.k_tb), lambda i, j, s: (i, s)),
+            pl.BlockSpec((p.k_tb, p.n_tb), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((p.m_tb, p.n_tb), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )
+
+
+def make_thread_tiled(m: int, n: int, k: int, p: KernelParams):
+    """§3.1.3: adds the (m_t, n_t) micro-tile structure — the blocked einsum
+    makes the register-block loop nest explicit in the lowered HLO (each
+    (m_t, n_t) block is one register accumulation in the CUDA original)."""
+    S_m, S_n = p.m_tb // p.m_t, p.n_tb // p.n_t
+
+    def kernel(a_ref, b_ref, c_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _():
+            c_ref[...] = jnp.zeros(c_ref.shape, jnp.float32)
+
+        a4 = a_ref[...].reshape(S_m, p.m_t, p.k_tb)
+        b4 = b_ref[...].reshape(p.k_tb, S_n, p.n_t)
+        # (S_m, m_t, S_n, n_t): one einsum term per micro-tile register block
+        blocks = jnp.einsum("aik,kbj->aibj", a4, b4)
+        c_ref[...] += blocks.reshape(p.m_tb, p.n_tb)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // p.m_tb, n // p.n_tb, k // p.k_tb),
+        in_specs=[
+            pl.BlockSpec((p.m_tb, p.k_tb), lambda i, j, s: (i, s)),
+            pl.BlockSpec((p.k_tb, p.n_tb), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((p.m_tb, p.n_tb), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )
+
+
+STEPWISE_BUILDERS = {
+    "naive": lambda m, n, k, p: make_naive(m, n, k),
+    "tbtile": make_tb_tiled,
+    "threadtile": make_thread_tiled,
+}
+
+# The full seven-step ladder of Fig 9; entries without a pallas builder are
+# scheduling-only refinements whose cost model lives in gpusim::stepwise.
+STEPWISE_LADDER = [
+    ("naive", "naive baseline", True),
+    ("tbtile", "threadblock-level tiling", True),
+    ("threadtile", "thread-level tiling", True),
+    ("warptile", "warp-level tiling", False),
+    ("vectorized", "128-bit vectorized load/store", False),
+    ("prefetch_reg", "prefetch shared->register", False),
+    ("prefetch_smem", "prefetch global->shared", False),
+]

@@ -1,0 +1,294 @@
+"""Template-based code generation for (FT-)GEMM Pallas kernels.
+
+This module is the reproduction of the paper's §3.2 + §4.3 contribution: a
+single parameterized template that, given the 7 Table-1 tile parameters and
+an optional fault-tolerance level, *generates* a high-performance kernel for
+a concrete input shape. The CUDA template emits SIMT code; ours emits a
+Pallas kernel (see DESIGN.md §Hardware-Adaptation for the mapping):
+
+    threadblock tile (m_tb, n_tb, k_tb) -> pallas grid program + BlockSpec
+    warp tile (m_w, n_w)                -> checksum sub-tile granularity
+    thread tile (m_t, n_t)              -> micro-tile (register block)
+
+Fused online ABFT (§4.2, unified across the three levels): the kernel
+maintains per-sub-tile row/column checksums updated *from the input
+operands* each k-step (so they always reflect the true product), injects
+SEU offsets into the accumulator when requested, and every
+``verify_every`` k-steps recomputes the accumulator's sub-tile sums,
+compares against the carried checksums, locates the faulty element (row
+from the C·e residual, column from the eᵀ·C residual) and subtracts the
+offset — detection *and* correction fully inside the kernel, no extra
+memory passes (the "fully-fused" property the paper claims over Kosaian &
+Rashmi '21).
+
+All kernels use ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the rust
+runtime runs natively. Real-TPU performance is *modeled* (rust/src/gpusim),
+never measured from these binaries.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .params import MAX_INJ, VERIFY_EVERY, KernelParams
+
+# Detection thresholds: residuals are compared against
+#   rel * (|recomputed sums| + |carried checksum|) + abs
+# which tracks f32 accumulation drift (different summation orders between
+# the checksum path and the row/col sums of the accumulator).
+DEFAULT_REL = 1e-4
+DEFAULT_ABS = 1e-3
+
+
+def _check_divisible(m, n, k, p: KernelParams):
+    p.validate()
+    if m % p.m_tb or n % p.n_tb or k % p.k_tb:
+        raise ValueError(
+            f"shape ({m},{n},{k}) not divisible by tile ({p.m_tb},{p.n_tb},{p.k_tb})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Plain GEMM template (§3.1 endpoint: tiled + k-pipelined)
+# ---------------------------------------------------------------------------
+def make_gemm(m: int, n: int, k: int, p: KernelParams):
+    """Generate the non-FT SGEMM kernel: 3-D grid (i, j, s) with the k
+    dimension innermost and accumulating (the outer-product k-loop of
+    Fig 2); A/B tiles stream HBM->VMEM per BlockSpec (the double-buffered
+    prefetch of §3.1.7 is the TPU pipeline's job once the schedule is
+    expressed this way)."""
+    _check_divisible(m, n, k, p)
+
+    def kernel(a_ref, b_ref, c_ref):
+        s = pl.program_id(2)
+
+        @pl.when(s == 0)
+        def _init():
+            c_ref[...] = jnp.zeros(c_ref.shape, jnp.float32)
+
+        c_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    grid = (m // p.m_tb, n // p.n_tb, k // p.k_tb)
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p.m_tb, p.k_tb), lambda i, j, s: (i, s)),
+            pl.BlockSpec((p.k_tb, p.n_tb), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((p.m_tb, p.n_tb), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )
+
+    def gemm(a, b):
+        return (fn(a, b),)
+
+    return gemm
+
+
+# ---------------------------------------------------------------------------
+# Fused FT-GEMM template (§4.2: thread / warp / threadblock level unified)
+# ---------------------------------------------------------------------------
+def make_ft_gemm(
+    m: int,
+    n: int,
+    k: int,
+    p: KernelParams,
+    level: str = "tb",
+    correct: bool = True,
+    verify_every: int = VERIFY_EVERY,
+    max_inj: int = MAX_INJ,
+    rel: float = DEFAULT_REL,
+    abs_: float = DEFAULT_ABS,
+):
+    """Generate a fused fault-tolerant SGEMM kernel.
+
+    level   : 'thread' | 'warp' | 'tb' — checksum granularity (paper §4.2.1-3)
+    correct : True = online ABFT (detect + correct in-kernel, §4.2);
+              False = detect-only / offline ABFT (§5.5) — the coordinator
+              must recompute on detection.
+
+    Inputs : A (m,k) f32, B (k,n) f32, inj (max_inj, 4) f32 rows of
+             [global_row, global_col, k_step, magnitude]; magnitude 0 ⇒ slot
+             unused, so the same artifact serves fault-free and injected runs.
+    Outputs: C (m,n); CR (gm,gn,S_m,sm,S_n) carried row checksums;
+             CC (gm,gn,S_m,S_n,sn) carried col checksums; ERR (gm,gn) count
+             of detected(-and-corrected) errors per tile.
+    """
+    _check_divisible(m, n, k, p)
+    sm, sn = p.sub_tile(level)
+    S_m, S_n = p.m_tb // sm, p.n_tb // sn
+    gm, gn, gk = m // p.m_tb, n // p.n_tb, k // p.k_tb
+    m_tb, n_tb, k_tb = p.m_tb, p.n_tb, p.k_tb
+
+    def kernel(a_ref, b_ref, inj_ref, c_ref, cr_ref, cc_ref, err_ref):
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        s = pl.program_id(2)
+        nk = pl.num_programs(2)
+
+        @pl.when(s == 0)
+        def _init():
+            c_ref[...] = jnp.zeros(c_ref.shape, jnp.float32)
+            cr_ref[...] = jnp.zeros(cr_ref.shape, jnp.float32)
+            cc_ref[...] = jnp.zeros(cc_ref.shape, jnp.float32)
+            err_ref[...] = jnp.zeros(err_ref.shape, jnp.float32)
+
+        a = a_ref[...]  # (m_tb, k_tb)
+        b = b_ref[...]  # (k_tb, n_tb)
+        partial = jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+        # --- SEU injection (paper §5.3: additive offset on the accumulator
+        # register). Injection rows that fall outside this (i, j, s) program
+        # are masked to zero magnitude.
+        inj = inj_ref[...]
+        rows = inj[:, 0].astype(jnp.int32)
+        cols = inj[:, 1].astype(jnp.int32)
+        steps = inj[:, 2].astype(jnp.int32)
+        mags = inj[:, 3]
+        here = (
+            (rows >= i * m_tb)
+            & (rows < (i + 1) * m_tb)
+            & (cols >= j * n_tb)
+            & (cols < (j + 1) * n_tb)
+            & (steps == s)
+        )
+        mags = jnp.where(here, mags, 0.0)
+        lr = jnp.clip(rows - i * m_tb, 0, m_tb - 1)
+        lc = jnp.clip(cols - j * n_tb, 0, n_tb - 1)
+        row_oh = (lr[:, None] == jnp.arange(m_tb)[None, :]).astype(jnp.float32)
+        col_oh = (lc[:, None] == jnp.arange(n_tb)[None, :]).astype(jnp.float32)
+        fault = jnp.einsum("e,em,en->mn", mags, row_oh, col_oh)
+
+        acc = c_ref[...] + partial + fault
+
+        # --- checksum maintenance from the INPUT operands (never from acc),
+        # fused with the operand tiles already resident in VMEM — this is
+        # the paper's key fusion: e^T A and B e cost one extra reduction
+        # over data the prefetch stage already loaded (§4.2.3, Fig 5a).
+        a3 = a.reshape(S_m, sm, k_tb)
+        b3 = b.reshape(k_tb, S_n, sn)
+        row_enc = b3.sum(axis=2)  # (k_tb, S_n)  = B e per column band
+        col_enc = a3.sum(axis=1)  # (S_m, k_tb)  = e^T A per row band
+        cr = cr_ref[0, 0] + jnp.einsum("aik,kb->aib", a3, row_enc)  # (S_m,sm,S_n)
+        cc = cc_ref[0, 0] + jnp.einsum("ak,kbj->abj", col_enc, b3)  # (S_m,S_n,sn)
+
+        # --- verification (+ correction) every verify_every k-steps and on
+        # the final step: the "error detection and correction period" of the
+        # SEU fault model (§4.1).
+        def verify(args):
+            acc, nerr = args
+            c4 = acc.reshape(S_m, sm, S_n, sn)
+            rsum = c4.sum(axis=3)  # (S_m, sm, S_n)
+            csum = c4.sum(axis=1)  # (S_m, S_n, sn)
+            dr = rsum - cr
+            dc = csum - cc
+            thr_r = rel * (jnp.abs(c4).sum(axis=3) + jnp.abs(cr)) + abs_
+            thr_c = rel * (jnp.abs(c4).sum(axis=1) + jnp.abs(cc)) + abs_
+            bad_r = jnp.abs(dr) > thr_r
+            bad_c = jnp.abs(dc) > thr_c
+            det = bad_r.any(axis=1) & bad_c.any(axis=2)  # (S_m, S_n)
+            nerr = nerr + jnp.where(det, 1.0, 0.0).sum()
+            if not correct:
+                return acc, nerr
+            # locate: row index from the C·e residual, column index from the
+            # e^T·C residual; magnitude is the residual itself (Fig 3e).
+            r_idx = jnp.argmax(jnp.abs(dr), axis=1)  # (S_m, S_n)
+            c_idx = jnp.argmax(jnp.abs(dc), axis=2)  # (S_m, S_n)
+            mag = jnp.take_along_axis(dr, r_idx[:, None, :], axis=1)[:, 0, :]
+            mag = jnp.where(det, mag, 0.0)  # (S_m, S_n)
+            roh = (
+                jnp.arange(sm)[None, :, None] == r_idx[:, None, :]
+            )  # (S_m, sm, S_n)
+            coh = (
+                jnp.arange(sn)[None, None, :] == c_idx[:, :, None]
+            )  # (S_m, S_n, sn)
+            fix = (
+                mag[:, None, :, None]
+                * roh[:, :, :, None].astype(jnp.float32)
+                * coh[:, None, :, :].astype(jnp.float32)
+            )
+            return (c4 - fix).reshape(m_tb, n_tb), nerr
+
+        do_verify = ((s + 1) % verify_every == 0) | (s == nk - 1)
+        acc, nerr = jax.lax.cond(
+            do_verify, verify, lambda args: args, (acc, err_ref[0, 0])
+        )
+
+        c_ref[...] = acc
+        cr_ref[0, 0] = cr
+        cc_ref[0, 0] = cc
+        err_ref[...] = nerr.reshape(1, 1)
+
+    grid = (gm, gn, gk)
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_tb, k_tb), lambda i, j, s: (i, s)),
+            pl.BlockSpec((k_tb, n_tb), lambda i, j, s: (s, j)),
+            pl.BlockSpec((max_inj, 4), lambda i, j, s: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m_tb, n_tb), lambda i, j, s: (i, j)),
+            pl.BlockSpec((1, 1, S_m, sm, S_n), lambda i, j, s: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, S_m, S_n, sn), lambda i, j, s: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, s: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((gm, gn, S_m, sm, S_n), jnp.float32),
+            jax.ShapeDtypeStruct((gm, gn, S_m, S_n, sn), jnp.float32),
+            jax.ShapeDtypeStruct((gm, gn), jnp.float32),
+        ],
+        interpret=True,
+    )
+
+    def ft_gemm(a, b, inj):
+        c, cr, cc, err = fn(a, b, inj)
+        return c, cr, cc, err
+
+    return ft_gemm
+
+
+# ---------------------------------------------------------------------------
+# VMEM footprint / MXU-utilization estimate (the L1 "profile" — interpret
+# mode has no TPU timings, so perf is reasoned structurally; DESIGN.md §Perf)
+# ---------------------------------------------------------------------------
+def vmem_bytes(p: KernelParams, level: str | None = None, max_inj: int = MAX_INJ):
+    """Bytes of VMEM a program instance holds: A tile + B tile + C tile
+    (+ checksums + injection table for FT variants), f32, double-buffered
+    operands (the pipeline keeps 2 in-flight operand tiles)."""
+    operand = 2 * (p.m_tb * p.k_tb + p.k_tb * p.n_tb) * 4
+    acc = p.m_tb * p.n_tb * 4
+    total = operand + acc
+    if level is not None:
+        sm, sn = p.sub_tile(level)
+        S_m, S_n = p.m_tb // sm, p.n_tb // sn
+        total += (S_m * sm * S_n + S_m * S_n * sn) * 4  # carried checksums
+        total += max_inj * 4 * 4  # injection table
+        total += (p.k_tb * S_n + S_m * p.k_tb) * 4  # encodings
+    return total
+
+
+def mxu_flops_ratio(p: KernelParams, level: str | None = None):
+    """Fraction of a program's FLOPs that land on the MXU (the dot) vs the
+    VPU (checksum reductions). 1.0 for the plain kernel."""
+    dot = 2.0 * p.m_tb * p.n_tb * p.k_tb
+    if level is None:
+        return 1.0
+    sm, sn = p.sub_tile(level)
+    S_m, S_n = p.m_tb // sm, p.n_tb // sn
+    extra = (
+        p.k_tb * S_n * sn  # row_enc reduction
+        + S_m * sm * p.k_tb  # col_enc reduction
+        + 2.0 * p.m_tb * p.k_tb * S_n  # cr update
+        + 2.0 * p.n_tb * p.k_tb * S_m  # cc update
+    )
+    return dot / (dot + extra)

@@ -1,0 +1,199 @@
+"""L2 variant registry: every AOT artifact the rust runtime can load.
+
+Each `ArtifactSpec` pairs a jax-traceable function (built by the L1 codegen
+in kernels/) with its concrete example-argument shapes and the metadata the
+rust side needs (output roles, bucket dims, tile params, FT level...).
+`aot.py` lowers every spec to HLO text; `artifacts/manifest.json` is the
+single source of truth the rust runtime reads at startup.
+
+Naming convention (mirrored in rust/src/runtime/artifact.rs):
+
+    gemm_<bucket>                plain codegen GEMM
+    ftgemm_<level>_<bucket>      fused online FT-GEMM (level: tb|warp|thread)
+    ftdetect_<bucket>            fused detect-only (offline ABFT, §5.5)
+    ding_{encode,step,verify}_<bucket>   non-fused Ding'11 baseline stages
+    stepwise_<variant>_<bucket>  §3.1 ladder variants (numerics witnesses)
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import nonfused, stepwise, template
+from .kernels.params import BUCKETS, MAX_INJ, VERIFY_EVERY, Bucket
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+@dataclass
+class ArtifactSpec:
+    name: str
+    fn: Callable
+    args: Sequence[jax.ShapeDtypeStruct]
+    outputs: Sequence[str]  # role names, in return order
+    meta: dict = field(default_factory=dict)
+
+
+def _gemm_spec(b: Bucket) -> ArtifactSpec:
+    return ArtifactSpec(
+        name=f"gemm_{b.name}",
+        fn=template.make_gemm(b.m, b.n, b.k, b.params),
+        args=[f32(b.m, b.k), f32(b.k, b.n)],
+        outputs=["c"],
+        meta={
+            "kind": "gemm",
+            "bucket": b.name,
+            "m": b.m,
+            "n": b.n,
+            "k": b.k,
+            "params": b.params.to_dict(),
+        },
+    )
+
+
+def _ft_spec(b: Bucket, level: str, correct: bool = True) -> ArtifactSpec:
+    sm, sn = b.params.sub_tile(level)
+    name = f"ftgemm_{level}_{b.name}" if correct else f"ftdetect_{b.name}"
+    return ArtifactSpec(
+        name=name,
+        fn=template.make_ft_gemm(
+            b.m, b.n, b.k, b.params, level=level, correct=correct
+        ),
+        args=[f32(b.m, b.k), f32(b.k, b.n), f32(MAX_INJ, 4)],
+        outputs=["c", "cr", "cc", "errcount"],
+        meta={
+            "kind": "ftgemm" if correct else "ftdetect",
+            "bucket": b.name,
+            "m": b.m,
+            "n": b.n,
+            "k": b.k,
+            "params": b.params.to_dict(),
+            "ft_level": level,
+            "sub_m": sm,
+            "sub_n": sn,
+            "max_inj": MAX_INJ,
+            "verify_every": VERIFY_EVERY,
+            "correct": correct,
+        },
+    )
+
+
+def _ding_specs(b: Bucket, ks: int) -> list[ArtifactSpec]:
+    m, n, k = b.m, b.n, b.k
+    common = {"bucket": b.name, "m": m, "n": n, "k": k, "ks": ks}
+    return [
+        ArtifactSpec(
+            name=f"ding_encode_{b.name}",
+            fn=nonfused.make_ding_encode(m, n, k),
+            args=[f32(m, k), f32(k, n)],
+            outputs=["ac", "br"],
+            meta={"kind": "ding_encode", **common},
+        ),
+        ArtifactSpec(
+            name=f"ding_step_{b.name}",
+            fn=nonfused.make_ding_step(m, n, ks),
+            args=[f32(m + 1, n + 1), f32(m + 1, ks), f32(ks, n + 1)],
+            outputs=["cf"],
+            meta={"kind": "ding_step", **common},
+        ),
+        ArtifactSpec(
+            name=f"ding_verify_{b.name}",
+            fn=nonfused.make_ding_verify(m, n),
+            args=[f32(m + 1, n + 1)],
+            outputs=["cf", "errcount"],
+            meta={"kind": "ding_verify", **common},
+        ),
+    ]
+
+
+def _stepwise_specs(b: Bucket) -> list[ArtifactSpec]:
+    out = []
+    for variant, desc, has_builder in stepwise.STEPWISE_LADDER:
+        if not has_builder:
+            continue
+        builder = stepwise.STEPWISE_BUILDERS[variant]
+        fn = builder(b.m, b.n, b.k, b.params)
+        out.append(
+            ArtifactSpec(
+                name=f"stepwise_{variant}_{b.name}",
+                fn=lambda a, x, _fn=fn: (_fn(a, x),),
+                args=[f32(b.m, b.k), f32(b.k, b.n)],
+                outputs=["c"],
+                meta={
+                    "kind": "stepwise",
+                    "variant": variant,
+                    "desc": desc,
+                    "bucket": b.name,
+                    "m": b.m,
+                    "n": b.n,
+                    "k": b.k,
+                    "params": b.params.to_dict(),
+                },
+            )
+        )
+    return out
+
+
+# K_s panel width for the non-fused baseline, per bucket (the paper's Fig 16
+# uses K_s = 256; smaller buckets scale it down so there are >= 2 panels).
+DING_KS = {"medium": 64, "large": 128, "huge": 256}
+
+
+def _ablation_specs(b: Bucket) -> list[ArtifactSpec]:
+    """Verify-interval ablation (DESIGN.md §Perf): the same tb-level fused
+    kernel lowered with different verification periods. The bucket string
+    is suffixed so the router never picks these; the perf harness and the
+    ablation bench address them by name."""
+    out = []
+    for ve in (1, 4, 16):
+        spec = ArtifactSpec(
+            name=f"ftgemm_tb_{b.name}_ve{ve}",
+            fn=template.make_ft_gemm(
+                b.m, b.n, b.k, b.params, level="tb", verify_every=ve
+            ),
+            args=[f32(b.m, b.k), f32(b.k, b.n), f32(MAX_INJ, 4)],
+            outputs=["c", "cr", "cc", "errcount"],
+            meta={
+                "kind": "ftgemm",
+                "bucket": f"{b.name}_ve{ve}",
+                "m": b.m,
+                "n": b.n,
+                "k": b.k,
+                "params": b.params.to_dict(),
+                "ft_level": "tb",
+                "sub_m": b.params.m_tb,
+                "sub_n": b.params.n_tb,
+                "max_inj": MAX_INJ,
+                "verify_every": ve,
+                "correct": True,
+            },
+        )
+        out.append(spec)
+    return out
+
+
+def build_registry() -> dict[str, ArtifactSpec]:
+    specs: list[ArtifactSpec] = []
+    for b in BUCKETS.values():
+        specs.append(_gemm_spec(b))
+        specs.append(_ft_spec(b, "tb"))
+    # all three FT levels + detect-only where the scheme comparison runs
+    for name in ("medium", "huge"):
+        b = BUCKETS[name]
+        specs.append(_ft_spec(b, "warp"))
+        specs.append(_ft_spec(b, "thread"))
+        specs.append(_ft_spec(b, "tb", correct=False))
+    for name, ks in DING_KS.items():
+        specs.extend(_ding_specs(BUCKETS[name], ks))
+    specs.extend(_stepwise_specs(BUCKETS["small"]))
+    specs.extend(_ablation_specs(BUCKETS["medium"]))
+    reg = {s.name: s for s in specs}
+    assert len(reg) == len(specs), "duplicate artifact names"
+    return reg
+
+
+REGISTRY = build_registry()

@@ -1,0 +1,81 @@
+"""Verify-interval ablation semantics (DESIGN.md §Perf, ablation bench).
+
+The verification period trades performance against the SEU window: with
+``verify_every=1`` the kernel verifies after *every* k-step, so it can
+correct one error per tile per STEP — strictly more than the default
+period-8 kernel, which aliases two errors inside one interval.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.params import BUCKETS, MAX_INJ
+from compile.kernels.template import make_ft_gemm
+
+RNG = np.random.default_rng(21)
+
+
+def randm(m, n):
+    return (RNG.random((m, n), dtype=np.float32) - 0.5) * 2.0
+
+
+def inj_table(entries):
+    t = np.zeros((MAX_INJ, 4), np.float32)
+    for i, e in enumerate(entries):
+        t[i] = e
+    return t
+
+
+def test_ve1_corrects_two_errors_same_tile_adjacent_steps():
+    b = BUCKETS["medium"]
+    a, x = randm(b.m, b.k), randm(b.k, b.n)
+    want = np.asarray(ref.gemm(a, x))
+    # two SEUs in the SAME 32x32 tile at consecutive k-steps: one
+    # verification interval at ve=8 (aliased), two intervals at ve=1
+    entries = [[3, 4, 0, 500.0], [10, 20, 1, -800.0]]
+    ft1 = make_ft_gemm(b.m, b.n, b.k, b.params, level="tb", verify_every=1)
+    c, _, _, err = ft1(a, x, inj_table(entries))
+    assert float(np.asarray(err).sum()) == 2.0
+    np.testing.assert_allclose(np.asarray(c), want, rtol=1e-4, atol=2e-4 * b.k)
+
+
+def test_ve8_defers_correction_of_aliased_pair_to_next_interval():
+    """Two same-tile errors inside ONE verification window alias at the
+    window's check (only the larger is corrected there) — but because the
+    carried checksums derive from the INPUTS, the residual corruption is
+    re-detected and corrected at the NEXT interval. Deferred, not lost."""
+    b = BUCKETS["medium"]  # 16 k-steps, verify at 7 and 15
+    a, x = randm(b.m, b.k), randm(b.k, b.n)
+    want = np.asarray(ref.gemm(a, x))
+    entries = [[3, 4, 0, 500.0], [10, 20, 1, -800.0]]  # both in interval 0
+    ft8 = make_ft_gemm(b.m, b.n, b.k, b.params, level="tb", verify_every=8)
+    c, _, _, err = ft8(a, x, inj_table(entries))
+    assert float(np.asarray(err).sum()) == 2.0
+    np.testing.assert_allclose(np.asarray(c), want, rtol=1e-4, atol=2e-4 * b.k)
+
+
+def test_ve8_truly_aliases_in_the_final_interval():
+    """If the second aliased error lands in the LAST interval there is no
+    later verification to catch the leftover — the genuine SEU-violation
+    failure mode; documents why the campaign planner allocates one error
+    per (tile, interval) domain."""
+    b = BUCKETS["medium"]
+    a, x = randm(b.m, b.k), randm(b.k, b.n)
+    want = np.asarray(ref.gemm(a, x))
+    entries = [[3, 4, 14, 500.0], [10, 20, 15, -800.0]]  # both in interval 1 (last)
+    ft8 = make_ft_gemm(b.m, b.n, b.k, b.params, level="tb", verify_every=8)
+    c, _, _, _ = ft8(a, x, inj_table(entries))
+    assert np.abs(np.asarray(c) - want).max() > 1.0
+
+
+@pytest.mark.parametrize("ve", [1, 4, 16])
+def test_all_intervals_clean_on_fault_free(ve):
+    b = BUCKETS["small"]
+    a, x = randm(b.m, b.k), randm(b.k, b.n)
+    ft = make_ft_gemm(b.m, b.n, b.k, b.params, level="tb", verify_every=ve)
+    c, _, _, err = ft(a, x, np.zeros((MAX_INJ, 4), np.float32))
+    assert float(np.asarray(err).sum()) == 0.0
+    np.testing.assert_allclose(
+        np.asarray(c), np.asarray(ref.gemm(a, x)), rtol=1e-4, atol=1e-4 * b.k
+    )

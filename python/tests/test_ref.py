@@ -1,0 +1,124 @@
+"""Oracle self-consistency: the checksum algebra of paper §2.2 must hold on
+the pure-jnp reference before it can judge any kernel."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def randm(m, n, scale=1.0):
+    return (RNG.random((m, n), dtype=np.float32) - 0.5) * scale
+
+
+dims = st.sampled_from([1, 2, 3, 4, 8, 16, 31, 64])
+
+
+class TestEncodings:
+    @given(m=dims, k=dims)
+    @settings(max_examples=25, deadline=None)
+    def test_encode_a_appends_column_sums(self, m, k):
+        a = randm(m, k)
+        ac = np.asarray(ref.encode_a(a))
+        assert ac.shape == (m + 1, k)
+        np.testing.assert_allclose(ac[-1], a.sum(axis=0), rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(ac[:-1], a)
+
+    @given(k=dims, n=dims)
+    @settings(max_examples=25, deadline=None)
+    def test_encode_b_appends_row_sums(self, k, n):
+        b = randm(k, n)
+        br = np.asarray(ref.encode_b(b))
+        assert br.shape == (k, n + 1)
+        np.testing.assert_allclose(br[:, -1], b.sum(axis=1), rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(br[:, :-1], b)
+
+    @given(m=dims, k=dims, n=dims)
+    @settings(max_examples=20, deadline=None)
+    def test_checksum_product_invariant(self, m, k, n):
+        """eq. 3: C^f carries C, Ce, and e^T C simultaneously."""
+        a, b = randm(m, k), randm(k, n)
+        cf = np.asarray(ref.full_checksum_product(a, b))
+        c = np.asarray(ref.gemm(a, b))
+        tol = dict(rtol=1e-4, atol=1e-4 * k)
+        np.testing.assert_allclose(cf[:-1, :-1], c, **tol)
+        np.testing.assert_allclose(cf[:-1, -1], c.sum(axis=1), **tol)
+        np.testing.assert_allclose(cf[-1, :-1], c.sum(axis=0), **tol)
+
+
+class TestSubtileChecksums:
+    @pytest.mark.parametrize("sm,sn", [(2, 2), (4, 8), (8, 4), (16, 16)])
+    def test_subtile_sums_partition_full_sums(self, sm, sn):
+        c = randm(32, 32)
+        rs = np.asarray(ref.subtile_row_checksums(c, sm, sn))
+        cs = np.asarray(ref.subtile_col_checksums(c, sm, sn))
+        assert rs.shape == (32 // sm, sm, 32 // sn)
+        assert cs.shape == (32 // sm, 32 // sn, sn)
+        # summing sub-tile checksums over their band recovers global sums
+        np.testing.assert_allclose(
+            rs.sum(axis=2).reshape(-1), c.sum(axis=1), rtol=1e-5, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            cs.sum(axis=0).reshape(-1), c.sum(axis=0), rtol=1e-5, atol=1e-4
+        )
+
+    def test_tb_granularity_equals_whole_matrix(self):
+        c = randm(16, 16)
+        rs = np.asarray(ref.subtile_row_checksums(c, 16, 16))
+        np.testing.assert_allclose(rs[0, :, 0], c.sum(axis=1), rtol=1e-5, atol=1e-4)
+
+
+class TestDetectCorrect:
+    def test_single_error_located_and_corrected(self):
+        a, b = randm(24, 16), randm(16, 20)
+        c = np.asarray(ref.gemm(a, b))
+        cr, cc = c.sum(axis=1), c.sum(axis=0)
+        bad = ref.apply_injections(c, [(5, 7, 42.0)])
+        fixed, n = ref.detect_and_correct(bad, cr, cc)
+        assert n == 1
+        np.testing.assert_allclose(np.asarray(fixed), c, rtol=1e-4, atol=1e-3)
+
+    def test_no_false_positive_on_clean_result(self):
+        a, b = randm(32, 64), randm(64, 16)
+        c = np.asarray(ref.gemm(a, b))
+        fixed, n = ref.detect_and_correct(c, c.sum(axis=1), c.sum(axis=0))
+        assert n == 0
+        np.testing.assert_array_equal(np.asarray(fixed), c)
+
+    @given(
+        r=st.integers(0, 23),
+        col=st.integers(0, 19),
+        mag=st.floats(5.0, 1e4),
+        sign=st.sampled_from([-1.0, 1.0]),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_correction_is_exact_up_to_roundoff(self, r, col, mag, sign):
+        a, b = randm(24, 16), randm(16, 20)
+        c = np.asarray(ref.gemm(a, b))
+        bad = ref.apply_injections(c, [(r, col, sign * mag)])
+        fixed, n = ref.detect_and_correct(bad, c.sum(axis=1), c.sum(axis=0))
+        assert n == 1
+        np.testing.assert_allclose(np.asarray(fixed), c, rtol=1e-4, atol=1e-2)
+
+
+class TestDing:
+    @pytest.mark.parametrize("ks", [4, 8, 16])
+    def test_outer_product_equals_full_product(self, ks):
+        a, b = randm(16, 32), randm(32, 8)
+        cf = np.asarray(ref.ding_outer_product(a, b, ks))
+        want = np.asarray(ref.full_checksum_product(a, b))
+        np.testing.assert_allclose(cf, want, rtol=1e-4, atol=1e-3)
+
+    def test_verify_accepts_clean_rejects_faulty(self):
+        a, b = randm(16, 32), randm(32, 8)
+        cf = ref.ding_outer_product(a, b, 8)
+        _, _, ok = ref.ding_verify(cf)
+        assert bool(ok)
+        bad = np.asarray(cf).copy()
+        bad[3, 4] += 77.0
+        _, _, ok = ref.ding_verify(jnp.asarray(bad))
+        assert not bool(ok)

@@ -1,0 +1,167 @@
+"""Codegen template vs oracle: hypothesis sweeps shapes x Table-1 params.
+
+This is the L1 correctness core — every generated kernel must compute the
+same C = A·B as the pure-jnp reference, for every parameter preset and a
+range of (possibly irregular) divisible shapes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.params import BUCKETS, MAX_INJ, TABLE1, KernelParams, select_class
+from compile.kernels.template import make_ft_gemm, make_gemm, mxu_flops_ratio, vmem_bytes
+
+RNG = np.random.default_rng(7)
+
+
+def randm(m, n, scale=1.0):
+    return (RNG.random((m, n), dtype=np.float32) - 0.5) * scale
+
+
+def no_inj():
+    return np.zeros((MAX_INJ, 4), np.float32)
+
+
+def assert_matches_ref(c, a, b, k):
+    want = np.asarray(ref.gemm(a, b))
+    np.testing.assert_allclose(np.asarray(c), want, rtol=1e-4, atol=1e-4 * k)
+
+
+class TestPlainTemplate:
+    @pytest.mark.parametrize("cls", list(TABLE1))
+    def test_every_preset_on_its_bucket(self, cls):
+        b = BUCKETS[cls]
+        a, x = randm(b.m, b.k), randm(b.k, b.n)
+        c = make_gemm(b.m, b.n, b.k, b.params)(a, x)[0]
+        assert_matches_ref(c, a, x, b.k)
+
+    @given(
+        mi=st.integers(1, 4),
+        ni=st.integers(1, 4),
+        ki=st.integers(1, 6),
+        cls=st.sampled_from(["small", "medium"]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_irregular_divisible_shapes(self, mi, ni, ki, cls):
+        """Sweep non-square shapes that are exact multiples of the tile."""
+        p = TABLE1[cls]
+        m, n, k = mi * p.m_tb, ni * p.n_tb, ki * p.k_tb
+        a, x = randm(m, k), randm(k, n)
+        c = make_gemm(m, n, k, p)(a, x)[0]
+        assert_matches_ref(c, a, x, k)
+
+    def test_rejects_non_divisible_shape(self):
+        with pytest.raises(ValueError):
+            make_gemm(100, 64, 64, TABLE1["small"])
+
+    def test_rejects_bad_params(self):
+        with pytest.raises(ValueError):
+            KernelParams(16, 16, 16, 5, 16, 2, 2).validate()
+        with pytest.raises(ValueError):
+            KernelParams(16, 16, 16, 32, 16, 2, 2).validate()  # warp > block
+
+
+class TestFtTemplateFaultFree:
+    @pytest.mark.parametrize("level", ["thread", "warp", "tb"])
+    @pytest.mark.parametrize("cls", ["small", "medium"])
+    def test_matches_plain_gemm(self, level, cls):
+        b = BUCKETS[cls]
+        a, x = randm(b.m, b.k), randm(b.k, b.n)
+        c, cr, cc, err = make_ft_gemm(b.m, b.n, b.k, b.params, level=level)(
+            a, x, no_inj()
+        )
+        assert float(np.asarray(err).sum()) == 0.0, "false positive detection"
+        assert_matches_ref(c, a, x, b.k)
+
+    @pytest.mark.parametrize("level", ["thread", "warp", "tb"])
+    def test_carried_checksums_match_oracle(self, level):
+        """The CR/CC outputs must equal the oracle's sub-tile checksums of
+        the true product — they are what the rust host re-verifies."""
+        b = BUCKETS["small"]
+        p = b.params
+        sm, sn = p.sub_tile(level)
+        a, x = randm(b.m, b.k), randm(b.k, b.n)
+        c, cr, cc, _ = make_ft_gemm(b.m, b.n, b.k, p, level=level)(a, x, no_inj())
+        want = np.asarray(ref.gemm(a, x))
+        gm, gn = b.m // p.m_tb, b.n // p.n_tb
+        cr = np.asarray(cr)
+        cc = np.asarray(cc)
+        for i in range(gm):
+            for j in range(gn):
+                tile = want[
+                    i * p.m_tb : (i + 1) * p.m_tb, j * p.n_tb : (j + 1) * p.n_tb
+                ]
+                np.testing.assert_allclose(
+                    cr[i, j],
+                    np.asarray(ref.subtile_row_checksums(tile, sm, sn)),
+                    rtol=1e-3,
+                    atol=1e-2,
+                )
+                np.testing.assert_allclose(
+                    cc[i, j],
+                    np.asarray(ref.subtile_col_checksums(tile, sm, sn)),
+                    rtol=1e-3,
+                    atol=1e-2,
+                )
+
+    @given(
+        mi=st.integers(1, 3),
+        ni=st.integers(1, 3),
+        ki=st.integers(1, 4),
+        level=st.sampled_from(["thread", "warp", "tb"]),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_shape_sweep_fault_free(self, mi, ni, ki, level):
+        p = TABLE1["small"]
+        m, n, k = mi * p.m_tb, ni * p.n_tb, ki * p.k_tb
+        a, x = randm(m, k), randm(k, n)
+        c, _, _, err = make_ft_gemm(m, n, k, p, level=level)(a, x, no_inj())
+        assert float(np.asarray(err).sum()) == 0.0
+        assert_matches_ref(c, a, x, k)
+
+
+class TestStructuralEstimates:
+    def test_vmem_fits_typical_budget(self):
+        """Every Table-1 preset must fit a 16 MiB VMEM comfortably (the
+        point of tiling); FT adds only a small increment."""
+        for cls, p in TABLE1.items():
+            base = vmem_bytes(p)
+            ft = vmem_bytes(p, level="tb")
+            assert ft < 16 * 2**20, cls
+            assert base < ft < 1.5 * base + 4096, cls
+
+    def test_mxu_ratio_ordering_matches_paper(self):
+        """§4.2.2: checksum compute overhead shrinks as granularity grows —
+        thread-level worst, threadblock-level best."""
+        for cls, p in TABLE1.items():
+            r_t = mxu_flops_ratio(p, "thread")
+            r_w = mxu_flops_ratio(p, "warp")
+            r_b = mxu_flops_ratio(p, "tb")
+            assert r_t < r_w < r_b <= 1.0, cls
+
+    def test_thread_level_overhead_formula(self):
+        """Paper: thread-level ABFT adds (4 n_t)/(2 n_t^2) = 2/n_t compute
+        for square micro-tiles — our ratio must agree to first order."""
+        p = TABLE1["huge"]  # m_t = n_t = 8
+        r = mxu_flops_ratio(p, "thread")
+        expect = 1.0 / (1.0 + 2.0 / p.n_t)
+        assert abs(r - expect) / expect < 0.15
+
+
+class TestShapeClassSelection:
+    @pytest.mark.parametrize(
+        "m,n,k,cls",
+        [
+            (64, 64, 64, "small"),
+            (128, 128, 512, "small"),
+            (160, 160, 256, "medium"),
+            (384, 384, 256, "large"),
+            (1024, 1024, 1024, "huge"),
+            (64, 1024, 256, "tall"),
+            (2048, 128, 1024, "tall"),
+        ],
+    )
+    def test_paper_heuristic(self, m, n, k, cls):
+        assert select_class(m, n, k) == cls

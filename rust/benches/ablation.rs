@@ -1,0 +1,80 @@
+//! Ablation bench (`cargo bench --bench ablation`): design-choice
+//! experiments DESIGN.md calls out.
+//!
+//! 1. verify_every — the fused kernel's verification period (L1): how much
+//!    of the FT cost is the periodic verification sweep vs the running
+//!    checksum updates? (SEU interval grows with the period — the paper's
+//!    §4.1 trade-off.)
+//! 2. FT level — thread vs warp vs tb exec time on the live CPU stack
+//!    (structural echo of Fig 12; CPU wallclock, not a GPU claim).
+//! 3. bucket padding — cost of serving an ill-fitting shape.
+
+use std::hint::black_box;
+
+use ftgemm::abft::matrix::Matrix;
+use ftgemm::bench::Harness;
+use ftgemm::runtime::engine::Tensor;
+use ftgemm::runtime::{Engine, EngineConfig};
+
+fn main() {
+    let Ok(engine) = Engine::start(EngineConfig::default()) else {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return;
+    };
+    let a = Matrix::rand_uniform(128, 128, 1);
+    let b = Matrix::rand_uniform(128, 128, 2);
+    let inj = vec![0.0f32; 8 * 4];
+    let exec = |name: &str| {
+        engine
+            .execute(
+                name,
+                vec![
+                    Tensor::new(vec![128, 128], a.data().to_vec()),
+                    Tensor::new(vec![128, 128], b.data().to_vec()),
+                    Tensor::new(vec![8, 4], inj.clone()),
+                ],
+            )
+            .unwrap()
+    };
+    let exec_plain = || {
+        engine
+            .execute(
+                "gemm_medium",
+                vec![
+                    Tensor::new(vec![128, 128], a.data().to_vec()),
+                    Tensor::new(vec![128, 128], b.data().to_vec()),
+                ],
+            )
+            .unwrap()
+    };
+
+    let mut h = Harness::quick();
+    h.bench("baseline/gemm_medium", || {
+        black_box(exec_plain());
+    });
+    // verify_every ablation: 1 = verify every k-step, 16 = every 16 steps
+    for (name, art) in [
+        ("verify_every/1", "ftgemm_tb_medium_ve1"),
+        ("verify_every/4", "ftgemm_tb_medium_ve4"),
+        ("verify_every/8(default)", "ftgemm_tb_medium"),
+        ("verify_every/16", "ftgemm_tb_medium_ve16"),
+    ] {
+        engine.warm(art).unwrap();
+        h.bench(name, || {
+            black_box(exec(art));
+        });
+    }
+    // FT level ablation
+    for (name, art) in [
+        ("level/tb", "ftgemm_tb_medium"),
+        ("level/warp", "ftgemm_warp_medium"),
+        ("level/thread", "ftgemm_thread_medium"),
+        ("level/detect_only", "ftdetect_medium"),
+    ] {
+        engine.warm(art).unwrap();
+        h.bench(name, || {
+            black_box(exec(art));
+        });
+    }
+    println!("{}", h.summary());
+}

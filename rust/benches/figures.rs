@@ -1,0 +1,31 @@
+//! Per-figure benchmarks (`cargo bench --bench figures`): one bench per
+//! paper table/figure — times regeneration and prints each figure's
+//! headline series means so `bench_output.txt` doubles as a results
+//! digest for EXPERIMENTS.md.
+
+use std::hint::black_box;
+
+use ftgemm::bench::Harness;
+use ftgemm::figures::catalog;
+
+fn main() {
+    let mut h = Harness::quick();
+    for id in catalog::FIGURE_IDS {
+        h.bench(&format!("figure/{id}"), || {
+            black_box(catalog::generate(id).unwrap());
+        });
+    }
+    println!("{}", h.summary());
+
+    // headline digest per figure
+    for id in catalog::FIGURE_IDS {
+        for t in catalog::generate(id).unwrap() {
+            let means: Vec<String> = t
+                .series
+                .iter()
+                .map(|s| format!("{}={:.0}", s.name, s.mean_y()))
+                .collect();
+            println!("{}\n  mean: {}", t.title, means.join("  "));
+        }
+    }
+}

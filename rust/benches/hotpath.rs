@@ -1,0 +1,115 @@
+//! Hot-path benchmarks (custom harness; `cargo bench --bench hotpath`).
+//!
+//! Covers the request-path components the §Perf pass optimizes:
+//! router planning, ABFT host verification, injection marshalling, host
+//! GEMM (the offline recompute path), JSON manifest parsing, and — when
+//! artifacts are present — live engine execution + the full coordinator
+//! round trip per policy.
+
+use std::hint::black_box;
+
+use ftgemm::abft::checksum::{verify, ChecksumPair, Thresholds};
+use ftgemm::abft::injection::InjectionPlan;
+use ftgemm::abft::matrix::Matrix;
+use ftgemm::bench::Harness;
+use ftgemm::coordinator::{router, Coordinator, CoordinatorConfig, FtPolicy};
+use ftgemm::runtime::{Engine, EngineConfig};
+use ftgemm::util::json::Json;
+use ftgemm::util::rng::Pcg32;
+
+fn main() {
+    let mut h = Harness::default();
+
+    // --- router planning
+    h.bench("router/route_exact_128", || {
+        black_box(router::route(128, 128, 128));
+    });
+    h.bench("router/route_padded_irregular", || {
+        black_box(router::route(100, 70, 90));
+    });
+    h.bench("router/route_split_1536", || {
+        black_box(router::route(1536, 1536, 1536));
+    });
+
+    // --- ABFT host-side verification (defense-in-depth path)
+    let a = Matrix::rand_uniform(256, 256, 1);
+    let b = Matrix::rand_uniform(256, 256, 2);
+    let c = a.matmul(&b);
+    let pair = ChecksumPair::of_product(&a, &b);
+    h.bench("abft/checksum_of_product_256", || {
+        black_box(ChecksumPair::of_product(&a, &b));
+    });
+    h.bench("abft/verify_clean_256", || {
+        black_box(verify(&c, &pair, Thresholds::default()));
+    });
+
+    // --- injection plan marshalling
+    let mut rng = Pcg32::seeded(3);
+    let plan = InjectionPlan::random_seu(512, 512, 64, 8, 128, 128, 8, &mut rng);
+    h.bench("faults/plan_to_tensor", || {
+        black_box(plan.to_tensor(8));
+    });
+
+    // --- host GEMM (offline recompute path)
+    h.bench("matrix/matmul_blocked_256", || {
+        black_box(a.matmul(&b));
+    });
+    let big_a = Matrix::rand_uniform(512, 512, 4);
+    let big_b = Matrix::rand_uniform(512, 512, 5);
+    h.bench("matrix/matmul_blocked_512", || {
+        black_box(big_a.matmul(&big_b));
+    });
+    h.bench("matrix/pad_to_512", || {
+        black_box(a.pad_to(512, 512));
+    });
+
+    // --- manifest parsing
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        h.bench("json/parse_manifest", || {
+            black_box(Json::parse(&text).unwrap());
+        });
+    }
+
+    // --- live engine + coordinator (needs artifacts)
+    if let Ok(engine) = Engine::start(EngineConfig::default()) {
+        for name in ["gemm_small", "gemm_medium", "ftgemm_tb_medium", "ftdetect_medium"] {
+            engine.warm(name).unwrap();
+        }
+        let coord = Coordinator::new(engine.clone(), CoordinatorConfig::default());
+        let (ea, eb) = (Matrix::rand_uniform(128, 128, 6), Matrix::rand_uniform(128, 128, 7));
+        let mut hq = Harness::quick();
+        hq.bench("engine/exec_gemm_medium", || {
+            use ftgemm::runtime::engine::Tensor;
+            black_box(
+                engine
+                    .execute(
+                        "gemm_medium",
+                        vec![
+                            Tensor::new(vec![128, 128], ea.data().to_vec()),
+                            Tensor::new(vec![128, 128], eb.data().to_vec()),
+                        ],
+                    )
+                    .unwrap(),
+            );
+        });
+        hq.bench("coord/gemm_none_128", || {
+            black_box(coord.gemm(&ea, &eb, FtPolicy::None).unwrap());
+        });
+        hq.bench("coord/gemm_online_128", || {
+            black_box(coord.gemm(&ea, &eb, FtPolicy::Online).unwrap());
+        });
+        hq.bench("coord/gemm_offline_128", || {
+            black_box(coord.gemm(&ea, &eb, FtPolicy::Offline).unwrap());
+        });
+        let pa = Matrix::rand_uniform(100, 70, 8);
+        let pb = Matrix::rand_uniform(70, 90, 9);
+        hq.bench("coord/gemm_padded_100x90x70", || {
+            black_box(coord.gemm(&pa, &pb, FtPolicy::Online).unwrap());
+        });
+        println!("\n== live engine/coordinator ==\n{}", hq.summary());
+    } else {
+        eprintln!("(artifacts not built — engine benches skipped)");
+    }
+
+    println!("\n== host hot paths ==\n{}", h.summary());
+}

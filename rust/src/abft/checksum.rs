@@ -1,0 +1,222 @@
+//! The Huang–Abraham checksum algebra on the host (paper §2.2).
+//!
+//! Used by the offline-ABFT policy (verify a detect-only kernel's output),
+//! by the host re-verification of fused-kernel results, and as the oracle
+//! in integration tests.
+
+use super::matrix::Matrix;
+
+/// Row/column checksums of a (true) product: `cr = C·e`, `cc = eᵀ·C`.
+#[derive(Debug, Clone)]
+pub struct ChecksumPair {
+    pub cr: Vec<f32>,
+    pub cc: Vec<f32>,
+}
+
+impl ChecksumPair {
+    /// Compute both checksums of a matrix directly.
+    pub fn of(c: &Matrix) -> Self {
+        ChecksumPair { cr: c.row_sums(), cc: c.col_sums() }
+    }
+
+    /// Derive the product checksums from the *operands* without forming C:
+    /// `C·e = A·(B·e)`, `eᵀ·C = (eᵀ·A)·B` — O(mk + kn) instead of O(mkn).
+    /// This is exactly what the fused kernels maintain online.
+    pub fn of_product(a: &Matrix, b: &Matrix) -> Self {
+        assert_eq!(a.cols(), b.rows());
+        let be = b.row_sums(); // (k)
+        let ea = a.col_sums(); // (k)
+        let mut cr = vec![0.0f32; a.rows()];
+        for i in 0..a.rows() {
+            cr[i] = a.row(i).iter().zip(&be).map(|(x, y)| x * y).sum();
+        }
+        let mut cc = vec![0.0f32; b.cols()];
+        for (k, &w) in ea.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            for (c, v) in cc.iter_mut().zip(b.row(k)) {
+                *c += w * v;
+            }
+        }
+        ChecksumPair { cr, cc }
+    }
+}
+
+/// Detection thresholds: residuals compared against
+/// `rel * (|recomputed| + |carried|) + abs` (matches the kernel template).
+#[derive(Debug, Clone, Copy)]
+pub struct Thresholds {
+    pub rel: f32,
+    pub abs: f32,
+}
+
+impl Default for Thresholds {
+    fn default() -> Self {
+        Thresholds { rel: 1e-4, abs: 1e-3 }
+    }
+}
+
+/// Outcome of a verification pass.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Detection {
+    /// Checksums consistent — no error.
+    Clean,
+    /// A single error located at (row, col) with the given magnitude
+    /// (subtract it to correct).
+    Single { row: usize, col: usize, magnitude: f32 },
+    /// Residuals inconsistent with the single-error model (multiple faults
+    /// in one verification interval — SEU assumption violated).
+    MultiError { bad_rows: usize, bad_cols: usize },
+}
+
+/// Verify `c` against carried checksums; locate a single error if present.
+pub fn verify(c: &Matrix, carried: &ChecksumPair, th: Thresholds) -> Detection {
+    assert_eq!(c.rows(), carried.cr.len());
+    assert_eq!(c.cols(), carried.cc.len());
+    let rs = c.row_sums();
+    let cs = c.col_sums();
+    let mut bad_rows = Vec::new();
+    for i in 0..c.rows() {
+        let resid = rs[i] - carried.cr[i];
+        let scale: f32 = c.row(i).iter().map(|x| x.abs()).sum::<f32>() + carried.cr[i].abs();
+        if resid.abs() > th.rel * scale + th.abs {
+            bad_rows.push((i, resid));
+        }
+    }
+    let mut abs_col = vec![0.0f32; c.cols()];
+    for i in 0..c.rows() {
+        for (s, v) in abs_col.iter_mut().zip(c.row(i)) {
+            *s += v.abs();
+        }
+    }
+    let mut bad_cols = Vec::new();
+    for j in 0..c.cols() {
+        let resid = cs[j] - carried.cc[j];
+        if resid.abs() > th.rel * (abs_col[j] + carried.cc[j].abs()) + th.abs {
+            bad_cols.push((j, resid));
+        }
+    }
+    match (bad_rows.len(), bad_cols.len()) {
+        (0, 0) => Detection::Clean,
+        (1, 1) => Detection::Single {
+            row: bad_rows[0].0,
+            col: bad_cols[0].0,
+            magnitude: bad_rows[0].1,
+        },
+        (r, c_) => {
+            // Column residual might be sub-threshold while the row fires
+            // (or vice versa) on a borderline offset — treat any (>=1, 0)
+            // pattern as multi/inconsistent so callers recompute.
+            Detection::MultiError { bad_rows: r, bad_cols: c_ }
+        }
+    }
+}
+
+/// Correct a located single error in place. Returns the corrected value.
+pub fn correct(c: &mut Matrix, det: &Detection) -> Option<f32> {
+    if let Detection::Single { row, col, magnitude } = det {
+        c.add_at(*row, *col, -magnitude);
+        Some(c.at(*row, *col))
+    } else {
+        None
+    }
+}
+
+/// Full offline pass: verify, correct if a single error, report.
+/// Returns (corrected count, residual detection state after the pass).
+pub fn verify_and_correct(c: &mut Matrix, carried: &ChecksumPair, th: Thresholds) -> (usize, Detection) {
+    match verify(c, carried, th) {
+        Detection::Clean => (0, Detection::Clean),
+        det @ Detection::Single { .. } => {
+            correct(c, &det);
+            (1, verify(c, carried, th))
+        }
+        det @ Detection::MultiError { .. } => (0, det),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn product_fixture(seed: u64) -> (Matrix, ChecksumPair) {
+        let a = Matrix::rand_uniform(24, 32, seed);
+        let b = Matrix::rand_uniform(32, 20, seed + 1);
+        let c = a.matmul(&b);
+        let pair = ChecksumPair::of_product(&a, &b);
+        (c, pair)
+    }
+
+    #[test]
+    fn operand_checksums_match_product_checksums() {
+        let a = Matrix::rand_uniform(16, 40, 3);
+        let b = Matrix::rand_uniform(40, 12, 4);
+        let c = a.matmul(&b);
+        let fast = ChecksumPair::of_product(&a, &b);
+        let direct = ChecksumPair::of(&c);
+        for (x, y) in fast.cr.iter().zip(&direct.cr) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+        for (x, y) in fast.cc.iter().zip(&direct.cc) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn clean_product_verifies_clean() {
+        let (c, pair) = product_fixture(10);
+        assert_eq!(verify(&c, &pair, Thresholds::default()), Detection::Clean);
+    }
+
+    #[test]
+    fn single_error_located_exactly() {
+        let (mut c, pair) = product_fixture(11);
+        c.add_at(7, 13, 99.0);
+        match verify(&c, &pair, Thresholds::default()) {
+            Detection::Single { row, col, magnitude } => {
+                assert_eq!((row, col), (7, 13));
+                assert!((magnitude - 99.0).abs() < 0.01);
+            }
+            other => panic!("expected Single, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn correction_restores_the_product() {
+        let (mut c, pair) = product_fixture(12);
+        let orig = c.clone();
+        c.add_at(3, 3, -250.0);
+        let (n, after) = verify_and_correct(&mut c, &pair, Thresholds::default());
+        assert_eq!(n, 1);
+        assert_eq!(after, Detection::Clean);
+        assert!(c.max_abs_diff(&orig) < 1e-2);
+    }
+
+    #[test]
+    fn two_errors_in_distinct_rows_cols_flagged_multi() {
+        let (mut c, pair) = product_fixture(13);
+        c.add_at(1, 2, 77.0);
+        c.add_at(9, 15, -55.0);
+        match verify(&c, &pair, Thresholds::default()) {
+            Detection::MultiError { bad_rows, bad_cols } => {
+                assert_eq!((bad_rows, bad_cols), (2, 2));
+            }
+            other => panic!("expected MultiError, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sub_threshold_offset_ignored() {
+        let (mut c, pair) = product_fixture(14);
+        c.add_at(0, 0, 1e-6);
+        assert_eq!(verify(&c, &pair, Thresholds::default()), Detection::Clean);
+    }
+
+    #[test]
+    fn correct_is_noop_on_clean_and_multi() {
+        let (mut c, _) = product_fixture(15);
+        assert!(correct(&mut c, &Detection::Clean).is_none());
+        assert!(correct(&mut c, &Detection::MultiError { bad_rows: 2, bad_cols: 2 }).is_none());
+    }
+}

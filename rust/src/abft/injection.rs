@@ -1,0 +1,236 @@
+//! SEU injection plans — the §5.3 protocol as data.
+//!
+//! An [`Injection`] is one additive offset at a global (row, col) of the
+//! output, applied at a given k-step of the accumulation. Plans are
+//! marshalled into the fused kernels' `(MAX_INJ, 4)` input tensor, or
+//! applied host-side for the non-fused Ding baseline.
+
+use crate::util::rng::Pcg32;
+
+use super::matrix::Matrix;
+
+/// Matches the kernel-side descriptor row `[row, col, step, magnitude]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Injection {
+    pub row: usize,
+    pub col: usize,
+    pub step: usize,
+    pub magnitude: f32,
+}
+
+/// A batch of injections for one GEMM execution.
+#[derive(Debug, Clone, Default)]
+pub struct InjectionPlan {
+    pub injections: Vec<Injection>,
+}
+
+impl InjectionPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn single(row: usize, col: usize, step: usize, magnitude: f32) -> Self {
+        InjectionPlan { injections: vec![Injection { row, col, step, magnitude }] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.injections.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.injections.is_empty()
+    }
+
+    /// Random plan: `count` errors spread over the k dimension, emulating
+    /// the paper's "errors evenly injected into random threads throughout
+    /// the computation". Magnitudes are bit-flip-like: large, either sign.
+    ///
+    /// NOTE: positions are unconstrained — two errors may share a (tile,
+    /// verification interval), violating SEU. Use [`Self::random_seu`]
+    /// when the protection scheme must be able to correct everything.
+    pub fn random(
+        m: usize,
+        n: usize,
+        steps: usize,
+        count: usize,
+        rng: &mut Pcg32,
+    ) -> Self {
+        let mut injections = Vec::with_capacity(count);
+        for i in 0..count {
+            let base = (i * steps) / count.max(1);
+            let step = base.min(steps.saturating_sub(1));
+            injections.push(Injection {
+                row: rng.usize_below(m),
+                col: rng.usize_below(n),
+                step,
+                magnitude: bitflip_magnitude(rng),
+            });
+        }
+        InjectionPlan { injections }
+    }
+
+    /// Random plan honoring the SEU fault model (paper §4.1): at most one
+    /// error per (protection sub-tile, verification interval), so an
+    /// online scheme at granularity `(sub_m, sub_n)` with interval
+    /// `verify_every` can correct every injected fault. Positions are
+    /// rejection-sampled against that constraint.
+    #[allow(clippy::too_many_arguments)]
+    pub fn random_seu(
+        m: usize,
+        n: usize,
+        steps: usize,
+        verify_every: usize,
+        sub_m: usize,
+        sub_n: usize,
+        count: usize,
+        rng: &mut Pcg32,
+    ) -> Self {
+        let intervals = steps.div_ceil(verify_every.max(1)).max(1);
+        let domains = (m.div_ceil(sub_m)) * (n.div_ceil(sub_n)) * intervals;
+        assert!(
+            count <= domains,
+            "cannot place {count} SEUs in {domains} (tile x interval) domains"
+        );
+        let mut used = std::collections::HashSet::new();
+        let mut injections = Vec::with_capacity(count);
+        for i in 0..count {
+            let mut tries = 0usize;
+            loop {
+                // even k-spacing first; fall back to random steps if the
+                // preferred interval's tiles are exhausted
+                let step = if tries < 64 {
+                    ((i * steps) / count.max(1)).min(steps.saturating_sub(1))
+                } else {
+                    rng.usize_below(steps.max(1))
+                };
+                let row = rng.usize_below(m);
+                let col = rng.usize_below(n);
+                let key = (row / sub_m, col / sub_n, step / verify_every.max(1));
+                if used.insert(key) {
+                    injections.push(Injection {
+                        row,
+                        col,
+                        step,
+                        magnitude: bitflip_magnitude(rng),
+                    });
+                    break;
+                }
+                tries += 1;
+            }
+        }
+        InjectionPlan { injections }
+    }
+
+    /// Serialize to the kernel input layout: `(max_inj, 4)` f32, zero-padded.
+    /// Panics if the plan exceeds `max_inj` (callers chunk instead).
+    pub fn to_tensor(&self, max_inj: usize) -> Vec<f32> {
+        assert!(
+            self.injections.len() <= max_inj,
+            "plan ({}) exceeds kernel capacity ({max_inj})",
+            self.injections.len()
+        );
+        let mut t = vec![0.0f32; max_inj * 4];
+        for (i, inj) in self.injections.iter().enumerate() {
+            t[i * 4] = inj.row as f32;
+            t[i * 4 + 1] = inj.col as f32;
+            t[i * 4 + 2] = inj.step as f32;
+            t[i * 4 + 3] = inj.magnitude;
+        }
+        t
+    }
+
+    /// Apply all offsets directly to a result matrix (host-side injection
+    /// for the non-fused baseline, where the fault hits C^f between
+    /// launches).
+    pub fn apply_to(&self, c: &mut Matrix) {
+        for inj in &self.injections {
+            c.add_at(inj.row, inj.col, inj.magnitude);
+        }
+    }
+
+    /// Split into chunks of at most `max_inj` (the kernel capacity), one
+    /// chunk per execution.
+    pub fn chunks(&self, max_inj: usize) -> Vec<InjectionPlan> {
+        self.injections
+            .chunks(max_inj)
+            .map(|c| InjectionPlan { injections: c.to_vec() })
+            .collect()
+    }
+}
+
+/// Bit-flip-emulating magnitude: log-uniform in [16, 2^20), random sign —
+/// a flipped mantissa/exponent bit yields offsets across orders of
+/// magnitude, always far above the detection threshold.
+pub fn bitflip_magnitude(rng: &mut Pcg32) -> f32 {
+    let exp = rng.range_f32(4.0, 20.0);
+    let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+    sign * 2f32.powf(exp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_layout_roundtrips() {
+        let plan = InjectionPlan::single(3, 7, 2, -64.0);
+        let t = plan.to_tensor(8);
+        assert_eq!(t.len(), 32);
+        assert_eq!(&t[0..4], &[3.0, 7.0, 2.0, -64.0]);
+        assert!(t[4..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflowing_plan_panics() {
+        let plan = InjectionPlan {
+            injections: vec![Injection { row: 0, col: 0, step: 0, magnitude: 1.0 }; 9],
+        };
+        plan.to_tensor(8);
+    }
+
+    #[test]
+    fn random_plan_in_bounds_and_spread() {
+        let mut rng = Pcg32::seeded(1);
+        let plan = InjectionPlan::random(100, 50, 16, 8, &mut rng);
+        assert_eq!(plan.len(), 8);
+        for inj in &plan.injections {
+            assert!(inj.row < 100 && inj.col < 50 && inj.step < 16);
+            assert!(inj.magnitude.abs() >= 16.0);
+        }
+        // even spacing => steps non-decreasing and covering the range
+        let steps: Vec<_> = plan.injections.iter().map(|i| i.step).collect();
+        assert!(steps.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn apply_to_adds_offsets() {
+        let mut c = Matrix::zeros(4, 4);
+        InjectionPlan::single(1, 2, 0, 5.0).apply_to(&mut c);
+        assert_eq!(c.at(1, 2), 5.0);
+        assert_eq!(c.at(2, 1), 0.0);
+    }
+
+    #[test]
+    fn chunking_preserves_order_and_content() {
+        let plan = InjectionPlan {
+            injections: (0..19)
+                .map(|i| Injection { row: i, col: i, step: i, magnitude: i as f32 + 1.0 })
+                .collect(),
+        };
+        let chunks = plan.chunks(8);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].len(), 8);
+        assert_eq!(chunks[2].len(), 3);
+        let flat: Vec<_> = chunks.iter().flat_map(|c| c.injections.clone()).collect();
+        assert_eq!(flat, plan.injections);
+    }
+
+    #[test]
+    fn bitflip_magnitudes_are_large_both_signs() {
+        let mut rng = Pcg32::seeded(2);
+        let mags: Vec<f32> = (0..200).map(|_| bitflip_magnitude(&mut rng)).collect();
+        assert!(mags.iter().all(|m| m.abs() >= 16.0 && m.abs() < 2f32.powi(20)));
+        assert!(mags.iter().any(|m| *m > 0.0) && mags.iter().any(|m| *m < 0.0));
+    }
+}

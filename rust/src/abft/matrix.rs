@@ -1,0 +1,279 @@
+//! Row-major dense f32 matrix with a blocked CPU GEMM.
+//!
+//! This is the host-side numeric substrate: the recompute path of offline
+//! ABFT, the oracle for integration tests, and the padding/slicing helper
+//! the router uses to fit requests into artifact buckets.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform in [-0.5, 0.5) — the distribution the python tests use.
+    pub fn rand_uniform(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let data = (0..rows * cols).map(|_| rng.f32() - 0.5).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// Standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] += v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    // ------------------------------------------------------------------
+    // GEMM: naive witness + cache-blocked production version
+    // ------------------------------------------------------------------
+
+    /// Textbook triple loop — the unarguable oracle (tests only).
+    pub fn matmul_naive(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "inner dims");
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f32;
+                for k in 0..self.cols {
+                    acc += self.at(i, k) * b.at(k, j);
+                }
+                c.set(i, j, acc);
+            }
+        }
+        c
+    }
+
+    /// Cache-blocked i-k-j GEMM — the host recompute path. Blocking keeps
+    /// the B panel hot in L1/L2; the k-inner accumulation order matches the
+    /// kernels' (panel sums), keeping drift comparable.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "inner dims");
+        const BK: usize = 64;
+        const BJ: usize = 256;
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Matrix::zeros(m, n);
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for j0 in (0..n).step_by(BJ) {
+                let j1 = (j0 + BJ).min(n);
+                for i in 0..m {
+                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    for kk in k0..k1 {
+                        let aik = self.data[i * k + kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[kk * n..kk * n + n];
+                        for j in j0..j1 {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    // ------------------------------------------------------------------
+    // Shape plumbing for the router
+    // ------------------------------------------------------------------
+
+    /// Zero-pad to `(rows, cols)` (no-op when already that shape).
+    /// Zero padding is exact for GEMM and for checksum algebra (padded
+    /// rows/cols contribute 0 to every sum).
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols, "pad must grow");
+        if rows == self.rows && cols == self.cols {
+            return self.clone();
+        }
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..self.rows {
+            out.data[i * cols..i * cols + self.cols]
+                .copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Extract the top-left `(rows, cols)` block.
+    pub fn slice_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows <= self.rows && cols <= self.cols, "slice must shrink");
+        if rows == self.rows && cols == self.cols {
+            return self.clone();
+        }
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            out.data[i * cols..(i + 1) * cols]
+                .copy_from_slice(&self.data[i * self.cols..i * self.cols + cols]);
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.at(i, j));
+            }
+        }
+        out
+    }
+
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+    }
+
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut sums = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for (s, v) in sums.iter_mut().zip(self.row(i)) {
+                *s += v;
+            }
+        }
+        sums
+    }
+
+    /// max |a - b| over all elements (shape-checked).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_matmul_identity() {
+        let a = Matrix::rand_uniform(5, 5, 1);
+        let id = Matrix::from_fn(5, 5, |i, j| (i == j) as u8 as f32);
+        assert_eq!(a.matmul_naive(&id), a);
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        for (m, k, n, seed) in [(7, 13, 9, 1), (64, 64, 64, 2), (33, 100, 65, 3), (1, 300, 2, 4)] {
+            let a = Matrix::rand_uniform(m, k, seed);
+            let b = Matrix::rand_uniform(k, n, seed + 100);
+            let diff = a.matmul(&b).max_abs_diff(&a.matmul_naive(&b));
+            assert!(diff < 1e-3, "({m},{k},{n}) diff {diff}");
+        }
+    }
+
+    #[test]
+    fn pad_then_matmul_equals_matmul_then_pad() {
+        let a = Matrix::rand_uniform(10, 12, 5);
+        let b = Matrix::rand_uniform(12, 8, 6);
+        let c = a.matmul(&b);
+        let cp = a.pad_to(16, 16).matmul(&b.pad_to(16, 16));
+        assert!(cp.slice_to(10, 8).max_abs_diff(&c) < 1e-4);
+        // padded region must be exactly zero
+        for i in 0..16 {
+            for j in 0..16 {
+                if i >= 10 || j >= 8 {
+                    assert_eq!(cp.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_inverts_pad() {
+        let a = Matrix::rand_uniform(9, 11, 7);
+        assert_eq!(a.pad_to(20, 30).slice_to(9, 11), a);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_cannot_shrink() {
+        Matrix::zeros(4, 4).pad_to(2, 8);
+    }
+
+    #[test]
+    fn sums_and_transpose() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.row_sums(), vec![6.0, 15.0]);
+        assert_eq!(a.col_sums(), vec![5.0, 7.0, 9.0]);
+        assert_eq!(a.transpose().at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn deterministic_rand() {
+        assert_eq!(Matrix::rand_uniform(4, 4, 9), Matrix::rand_uniform(4, 4, 9));
+        assert_ne!(Matrix::rand_uniform(4, 4, 9), Matrix::rand_uniform(4, 4, 10));
+    }
+}

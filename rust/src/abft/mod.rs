@@ -1,0 +1,20 @@
+//! Host-side ABFT library: dense matrices, the Huang–Abraham checksum
+//! algebra (encode / verify / locate / correct), and SEU injection.
+//!
+//! Two consumers:
+//! * the coordinator's **offline path** — detect-only kernels report a
+//!   fault, the host verifies/recomputes here;
+//! * **defense in depth** — after every FT execution the host can re-verify
+//!   the returned `C` against the kernel's carried checksums (the `cr`/`cc`
+//!   outputs) without touching the operands again.
+//!
+//! Everything is plain rust over row-major `Vec<f32>`; the pure-rust GEMM
+//! in [`matrix`] is the CPU witness used by tests and the recompute path.
+
+pub mod checksum;
+pub mod injection;
+pub mod matrix;
+
+pub use checksum::{ChecksumPair, Detection, Thresholds};
+pub use injection::{Injection, InjectionPlan};
+pub use matrix::Matrix;

@@ -1,0 +1,169 @@
+//! Bench harness (criterion replacement — the vendored crate set has no
+//! criterion). Warmup + timed iterations + robust statistics, and a
+//! markdown summary compatible with EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{Quantiles, Running};
+
+/// One benchmark's configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            target_time: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub std_dev: Duration,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean.as_secs_f64()
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "| {} | {} | {:?} | {:?} | {:?} | {:?} |",
+            self.name, self.iters, self.mean, self.median, self.p99, self.max
+        )
+    }
+}
+
+/// A named collection of benchmarks with a shared config.
+pub struct Harness {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Self::new(BenchConfig::default())
+    }
+}
+
+impl Harness {
+    pub fn new(config: BenchConfig) -> Self {
+        Harness { config, results: Vec::new() }
+    }
+
+    /// Quick config for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Harness::new(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 30,
+            target_time: Duration::from_millis(800),
+        })
+    }
+
+    /// Run one benchmark. The closure is timed per call; use
+    /// `std::hint::black_box` inside to defeat dead-code elimination.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.config.warmup_iters {
+            f();
+        }
+        let mut running = Running::new();
+        let mut q = Quantiles::default();
+        let start = Instant::now();
+        let mut iters = 0usize;
+        while iters < self.config.min_iters
+            || (start.elapsed() < self.config.target_time && iters < self.config.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed().as_secs_f64();
+            running.push(dt);
+            q.push(dt);
+            iters += 1;
+        }
+        let d = Duration::from_secs_f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: d(running.mean()),
+            median: d(q.median()),
+            p99: d(q.p99()),
+            min: d(running.min()),
+            max: d(running.max()),
+            std_dev: d(running.std_dev()),
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Markdown summary of everything run so far.
+    pub fn summary(&self) -> String {
+        let mut s = String::from(
+            "| bench | iters | mean | median | p99 | max |\n|---|---|---|---|---|---|\n",
+        );
+        for r in &self.results {
+            s.push_str(&r.row());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut h = Harness::new(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 10,
+            target_time: Duration::from_millis(10),
+        });
+        let r = h.bench("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert!(h.summary().contains("spin"));
+    }
+
+    #[test]
+    fn throughput_computation() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_secs(2),
+            median: Duration::from_secs(2),
+            p99: Duration::from_secs(2),
+            min: Duration::from_secs(2),
+            max: Duration::from_secs(2),
+            std_dev: Duration::ZERO,
+        };
+        assert!((r.throughput(10.0) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Rust-side mirror of the kernel code-generation scheme (paper §3.2/§4.3).
+//!
+//! The python side *generates* kernels; this side *selects* them: Table-1
+//! parameter presets, the shape-class heuristic, bucket geometry for the
+//! router, and validity checks shared with the gpusim cost model.
+//! `python/compile/kernels/params.py` is the twin of [`params`] — keep the
+//! tables in sync (test `table1_matches_manifest` cross-checks via the
+//! manifest).
+
+pub mod params;
+pub mod select;
+
+pub use params::{KernelParams, ShapeClass, TABLE1};
+pub use select::{select_class, select_params, Bucket, BUCKETS};

@@ -1,0 +1,219 @@
+//! Table 1 — the paper's SGEMM kernel parameter presets — plus validation.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// The 7 codegen parameters of the paper's template (§3.2.1): tile sizes at
+/// threadblock (`_tb`), warp (`_w`) and thread (`_t`) level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelParams {
+    pub m_tb: usize,
+    pub n_tb: usize,
+    pub k_tb: usize,
+    pub m_w: usize,
+    pub n_w: usize,
+    pub m_t: usize,
+    pub n_t: usize,
+}
+
+impl KernelParams {
+    pub const fn new(
+        m_tb: usize,
+        n_tb: usize,
+        k_tb: usize,
+        m_w: usize,
+        n_w: usize,
+        m_t: usize,
+        n_t: usize,
+    ) -> Self {
+        KernelParams { m_tb, n_tb, k_tb, m_w, n_w, m_t, n_t }
+    }
+
+    /// Same divisibility/power-of-two constraints as the python template.
+    pub fn validate(&self) -> Result<()> {
+        let all = [self.m_tb, self.n_tb, self.k_tb, self.m_w, self.n_w, self.m_t, self.n_t];
+        if all.iter().any(|&v| v == 0 || !v.is_power_of_two()) {
+            bail!("tile sizes must be positive powers of two: {self:?}");
+        }
+        if self.m_tb % self.m_w != 0 || self.n_tb % self.n_w != 0 {
+            bail!("warp tile must divide threadblock tile: {self:?}");
+        }
+        if self.m_w % self.m_t != 0 || self.n_w % self.n_t != 0 {
+            bail!("thread tile must divide warp tile: {self:?}");
+        }
+        Ok(())
+    }
+
+    /// CUDA-view occupancy quantities (used by gpusim).
+    pub fn threads_per_block(&self) -> usize {
+        (self.m_tb / self.m_t) * (self.n_tb / self.n_t)
+    }
+
+    pub fn warps_per_block(&self) -> usize {
+        (self.m_tb / self.m_w) * (self.n_tb / self.n_w)
+    }
+
+    /// Registers per thread: the accumulator micro-tile + two operand
+    /// fragments (double-buffered) + addressing — the model the paper's
+    /// §3.1.3/§3.1.6 analysis implies.
+    pub fn regs_per_thread(&self) -> usize {
+        let acc = self.m_t * self.n_t;
+        let frags = 2 * (self.m_t + self.n_t);
+        acc + frags + 16
+    }
+
+    /// Shared memory per block in bytes: double-buffered A and B tiles, f32.
+    pub fn smem_bytes(&self) -> usize {
+        2 * (self.m_tb * self.k_tb + self.k_tb * self.n_tb) * 4
+    }
+
+    /// Checksum sub-tile for an FT level ("thread" | "warp" | "tb").
+    pub fn sub_tile(&self, level: &str) -> Result<(usize, usize)> {
+        Ok(match level {
+            "thread" => (self.m_t, self.n_t),
+            "warp" => (self.m_w, self.n_w),
+            "tb" => (self.m_tb, self.n_tb),
+            other => bail!("unknown FT level {other:?}"),
+        })
+    }
+
+    /// Parse the manifest's `params` object.
+    pub fn from_json(j: &Json) -> Result<KernelParams> {
+        let g = |k: &str| {
+            j.path(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("params missing {k}"))
+        };
+        let p = KernelParams {
+            m_tb: g("m_tb")?,
+            n_tb: g("n_tb")?,
+            k_tb: g("k_tb")?,
+            m_w: g("m_w")?,
+            n_w: g("n_w")?,
+            m_t: g("m_t")?,
+            n_t: g("n_t")?,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// The five shape classes of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ShapeClass {
+    Small,
+    Medium,
+    Large,
+    Tall,
+    Huge,
+}
+
+impl ShapeClass {
+    pub const ALL: [ShapeClass; 5] = [
+        ShapeClass::Small,
+        ShapeClass::Medium,
+        ShapeClass::Large,
+        ShapeClass::Tall,
+        ShapeClass::Huge,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShapeClass::Small => "small",
+            ShapeClass::Medium => "medium",
+            ShapeClass::Large => "large",
+            ShapeClass::Tall => "tall",
+            ShapeClass::Huge => "huge",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "small" => ShapeClass::Small,
+            "medium" => ShapeClass::Medium,
+            "large" => ShapeClass::Large,
+            "tall" => ShapeClass::Tall,
+            "huge" => ShapeClass::Huge,
+            other => bail!("unknown shape class {other:?}"),
+        })
+    }
+
+    pub fn params(&self) -> KernelParams {
+        TABLE1[*self as usize].1
+    }
+}
+
+/// Table 1 verbatim (T4 presets). Order matches [`ShapeClass`].
+pub const TABLE1: [(ShapeClass, KernelParams); 5] = [
+    (ShapeClass::Small, KernelParams::new(16, 16, 16, 8, 16, 2, 2)),
+    (ShapeClass::Medium, KernelParams::new(32, 32, 8, 16, 32, 4, 4)),
+    (ShapeClass::Large, KernelParams::new(64, 64, 8, 32, 64, 8, 8)),
+    (ShapeClass::Tall, KernelParams::new(32, 128, 8, 16, 64, 4, 8)),
+    (ShapeClass::Huge, KernelParams::new(128, 128, 8, 32, 64, 8, 8)),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_presets_validate() {
+        for (cls, p) in TABLE1 {
+            p.validate().unwrap_or_else(|e| panic!("{}: {e}", cls.name()));
+        }
+    }
+
+    #[test]
+    fn huge_preset_matches_paper_text() {
+        // §3.1.4: 128x128 threadblock, 256 threads (8 warps), 64x32 warp
+        // tile... our Table-1 huge row: threads = (128/8)*(128/8) = 256.
+        let p = ShapeClass::Huge.params();
+        assert_eq!(p.threads_per_block(), 256);
+        assert_eq!(p.warps_per_block(), 8);
+    }
+
+    #[test]
+    fn smem_fits_t4_per_block_budget() {
+        // T4: 64 KiB shared memory per SM; every preset must fit at least
+        // one block.
+        for (cls, p) in TABLE1 {
+            assert!(p.smem_bytes() <= 64 * 1024, "{}: {}", cls.name(), p.smem_bytes());
+        }
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"m_tb":32,"n_tb":32,"k_tb":8,"m_w":16,"n_w":32,"m_t":4,"n_t":4}"#,
+        )
+        .unwrap();
+        let p = KernelParams::from_json(&j).unwrap();
+        assert_eq!(p, ShapeClass::Medium.params());
+    }
+
+    #[test]
+    fn from_json_rejects_invalid() {
+        let j = Json::parse(
+            r#"{"m_tb":32,"n_tb":32,"k_tb":8,"m_w":5,"n_w":32,"m_t":4,"n_t":4}"#,
+        )
+        .unwrap();
+        assert!(KernelParams::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn sub_tile_levels() {
+        let p = ShapeClass::Huge.params();
+        assert_eq!(p.sub_tile("thread").unwrap(), (8, 8));
+        assert_eq!(p.sub_tile("warp").unwrap(), (32, 64));
+        assert_eq!(p.sub_tile("tb").unwrap(), (128, 128));
+        assert!(p.sub_tile("block").is_err());
+    }
+
+    #[test]
+    fn class_name_roundtrip() {
+        for cls in ShapeClass::ALL {
+            assert_eq!(ShapeClass::from_name(cls.name()).unwrap(), cls);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Shape-class selection heuristic + artifact bucket geometry.
+//!
+//! This is the runtime half of the paper's code-generation story: given a
+//! request's (m, n, k), pick the Table-1 parameter class (§3.2.2) and the
+//! fixed-shape artifact bucket the router pads into.
+
+use super::params::{KernelParams, ShapeClass};
+
+/// The paper's semi-empirical heuristic (mirrors
+/// `python/compile/kernels/params.py::select_class`): square-ish shapes
+/// split at 128/256/512; strongly rectangular outputs go to `tall`.
+pub fn select_class(m: usize, n: usize, _k: usize) -> ShapeClass {
+    let (lo, hi) = if m <= n { (m, n) } else { (n, m) };
+    if hi >= 4 * lo && hi >= 128 {
+        return ShapeClass::Tall;
+    }
+    let size = hi;
+    if size <= 128 {
+        ShapeClass::Small
+    } else if size <= 256 {
+        ShapeClass::Medium
+    } else if size <= 512 {
+        ShapeClass::Large
+    } else {
+        ShapeClass::Huge
+    }
+}
+
+pub fn select_params(m: usize, n: usize, k: usize) -> KernelParams {
+    select_class(m, n, k).params()
+}
+
+/// Concrete artifact bucket shapes (mirror of python `BUCKETS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bucket {
+    pub class: ShapeClass,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl Bucket {
+    pub fn name(&self) -> &'static str {
+        self.class.name()
+    }
+
+    /// Does (m, n, k) fit inside this bucket (with padding)?
+    pub fn fits(&self, m: usize, n: usize, k: usize) -> bool {
+        m <= self.m && n <= self.n && k <= self.k
+    }
+
+    /// Wasted FLOP ratio when padding (m,n,k) into this bucket.
+    pub fn waste(&self, m: usize, n: usize, k: usize) -> f64 {
+        let useful = (m * n * k) as f64;
+        let padded = (self.m * self.n * self.k) as f64;
+        (padded - useful) / padded
+    }
+}
+
+pub const BUCKETS: [Bucket; 5] = [
+    Bucket { class: ShapeClass::Small, m: 64, n: 64, k: 64 },
+    Bucket { class: ShapeClass::Medium, m: 128, n: 128, k: 128 },
+    Bucket { class: ShapeClass::Large, m: 256, n: 256, k: 256 },
+    Bucket { class: ShapeClass::Tall, m: 128, n: 512, k: 256 },
+    Bucket { class: ShapeClass::Huge, m: 512, n: 512, k: 512 },
+];
+
+/// Route a request shape to the artifact bucket that minimizes padding
+/// waste among the buckets that fit. `None` when the request exceeds every
+/// bucket (the coordinator then splits the GEMM — see
+/// `coordinator::router::plan_oversize`).
+pub fn select_bucket(m: usize, n: usize, k: usize) -> Option<Bucket> {
+    BUCKETS
+        .iter()
+        .filter(|b| b.fits(m, n, k))
+        .min_by(|a, b| {
+            a.waste(m, n, k)
+                .partial_cmp(&b.waste(m, n, k))
+                .unwrap()
+        })
+        .copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_heuristic_matches_python_twin() {
+        // cases mirrored from python/tests/test_template.py
+        assert_eq!(select_class(64, 64, 64), ShapeClass::Small);
+        assert_eq!(select_class(128, 128, 512), ShapeClass::Small);
+        assert_eq!(select_class(160, 160, 256), ShapeClass::Medium);
+        assert_eq!(select_class(384, 384, 256), ShapeClass::Large);
+        assert_eq!(select_class(1024, 1024, 1024), ShapeClass::Huge);
+        assert_eq!(select_class(64, 1024, 256), ShapeClass::Tall);
+        assert_eq!(select_class(2048, 128, 1024), ShapeClass::Tall);
+    }
+
+    #[test]
+    fn buckets_divisible_by_their_params() {
+        for b in BUCKETS {
+            let p = b.class.params();
+            assert_eq!(b.m % p.m_tb, 0, "{}", b.name());
+            assert_eq!(b.n % p.n_tb, 0, "{}", b.name());
+            assert_eq!(b.k % p.k_tb, 0, "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn bucket_selection_minimizes_waste() {
+        // 60x60x60 fits everything; small wastes least.
+        assert_eq!(select_bucket(60, 60, 60).unwrap().class, ShapeClass::Small);
+        // 100x500x200 fits tall (and huge); tall wastes less.
+        assert_eq!(select_bucket(100, 500, 200).unwrap().class, ShapeClass::Tall);
+        // 300^3 only fits huge.
+        assert_eq!(select_bucket(300, 300, 300).unwrap().class, ShapeClass::Huge);
+        // oversize
+        assert!(select_bucket(1000, 1000, 1000).is_none());
+    }
+
+    #[test]
+    fn waste_is_zero_for_exact_fit() {
+        let b = BUCKETS[0];
+        assert_eq!(b.waste(64, 64, 64), 0.0);
+        assert!(b.waste(32, 64, 64) > 0.49 && b.waste(32, 64, 64) < 0.51);
+    }
+}

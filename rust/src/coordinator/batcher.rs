@@ -1,0 +1,215 @@
+//! Dynamic request batching (vLLM-style).
+//!
+//! Callers submit GEMM requests and receive a ticket; a background worker
+//! drains the queue, **groups requests by (bucket, policy)** so consecutive
+//! kernel launches hit the same warm executable (executable switches are
+//! the main source of cache-miss latency on the engine thread), and
+//! fulfills each ticket through a oneshot channel.
+//!
+//! Batching discipline: take everything currently queued (up to
+//! `max_batch`), order groups by arrival of their oldest member — bounded
+//! staleness, no starvation.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::abft::injection::InjectionPlan;
+use crate::abft::matrix::Matrix;
+use crate::codegen::select::select_bucket;
+use crate::util::pool::oneshot;
+
+use super::{Coordinator, FtPolicy, GemmResult};
+
+/// A submitted request awaiting execution.
+struct Pending {
+    seq: u64,
+    a: Matrix,
+    b: Matrix,
+    policy: FtPolicy,
+    inj: InjectionPlan,
+    reply: oneshot::OneSender<Result<GemmResult>>,
+}
+
+/// Ticket for a submitted request.
+pub struct Ticket {
+    rx: oneshot::OneReceiver<Result<GemmResult>>,
+}
+
+impl Ticket {
+    /// Block until the result is ready.
+    pub fn wait(self) -> Result<GemmResult> {
+        self.rx.recv().map_err(|_| anyhow!("batcher dropped the request"))?
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> Result<GemmResult> {
+        self.rx
+            .recv_timeout(d)
+            .map_err(|_| anyhow!("batcher response timed out"))?
+    }
+}
+
+/// Batcher configuration.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Max requests drained per scheduling round.
+    pub max_batch: usize,
+    /// Worker poll interval when idle.
+    pub idle_poll: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 64, idle_poll: Duration::from_millis(1) }
+    }
+}
+
+enum Msg {
+    Submit(Pending),
+    Shutdown,
+}
+
+/// Dynamic batcher over a [`Coordinator`].
+pub struct Batcher {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<BatchStats>>,
+}
+
+/// Scheduling statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchStats {
+    pub rounds: u64,
+    pub requests: u64,
+    pub groups: u64,
+    /// Requests that shared a group with at least one other request.
+    pub coscheduled: u64,
+}
+
+impl Batcher {
+    pub fn start(coord: Coordinator, config: BatcherConfig) -> Batcher {
+        let (tx, rx) = channel::<Msg>();
+        let stats = Arc::new(Mutex::new(BatchStats::default()));
+        let wstats = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name("ftgemm-batcher".into())
+            .spawn(move || {
+                let mut queue: VecDeque<Pending> = VecDeque::new();
+                loop {
+                    // Drain whatever is available; block only when idle.
+                    if queue.is_empty() {
+                        match rx.recv() {
+                            Ok(Msg::Submit(p)) => queue.push_back(p),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    }
+                    let mut shutdown = false;
+                    while queue.len() < config.max_batch {
+                        match rx.try_recv() {
+                            Ok(Msg::Submit(p)) => queue.push_back(p),
+                            Ok(Msg::Shutdown) => {
+                                shutdown = true;
+                                break;
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                    // Group by (bucket, policy), keep arrival order of the
+                    // oldest member per group.
+                    let round: Vec<Pending> = queue.drain(..).collect();
+                    let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
+                    for p in round {
+                        let bucket = select_bucket(p.a.rows(), p.b.cols(), p.a.cols())
+                            .map(|b| b.name().to_string())
+                            .unwrap_or_else(|| "split".into());
+                        let key = format!("{bucket}/{}", p.policy.name());
+                        match groups.iter_mut().find(|(k, _)| *k == key) {
+                            Some((_, v)) => v.push(p),
+                            None => groups.push((key, vec![p])),
+                        }
+                    }
+                    {
+                        let mut s = wstats.lock().unwrap();
+                        s.rounds += 1;
+                        s.groups += groups.len() as u64;
+                        for (_, v) in &groups {
+                            s.requests += v.len() as u64;
+                            if v.len() > 1 {
+                                s.coscheduled += v.len() as u64;
+                            }
+                        }
+                    }
+                    for (_, members) in groups {
+                        for p in members {
+                            let r = coord.gemm_with_faults(&p.a, &p.b, p.policy, &p.inj);
+                            let _ = p.reply.send(r);
+                        }
+                    }
+                    if shutdown {
+                        break;
+                    }
+                }
+                // Fail any stragglers.
+                for p in queue {
+                    let _ = p.reply.send(Err(anyhow!("batcher shut down")));
+                }
+            })
+            .expect("spawn batcher");
+        Batcher { tx, handle: Some(handle), stats }
+    }
+
+    /// Submit a request; returns a [`Ticket`] immediately.
+    pub fn submit(
+        &self,
+        a: Matrix,
+        b: Matrix,
+        policy: FtPolicy,
+        inj: InjectionPlan,
+    ) -> Result<Ticket> {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let (otx, orx) = oneshot::channel();
+        let p = Pending {
+            seq: SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            a,
+            b,
+            policy,
+            inj,
+            reply: otx,
+        };
+        let _ = p.seq;
+        self.tx
+            .send(Msg::Submit(p))
+            .map_err(|_| anyhow!("batcher is shut down"))?;
+        Ok(Ticket { rx: orx })
+    }
+
+    pub fn stats(&self) -> BatchStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = BatcherConfig::default();
+        assert!(c.max_batch >= 1);
+    }
+    // End-to-end batcher tests (needing artifacts + engine) live in
+    // rust/tests/integration.rs.
+}

@@ -1,0 +1,190 @@
+//! Request routing: map an arbitrary (m, n, k) GEMM onto the fixed-shape
+//! artifact buckets.
+//!
+//! Three regimes:
+//! * **exact** — the request matches a bucket exactly: execute directly.
+//! * **padded** — the request fits inside a bucket: zero-pad operands,
+//!   execute, slice the result (zero padding is exact for both GEMM and
+//!   checksum algebra).
+//! * **split** — the request exceeds every bucket: block-decompose over the
+//!   largest bucket, execute one kernel per (i, j, s) block and accumulate
+//!   partials host-side. This is the same outer-product decomposition the
+//!   paper's threadblock grid performs, one level up.
+
+use crate::codegen::select::{select_bucket, Bucket, BUCKETS};
+use crate::codegen::ShapeClass;
+
+/// Where one block of a (possibly split) GEMM lands.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockPlan {
+    /// Row/col offset of this block in the full output.
+    pub row0: usize,
+    pub col0: usize,
+    /// k offset in the full reduction.
+    pub k0: usize,
+    /// Actual (un-padded) extents of this block.
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// The bucket this block executes in.
+    pub bucket: Bucket,
+}
+
+impl BlockPlan {
+    pub fn is_padded(&self) -> bool {
+        self.m != self.bucket.m || self.n != self.bucket.n || self.k != self.bucket.k
+    }
+}
+
+/// A routed request: the list of kernel executions that compute it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoutePlan {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub blocks: Vec<BlockPlan>,
+    /// True when the request needed block decomposition.
+    pub split: bool,
+}
+
+impl RoutePlan {
+    /// Number of k-partials that accumulate into each output block.
+    pub fn k_splits(&self) -> usize {
+        if self.blocks.is_empty() {
+            return 0;
+        }
+        let (r0, c0) = (self.blocks[0].row0, self.blocks[0].col0);
+        self.blocks.iter().filter(|b| b.row0 == r0 && b.col0 == c0).count()
+    }
+
+    /// Total padded FLOPs the plan executes (for waste accounting).
+    pub fn padded_flops(&self) -> f64 {
+        self.blocks
+            .iter()
+            .map(|b| 2.0 * (b.bucket.m * b.bucket.n * b.bucket.k) as f64)
+            .sum()
+    }
+
+    pub fn useful_flops(&self) -> f64 {
+        2.0 * (self.m * self.n * self.k) as f64
+    }
+}
+
+/// Build the execution plan for an (m, n, k) request.
+pub fn route(m: usize, n: usize, k: usize) -> RoutePlan {
+    assert!(m > 0 && n > 0 && k > 0, "degenerate GEMM shape");
+    if let Some(bucket) = select_bucket(m, n, k) {
+        return RoutePlan {
+            m,
+            n,
+            k,
+            blocks: vec![BlockPlan { row0: 0, col0: 0, k0: 0, m, n, k, bucket }],
+            split: false,
+        };
+    }
+    // Oversize: tile with the huge bucket. Remainder blocks still go
+    // through the same bucket (padded) so every execution hits the same
+    // warm executable.
+    let huge = BUCKETS
+        .iter()
+        .find(|b| b.class == ShapeClass::Huge)
+        .copied()
+        .expect("huge bucket exists");
+    let mut blocks = Vec::new();
+    for row0 in (0..m).step_by(huge.m) {
+        let bm = (m - row0).min(huge.m);
+        for col0 in (0..n).step_by(huge.n) {
+            let bn = (n - col0).min(huge.n);
+            for k0 in (0..k).step_by(huge.k) {
+                let bk = (k - k0).min(huge.k);
+                blocks.push(BlockPlan {
+                    row0,
+                    col0,
+                    k0,
+                    m: bm,
+                    n: bn,
+                    k: bk,
+                    bucket: huge,
+                });
+            }
+        }
+    }
+    RoutePlan { m, n, k, blocks, split: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_fit_single_block_unpadded() {
+        let plan = route(128, 128, 128);
+        assert!(!plan.split);
+        assert_eq!(plan.blocks.len(), 1);
+        assert!(!plan.blocks[0].is_padded());
+        assert_eq!(plan.blocks[0].bucket.class, ShapeClass::Medium);
+    }
+
+    #[test]
+    fn small_request_padded_into_small_bucket() {
+        let plan = route(30, 50, 40);
+        assert_eq!(plan.blocks.len(), 1);
+        assert!(plan.blocks[0].is_padded());
+        assert_eq!(plan.blocks[0].bucket.class, ShapeClass::Small);
+    }
+
+    #[test]
+    fn tall_request_routes_to_tall_bucket() {
+        let plan = route(100, 500, 200);
+        assert_eq!(plan.blocks[0].bucket.class, ShapeClass::Tall);
+    }
+
+    #[test]
+    fn oversize_splits_cover_output_exactly() {
+        let (m, n, k) = (1000, 700, 600);
+        let plan = route(m, n, k);
+        assert!(plan.split);
+        // coverage check: every output element covered by exactly one
+        // (row0, col0) block family; k fully covered within each family.
+        let mut cover = vec![0u32; m * n];
+        for b in &plan.blocks {
+            if b.k0 == 0 {
+                for i in b.row0..b.row0 + b.m {
+                    for j in b.col0..b.col0 + b.n {
+                        cover[i * n + j] += 1;
+                    }
+                }
+            }
+        }
+        assert!(cover.iter().all(|&c| c == 1));
+        let ksum: usize = plan
+            .blocks
+            .iter()
+            .filter(|b| b.row0 == 0 && b.col0 == 0)
+            .map(|b| b.k)
+            .sum();
+        assert_eq!(ksum, k);
+        assert_eq!(plan.k_splits(), 2);
+    }
+
+    #[test]
+    fn oversize_block_count_matches_grid() {
+        let plan = route(1024, 1024, 1024);
+        assert_eq!(plan.blocks.len(), 2 * 2 * 2);
+        assert!(plan.blocks.iter().all(|b| !b.is_padded()));
+    }
+
+    #[test]
+    fn waste_accounting() {
+        let plan = route(64, 64, 64);
+        assert_eq!(plan.padded_flops(), plan.useful_flops());
+        let padded = route(40, 64, 64);
+        assert!(padded.padded_flops() > padded.useful_flops());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_dim_rejected() {
+        route(0, 4, 4);
+    }
+}

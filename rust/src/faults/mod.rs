@@ -1,0 +1,13 @@
+//! Fault models and injection campaign drivers.
+//!
+//! [`SeuModel`] turns an error *rate* into concrete injection plans
+//! (Poisson arrivals over wall-clock or per-accumulation Bernoulli, the
+//! paper's γ₀ model of §5.5); [`FaultCampaign`] runs a workload through
+//! the coordinator while injecting per that model and tallies the ledger
+//! the error-injection figures (16, 21) and the examples report.
+
+pub mod campaign;
+pub mod model;
+
+pub use campaign::{CampaignReport, FaultCampaign};
+pub use model::{expected_offline_runs, overall_error_rate, SeuModel};

@@ -1,0 +1,253 @@
+//! SEU arrival models + the paper's §5.5 online-vs-offline analytics.
+
+use crate::abft::injection::{bitflip_magnitude, Injection, InjectionPlan};
+use crate::util::rng::Pcg32;
+
+/// Kernel geometry an SEU plan must respect: the protection domains are
+/// (sub-tile, verification interval) pairs — one correctable error each
+/// (paper §4.1).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelGeom {
+    /// Output extents served by the kernel.
+    pub m: usize,
+    pub n: usize,
+    /// k-loop steps of the kernel grid.
+    pub steps: usize,
+    /// Verification fires every this many steps.
+    pub verify_every: usize,
+    /// Protection sub-tile (tb level: the threadblock tile itself).
+    pub sub_m: usize,
+    pub sub_n: usize,
+}
+
+impl KernelGeom {
+    pub fn tiles(&self) -> usize {
+        self.m.div_ceil(self.sub_m) * self.n.div_ceil(self.sub_n)
+    }
+
+    /// Geometry of the bucket kernel that would serve (m, n, k) at tb level.
+    pub fn for_shape(m: usize, n: usize, k: usize) -> KernelGeom {
+        let bucket = crate::codegen::select::select_bucket(m, n, k);
+        match bucket {
+            Some(b) => {
+                let p = b.class.params();
+                KernelGeom {
+                    m,
+                    n,
+                    steps: b.k / p.k_tb,
+                    verify_every: 8, // VERIFY_EVERY in the python template
+                    sub_m: p.m_tb,
+                    sub_n: p.n_tb,
+                }
+            }
+            None => {
+                // oversize requests split over the huge bucket
+                let p = crate::codegen::ShapeClass::Huge.params();
+                KernelGeom {
+                    m,
+                    n,
+                    steps: 512 / p.k_tb,
+                    verify_every: 8,
+                    sub_m: p.m_tb,
+                    sub_n: p.n_tb,
+                }
+            }
+        }
+    }
+}
+
+/// Single-event-upset model: how often compute errors strike.
+#[derive(Debug, Clone, Copy)]
+pub enum SeuModel {
+    /// No faults (baseline runs).
+    None,
+    /// Exactly `count` errors per GEMM, spread evenly over the k-steps —
+    /// the Fig 16/21 protocol ("1, 2, ..., 40 errors are injected ... for
+    /// each outer-product sub-problem"). SEU-constrained placement.
+    PerGemm { count: usize },
+    /// Each threadblock-tile accumulation errs with probability γ₀ —
+    /// the §5.5 analytical model (placement is per protection domain, so
+    /// SEU holds by construction).
+    PerTile { gamma0: f64 },
+    /// Poisson arrivals at `rate_per_min` over wall-clock time (the
+    /// "hundreds of errors injected per minute" abstract claim).
+    PoissonPerMinute { rate_per_min: f64 },
+}
+
+impl SeuModel {
+    /// Build an injection plan for one GEMM execution with the given
+    /// kernel geometry; `elapsed_secs` feeds the Poisson model.
+    pub fn plan(&self, geom: &KernelGeom, elapsed_secs: f64, rng: &mut Pcg32) -> InjectionPlan {
+        match *self {
+            SeuModel::None => InjectionPlan::none(),
+            SeuModel::PerGemm { count } => InjectionPlan::random_seu(
+                geom.m,
+                geom.n,
+                geom.steps,
+                geom.verify_every,
+                geom.sub_m,
+                geom.sub_n,
+                count,
+                rng,
+            ),
+            SeuModel::PerTile { gamma0 } => {
+                let mut plan = InjectionPlan::none();
+                let tiles_m = geom.m.div_ceil(geom.sub_m);
+                let tiles_n = geom.n.div_ceil(geom.sub_n);
+                for ti in 0..tiles_m {
+                    for tj in 0..tiles_n {
+                        if rng.f64() < gamma0 {
+                            let row = (ti * geom.sub_m
+                                + rng.usize_below(geom.sub_m))
+                            .min(geom.m - 1);
+                            let col = (tj * geom.sub_n
+                                + rng.usize_below(geom.sub_n))
+                            .min(geom.n - 1);
+                            plan.injections.push(Injection {
+                                row,
+                                col,
+                                step: rng.usize_below(geom.steps.max(1)),
+                                magnitude: bitflip_magnitude(rng),
+                            });
+                        }
+                    }
+                }
+                plan
+            }
+            SeuModel::PoissonPerMinute { rate_per_min } => {
+                let lambda_sec = rate_per_min / 60.0;
+                let mut t = 0.0;
+                let mut count = 0usize;
+                loop {
+                    t += rng.exponential(lambda_sec.max(1e-12));
+                    if t >= elapsed_secs {
+                        break;
+                    }
+                    count += 1;
+                }
+                // place the arrivals SEU-consistently (capped by domains)
+                let domains =
+                    geom.tiles() * geom.steps.div_ceil(geom.verify_every.max(1)).max(1);
+                InjectionPlan::random_seu(
+                    geom.m,
+                    geom.n,
+                    geom.steps,
+                    geom.verify_every,
+                    geom.sub_m,
+                    geom.sub_n,
+                    count.min(domains),
+                    rng,
+                )
+            }
+        }
+    }
+}
+
+/// §5.5: overall error rate γ = 1 - (1-γ₀)^(M/m_tb · N/n_tb) — probability
+/// that at least one tile of the GEMM errs.
+pub fn overall_error_rate(gamma0: f64, m: usize, n: usize, m_tb: usize, n_tb: usize) -> f64 {
+    let tiles = (m as f64 / m_tb as f64) * (n as f64 / n_tb as f64);
+    1.0 - (1.0 - gamma0).powf(tiles)
+}
+
+/// §5.5: expected number of full executions for offline ABFT to produce a
+/// correct result: (1-γ)/(1-2γ) — each detection triggers a restart which
+/// may itself err (diverges as γ → 1/2).
+pub fn expected_offline_runs(gamma: f64) -> f64 {
+    assert!((0.0..0.5).contains(&gamma), "offline ABFT diverges at γ >= 1/2");
+    (1.0 - gamma) / (1.0 - 2.0 * gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> KernelGeom {
+        KernelGeom { m: 128, n: 128, steps: 16, verify_every: 8, sub_m: 32, sub_n: 32 }
+    }
+
+    #[test]
+    fn per_gemm_plan_has_exact_count_and_respects_seu() {
+        let mut rng = Pcg32::seeded(1);
+        let g = geom();
+        for count in [1, 4, 13, 32] {
+            let plan = SeuModel::PerGemm { count }.plan(&g, 0.0, &mut rng);
+            assert_eq!(plan.len(), count);
+            // SEU: unique (tile, interval) domains
+            let mut seen = std::collections::HashSet::new();
+            for e in &plan.injections {
+                assert!(seen.insert((e.row / 32, e.col / 32, e.step / 8)));
+            }
+        }
+    }
+
+    #[test]
+    fn per_tile_rate_statistics() {
+        let mut rng = Pcg32::seeded(2);
+        let gamma0 = 0.1;
+        let trials = 2000;
+        let g = geom(); // 16 tiles
+        let total: usize = (0..trials)
+            .map(|_| SeuModel::PerTile { gamma0 }.plan(&g, 0.0, &mut rng).len())
+            .sum();
+        let mean = total as f64 / trials as f64;
+        let expect = gamma0 * g.tiles() as f64;
+        assert!((mean - expect).abs() < 0.1, "mean {mean} vs {expect}");
+    }
+
+    #[test]
+    fn per_tile_places_inside_owner_tile() {
+        let mut rng = Pcg32::seeded(7);
+        let g = geom();
+        for _ in 0..50 {
+            let plan = SeuModel::PerTile { gamma0: 0.5 }.plan(&g, 0.0, &mut rng);
+            for e in &plan.injections {
+                assert!(e.row < g.m && e.col < g.n && e.step < g.steps);
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_rate_matches() {
+        let mut rng = Pcg32::seeded(3);
+        let model = SeuModel::PoissonPerMinute { rate_per_min: 600.0 }; // 10/sec
+        let g = geom();
+        let total: usize = (0..500).map(|_| model.plan(&g, 2.0, &mut rng).len()).sum();
+        let mean = total as f64 / 500.0;
+        assert!((mean - 20.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn geom_for_shape_uses_bucket_params() {
+        let g = KernelGeom::for_shape(128, 128, 128);
+        // medium bucket: k=128, k_tb=8 -> 16 steps; tiles 32x32
+        assert_eq!(g.steps, 16);
+        assert_eq!((g.sub_m, g.sub_n), (32, 32));
+        assert_eq!(g.tiles(), 16);
+    }
+
+    #[test]
+    fn gamma_formula_matches_paper() {
+        // γ₀ = 1/256, 512^2 output with 128x128 tiles -> 16 tiles
+        let g = overall_error_rate(1.0 / 256.0, 512, 512, 128, 128);
+        let expect = 1.0 - (1.0 - 1.0 / 256.0f64).powi(16);
+        assert!((g - expect).abs() < 1e-12);
+        assert!(g > 0.0 && g < 1.0);
+    }
+
+    #[test]
+    fn offline_runs_monotone_and_diverging() {
+        assert!((expected_offline_runs(0.0) - 1.0).abs() < 1e-12);
+        let a = expected_offline_runs(0.1);
+        let b = expected_offline_runs(0.3);
+        let c = expected_offline_runs(0.49);
+        assert!(1.0 < a && a < b && b < c);
+        assert!(c > 25.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn offline_runs_rejects_gamma_half() {
+        expected_offline_runs(0.5);
+    }
+}

@@ -1,0 +1,105 @@
+//! Figure catalog: id → generator, plus the writer that emits
+//! markdown / CSV / JSON bundles into an output directory.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::report::Table;
+use crate::util::json::Json;
+
+/// Every regenerable experiment, keyed by the paper's numbering.
+pub const FIGURE_IDS: [&str; 15] = [
+    "table1", "9", "10", "11", "12", "13", "14", "15", "16", "17", "18", "19", "20", "21", "22",
+];
+
+/// Generate the tables for one figure id.
+pub fn generate(id: &str) -> Result<Vec<Table>> {
+    Ok(match id {
+        "table1" => vec![super::table1()],
+        "9" => vec![super::fig9()],
+        "10" => vec![super::fig10()],
+        "11" => vec![super::fig11()],
+        "12" => super::fig12(),
+        "13" => super::fig13(),
+        "14" => vec![super::fig14()],
+        "15" => vec![super::fig15()],
+        "16" => vec![super::fig16()],
+        "17" => super::fig17(),
+        "18" => super::fig18(),
+        "19" => vec![super::fig19()],
+        "20" => vec![super::fig20()],
+        "21" => vec![super::fig21()],
+        "22" => vec![super::fig22()],
+        other => bail!("unknown figure id {other:?} (try one of {FIGURE_IDS:?})"),
+    })
+}
+
+/// Write one figure's tables into `<out>/fig<id>.{md,csv,json}`.
+pub fn write(id: &str, out_dir: &Path) -> Result<Vec<String>> {
+    let tables = generate(id)?;
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {out_dir:?}"))?;
+    let mut written = Vec::new();
+    let stem = if id == "table1" { "table1".to_string() } else { format!("fig{id}") };
+    let mut md = String::new();
+    let mut csv = String::new();
+    let mut json_tables = Vec::new();
+    for t in &tables {
+        md.push_str(&t.to_markdown());
+        md.push('\n');
+        csv.push_str(&format!("# {}\n", t.title));
+        csv.push_str(&t.to_csv());
+        json_tables.push(t.to_json());
+    }
+    for (ext, content) in [
+        ("md", md),
+        ("csv", csv),
+        ("json", Json::Arr(json_tables).to_string_pretty()),
+    ] {
+        let path = out_dir.join(format!("{stem}.{ext}"));
+        std::fs::write(&path, content).with_context(|| format!("writing {path:?}"))?;
+        written.push(path.display().to_string());
+    }
+    Ok(written)
+}
+
+/// Write everything.
+pub fn write_all(out_dir: &Path) -> Result<Vec<String>> {
+    let mut all = Vec::new();
+    for id in FIGURE_IDS {
+        all.extend(write(id, out_dir)?);
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_id_generates() {
+        for id in FIGURE_IDS {
+            let tables = generate(id).unwrap();
+            assert!(!tables.is_empty(), "{id}");
+        }
+    }
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(generate("99").is_err());
+    }
+
+    #[test]
+    fn write_roundtrip() {
+        let dir = std::env::temp_dir().join("ftgemm_figtest");
+        let _ = std::fs::remove_dir_all(&dir);
+        let files = write("22", &dir).unwrap();
+        assert_eq!(files.len(), 3);
+        let md = std::fs::read_to_string(dir.join("fig22.md")).unwrap();
+        assert!(md.contains("online_abft"));
+        let json = std::fs::read_to_string(dir.join("fig22.json")).unwrap();
+        assert!(Json::parse(&json).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,108 @@
+//! §5.5 analytics: online vs offline ABFT under an error rate (Fig 22).
+//!
+//! Offline (detect-only) ABFT is nearly free when nothing goes wrong
+//! (~1%), but every detection forces a full recompute, and the recompute
+//! itself may fault: expected executions = (1-γ)/(1-2γ) with
+//! γ = 1-(1-γ₀)^(tiles). Online ABFT pays a flat in-kernel premium but
+//! always finishes in one pass. The crossover in matrix size (for fixed
+//! γ₀) is the figure's punchline.
+
+use crate::codegen::params::KernelParams;
+use crate::faults::model::{expected_offline_runs, overall_error_rate};
+
+use super::device::DeviceSpec;
+use super::ft_model::{predict_ft, FtLevel, FtVariant};
+
+/// Expected relative overhead (%) of ONLINE ABFT vs the unprotected base
+/// at (m, n, k) — flat in the error rate (by design).
+pub fn online_overhead_pct(
+    dev: &DeviceSpec,
+    params: KernelParams,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> f64 {
+    let base = predict_ft(dev, params, m, n, k, FtVariant::None);
+    let on = predict_ft(dev, params, m, n, k, FtVariant::Fused(FtLevel::Tb));
+    (on.time_s / base.time_s - 1.0) * 100.0
+}
+
+/// Expected relative overhead (%) of OFFLINE (detect-only + recompute)
+/// ABFT vs base, under per-tile error rate γ₀.
+pub fn offline_overhead_pct(
+    dev: &DeviceSpec,
+    params: KernelParams,
+    m: usize,
+    n: usize,
+    k: usize,
+    gamma0: f64,
+) -> f64 {
+    let base = predict_ft(dev, params, m, n, k, FtVariant::None);
+    let det = predict_ft(dev, params, m, n, k, FtVariant::DetectOnly);
+    let gamma = overall_error_rate(gamma0, m, n, params.m_tb, params.n_tb);
+    // Past γ = 1/2 the restart recursion diverges; cap at a large finite
+    // value so figures/JSON stay well-formed (the curve is off the chart
+    // either way).
+    let runs = if gamma < 0.499 {
+        expected_offline_runs(gamma).min(100.0)
+    } else {
+        100.0
+    };
+    (det.time_s * runs / base.time_s - 1.0) * 100.0
+}
+
+/// The Fig 22 crossover: smallest square size where online beats offline.
+pub fn crossover_size(dev: &DeviceSpec, params: KernelParams, gamma0: f64) -> Option<usize> {
+    for s in (128..=8192).step_by(128) {
+        let on = online_overhead_pct(dev, params, s, s, s);
+        let off = offline_overhead_pct(dev, params, s, s, s, gamma0);
+        if on < off {
+            return Some(s);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::ShapeClass;
+    use crate::gpusim::device::T4;
+
+    const GAMMA0: f64 = 1.0 / 256.0; // the paper's Fig 22 setting
+
+    #[test]
+    fn online_overhead_is_flat_in_error_rate() {
+        let p = ShapeClass::Huge.params();
+        let a = online_overhead_pct(&T4, p, 2048, 2048, 2048);
+        assert!((5.0..20.0).contains(&a), "{a}");
+    }
+
+    #[test]
+    fn offline_cheap_when_small_expensive_when_big() {
+        let p = ShapeClass::Huge.params();
+        let small = offline_overhead_pct(&T4, p, 256, 256, 256, GAMMA0);
+        let big = offline_overhead_pct(&T4, p, 6144, 6144, 6144, GAMMA0);
+        assert!(small < 5.0, "small {small:.2}%");
+        assert!(big > 50.0, "big {big:.2}%");
+    }
+
+    #[test]
+    fn crossover_exists_at_paper_error_rate() {
+        let p = ShapeClass::Huge.params();
+        let x = crossover_size(&T4, p, GAMMA0).expect("crossover must exist");
+        // offline wins below ~a few hundred, online above
+        assert!((128..4096).contains(&x), "{x}");
+        let before = offline_overhead_pct(&T4, p, x - 128, x - 128, x - 128, GAMMA0);
+        let on_before = online_overhead_pct(&T4, p, x - 128, x - 128, x - 128);
+        assert!(before <= on_before + 1e-9);
+    }
+
+    #[test]
+    fn offline_diverges_at_gamma_half() {
+        let p = ShapeClass::Huge.params();
+        // γ₀ high enough that a big grid pushes γ past 1/2
+        let off = offline_overhead_pct(&T4, p, 8192, 8192, 1024, 0.05);
+        assert!(off.is_infinite() || off > 1000.0);
+    }
+}

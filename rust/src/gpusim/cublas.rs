@@ -1,0 +1,154 @@
+//! Calibrated stand-in for the closed-source cuBLAS SGEMM.
+//!
+//! cuBLAS cannot run in this environment (and is a black box in the paper
+//! too); it appears in every figure as a baseline curve. We model it as a
+//! fraction-of-peak efficiency curve vs effective problem size
+//! `(m·n·k)^(1/3)`, log-interpolated over anchor points placed so the
+//! *relative* positions the paper reports hold:
+//!
+//! * T4, large squares: our optimized SGEMM is comparable-or-faster
+//!   (Fig 9/13), and the generated kernels beat cuBLAS by 18-28% on
+//!   small/irregular shapes (Figs 10/11) — cuBLAS pays its own kernel-
+//!   selection and quantization penalties down there.
+//! * A100, large squares: cuBLAS leads our SGEMM by 6.29% (Fig 18).
+
+use super::device::DeviceSpec;
+
+/// Anchor table: (effective cube size, fraction of device peak).
+///
+/// Small/medium anchors are set from the paper's reported margins against
+/// the generated kernels (Fig 11: cuBLAS loses 27.23% at 64-112, 76.72%
+/// at 160, 7.22% at >=384); large-square anchors from the Fig 9/13
+/// relation to our optimized kernel (comparable, we lead slightly).
+const T4_CURVE: &[(f64, f64)] = &[
+    (16.0, 0.004),
+    (32.0, 0.010),
+    (64.0, 0.020),
+    (100.0, 0.033),
+    (133.0, 0.056),
+    (161.0, 0.072),
+    (187.0, 0.092), // the paper's medium dip: poor internal kernel pick
+    (210.0, 0.132),
+    (233.0, 0.168),
+    (254.0, 0.196),
+    (275.0, 0.257),
+    (317.0, 0.330),
+    (334.0, 0.385),
+    (371.0, 0.410),
+    (512.0, 0.450),
+    (768.0, 0.510),
+    (1024.0, 0.540),
+    (2048.0, 0.556),
+    (4096.0, 0.560),
+    (8192.0, 0.560),
+];
+
+/// A100: Fig 19 margins (generated +22.45% at K=256 sweeps; cuBLAS leads
+/// our SGEMM by 6.29% at full squares).
+const A100_CURVE: &[(f64, f64)] = &[
+    (16.0, 0.002),
+    (32.0, 0.005),
+    (64.0, 0.015),
+    (96.0, 0.030),
+    (128.0, 0.052),
+    (160.0, 0.060),
+    (192.0, 0.090),
+    (256.0, 0.140),
+    (384.0, 0.230),
+    (512.0, 0.330),
+    (768.0, 0.500),
+    (1024.0, 0.600),
+    (2048.0, 0.700),
+    (4096.0, 0.740),
+    (8192.0, 0.745),
+];
+
+/// Effective cube size of a GEMM.
+pub fn effective_size(m: usize, n: usize, k: usize) -> f64 {
+    (m as f64 * n as f64 * k as f64).cbrt()
+}
+
+fn interp(curve: &[(f64, f64)], x: f64) -> f64 {
+    if x <= curve[0].0 {
+        return curve[0].1;
+    }
+    if x >= curve[curve.len() - 1].0 {
+        return curve[curve.len() - 1].1;
+    }
+    for w in curve.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        if x <= x1 {
+            // log-x interpolation: sizes span decades
+            let t = (x.ln() - x0.ln()) / (x1.ln() - x0.ln());
+            return y0 + t * (y1 - y0);
+        }
+    }
+    unreachable!()
+}
+
+/// Modeled cuBLAS SGEMM GFLOPS on `dev` for C = A(m,k)·B(k,n).
+pub fn cublas_gflops(dev: &DeviceSpec, m: usize, n: usize, k: usize) -> f64 {
+    let curve = match dev.name {
+        "T4" => T4_CURVE,
+        "A100" => A100_CURVE,
+        _ => T4_CURVE,
+    };
+    let eff = interp(curve, effective_size(m, n, k));
+    dev.peak_gflops() * eff
+}
+
+/// Modeled cuBLAS execution time.
+pub fn cublas_time(dev: &DeviceSpec, m: usize, n: usize, k: usize) -> f64 {
+    let g = cublas_gflops(dev, m, n, k);
+    2.0 * m as f64 * n as f64 * k as f64 / (g * 1e9) + dev.launch_overhead_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::{A100, T4};
+
+    #[test]
+    fn monotone_over_large_sizes() {
+        let mut last = 0.0;
+        for s in [256, 512, 1024, 2048, 4096] {
+            let g = cublas_gflops(&T4, s, s, s);
+            assert!(g > last, "{s}: {g}");
+            last = g;
+        }
+    }
+
+    #[test]
+    fn t4_plateau_near_4500() {
+        let g = cublas_gflops(&T4, 4096, 4096, 4096);
+        assert!((4300.0..4700.0).contains(&g), "{g}");
+    }
+
+    #[test]
+    fn a100_large_square_leads_t4_by_3x_plus() {
+        let t = cublas_gflops(&T4, 4096, 4096, 4096);
+        let a = cublas_gflops(&A100, 4096, 4096, 4096);
+        assert!(a > 3.0 * t);
+    }
+
+    #[test]
+    fn small_sizes_are_heavily_penalized() {
+        let small = cublas_gflops(&T4, 64, 64, 256);
+        let big = cublas_gflops(&T4, 4096, 4096, 4096);
+        assert!(small < 0.2 * big);
+    }
+
+    #[test]
+    fn effective_size_of_cube_is_side() {
+        assert!((effective_size(128, 128, 128) - 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interpolation_continuous_at_anchors() {
+        for &(x, y) in T4_CURVE {
+            let g = cublas_gflops(&T4, x as usize, x as usize, x as usize);
+            assert!((g - T4.peak_gflops() * y).abs() / (T4.peak_gflops() * y) < 0.05);
+        }
+    }
+}

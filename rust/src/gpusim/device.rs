@@ -1,0 +1,175 @@
+//! Device specifications for the paper's two testbeds.
+//!
+//! Hardware numbers are public datasheet values; the `cal` block holds the
+//! fitted cost constants of the instruction-issue model (calibrated so the
+//! Fig 9 step-wise ladder lands within tolerance — see
+//! `stepwise::tests::ladder_matches_paper`).
+
+/// Fitted per-architecture cost constants.
+#[derive(Debug, Clone, Copy)]
+pub struct CostCal {
+    /// Issue-slot cost of one shared-memory load (relative to one FMA).
+    pub ld_smem: f64,
+    /// Issue-slot cost of one global load in a non-tiled (naive) kernel.
+    pub ld_global: f64,
+    /// Bank-conflict multiplier on smem loads when the warp tile is NOT
+    /// organized for broadcast (paper §3.1.4).
+    pub conflict: f64,
+    /// Per-k-iteration loop/bookkeeping instruction cost.
+    pub loop_overhead: f64,
+    /// Throughput factor lost to load-use stalls without the
+    /// shared→register prefetch (§3.1.6).
+    pub stall_no_prefetch_reg: f64,
+    /// ... without the global→shared double buffer (§3.1.7).
+    pub stall_no_prefetch_smem: f64,
+    /// ... without 128-bit vectorized access (§3.1.5).
+    pub stall_no_vectorized: f64,
+    /// Architecture-wide issue bonus (dual-issue, LDGSTS, etc.).
+    pub issue_bonus: f64,
+    /// Effective DRAM bandwidth fraction for scalar / vectorized access.
+    pub bw_eff_scalar: f64,
+    pub bw_eff_vector: f64,
+    /// Traffic multiplier for the naive (no-smem) kernel after L2 reuse.
+    pub naive_traffic: f64,
+    // --- fused-ABFT instruction costs (per k-iteration, issue slots) ---
+    /// Checksum-update FMA/reduction cost at threadblock granularity.
+    pub ft_tb_instr: f64,
+    /// Additional per-iteration cost at warp granularity (the two extra
+    /// smem reads per C_w update, §4.2.2).
+    pub ft_warp_instr: f64,
+    /// Additional per-iteration cost at thread granularity (per-thread
+    /// redundant encodings, §4.2.1).
+    pub ft_thread_instr: f64,
+    /// Slowdown of the Ding'11-era baseline GEMM kernel on this
+    /// architecture (legacy kernels don't exploit newer pipelines).
+    pub ding_kernel_penalty: f64,
+}
+
+/// One GPU model.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub sms: usize,
+    pub clock_ghz: f64,
+    /// FP32 lanes (CUDA cores) per SM.
+    pub fp32_per_sm: usize,
+    pub dram_gbs: f64,
+    /// Shared-memory bytes per SM usable by one kernel.
+    pub smem_per_sm: usize,
+    pub regs_per_sm: usize,
+    pub max_threads_per_sm: usize,
+    pub max_blocks_per_sm: usize,
+    /// Kernel launch overhead, seconds.
+    pub launch_overhead_s: f64,
+    pub cal: CostCal,
+}
+
+impl DeviceSpec {
+    /// Peak FP32 GFLOPS (FMA = 2 flops).
+    pub fn peak_gflops(&self) -> f64 {
+        self.sms as f64 * self.fp32_per_sm as f64 * 2.0 * self.clock_ghz
+    }
+
+    pub fn dram_bytes_per_sec(&self) -> f64 {
+        self.dram_gbs * 1e9
+    }
+}
+
+/// NVIDIA Tesla T4 (Turing TU104): 40 SMs @ 1.59 GHz, 64 FP32/SM
+/// → 8.1 TFLOPS peak; 320 GB/s GDDR6.
+pub const T4: DeviceSpec = DeviceSpec {
+    name: "T4",
+    sms: 40,
+    clock_ghz: 1.59,
+    fp32_per_sm: 64,
+    dram_gbs: 320.0,
+    smem_per_sm: 64 * 1024,
+    regs_per_sm: 65536,
+    max_threads_per_sm: 1024,
+    max_blocks_per_sm: 16,
+    launch_overhead_s: 4.0e-6,
+    cal: CostCal {
+        ld_smem: 1.1,
+        ld_global: 1.6,
+        conflict: 1.9,
+        loop_overhead: 6.0,
+        stall_no_prefetch_reg: 0.9472,
+        stall_no_prefetch_smem: 0.9937,
+        stall_no_vectorized: 0.9887,
+        issue_bonus: 0.817,
+        bw_eff_scalar: 0.78,
+        bw_eff_vector: 0.92,
+        naive_traffic: 0.60,
+        ft_tb_instr: 8.5,
+        ft_warp_instr: 5.5,
+        ft_thread_instr: 10.0,
+        ding_kernel_penalty: 1.0,
+    },
+};
+
+/// NVIDIA A100 (Ampere GA100, 40 GB SXM): 108 SMs @ 1.41 GHz, 64 FP32/SM
+/// → 19.5 TFLOPS peak; 1555 GB/s HBM2.
+pub const A100: DeviceSpec = DeviceSpec {
+    name: "A100",
+    sms: 108,
+    clock_ghz: 1.41,
+    fp32_per_sm: 64,
+    dram_gbs: 1555.0,
+    smem_per_sm: 164 * 1024,
+    regs_per_sm: 65536,
+    max_threads_per_sm: 2048,
+    max_blocks_per_sm: 32,
+    launch_overhead_s: 3.5e-6,
+    cal: CostCal {
+        // Ampere: LDGSTS + wider LSU make loads cheaper; warp-level FT is
+        // nearly free (Fig 17: warp within 1% of tb), thread-level still
+        // pays its redundant encodings.
+        ld_smem: 1.05,
+        ld_global: 1.5,
+        conflict: 1.8,
+        loop_overhead: 5.0,
+        stall_no_prefetch_reg: 0.950,
+        stall_no_prefetch_smem: 0.994,
+        stall_no_vectorized: 0.989,
+        issue_bonus: 0.98,
+        bw_eff_scalar: 0.80,
+        bw_eff_vector: 0.93,
+        naive_traffic: 0.55,
+        ft_tb_instr: 7.3,
+        ft_warp_instr: 0.7,
+        ft_thread_instr: 29.3,
+        ding_kernel_penalty: 1.35,
+    },
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peaks_match_datasheets() {
+        assert!((T4.peak_gflops() - 8140.8).abs() < 1.0);
+        assert!((A100.peak_gflops() - 19491.8).abs() < 1.0);
+    }
+
+    #[test]
+    fn a100_is_strictly_bigger() {
+        assert!(A100.peak_gflops() > 2.0 * T4.peak_gflops());
+        assert!(A100.dram_gbs > 4.0 * T4.dram_gbs);
+        assert!(A100.smem_per_sm > T4.smem_per_sm);
+    }
+
+    #[test]
+    fn calibration_constants_sane() {
+        for d in [T4, A100] {
+            let c = d.cal;
+            assert!(c.ld_smem < c.ld_global, "{}", d.name);
+            assert!(c.conflict >= 1.0);
+            assert!((0.5..=1.0).contains(&c.issue_bonus));
+            assert!(c.stall_no_prefetch_reg < 1.0);
+            // warp adds cost on top of tb; thread-level is the priciest
+            assert!(c.ft_warp_instr > 0.0);
+            assert!(c.ft_thread_instr > c.ft_warp_instr);
+        }
+    }
+}

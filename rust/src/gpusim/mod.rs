@@ -1,0 +1,38 @@
+//! Analytical GPU performance simulator.
+//!
+//! This environment has no NVIDIA GPU, so every *performance* number in
+//! the paper's evaluation is regenerated from a first-principles model of
+//! the two devices it used (Tesla T4, A100):
+//!
+//! * [`device`] — device specs: SM count, clock, FP32 lanes, DRAM/shared
+//!   bandwidth, register file, occupancy limits, plus a small set of
+//!   per-architecture cost constants **calibrated against the paper's
+//!   measured step-wise ladder** (Fig 9) — the model structure is physical
+//!   (instruction-issue + bandwidth + occupancy roofline), the constants
+//!   are fitted, and `stepwise` tests pin the fit.
+//! * [`kernel_model`] — time/GFLOPS prediction for one codegen kernel
+//!   configuration: instruction-issue efficiency from the micro-tile shape,
+//!   global-memory roofline from the tiling, occupancy and wave
+//!   quantization (the effect the Table-1 presets exploit for small
+//!   shapes), pipeline-stall factors for the prefetch variants.
+//! * [`stepwise`] — the seven §3.1 variants as model configurations
+//!   (Fig 9).
+//! * [`ft_model`] — overhead model for the fused FT kernels (thread /
+//!   warp / threadblock), the detect-only kernel, and the non-fused
+//!   Ding'11 baseline with its per-panel kernel launches and C^f
+//!   re-read/re-write traffic (Figs 12-21).
+//! * [`cublas`] — calibrated fraction-of-peak curves standing in for the
+//!   closed-source cuBLAS (the paper also treats it as a black box).
+//! * [`analytic`] — the §5.5 online-vs-offline expected-cost model
+//!   (Fig 22).
+
+pub mod analytic;
+pub mod cublas;
+pub mod device;
+pub mod ft_model;
+pub mod kernel_model;
+pub mod stepwise;
+
+pub use device::{DeviceSpec, A100, T4};
+pub use ft_model::{predict_ft, FtVariant};
+pub use kernel_model::{predict, KernelConfig, Prediction};

@@ -1,0 +1,152 @@
+//! The §3.1 step-wise optimization ladder as model configurations (Fig 9).
+//!
+//! Seven steps, each adding one optimization. Paper-measured averages on a
+//! Tesla T4 over square sizes 1024..6144 (GFLOPS): 611 → 679 → 3822 →
+//! 4331 → 4381 → 4625 → 4654. The calibration test pins the model to
+//! those within tolerance; the figure harness regenerates the whole series.
+
+use crate::codegen::params::KernelParams;
+use crate::codegen::ShapeClass;
+
+use super::device::DeviceSpec;
+use super::kernel_model::{predict, KernelConfig};
+
+/// One rung of the ladder.
+#[derive(Debug, Clone, Copy)]
+pub struct Step {
+    pub name: &'static str,
+    pub desc: &'static str,
+    /// Paper-measured average GFLOPS on the T4 (Fig 9).
+    pub paper_t4_gflops: f64,
+    pub config: KernelConfig,
+}
+
+/// The naive kernel's launch geometry: one thread per output element in a
+/// 16x16 block, full-K streaming (no smem, no k-blocking).
+fn naive_params() -> KernelParams {
+    KernelParams::new(16, 16, 16, 8, 16, 1, 1)
+}
+
+/// One-element-per-thread tiled kernel (§3.1.2 uses a 32x32 tile).
+fn tbtile_params() -> KernelParams {
+    KernelParams::new(32, 32, 8, 16, 32, 1, 1)
+}
+
+/// Build the seven-step ladder for the `huge` preset.
+pub fn ladder() -> Vec<Step> {
+    let huge = ShapeClass::Huge.params();
+    let base = |params, smem, thread, warp, vect, pre_r, pre_s| KernelConfig {
+        params,
+        smem_tiled: smem,
+        thread_tiled: thread,
+        warp_tiled: warp,
+        vectorized: vect,
+        prefetch_reg: pre_r,
+        prefetch_smem: pre_s,
+    };
+    vec![
+        Step {
+            name: "naive",
+            desc: "one thread per element, global-memory streaming",
+            paper_t4_gflops: 611.0,
+            config: base(naive_params(), false, false, false, false, false, false),
+        },
+        Step {
+            name: "tbtile",
+            desc: "threadblock tiling via shared memory",
+            paper_t4_gflops: 679.0,
+            config: base(tbtile_params(), true, false, false, false, false, false),
+        },
+        Step {
+            name: "threadtile",
+            desc: "thread-level (register) tiling, 8x8 micro-tile",
+            paper_t4_gflops: 3822.0,
+            config: base(huge, true, true, false, false, false, false),
+        },
+        Step {
+            name: "warptile",
+            desc: "warp-level tiling: conflict-free smem broadcast",
+            paper_t4_gflops: 4331.0,
+            config: base(huge, true, true, true, false, false, false),
+        },
+        Step {
+            name: "vectorized",
+            desc: "128-bit vectorized load/store",
+            paper_t4_gflops: 4381.0,
+            config: base(huge, true, true, true, true, false, false),
+        },
+        Step {
+            name: "prefetch_reg",
+            desc: "shared->register prefetch pipeline",
+            paper_t4_gflops: 4625.0,
+            config: base(huge, true, true, true, true, true, false),
+        },
+        Step {
+            name: "prefetch_smem",
+            desc: "global->shared double-buffer prefetch",
+            paper_t4_gflops: 4654.0,
+            config: base(huge, true, true, true, true, true, true),
+        },
+    ]
+}
+
+/// Model average GFLOPS over the paper's size sweep (square 1024..6144).
+pub fn average_gflops(dev: &DeviceSpec, cfg: &KernelConfig) -> f64 {
+    let sizes = [1024usize, 2048, 3072, 4096, 5120, 6144];
+    sizes.iter().map(|&s| predict(dev, cfg, s, s, s).gflops).sum::<f64>() / sizes.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::T4;
+
+    #[test]
+    fn ladder_is_monotone_on_t4() {
+        let mut last = 0.0;
+        for step in ladder() {
+            let g = average_gflops(&T4, &step.config);
+            assert!(
+                g > last,
+                "{} ({g:.0}) must beat the previous step ({last:.0})",
+                step.name
+            );
+            last = g;
+        }
+    }
+
+    #[test]
+    fn ladder_matches_paper_within_tolerance() {
+        // The calibration contract: every step within 12% of the paper's
+        // measured average, and the big jump (thread tiling) reproduced.
+        for step in ladder() {
+            let g = average_gflops(&T4, &step.config);
+            let rel = (g - step.paper_t4_gflops).abs() / step.paper_t4_gflops;
+            assert!(
+                rel < 0.12,
+                "{}: model {g:.0} vs paper {:.0} ({:+.1}%)",
+                step.name,
+                step.paper_t4_gflops,
+                rel * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn thread_tiling_is_the_big_jump() {
+        let steps = ladder();
+        let tb = average_gflops(&T4, &steps[1].config);
+        let tt = average_gflops(&T4, &steps[2].config);
+        assert!(tt / tb > 4.0, "paper: 4.62x; model {:.2}x", tt / tb);
+    }
+
+    #[test]
+    fn endpoint_speedup_over_naive_matches_paper() {
+        let steps = ladder();
+        let first = average_gflops(&T4, &steps[0].config);
+        let last = average_gflops(&T4, &steps[6].config);
+        let speedup = last / first;
+        // paper: 7.62x
+        assert!((speedup - 7.62).abs() / 7.62 < 0.2, "{speedup:.2}x");
+    }
+}

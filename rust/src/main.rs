@@ -1,0 +1,312 @@
+//! `ftgemm` — CLI for the fault-tolerant GEMM serving system.
+//!
+//! Subcommands:
+//!   info      — artifact manifest + modeled device summary
+//!   gemm      — run one GEMM through the coordinator (optionally injected)
+//!   campaign  — run an SEU fault-injection campaign
+//!   figures   — regenerate the paper's tables/figures from gpusim
+//!   table1    — print the kernel-parameter presets
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use ftgemm::abft::matrix::Matrix;
+use ftgemm::coordinator::{Coordinator, CoordinatorConfig, FtPolicy};
+use ftgemm::faults::{FaultCampaign, SeuModel};
+use ftgemm::figures::catalog;
+use ftgemm::gpusim::device::{A100, T4};
+use ftgemm::runtime::{Engine, EngineConfig};
+use ftgemm::util::cli::Command;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, rest)) => (c.as_str(), rest.to_vec()),
+        None => {
+            print_usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        "info" => cmd_info(&rest),
+        "gemm" => cmd_gemm(&rest),
+        "campaign" => cmd_campaign(&rest),
+        "figures" => cmd_figures(&rest),
+        "serve" => cmd_serve(&rest),
+        "table1" => cmd_table1(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print_usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "ftgemm — high-performance GEMM with online fault tolerance (ICS'23 reproduction)\n\n\
+         USAGE: ftgemm <command> [options]\n\n\
+         COMMANDS:\n\
+           info       artifact manifest + device model summary\n\
+           gemm       run one GEMM (--m --n --k --policy none|online|offline --inject N)\n\
+           campaign   SEU injection campaign (--rounds --errors --policy)\n\
+           figures    regenerate paper figures (--fig 9..22|table1 | --all) --out DIR\n\
+           serve      line-protocol GEMM server on stdin (--config FILE)\n\
+           table1     print Table 1 kernel parameters\n\
+           help       this text"
+    );
+}
+
+fn parse_policy(s: &str) -> anyhow::Result<FtPolicy> {
+    Ok(match s {
+        "none" => FtPolicy::None,
+        "online" => FtPolicy::Online,
+        "offline" => FtPolicy::Offline,
+        other => anyhow::bail!("unknown policy {other:?} (none|online|offline)"),
+    })
+}
+
+fn start_coordinator(ft_level: &str) -> anyhow::Result<Coordinator> {
+    let engine = Engine::start(EngineConfig::default())?;
+    let cfg = CoordinatorConfig { ft_level: ft_level.into(), ..Default::default() };
+    Ok(Coordinator::new(engine, cfg))
+}
+
+fn cmd_info(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("info", "manifest + device summary");
+    cmd.parse(rest)?;
+    match ftgemm::runtime::Manifest::discover() {
+        Ok(m) => {
+            println!("artifacts: {} in {:?}", m.len(), m.dir);
+            for a in m.iter() {
+                println!(
+                    "  {:28} {:10} {}x{}x{} {}",
+                    a.name,
+                    format!("{:?}", a.kind),
+                    a.m,
+                    a.n,
+                    a.k,
+                    a.ft_level.as_deref().unwrap_or("-")
+                );
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    for d in [T4, A100] {
+        println!(
+            "device model {}: {} SMs @ {:.2} GHz, peak {:.0} GFLOPS, {:.0} GB/s",
+            d.name,
+            d.sms,
+            d.clock_ghz,
+            d.peak_gflops(),
+            d.dram_gbs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("gemm", "run one GEMM through the coordinator")
+        .opt("m", "rows of A/C", Some("128"))
+        .opt("n", "cols of B/C", Some("128"))
+        .opt("k", "inner dimension", Some("128"))
+        .opt("policy", "none|online|offline", Some("online"))
+        .opt("inject", "number of SEUs to inject", Some("0"))
+        .opt("level", "online FT granularity tb|warp|thread", Some("tb"))
+        .opt("seed", "rng seed", Some("42"));
+    let args = cmd.parse(rest)?;
+    let (m, n, k) = (args.usize_or("m", 128), args.usize_or("n", 128), args.usize_or("k", 128));
+    let policy = parse_policy(args.str_or("policy", "online"))?;
+    let inject = args.usize_or("inject", 0);
+    let seed = args.usize_or("seed", 42) as u64;
+
+    let coord = start_coordinator(args.str_or("level", "tb"))?;
+    let a = Matrix::rand_uniform(m, k, seed);
+    let b = Matrix::rand_uniform(k, n, seed + 1);
+    let geom = ftgemm::faults::model::KernelGeom::for_shape(m, n, k);
+    let mut rng = ftgemm::util::rng::Pcg32::seeded(seed);
+    let plan = SeuModel::PerGemm { count: inject }.plan(&geom, 0.0, &mut rng);
+
+    let out = coord.gemm_with_faults(&a, &b, policy, &plan)?;
+    let want = a.matmul(&b);
+    println!(
+        "C = A({m}x{k}) * B({k}x{n})  policy={}  buckets={:?}",
+        policy.name(),
+        out.buckets
+    );
+    println!(
+        "injected {}  detected {}  corrected {}  recomputes {}  launches {}",
+        plan.len(),
+        out.errors_detected,
+        out.errors_corrected,
+        out.recomputes,
+        out.kernel_launches
+    );
+    println!(
+        "exec {:?}  max|C - ref| = {:.3e}",
+        out.exec_time,
+        out.c.max_abs_diff(&want)
+    );
+    Ok(())
+}
+
+fn cmd_campaign(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("campaign", "SEU fault-injection campaign")
+        .opt("m", "rows", Some("128"))
+        .opt("n", "cols", Some("128"))
+        .opt("k", "inner", Some("128"))
+        .opt("rounds", "number of GEMMs", Some("10"))
+        .opt("errors", "SEUs per GEMM", Some("4"))
+        .opt("policy", "online|offline", Some("online"))
+        .opt("seed", "rng seed", Some("7"));
+    let args = cmd.parse(rest)?;
+    let coord = start_coordinator("tb")?;
+    let campaign = FaultCampaign::new(
+        coord,
+        SeuModel::PerGemm { count: args.usize_or("errors", 4) },
+        parse_policy(args.str_or("policy", "online"))?,
+        args.usize_or("seed", 7) as u64,
+    );
+    let report = campaign.run(
+        args.usize_or("m", 128),
+        args.usize_or("n", 128),
+        args.usize_or("k", 128),
+        args.usize_or("rounds", 10),
+    )?;
+    println!("campaign: {report:#?}");
+    println!("errors/minute: {:.1}", report.errors_per_minute());
+    anyhow::ensure!(report.fully_detected(), "some injected errors went undetected!");
+    Ok(())
+}
+
+fn cmd_figures(rest: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("figures", "regenerate paper figures")
+        .opt("fig", "figure id: table1, 9..22", None)
+        .opt("out", "output directory", Some("figures_out"))
+        .flag("all", "regenerate everything")
+        .flag("print", "also print markdown to stdout");
+    let args = cmd.parse(rest)?;
+    let out = PathBuf::from(args.str_or("out", "figures_out"));
+    let ids: Vec<String> = if args.flag("all") {
+        catalog::FIGURE_IDS.iter().map(|s| s.to_string()).collect()
+    } else {
+        match args.get("fig") {
+            Some(f) => vec![f.to_string()],
+            None => anyhow::bail!("pass --fig <id> or --all"),
+        }
+    };
+    for id in &ids {
+        let files = catalog::write(id, &out)?;
+        println!("fig {id}: {}", files.join(", "));
+        if args.flag("print") {
+            for t in catalog::generate(id)? {
+                println!("{}", t.to_markdown());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table1() -> anyhow::Result<()> {
+    println!("{}", ftgemm::figures::table1().to_markdown());
+    Ok(())
+}
+
+/// The launcher: a line-protocol server over stdin/stdout driving the
+/// batcher. Protocol (one request per line):
+///
+///     GEMM <m> <n> <k> <policy> [seed] [inject]
+///     STATS
+///     QUIT
+///
+/// Responses are single lines: `OK ...` / `ERR <msg>`. Config comes from
+/// `--config <file>` ([engine]/[coordinator]/[batcher] sections — see
+/// `util::config`).
+fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
+    use ftgemm::coordinator::batcher::Batcher;
+    use std::io::BufRead;
+
+    let cmd = Command::new("serve", "line-protocol GEMM server on stdin")
+        .opt("config", "config file (TOML subset)", None);
+    let args = cmd.parse(rest)?;
+    let cfg = match args.get("config") {
+        Some(path) => ftgemm::util::config::Config::load(path)?,
+        None => ftgemm::util::config::Config::default(),
+    };
+    let engine = Engine::start(cfg.engine()?)?;
+    let coord = Coordinator::new(engine, cfg.coordinator()?);
+    let batcher = Batcher::start(coord.clone(), cfg.batcher()?);
+
+    eprintln!("ftgemm serve: ready (GEMM m n k policy [seed] [inject] | STATS | QUIT)");
+    let stdin = std::io::stdin();
+    let mut id = 0u64;
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.as_slice() {
+            [] => continue,
+            ["QUIT"] | ["quit"] => break,
+            ["STATS"] | ["stats"] => {
+                println!(
+                    "OK stats counters={:?} batch={:?} mean_latency_s={:.6}",
+                    coord.counters().snapshot(),
+                    batcher.stats(),
+                    coord.latency().mean_secs()
+                );
+            }
+            ["GEMM", m, n, k, policy, tail @ ..] | ["gemm", m, n, k, policy, tail @ ..] => {
+                id += 1;
+                match serve_one(&batcher, m, n, k, policy, tail) {
+                    Ok(msg) => println!("OK gemm id={id} {msg}"),
+                    Err(e) => println!("ERR gemm id={id} {e:#}"),
+                }
+            }
+            _ => println!("ERR unknown request {line:?}"),
+        }
+    }
+    println!("OK bye");
+    Ok(())
+}
+
+fn serve_one(
+    batcher: &ftgemm::coordinator::batcher::Batcher,
+    m: &str,
+    n: &str,
+    k: &str,
+    policy: &str,
+    tail: &[&str],
+) -> anyhow::Result<String> {
+    let parse = |s: &str| -> anyhow::Result<usize> {
+        s.parse().map_err(|_| anyhow::anyhow!("bad integer {s:?}"))
+    };
+    let (m, n, k) = (parse(m)?, parse(n)?, parse(k)?);
+    let policy = parse_policy(policy)?;
+    let seed: u64 = tail.first().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let inject: usize = tail.get(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let a = Matrix::rand_uniform(m, k, seed);
+    let b = Matrix::rand_uniform(k, n, seed + 1);
+    let geom = ftgemm::faults::model::KernelGeom::for_shape(m, n, k);
+    let mut rng = ftgemm::util::rng::Pcg32::seeded(seed);
+    let plan = SeuModel::PerGemm { count: inject }.plan(&geom, 0.0, &mut rng);
+    let out = batcher.submit(a, b, policy, plan)?.wait()?;
+    Ok(format!(
+        "buckets={:?} detected={} corrected={} recomputes={} launches={} time_us={}",
+        out.buckets,
+        out.errors_detected,
+        out.errors_corrected,
+        out.recomputes,
+        out.kernel_launches,
+        out.exec_time.as_micros()
+    ))
+}

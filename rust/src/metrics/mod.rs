@@ -1,0 +1,37 @@
+//! Metrics: GFLOPS accounting, latency recording, counters, and the
+//! markdown/CSV reporters the figures harness and EXPERIMENTS.md use.
+
+pub mod recorder;
+pub mod report;
+
+pub use recorder::{Counters, LatencyRecorder};
+pub use report::{Series, Table};
+
+/// FLOPs of C += A·B.
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> f64 {
+    2.0 * m as f64 * n as f64 * k as f64
+}
+
+/// GFLOPS given FLOPs and seconds.
+pub fn gflops(flops: f64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    flops / seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_count_matches_closed_form() {
+        assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+
+    #[test]
+    fn gflops_zero_time_is_zero_not_inf() {
+        assert_eq!(gflops(1e9, 0.0), 0.0);
+        assert_eq!(gflops(2e9, 1.0), 2.0);
+    }
+}

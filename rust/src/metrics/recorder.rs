@@ -1,0 +1,154 @@
+//! Latency recording + atomic counters for the serving path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{Quantiles, Running};
+
+/// Thread-safe latency recorder (seconds internally).
+#[derive(Default)]
+pub struct LatencyRecorder {
+    inner: Mutex<(Running, Quantiles)>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        let secs = d.as_secs_f64();
+        let mut g = self.inner.lock().unwrap();
+        g.0.push(secs);
+        g.1.push(secs);
+    }
+
+    /// Time a closure and record its latency.
+    pub fn time<R>(&self, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.record(t0.elapsed());
+        r
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.lock().unwrap().0.count()
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.inner.lock().unwrap().0.mean()
+    }
+
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        self.inner.lock().unwrap().1.quantile(q)
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        let mut g = self.inner.lock().unwrap();
+        let count = g.0.count();
+        let (mean, min, max) = (g.0.mean(), g.0.min(), g.0.max());
+        let (p50, p99) = if count > 0 { (g.1.median(), g.1.p99()) } else { (0.0, 0.0) };
+        LatencySummary { count, mean, min, max, p50, p99 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+/// The coordinator's operation counters.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub executions: AtomicU64,
+    pub errors_detected: AtomicU64,
+    pub errors_corrected: AtomicU64,
+    pub recomputes: AtomicU64,
+    pub padded_requests: AtomicU64,
+    pub batched_groups: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bump(field: &AtomicU64) {
+        field.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(field: &AtomicU64, n: u64) {
+        field.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(field: &AtomicU64) -> u64 {
+        field.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            requests: Self::get(&self.requests),
+            executions: Self::get(&self.executions),
+            errors_detected: Self::get(&self.errors_detected),
+            errors_corrected: Self::get(&self.errors_corrected),
+            recomputes: Self::get(&self.recomputes),
+            padded_requests: Self::get(&self.padded_requests),
+            batched_groups: Self::get(&self.batched_groups),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CounterSnapshot {
+    pub requests: u64,
+    pub executions: u64,
+    pub errors_detected: u64,
+    pub errors_corrected: u64,
+    pub recomputes: u64,
+    pub padded_requests: u64,
+    pub batched_groups: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary_sane() {
+        let rec = LatencyRecorder::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            rec.record(Duration::from_millis(ms));
+        }
+        let s = rec.summary();
+        assert_eq!(s.count, 5);
+        assert!(s.min > 0.0009 && s.min < 0.0015);
+        assert!(s.max >= 0.1);
+        assert!(s.p50 >= 0.002 && s.p50 <= 0.004);
+    }
+
+    #[test]
+    fn time_records_once() {
+        let rec = LatencyRecorder::new();
+        let out = rec.time(|| 42);
+        assert_eq!(out, 42);
+        assert_eq!(rec.count(), 1);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counters::new();
+        Counters::bump(&c.requests);
+        Counters::add(&c.errors_corrected, 5);
+        let snap = c.snapshot();
+        assert_eq!(snap.requests, 1);
+        assert_eq!(snap.errors_corrected, 5);
+        assert_eq!(snap.recomputes, 0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Report primitives: named data series and aligned tables, with markdown
+//! CSV, and JSON emitters — the output format of `ftgemm figures`.
+
+use crate::util::json::Json;
+
+/// One named series over a shared x-axis (a line in a paper figure).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    pub name: String,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), x: Vec::new(), y: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.x.push(x);
+        self.y.push(y);
+    }
+
+    pub fn from_pairs(name: impl Into<String>, pairs: &[(f64, f64)]) -> Self {
+        let mut s = Series::new(name);
+        for &(x, y) in pairs {
+            s.push(x, y);
+        }
+        s
+    }
+
+    pub fn mean_y(&self) -> f64 {
+        if self.y.is_empty() {
+            return 0.0;
+        }
+        self.y.iter().sum::<f64>() / self.y.len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::from(self.name.clone()));
+        o.set("x", Json::from(self.x.clone()));
+        o.set("y", Json::from(self.y.clone()));
+        o
+    }
+}
+
+/// A figure/table: a title, an x-axis label, and a set of series.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>, y_label: impl Into<String>) -> Self {
+        Table {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, s: Series) -> &mut Self {
+        self.series.push(s);
+        self
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) -> &mut Self {
+        self.notes.push(n.into());
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// Markdown table: one row per x value, one column per series.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        for n in &self.notes {
+            out.push_str(&format!("> {n}\n"));
+        }
+        if self.series.is_empty() {
+            return out;
+        }
+        out.push_str(&format!("\n| {} |", self.x_label));
+        for s in &self.series {
+            out.push_str(&format!(" {} |", s.name));
+        }
+        out.push_str("\n|---|");
+        for _ in &self.series {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        let xs = &self.series[0].x;
+        for (i, x) in xs.iter().enumerate() {
+            out.push_str(&format!("| {} |", fmt_num(*x)));
+            for s in &self.series {
+                let y = s.y.get(i).copied().unwrap_or(f64::NAN);
+                out.push_str(&format!(" {} |", fmt_num(y)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV: header `x,<series...>`, one row per x.
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("{}", self.x_label);
+        for s in &self.series {
+            out.push_str(&format!(",{}", s.name.replace(',', ";")));
+        }
+        out.push('\n');
+        if let Some(first) = self.series.first() {
+            for (i, x) in first.x.iter().enumerate() {
+                out.push_str(&fmt_num(*x));
+                for s in &self.series {
+                    out.push_str(&format!(",{}", fmt_num(s.y.get(i).copied().unwrap_or(f64::NAN))));
+                }
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("title", Json::from(self.title.clone()));
+        o.set("x_label", Json::from(self.x_label.clone()));
+        o.set("y_label", Json::from(self.y_label.clone()));
+        o.set(
+            "series",
+            Json::Arr(self.series.iter().map(|s| s.to_json()).collect()),
+        );
+        o.set(
+            "notes",
+            Json::Arr(self.notes.iter().map(|n| Json::from(n.clone())).collect()),
+        );
+        o
+    }
+}
+
+fn fmt_num(x: f64) -> String {
+    if x.is_nan() {
+        "nan".into()
+    } else if x == x.trunc() && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else if x.abs() >= 100.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> Table {
+        let mut t = Table::new("Fig X", "size", "GFLOPS");
+        t.add(Series::from_pairs("ours", &[(128.0, 100.0), (256.0, 200.0)]));
+        t.add(Series::from_pairs("cublas", &[(128.0, 110.0), (256.0, 190.0)]));
+        t
+    }
+
+    #[test]
+    fn markdown_has_header_and_rows() {
+        let md = table().to_markdown();
+        assert!(md.contains("| size | ours | cublas |"));
+        assert!(md.contains("| 128 | 100 | 110 |"));
+        assert!(md.contains("| 256 | 200 | 190 |"));
+    }
+
+    #[test]
+    fn csv_rows_align() {
+        let csv = table().to_csv();
+        let lines: Vec<_> = csv.lines().collect();
+        assert_eq!(lines[0], "size,ours,cublas");
+        assert_eq!(lines[1], "128,100,110");
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let j = table().to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.path("title").unwrap().as_str(), Some("Fig X"));
+        assert_eq!(parsed.path("series").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn series_mean() {
+        let s = Series::from_pairs("s", &[(0.0, 1.0), (1.0, 3.0)]);
+        assert_eq!(s.mean_y(), 2.0);
+    }
+}

@@ -1,0 +1,396 @@
+//! The PJRT execution engine.
+//!
+//! PJRT handles in the `xla` crate are `Rc`-based and must not cross
+//! threads, so a dedicated engine thread owns the `PjRtClient` plus the
+//! compiled-executable cache, and serves [`ExecRequest`]s from an mpsc
+//! queue (the vLLM engine-loop pattern). The cloneable [`Engine`] handle is
+//! `Send`, so the coordinator, the fault drivers and the bench harness can
+//! all submit work concurrently; responses return through per-request
+//! oneshot channels.
+//!
+//! Compilation (`HloModuleProto::from_text_file` → `client.compile`) runs
+//! once per artifact and is cached; the request path is parse-free.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::pool::oneshot;
+
+use super::manifest::Manifest;
+
+/// A host tensor: row-major f32 with an explicit shape. The engine's only
+/// data currency (all artifacts are pure-f32 by construction).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar_sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+}
+
+/// One execution request: artifact name + input tensors.
+#[derive(Debug, Clone)]
+pub struct ExecRequest {
+    pub artifact: String,
+    pub inputs: Vec<Tensor>,
+}
+
+/// Execution result: output tensors (manifest order) + timings.
+#[derive(Debug, Clone)]
+pub struct ExecOutput {
+    pub outputs: Vec<Tensor>,
+    /// Pure device-execution time (excludes queueing).
+    pub exec_time: Duration,
+    /// Set on the first call that had to compile the artifact.
+    pub compile_time: Option<Duration>,
+}
+
+enum Msg {
+    Exec(ExecRequest, oneshot::OneSender<Result<ExecOutput>>),
+    /// Pre-compile an artifact (warm-up), reply when done.
+    Warm(String, oneshot::OneSender<Result<Duration>>),
+    Stats(oneshot::OneSender<EngineStats>),
+    Shutdown,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone, Default)]
+pub struct EngineConfig {
+    /// Artifacts directory; `None` = discover (`FTGEMM_ARTIFACTS`, ./artifacts, ..).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Artifact names to compile eagerly at startup (empty = lazy).
+    pub precompile: Vec<String>,
+}
+
+/// Cumulative engine-side statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub compiles: u64,
+    pub total_exec_secs: f64,
+    pub total_compile_secs: f64,
+}
+
+/// Cloneable, `Send` handle to the engine thread.
+#[derive(Clone)]
+pub struct Engine {
+    tx: Sender<Msg>,
+    manifest: Arc<Manifest>,
+    _joiner: Arc<Joiner>,
+}
+
+struct Joiner {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for Joiner {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Engine {
+    /// Start the engine thread: load the manifest, spin up the PJRT CPU
+    /// client, optionally pre-compile artifacts.
+    pub fn start(config: EngineConfig) -> Result<Engine> {
+        let manifest = match &config.artifacts_dir {
+            Some(d) => Manifest::load(d)?,
+            None => Manifest::discover()?,
+        };
+        let manifest = Arc::new(manifest);
+        let (tx, rx) = channel::<Msg>();
+        let thread_manifest = Arc::clone(&manifest);
+        let (ready_tx, ready_rx) = oneshot::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("ftgemm-engine".into())
+            .spawn(move || {
+                let mut worker = match EngineWorker::new(thread_manifest) {
+                    Ok(w) => {
+                        let _ = ready_tx.send(Ok(()));
+                        w
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Exec(req, reply) => {
+                            let _ = reply.send(worker.execute(&req));
+                        }
+                        Msg::Warm(name, reply) => {
+                            let _ = reply.send(worker.warm(&name));
+                        }
+                        Msg::Stats(reply) => {
+                            let _ = reply.send(worker.stats);
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawn engine thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        let engine = Engine {
+            tx: tx.clone(),
+            manifest,
+            _joiner: Arc::new(Joiner { tx, handle: Some(handle) }),
+        };
+        for name in &config.precompile {
+            engine.warm(name)?;
+        }
+        Ok(engine)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact; blocks until the result is back.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<ExecOutput> {
+        let (otx, orx) = oneshot::channel();
+        self.tx
+            .send(Msg::Exec(ExecRequest { artifact: artifact.into(), inputs }, otx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        orx.recv().map_err(|_| anyhow!("engine dropped request"))?
+    }
+
+    /// Compile an artifact ahead of time; returns compile duration
+    /// (zero if already cached).
+    pub fn warm(&self, artifact: &str) -> Result<Duration> {
+        let (otx, orx) = oneshot::channel();
+        self.tx
+            .send(Msg::Warm(artifact.into(), otx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        orx.recv().map_err(|_| anyhow!("engine dropped request"))?
+    }
+
+    pub fn stats(&self) -> Result<EngineStats> {
+        let (otx, orx) = oneshot::channel();
+        self.tx
+            .send(Msg::Stats(otx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        orx.recv().map_err(|_| anyhow!("engine dropped request"))
+    }
+}
+
+/// Thread-confined worker: owns all PJRT state.
+struct EngineWorker {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: EngineStats,
+}
+
+impl EngineWorker {
+    fn new(manifest: Arc<Manifest>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        log::info!(
+            "engine up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(EngineWorker { client, manifest, cache: HashMap::new(), stats: EngineStats::default() })
+    }
+
+    fn warm(&mut self, name: &str) -> Result<Duration> {
+        if self.cache.contains_key(name) {
+            return Ok(Duration::ZERO);
+        }
+        let art = self.manifest.get(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            art.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {:?}: {e:?}", art.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let dt = t0.elapsed();
+        self.stats.compiles += 1;
+        self.stats.total_compile_secs += dt.as_secs_f64();
+        log::debug!("compiled {name} in {dt:?}");
+        self.cache.insert(name.to_string(), exe);
+        Ok(dt)
+    }
+
+    fn execute(&mut self, req: &ExecRequest) -> Result<ExecOutput> {
+        let art = self.manifest.get(&req.artifact)?.clone();
+        // shape-check against the manifest before touching PJRT
+        if req.inputs.len() != art.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                art.name,
+                art.inputs.len(),
+                req.inputs.len()
+            );
+        }
+        for (i, (have, want)) in req.inputs.iter().zip(&art.inputs).enumerate() {
+            if have.shape != want.shape {
+                bail!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    art.name,
+                    have.shape,
+                    want.shape
+                );
+            }
+        }
+        let compile_time = match self.warm(&req.artifact)? {
+            d if d.is_zero() => None,
+            d => Some(d),
+        };
+        let exe = self.cache.get(&req.artifact).expect("warmed above");
+
+        let literals = req
+            .inputs
+            .iter()
+            .map(|t| {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &t.shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", art.name))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let exec_time = t0.elapsed();
+
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != art.outputs.len() {
+            bail!(
+                "{}: {} outputs from device, manifest says {}",
+                art.name,
+                parts.len(),
+                art.outputs.len()
+            );
+        }
+        let outputs = parts
+            .into_iter()
+            .zip(&art.outputs)
+            .map(|(lit, spec)| {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("readback: {e:?}"))?;
+                if data.len() != spec.elements() {
+                    bail!("{}: output size {} != {}", art.name, data.len(), spec.elements());
+                }
+                Ok(Tensor::new(spec.shape.clone(), data))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        self.stats.executions += 1;
+        self.stats.total_exec_secs += exec_time.as_secs_f64();
+        Ok(ExecOutput { outputs, exec_time, compile_time })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests run only when artifacts exist (`make artifacts`); the
+    //! heavier integration suite lives in `rust/tests/`.
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        Engine::start(EngineConfig::default()).ok()
+    }
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_bad_shape_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn executes_plain_gemm_against_host_matmul() {
+        let Some(eng) = engine() else { return };
+        let a = crate::abft::Matrix::rand_uniform(64, 64, 1);
+        let b = crate::abft::Matrix::rand_uniform(64, 64, 2);
+        let out = eng
+            .execute(
+                "gemm_small",
+                vec![
+                    Tensor::new(vec![64, 64], a.data().to_vec()),
+                    Tensor::new(vec![64, 64], b.data().to_vec()),
+                ],
+            )
+            .unwrap();
+        let want = a.matmul(&b);
+        let got = crate::abft::Matrix::from_vec(64, 64, out.outputs[0].data.clone());
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let Some(eng) = engine() else { return };
+        let err = eng
+            .execute("gemm_small", vec![Tensor::zeros(vec![2, 2]), Tensor::zeros(vec![64, 64])])
+            .unwrap_err();
+        assert!(err.to_string().contains("shape"));
+    }
+
+    #[test]
+    fn warm_is_idempotent_and_caches() {
+        let Some(eng) = engine() else { return };
+        let d1 = eng.warm("gemm_medium").unwrap();
+        let d2 = eng.warm("gemm_medium").unwrap();
+        assert!(d1 > Duration::ZERO);
+        assert_eq!(d2, Duration::ZERO);
+        let stats = eng.stats().unwrap();
+        assert_eq!(stats.compiles, 1);
+    }
+
+    #[test]
+    fn handle_is_send_and_clone() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Engine>();
+        let Some(eng) = engine() else { return };
+        let e2 = eng.clone();
+        let h = std::thread::spawn(move || e2.warm("gemm_small").map(|_| ()));
+        h.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,338 @@
+//! `artifacts/manifest.json` — the contract between the python AOT
+//! pipeline and the rust runtime. One entry per lowered kernel variant.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::codegen::params::KernelParams;
+use crate::util::json::Json;
+
+/// Shape + dtype of one kernel input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// Output role: "c", "cr", "cc", "errcount", "ac", "br", "cf" — empty
+    /// for inputs.
+    pub role: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// What family of kernel an artifact belongs to (drives coordinator logic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Gemm,
+    FtGemm,
+    FtDetect,
+    DingEncode,
+    DingStep,
+    DingVerify,
+    Stepwise,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gemm" => ArtifactKind::Gemm,
+            "ftgemm" => ArtifactKind::FtGemm,
+            "ftdetect" => ArtifactKind::FtDetect,
+            "ding_encode" => ArtifactKind::DingEncode,
+            "ding_step" => ArtifactKind::DingStep,
+            "ding_verify" => ArtifactKind::DingVerify,
+            "stepwise" => ArtifactKind::Stepwise,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One lowered kernel variant.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    pub bucket: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Panel width for ding_step; 0 otherwise.
+    pub ks: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub params: Option<KernelParams>,
+    pub ft_level: Option<String>,
+    pub max_inj: usize,
+    pub verify_every: usize,
+}
+
+impl Artifact {
+    /// Index of the output with the given role.
+    pub fn output_index(&self, role: &str) -> Option<usize> {
+        self.outputs.iter().position(|o| o.role == role)
+    }
+}
+
+/// The full parsed manifest, indexed by artifact name.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Locate the artifacts directory: `$FTGEMM_ARTIFACTS`, `./artifacts`,
+    /// or `../artifacts` (tests run from the crate root or target dir).
+    pub fn discover() -> Result<Manifest> {
+        if let Ok(dir) = std::env::var("FTGEMM_ARTIFACTS") {
+            return Self::load(dir);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Self::load(cand);
+            }
+        }
+        bail!("artifacts/manifest.json not found; run `make artifacts` or set FTGEMM_ARTIFACTS")
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let format = root
+            .path("format")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing format"))?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut artifacts = BTreeMap::new();
+        for entry in root
+            .path("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+        {
+            let art = parse_artifact(entry, &dir)?;
+            if artifacts.insert(art.name.clone(), art).is_some() {
+                bail!("duplicate artifact name");
+            }
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(|s| s.as_str())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Artifact> {
+        self.artifacts.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// All artifacts of one kind (e.g. every fused FT-GEMM).
+    pub fn of_kind(&self, kind: ArtifactKind) -> Vec<&Artifact> {
+        self.artifacts.values().filter(|a| a.kind == kind).collect()
+    }
+
+    /// The artifact serving a (kind, bucket) pair, e.g. FtGemm tb for "huge".
+    pub fn find(&self, kind: ArtifactKind, bucket: &str, level: Option<&str>) -> Option<&Artifact> {
+        self.artifacts.values().find(|a| {
+            a.kind == kind
+                && a.bucket == bucket
+                && match level {
+                    None => true,
+                    Some(l) => a.ft_level.as_deref() == Some(l),
+                }
+        })
+    }
+}
+
+fn parse_tensor(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .path("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .path("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("tensor missing dtype"))?
+        .to_string();
+    let role = j
+        .path("role")
+        .and_then(Json::as_str)
+        .unwrap_or_default()
+        .to_string();
+    Ok(TensorSpec { shape, dtype, role })
+}
+
+fn parse_artifact(j: &Json, dir: &Path) -> Result<Artifact> {
+    let name = j
+        .path("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("artifact missing name"))?
+        .to_string();
+    let file = dir.join(
+        j.path("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{name}: missing file"))?,
+    );
+    let meta = j.path("meta").ok_or_else(|| anyhow!("{name}: missing meta"))?;
+    let kind = ArtifactKind::parse(
+        meta.path("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{name}: missing kind"))?,
+    )?;
+    let dim = |key: &str| meta.path(key).and_then(Json::as_usize).unwrap_or(0);
+    let params = meta.path("params").map(KernelParams::from_json).transpose()?;
+    let inputs = j
+        .path("inputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+        .iter()
+        .map(parse_tensor)
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = j
+        .path("outputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+        .iter()
+        .map(parse_tensor)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Artifact {
+        name: name.clone(),
+        file,
+        kind,
+        bucket: meta
+            .path("bucket")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        m: dim("m"),
+        n: dim("n"),
+        k: dim("k"),
+        ks: dim("ks"),
+        inputs,
+        outputs,
+        params,
+        ft_level: meta
+            .path("ft_level")
+            .and_then(Json::as_str)
+            .map(str::to_string),
+        max_inj: dim("max_inj"),
+        verify_every: dim("verify_every"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "artifacts": [
+        {
+          "name": "gemm_small",
+          "file": "gemm_small.hlo.txt",
+          "inputs": [
+            {"shape": [64, 64], "dtype": "float32"},
+            {"shape": [64, 64], "dtype": "float32"}
+          ],
+          "outputs": [{"role": "c", "shape": [64, 64], "dtype": "float32"}],
+          "meta": {"kind": "gemm", "bucket": "small", "m": 64, "n": 64, "k": 64,
+                   "params": {"m_tb": 16, "n_tb": 16, "k_tb": 16,
+                               "m_w": 8, "n_w": 16, "m_t": 2, "n_t": 2}}
+        },
+        {
+          "name": "ftgemm_tb_small",
+          "file": "ftgemm_tb_small.hlo.txt",
+          "inputs": [
+            {"shape": [64, 64], "dtype": "float32"},
+            {"shape": [64, 64], "dtype": "float32"},
+            {"shape": [8, 4], "dtype": "float32"}
+          ],
+          "outputs": [
+            {"role": "c", "shape": [64, 64], "dtype": "float32"},
+            {"role": "cr", "shape": [4, 4, 1, 16, 1], "dtype": "float32"},
+            {"role": "cc", "shape": [4, 4, 1, 1, 16], "dtype": "float32"},
+            {"role": "errcount", "shape": [4, 4], "dtype": "float32"}
+          ],
+          "meta": {"kind": "ftgemm", "bucket": "small", "m": 64, "n": 64, "k": 64,
+                   "ft_level": "tb", "max_inj": 8, "verify_every": 8}
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 2);
+        let g = m.get("gemm_small").unwrap();
+        assert_eq!(g.kind, ArtifactKind::Gemm);
+        assert_eq!((g.m, g.n, g.k), (64, 64, 64));
+        assert_eq!(g.params.as_ref().unwrap().m_tb, 16);
+        let ft = m.get("ftgemm_tb_small").unwrap();
+        assert_eq!(ft.kind, ArtifactKind::FtGemm);
+        assert_eq!(ft.ft_level.as_deref(), Some("tb"));
+        assert_eq!(ft.output_index("errcount"), Some(3));
+        assert_eq!(ft.max_inj, 8);
+    }
+
+    #[test]
+    fn find_by_kind_bucket_level() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert!(m.find(ArtifactKind::FtGemm, "small", Some("tb")).is_some());
+        assert!(m.find(ArtifactKind::FtGemm, "small", Some("warp")).is_none());
+        assert!(m.find(ArtifactKind::Gemm, "small", None).is_some());
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format_version() {
+        assert!(Manifest::parse(r#"{"format": 9, "artifacts": []}"#, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        if let Ok(m) = Manifest::discover() {
+            assert!(m.len() >= 20, "expected full artifact set, got {}", m.len());
+            assert!(m.find(ArtifactKind::FtGemm, "huge", Some("tb")).is_some());
+            for a in m.iter() {
+                assert!(a.file.exists(), "{:?} missing", a.file);
+            }
+        }
+    }
+}

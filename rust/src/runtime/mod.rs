@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them from the rust hot path.
+//!
+//! Structure:
+//! * [`manifest`] — parses `artifacts/manifest.json` (shapes, roles, tile
+//!   params, FT metadata) produced by `python/compile/aot.py`.
+//! * [`engine`] — the execution engine. PJRT handles in the `xla` crate are
+//!   `Rc`-based (not `Send`), so a dedicated **engine thread** owns the
+//!   `PjRtClient` and the compiled-executable cache; the rest of the
+//!   process talks to it through an [`Engine`] handle over mpsc channels
+//!   (the vLLM engine-loop pattern). Compilation happens once per artifact
+//!   (lazily or eagerly at startup) and is cached thereafter.
+//!
+//! Python never runs here: the HLO text was produced at build time and the
+//! engine only parses/compiles/executes it.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineConfig, ExecOutput, ExecRequest};
+pub use manifest::{Artifact, ArtifactKind, Manifest, TensorSpec};

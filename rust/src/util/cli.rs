@@ -1,0 +1,208 @@
+//! Tiny declarative CLI parser (no clap in the vendored crate set).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, and auto-generated `--help` text — enough for
+//! the `ftgemm` binary and the bench harnesses.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declares one option for help text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A parsed command line: subcommand, options, and positional args.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({hint})")]
+    BadValue { key: String, value: String, hint: String },
+}
+
+/// A command definition: name, options, and help blurb.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    /// Parse `argv` (without the program name / subcommand itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args { command: Some(self.name.to_string()), ..Default::default() };
+        for spec in &self.opts {
+            if let (true, Some(d)) = (spec.takes_value, spec.default) {
+                args.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                    };
+                    args.opts.insert(key, val);
+                } else {
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "OPTIONS:");
+        for o in &self.opts {
+            let meta = if o.takes_value { " <value>" } else { "" };
+            let dflt = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(s, "  --{}{meta}\n      {}{dflt}", o.name, o.help);
+        }
+        s
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError> {
+        match self.opts.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| CliError::BadValue {
+                key: name.to_string(),
+                value: v.clone(),
+                hint: std::any::type_name::<T>().to_string(),
+            }),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, dflt: usize) -> usize {
+        self.get_parsed(name).ok().flatten().unwrap_or(dflt)
+    }
+
+    pub fn f64_or(&self, name: &str, dflt: f64) -> f64 {
+        self.get_parsed(name).ok().flatten().unwrap_or(dflt)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, dflt: &'a str) -> &'a str {
+        self.get(name).unwrap_or(dflt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("serve", "run the coordinator")
+            .opt("size", "matrix size", Some("128"))
+            .opt("policy", "ft policy", Some("online"))
+            .flag("verbose", "log more")
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert_eq!(a.usize_or("size", 0), 128);
+        assert_eq!(a.str_or("policy", ""), "online");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&sv(&["--size", "256", "--policy=offline", "--verbose"])).unwrap();
+        assert_eq!(a.usize_or("size", 0), 256);
+        assert_eq!(a.str_or("policy", ""), "offline");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = cmd().parse(&sv(&["input.bin", "--size", "64", "out.bin"])).unwrap();
+        assert_eq!(a.positional, vec!["input.bin", "out.bin"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(cmd().parse(&sv(&["--nope"])), Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cmd().parse(&sv(&["--size"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_typed_value_reported() {
+        let a = cmd().parse(&sv(&["--size", "abc"])).unwrap();
+        assert!(a.get_parsed::<usize>("size").is_err());
+    }
+
+    #[test]
+    fn help_mentions_every_option() {
+        let h = cmd().help();
+        for name in ["size", "policy", "verbose"] {
+            assert!(h.contains(name));
+        }
+    }
+}

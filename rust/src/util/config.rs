@@ -1,0 +1,310 @@
+//! File-based configuration: a TOML-subset parser (sections, `key = value`
+//! with strings / numbers / booleans, `#` comments) and typed loaders for
+//! the system's config structs — the deployment-facing entry point
+//! (`ftgemm serve --config ftgemm.toml`).
+//!
+//! Grammar intentionally small (no nested tables, arrays, or multi-line
+//! strings): enough for service configuration, zero dependencies.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::abft::checksum::Thresholds;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::CoordinatorConfig;
+use crate::runtime::EngineConfig;
+
+/// Parsed config: `section.key -> raw value`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Num(_) => "number",
+            Value::Bool(_) => "boolean",
+        }
+    }
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                {
+                    bail!("line {}: bad section name {name:?}", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                bail!("line {}: bad key {key:?}", lineno + 1);
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let parsed = parse_value(val.trim())
+                .with_context(|| format!("line {}: value for {full}", lineno + 1))?;
+            if values.insert(full.clone(), parsed).is_some() {
+                bail!("line {}: duplicate key {full}", lineno + 1);
+            }
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Result<Option<&str>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Str(s)) => Ok(Some(s)),
+            Some(v) => bail!("{key}: expected string, got {}", v.type_name()),
+        }
+    }
+
+    pub fn num(&self, key: &str) -> Result<Option<f64>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Num(x)) => Ok(Some(*x)),
+            Some(v) => bail!("{key}: expected number, got {}", v.type_name()),
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.num(key)? {
+            None => Ok(None),
+            Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(Some(x as usize)),
+            Some(x) => bail!("{key}: expected non-negative integer, got {x}"),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Bool(b)) => Ok(Some(*b)),
+            Some(v) => bail!("{key}: expected boolean, got {}", v.type_name()),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Typed loaders
+    // ------------------------------------------------------------------
+
+    /// `[coordinator]` section → [`CoordinatorConfig`]; unset keys keep
+    /// defaults. Validates the FT level.
+    pub fn coordinator(&self) -> Result<CoordinatorConfig> {
+        let mut cfg = CoordinatorConfig::default();
+        if let Some(level) = self.str("coordinator.ft_level")? {
+            if !matches!(level, "tb" | "warp" | "thread") {
+                bail!("coordinator.ft_level must be tb|warp|thread, got {level:?}");
+            }
+            cfg.ft_level = level.to_string();
+        }
+        if let Some(b) = self.bool("coordinator.host_verify")? {
+            cfg.host_verify = b;
+        }
+        if let Some(n) = self.usize("coordinator.max_recomputes")? {
+            cfg.max_recomputes = n;
+        }
+        let mut th = Thresholds::default();
+        if let Some(x) = self.num("coordinator.threshold_rel")? {
+            th.rel = x as f32;
+        }
+        if let Some(x) = self.num("coordinator.threshold_abs")? {
+            th.abs = x as f32;
+        }
+        cfg.thresholds = th;
+        Ok(cfg)
+    }
+
+    /// `[engine]` section → [`EngineConfig`].
+    pub fn engine(&self) -> Result<EngineConfig> {
+        let mut cfg = EngineConfig::default();
+        if let Some(dir) = self.str("engine.artifacts_dir")? {
+            cfg.artifacts_dir = Some(dir.into());
+        }
+        if let Some(list) = self.str("engine.precompile")? {
+            cfg.precompile = list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+        }
+        Ok(cfg)
+    }
+
+    /// `[batcher]` section → [`BatcherConfig`].
+    pub fn batcher(&self) -> Result<BatcherConfig> {
+        let mut cfg = BatcherConfig::default();
+        if let Some(n) = self.usize("batcher.max_batch")? {
+            if n == 0 {
+                bail!("batcher.max_batch must be >= 1");
+            }
+            cfg.max_batch = n;
+        }
+        if let Some(us) = self.usize("batcher.idle_poll_us")? {
+            cfg.idle_poll = std::time::Duration::from_micros(us as u64);
+        }
+        Ok(cfg)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive '#' handling is wrong inside quoted strings; scan properly
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        if body.contains('"') {
+            bail!("embedded quotes not supported");
+        }
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow!("not a string/number/boolean: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# ftgemm service config
+[engine]
+artifacts_dir = "artifacts"          # where make artifacts wrote
+precompile = "gemm_medium, ftgemm_tb_medium"
+
+[coordinator]
+ft_level = "warp"
+host_verify = true
+max_recomputes = 3
+threshold_rel = 2e-4
+
+[batcher]
+max_batch = 32
+idle_poll_us = 500
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("engine.artifacts_dir").unwrap(), Some("artifacts"));
+        assert_eq!(c.bool("coordinator.host_verify").unwrap(), Some(true));
+        assert_eq!(c.usize("batcher.max_batch").unwrap(), Some(32));
+        assert_eq!(c.num("coordinator.threshold_rel").unwrap(), Some(2e-4));
+    }
+
+    #[test]
+    fn typed_loaders_build_configs() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let coord = c.coordinator().unwrap();
+        assert_eq!(coord.ft_level, "warp");
+        assert!(coord.host_verify);
+        assert_eq!(coord.max_recomputes, 3);
+        assert!((coord.thresholds.rel - 2e-4).abs() < 1e-9);
+        let eng = c.engine().unwrap();
+        assert_eq!(eng.precompile, vec!["gemm_medium", "ftgemm_tb_medium"]);
+        let b = c.batcher().unwrap();
+        assert_eq!(b.max_batch, 32);
+        assert_eq!(b.idle_poll, std::time::Duration::from_micros(500));
+    }
+
+    #[test]
+    fn defaults_when_unset() {
+        let c = Config::parse("").unwrap();
+        let coord = c.coordinator().unwrap();
+        assert_eq!(coord.ft_level, "tb");
+        assert!(!coord.host_verify);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "[unterminated",
+            "key without equals",
+            "k = ",
+            "k = \"open",
+            "a = 1\na = 2",
+            "bad key! = 1",
+            "[coordinator]\nft_level = \"bogus\"",
+        ] {
+            let parsed = Config::parse(bad);
+            let failed = match parsed {
+                Err(_) => true,
+                Ok(c) => c.coordinator().is_err(),
+            };
+            assert!(failed, "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn validates_value_types() {
+        let c = Config::parse("[coordinator]\nmax_recomputes = \"three\"").unwrap();
+        assert!(c.coordinator().is_err());
+        let c = Config::parse("[coordinator]\nmax_recomputes = 2.5").unwrap();
+        assert!(c.coordinator().is_err());
+        let c = Config::parse("[batcher]\nmax_batch = 0").unwrap();
+        assert!(c.batcher().is_err());
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let c = Config::parse("k = \"a#b\" # trailing").unwrap();
+        assert_eq!(c.str("k").unwrap(), Some("a#b"));
+    }
+}

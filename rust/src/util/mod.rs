@@ -1,0 +1,15 @@
+//! Self-built infrastructure substrates.
+//!
+//! The build environment is fully offline and the vendored crate set is
+//! minimal (no serde, clap, tokio, rand, criterion), so the pieces a
+//! production service would normally pull from crates.io are implemented
+//! here from scratch: a JSON parser/serializer ([`json`]), a CLI argument
+//! parser ([`cli`]), deterministic PRNGs ([`rng`]), a thread pool and
+//! oneshot channels ([`pool`]), and simple numeric stats ([`stats`]).
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;

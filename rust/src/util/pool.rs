@@ -1,0 +1,237 @@
+//! Thread pool + oneshot channel (no tokio in the vendored crate set).
+//!
+//! The coordinator's leader loop and the fault-campaign drivers need
+//! fan-out/fan-in concurrency; [`ThreadPool`] provides bounded worker
+//! threads over `std::sync::mpsc`, and [`oneshot`] provides the one-value
+//! rendezvous used for engine request/response pairing.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs are `FnOnce() + Send`; panics in jobs are
+/// caught and counted rather than tearing down the worker.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
+                std::thread::Builder::new()
+                    .name(format!("ftgemm-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panics.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, panics }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Number of jobs that panicked since construction.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Run a closure over each item, in parallel, and collect results in
+    /// input order — the pool's fan-out/fan-in primitive.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let n = items.len();
+        let results = Arc::new(Mutex::new(Vec::from_iter((0..n).map(|_| None))));
+        let latch = Arc::new(Latch::new(n));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            let latch = Arc::clone(&latch);
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+                latch.count_down();
+            });
+        }
+        latch.wait();
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("pool.map results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("worker panicked before producing a result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Countdown latch for fan-in.
+pub struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    pub fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    pub fn count_down(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        *rem = rem.saturating_sub(1);
+        if *rem == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    pub fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.cv.wait(rem).unwrap();
+        }
+    }
+}
+
+/// One-value rendezvous channel (`tokio::sync::oneshot` replacement).
+pub mod oneshot {
+    use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+    pub struct OneSender<T>(SyncSender<T>);
+    pub struct OneReceiver<T>(Receiver<T>);
+
+    pub fn channel<T>() -> (OneSender<T>, OneReceiver<T>) {
+        let (tx, rx) = sync_channel(1);
+        (OneSender(tx), OneReceiver(rx))
+    }
+
+    impl<T> OneSender<T> {
+        /// Send the value; returns Err(value) if the receiver is gone.
+        pub fn send(self, value: T) -> Result<(), T> {
+            self.0.send(value).map_err(|e| e.0)
+        }
+    }
+
+    impl<T> OneReceiver<T> {
+        /// Block until the value arrives; Err if the sender was dropped.
+        pub fn recv(self) -> Result<T, RecvError> {
+            self.0.recv().map_err(|_| RecvError)
+        }
+
+        pub fn recv_timeout(self, d: std::time::Duration) -> Result<T, RecvError> {
+            self.0.recv_timeout(d).map_err(|_| RecvError)
+        }
+    }
+
+    #[derive(Debug, PartialEq, Eq)]
+    pub struct RecvError;
+}
+
+/// Multi-producer channel pair helper used by the engine loop.
+pub fn request_channel<T>() -> (Sender<T>, Receiver<T>) {
+    channel()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let latch = Arc::new(Latch::new(100));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let l = Arc::clone(&latch);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                l.count_down();
+            });
+        }
+        latch.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map((0..64).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panics_are_contained_and_counted() {
+        let pool = ThreadPool::new(2);
+        let latch = Arc::new(Latch::new(1));
+        let l2 = Arc::clone(&latch);
+        pool.execute(|| panic!("boom"));
+        pool.execute(move || l2.count_down());
+        latch.wait();
+        // the panicking job may still be unwinding; poll briefly
+        for _ in 0..100 {
+            if pool.panic_count() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.panic_count(), 1);
+    }
+
+    #[test]
+    fn oneshot_roundtrip() {
+        let (tx, rx) = oneshot::channel();
+        std::thread::spawn(move || tx.send(123).unwrap());
+        assert_eq!(rx.recv().unwrap(), 123);
+    }
+
+    #[test]
+    fn oneshot_sender_drop_errors() {
+        let (tx, rx) = oneshot::channel::<i32>();
+        drop(tx);
+        assert!(rx.recv().is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Numeric summary statistics for the bench harness and metrics
+//! (criterion replacement lives on top of these).
+
+/// Online mean/variance (Welford) + min/max.
+#[derive(Debug, Clone)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Running {
+    fn default() -> Self {
+        Running::new()
+    }
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact quantiles over a retained sample (fine at bench scale).
+#[derive(Debug, Clone, Default)]
+pub struct Quantiles {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Quantiles {
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// q in [0,1]; linear interpolation between order statistics.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!(!self.xs.is_empty());
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let pos = q.clamp(0.0, 1.0) * (self.xs.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let w = pos - lo as f64;
+            self.xs[lo] * (1.0 - w) + self.xs[hi] * w
+        }
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Relative change in percent, the unit every EXPERIMENTS.md row uses.
+pub fn pct_change(baseline: f64, value: f64) -> f64 {
+    (value - baseline) / baseline * 100.0
+}
+
+/// Speedup of `fast` over `slow` in percent (paper convention: "X% faster").
+pub fn speedup_pct(slow: f64, fast: f64) -> f64 {
+    (slow / fast - 1.0) * 100.0
+}
+
+/// Overhead of `value` versus `baseline` in percent.
+pub fn overhead_pct(baseline: f64, value: f64) -> f64 {
+    (value / baseline - 1.0) * 100.0
+}
+
+/// Geometric mean (the right average for GFLOPS ratios across sizes).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_closed_form() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let mut q = Quantiles::default();
+        for x in 0..101 {
+            q.push(x as f64);
+        }
+        assert_eq!(q.median(), 50.0);
+        assert_eq!(q.quantile(0.0), 0.0);
+        assert_eq!(q.quantile(1.0), 100.0);
+        assert!((q.quantile(0.25) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pct_helpers() {
+        assert!((speedup_pct(2.0, 1.0) - 100.0).abs() < 1e-12);
+        assert!((overhead_pct(1.0, 1.0889) - 8.89).abs() < 1e-9);
+        assert!((pct_change(100.0, 150.0) - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_equal_values_is_value() {
+        assert!((geomean(&[3.0, 3.0, 3.0]) - 3.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,409 @@
+//! End-to-end integration: engine + coordinator + batcher + ding baseline
+//! against the real AOT artifacts. Requires `make artifacts` (the suite
+//! fails loudly if they're missing — CI must build them first).
+
+use std::sync::OnceLock;
+
+use ftgemm::abft::injection::{Injection, InjectionPlan};
+use ftgemm::abft::matrix::Matrix;
+use ftgemm::coordinator::batcher::{Batcher, BatcherConfig};
+use ftgemm::coordinator::ding::DingPipeline;
+use ftgemm::coordinator::{Coordinator, CoordinatorConfig, FtPolicy};
+use ftgemm::faults::{FaultCampaign, SeuModel};
+use ftgemm::runtime::{Engine, EngineConfig};
+
+fn engine() -> Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            Engine::start(EngineConfig::default())
+                .expect("artifacts missing — run `make artifacts` first")
+        })
+        .clone()
+}
+
+fn coordinator() -> Coordinator {
+    Coordinator::new(engine(), CoordinatorConfig::default())
+}
+
+fn check_close(got: &Matrix, want: &Matrix, tol: f32, what: &str) {
+    let diff = got.max_abs_diff(want);
+    assert!(diff < tol, "{what}: max diff {diff} > {tol}");
+}
+
+// ---------------------------------------------------------------------
+// Plain serving path
+// ---------------------------------------------------------------------
+
+#[test]
+fn exact_bucket_gemm_matches_host() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(128, 128, 1);
+    let b = Matrix::rand_uniform(128, 128, 2);
+    let out = coord.gemm(&a, &b, FtPolicy::None).unwrap();
+    check_close(&out.c, &a.matmul(&b), 1e-3, "exact bucket");
+    assert_eq!(out.kernel_launches, 1);
+    assert_eq!(out.buckets, vec!["medium"]);
+}
+
+#[test]
+fn padded_irregular_shape_matches_host() {
+    let coord = coordinator();
+    // 100x90x70: fits nothing exactly -> padded into medium
+    let a = Matrix::rand_uniform(100, 70, 3);
+    let b = Matrix::rand_uniform(70, 90, 4);
+    let out = coord.gemm(&a, &b, FtPolicy::None).unwrap();
+    assert_eq!((out.c.rows(), out.c.cols()), (100, 90));
+    check_close(&out.c, &a.matmul(&b), 1e-3, "padded");
+}
+
+#[test]
+fn tall_shape_routes_to_tall_bucket() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(100, 200, 5);
+    let b = Matrix::rand_uniform(200, 480, 6);
+    let out = coord.gemm(&a, &b, FtPolicy::None).unwrap();
+    assert_eq!(out.buckets, vec!["tall"]);
+    check_close(&out.c, &a.matmul(&b), 2e-3, "tall");
+}
+
+#[test]
+fn oversize_gemm_splits_and_accumulates() {
+    let coord = coordinator();
+    // 600^3 > huge bucket -> 2x2x2 block decomposition
+    let a = Matrix::rand_uniform(600, 600, 7);
+    let b = Matrix::rand_uniform(600, 600, 8);
+    let out = coord.gemm(&a, &b, FtPolicy::None).unwrap();
+    assert_eq!(out.kernel_launches, 8);
+    check_close(&out.c, &a.matmul(&b), 5e-3, "split");
+}
+
+#[test]
+fn host_verify_accepts_clean_results() {
+    let cfg = CoordinatorConfig { host_verify: true, ..Default::default() };
+    let coord = Coordinator::new(engine(), cfg);
+    let a = Matrix::rand_uniform(64, 64, 9);
+    let b = Matrix::rand_uniform(64, 64, 10);
+    coord.gemm(&a, &b, FtPolicy::None).unwrap();
+}
+
+#[test]
+fn mismatched_inner_dims_rejected() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(8, 9, 1);
+    let b = Matrix::rand_uniform(10, 8, 2);
+    assert!(coord.gemm(&a, &b, FtPolicy::None).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Online (fused) fault tolerance
+// ---------------------------------------------------------------------
+
+#[test]
+fn online_ft_fault_free_matches_plain() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(128, 128, 11);
+    let b = Matrix::rand_uniform(128, 128, 12);
+    let plain = coord.gemm(&a, &b, FtPolicy::None).unwrap();
+    let ft = coord.gemm(&a, &b, FtPolicy::Online).unwrap();
+    assert_eq!(ft.errors_detected, 0);
+    check_close(&ft.c, &plain.c, 1e-3, "ft vs plain");
+}
+
+#[test]
+fn online_ft_corrects_injected_errors() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(128, 128, 13);
+    let b = Matrix::rand_uniform(128, 128, 14);
+    let want = a.matmul(&b);
+    let inj = InjectionPlan {
+        injections: vec![
+            Injection { row: 5, col: 9, step: 0, magnitude: 300.0 },
+            Injection { row: 77, col: 40, step: 6, magnitude: -1000.0 },
+            Injection { row: 127, col: 127, step: 12, magnitude: 64.0 },
+        ],
+    };
+    let out = coord.gemm_with_faults(&a, &b, FtPolicy::Online, &inj).unwrap();
+    assert_eq!(out.errors_corrected, 3);
+    assert_eq!(out.recomputes, 0);
+    check_close(&out.c, &want, 2e-2, "online corrected");
+}
+
+#[test]
+fn online_ft_on_padded_shape_corrects() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(100, 60, 15);
+    let b = Matrix::rand_uniform(60, 90, 16);
+    let want = a.matmul(&b);
+    let inj = InjectionPlan::single(50, 45, 1, 500.0);
+    let out = coord.gemm_with_faults(&a, &b, FtPolicy::Online, &inj).unwrap();
+    assert_eq!(out.errors_corrected, 1);
+    check_close(&out.c, &want, 2e-2, "padded + injected");
+}
+
+#[test]
+fn warp_and_thread_levels_also_correct() {
+    for level in ["warp", "thread"] {
+        let cfg = CoordinatorConfig { ft_level: level.into(), ..Default::default() };
+        let coord = Coordinator::new(engine(), cfg);
+        let a = Matrix::rand_uniform(128, 128, 17);
+        let b = Matrix::rand_uniform(128, 128, 18);
+        let want = a.matmul(&b);
+        let inj = InjectionPlan::single(30, 31, 2, 777.0);
+        let out = coord.gemm_with_faults(&a, &b, FtPolicy::Online, &inj).unwrap();
+        assert_eq!(out.errors_corrected, 1, "{level}");
+        check_close(&out.c, &want, 2e-2, level);
+    }
+}
+
+#[test]
+fn injecting_into_unprotected_kernel_is_refused() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(64, 64, 19);
+    let b = Matrix::rand_uniform(64, 64, 20);
+    let inj = InjectionPlan::single(0, 0, 0, 100.0);
+    assert!(coord.gemm_with_faults(&a, &b, FtPolicy::None, &inj).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Offline (detect + recompute)
+// ---------------------------------------------------------------------
+
+#[test]
+fn offline_detects_and_recomputes() {
+    let coord = coordinator();
+    // medium bucket has a detect-only artifact
+    let a = Matrix::rand_uniform(128, 128, 21);
+    let b = Matrix::rand_uniform(128, 128, 22);
+    let want = a.matmul(&b);
+    let inj = InjectionPlan::single(10, 10, 3, 444.0);
+    let out = coord.gemm_with_faults(&a, &b, FtPolicy::Offline, &inj).unwrap();
+    assert!(out.errors_detected >= 1);
+    assert_eq!(out.recomputes, 1);
+    assert!(out.kernel_launches >= 2, "detection must trigger a second run");
+    check_close(&out.c, &want, 1e-3, "offline recomputed");
+}
+
+#[test]
+fn offline_fault_free_runs_once() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(128, 128, 23);
+    let b = Matrix::rand_uniform(128, 128, 24);
+    let out = coord.gemm(&a, &b, FtPolicy::Offline).unwrap();
+    assert_eq!(out.recomputes, 0);
+    assert_eq!(out.kernel_launches, 1);
+}
+
+#[test]
+fn offline_without_detect_artifact_uses_host_detector() {
+    let coord = coordinator();
+    // small bucket has no ftdetect artifact -> host path
+    let a = Matrix::rand_uniform(64, 64, 25);
+    let b = Matrix::rand_uniform(64, 64, 26);
+    let want = a.matmul(&b);
+    let inj = InjectionPlan::single(3, 3, 0, 256.0);
+    let out = coord.gemm_with_faults(&a, &b, FtPolicy::Offline, &inj).unwrap();
+    assert!(out.errors_detected >= 1);
+    assert_eq!(out.recomputes, 1);
+    check_close(&out.c, &want, 1e-3, "host-detector offline");
+}
+
+// ---------------------------------------------------------------------
+// Ding non-fused baseline
+// ---------------------------------------------------------------------
+
+#[test]
+fn ding_pipeline_matches_host_gemm() {
+    let pipe = DingPipeline::new(engine(), "medium").unwrap();
+    let a = Matrix::rand_uniform(128, 128, 27);
+    let b = Matrix::rand_uniform(128, 128, 28);
+    let out = pipe.gemm(&a, &b).unwrap();
+    assert_eq!(out.errors_corrected, 0);
+    // 1 encode + 2 per panel
+    assert_eq!(out.kernel_launches as usize, 1 + 2 * pipe.panels());
+    check_close(&out.c, &a.matmul(&b), 2e-3, "ding clean");
+}
+
+#[test]
+fn ding_pipeline_corrects_per_panel_faults() {
+    let pipe = DingPipeline::new(engine(), "medium").unwrap();
+    let a = Matrix::rand_uniform(128, 128, 29);
+    let b = Matrix::rand_uniform(128, 128, 30);
+    let want = a.matmul(&b);
+    let inj = InjectionPlan {
+        injections: vec![
+            Injection { row: 3, col: 4, step: 0, magnitude: 512.0 },
+            Injection { row: 90, col: 100, step: 1, magnitude: -128.0 },
+        ],
+    };
+    let out = pipe.gemm_with_faults(&a, &b, &inj).unwrap();
+    assert_eq!(out.errors_corrected, 2);
+    check_close(&out.c, &want, 2e-2, "ding corrected");
+}
+
+#[test]
+fn fused_uses_fewer_launches_than_ding() {
+    // the structural claim behind the paper's speedup: one launch vs 1+2P
+    let coord = coordinator();
+    let pipe = DingPipeline::new(engine(), "medium").unwrap();
+    let a = Matrix::rand_uniform(128, 128, 31);
+    let b = Matrix::rand_uniform(128, 128, 32);
+    let fused = coord.gemm(&a, &b, FtPolicy::Online).unwrap();
+    let ding = pipe.gemm(&a, &b).unwrap();
+    assert!(fused.kernel_launches < ding.kernel_launches);
+}
+
+// ---------------------------------------------------------------------
+// Batcher
+// ---------------------------------------------------------------------
+
+#[test]
+fn batcher_serves_mixed_shapes_and_policies() {
+    let batcher = Batcher::start(coordinator(), BatcherConfig::default());
+    let mut tickets = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..12u64 {
+        let (m, n, k) = match i % 3 {
+            0 => (64, 64, 64),
+            1 => (128, 128, 128),
+            _ => (100, 80, 60),
+        };
+        let policy = if i % 2 == 0 { FtPolicy::None } else { FtPolicy::Online };
+        let a = Matrix::rand_uniform(m, k, 100 + i);
+        let b = Matrix::rand_uniform(k, n, 200 + i);
+        wants.push(a.matmul(&b));
+        tickets.push(batcher.submit(a, b, policy, InjectionPlan::none()).unwrap());
+    }
+    for (t, want) in tickets.into_iter().zip(&wants) {
+        let out = t.wait().unwrap();
+        check_close(&out.c, want, 2e-3, "batched");
+    }
+    let stats = batcher.stats();
+    assert_eq!(stats.requests, 12);
+    assert!(stats.groups >= 1);
+}
+
+// ---------------------------------------------------------------------
+// Fault campaigns
+// ---------------------------------------------------------------------
+
+#[test]
+fn campaign_online_corrects_everything() {
+    let campaign = FaultCampaign::new(
+        coordinator(),
+        SeuModel::PerGemm { count: 4 },
+        FtPolicy::Online,
+        42,
+    );
+    let report = campaign.run(128, 128, 128, 3).unwrap();
+    assert_eq!(report.gemms, 3);
+    assert_eq!(report.injected, 12);
+    // corrected >= injected: a correction of a huge (2^20) offset leaves an
+    // O(eps*mag) residue that a later verification pass refines again
+    assert!(report.corrected >= 12, "{}", report.corrected);
+    assert_eq!(report.recomputes, 0);
+    // correction residue is O(eps * |magnitude|); bit-flip magnitudes go up
+    // to 2^20, so the corrected result can be ~0.1 off in absolute terms
+    // (relative to elements of size ~K/4 that's still ~1e-5 relative).
+    assert!(report.max_error_vs_reference < 0.5, "{}", report.max_error_vs_reference);
+}
+
+#[test]
+fn campaign_offline_recomputes_instead_of_correcting() {
+    let campaign = FaultCampaign::new(
+        coordinator(),
+        SeuModel::PerGemm { count: 1 },
+        FtPolicy::Offline,
+        43,
+    );
+    let report = campaign.run(128, 128, 128, 2).unwrap();
+    assert_eq!(report.corrected, 0);
+    assert!(report.recomputes >= 2);
+    assert!(report.max_error_vs_reference < 1e-3);
+}
+
+#[test]
+fn coordinator_counters_accumulate() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(64, 64, 50);
+    let b = Matrix::rand_uniform(64, 64, 51);
+    coord.gemm(&a, &b, FtPolicy::None).unwrap();
+    coord
+        .gemm_with_faults(&a, &b, FtPolicy::Online, &InjectionPlan::single(1, 1, 0, 99.0))
+        .unwrap();
+    let snap = coord.counters().snapshot();
+    assert_eq!(snap.requests, 2);
+    assert_eq!(snap.errors_corrected, 1);
+    assert_eq!(coord.latency().count(), 2);
+}
+
+// ---------------------------------------------------------------------
+// Failure injection: the system must fail loudly, not silently
+// ---------------------------------------------------------------------
+
+#[test]
+fn unknown_artifact_rejected_by_engine() {
+    let eng = engine();
+    let err = eng.warm("nonexistent_kernel").unwrap_err();
+    assert!(err.to_string().contains("not in manifest"));
+}
+
+#[test]
+fn wrong_input_count_rejected() {
+    let eng = engine();
+    let err = eng
+        .execute("gemm_small", vec![ftgemm::runtime::engine::Tensor::zeros(vec![64, 64])])
+        .unwrap_err();
+    assert!(err.to_string().contains("inputs"));
+}
+
+#[test]
+fn ding_pipeline_rejects_wrong_shape() {
+    let pipe = DingPipeline::new(engine(), "medium").unwrap();
+    let a = Matrix::rand_uniform(64, 64, 1);
+    let b = Matrix::rand_uniform(64, 64, 2);
+    assert!(pipe.gemm(&a, &b).is_err());
+}
+
+#[test]
+fn ding_pipeline_missing_bucket_errors() {
+    // "small" has no ding artifacts
+    assert!(DingPipeline::new(engine(), "small").is_err());
+}
+
+#[test]
+fn serve_config_roundtrip() {
+    // the shipped sample config must parse and build all three configs
+    let cfg = ftgemm::util::config::Config::load("ftgemm.toml")
+        .or_else(|_| ftgemm::util::config::Config::load("../ftgemm.toml"))
+        .unwrap();
+    let coord = cfg.coordinator().unwrap();
+    assert_eq!(coord.ft_level, "tb");
+    let eng = cfg.engine().unwrap();
+    assert!(eng.precompile.contains(&"gemm_medium".to_string()));
+    assert!(cfg.batcher().is_ok());
+}
+
+#[test]
+fn engine_survives_failed_request_then_serves() {
+    let eng = engine();
+    let _ = eng.warm("nope");
+    // after an error the engine thread must still serve
+    let coord = Coordinator::new(eng, CoordinatorConfig::default());
+    let a = Matrix::rand_uniform(64, 64, 90);
+    let b = Matrix::rand_uniform(64, 64, 91);
+    coord.gemm(&a, &b, FtPolicy::None).unwrap();
+}
+
+#[test]
+fn oversize_online_ft_corrects_in_owning_block() {
+    // injection into a split GEMM lands in the right block
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(600, 600, 92);
+    let b = Matrix::rand_uniform(600, 600, 93);
+    let want = a.matmul(&b);
+    let inj = InjectionPlan::single(550, 13, 2, 4096.0); // block (1, 0)
+    let out = coord.gemm_with_faults(&a, &b, FtPolicy::Online, &inj).unwrap();
+    assert!(out.errors_corrected >= 1);
+    check_close(&out.c, &want, 5e-2, "split + injected");
+}

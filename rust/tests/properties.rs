@@ -1,0 +1,248 @@
+//! Property-based tests (hand-rolled — no proptest in the vendored crate
+//! set): randomized invariants over the ABFT algebra, the router, the
+//! JSON round trip, and the injection planner, with seeds printed on
+//! failure for replay.
+
+use ftgemm::abft::checksum::{verify, ChecksumPair, Detection, Thresholds};
+use ftgemm::abft::injection::InjectionPlan;
+use ftgemm::abft::matrix::Matrix;
+use ftgemm::coordinator::router;
+use ftgemm::util::json::Json;
+use ftgemm::util::rng::Pcg32;
+use ftgemm::util::stats::geomean;
+
+const CASES: usize = 60;
+
+/// Tiny property harness: runs `f` for CASES derived seeds, reporting the
+/// failing seed.
+fn forall(name: &str, f: impl Fn(&mut Pcg32)) {
+    for case in 0..CASES {
+        let seed = 0xF00D + case as u64 * 7919;
+        let mut rng = Pcg32::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name} failed at seed {seed:#x}: {e:?}");
+        }
+    }
+}
+
+fn rand_dims(rng: &mut Pcg32, lo: usize, hi: usize) -> usize {
+    lo + rng.usize_below(hi - lo + 1)
+}
+
+// ---------------------------------------------------------------------
+// ABFT algebra
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_operand_checksums_equal_product_checksums() {
+    forall("checksum-identity", |rng| {
+        let (m, k, n) = (rand_dims(rng, 1, 40), rand_dims(rng, 1, 60), rand_dims(rng, 1, 40));
+        let a = Matrix::rand_uniform(m, k, rng.next_u64());
+        let b = Matrix::rand_uniform(k, n, rng.next_u64());
+        let fast = ChecksumPair::of_product(&a, &b);
+        let direct = ChecksumPair::of(&a.matmul(&b));
+        for (x, y) in fast.cr.iter().zip(&direct.cr) {
+            assert!((x - y).abs() < 1e-2 + 1e-4 * k as f32, "{x} vs {y}");
+        }
+        for (x, y) in fast.cc.iter().zip(&direct.cc) {
+            assert!((x - y).abs() < 1e-2 + 1e-4 * m as f32, "{x} vs {y}");
+        }
+    });
+}
+
+#[test]
+fn prop_single_error_always_located_and_corrected() {
+    forall("locate-correct", |rng| {
+        let (m, k, n) = (rand_dims(rng, 2, 32), rand_dims(rng, 2, 48), rand_dims(rng, 2, 32));
+        let a = Matrix::rand_uniform(m, k, rng.next_u64());
+        let b = Matrix::rand_uniform(k, n, rng.next_u64());
+        let clean = a.matmul(&b);
+        let pair = ChecksumPair::of_product(&a, &b);
+        let (row, col) = (rng.usize_below(m), rng.usize_below(n));
+        let mag = (rng.f32() + 0.5) * if rng.below(2) == 0 { 100.0 } else { -100.0 };
+        let mut bad = clean.clone();
+        bad.add_at(row, col, mag);
+        match verify(&bad, &pair, Thresholds::default()) {
+            Detection::Single { row: r, col: c, magnitude } => {
+                assert_eq!((r, c), (row, col));
+                assert!((magnitude - mag).abs() < 0.05 * mag.abs() + 0.01);
+            }
+            other => panic!("expected Single at ({row},{col}) mag {mag}: {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_clean_products_never_flag() {
+    forall("no-false-positives", |rng| {
+        let (m, k, n) = (rand_dims(rng, 1, 48), rand_dims(rng, 1, 96), rand_dims(rng, 1, 48));
+        let a = Matrix::rand_uniform(m, k, rng.next_u64());
+        let b = Matrix::rand_uniform(k, n, rng.next_u64());
+        let c = a.matmul(&b);
+        let pair = ChecksumPair::of_product(&a, &b);
+        assert_eq!(verify(&c, &pair, Thresholds::default()), Detection::Clean);
+    });
+}
+
+#[test]
+fn prop_pad_slice_roundtrip_preserves_gemm() {
+    forall("pad-slice-gemm", |rng| {
+        let (m, k, n) = (rand_dims(rng, 1, 30), rand_dims(rng, 1, 30), rand_dims(rng, 1, 30));
+        let (pm, pk, pn) = (m + rng.usize_below(20), k + rng.usize_below(20), n + rng.usize_below(20));
+        let a = Matrix::rand_uniform(m, k, rng.next_u64());
+        let b = Matrix::rand_uniform(k, n, rng.next_u64());
+        let direct = a.matmul(&b);
+        let padded = a.pad_to(pm, pk).matmul(&b.pad_to(pk, pn)).slice_to(m, n);
+        assert!(direct.max_abs_diff(&padded) < 1e-3);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_route_covers_output_exactly_once() {
+    forall("route-coverage", |rng| {
+        let (m, n, k) = (rand_dims(rng, 1, 1400), rand_dims(rng, 1, 1400), rand_dims(rng, 1, 1400));
+        let plan = router::route(m, n, k);
+        // (row, col) coverage: blocks with k0 == 0 partition the output
+        let firsts: Vec<_> = plan.blocks.iter().filter(|b| b.k0 == 0).collect();
+        let area: usize = firsts.iter().map(|b| b.m * b.n).sum();
+        assert_eq!(area, m * n, "shape {m}x{n}x{k}");
+        // k coverage within each (row,col) family
+        for f in &firsts {
+            let ksum: usize = plan
+                .blocks
+                .iter()
+                .filter(|b| b.row0 == f.row0 && b.col0 == f.col0)
+                .map(|b| b.k)
+                .sum();
+            assert_eq!(ksum, k);
+        }
+        // every block fits its bucket
+        for b in &plan.blocks {
+            assert!(b.m <= b.bucket.m && b.n <= b.bucket.n && b.k <= b.bucket.k);
+        }
+    });
+}
+
+#[test]
+fn prop_non_split_requests_use_minimal_waste_bucket() {
+    forall("route-waste", |rng| {
+        let (m, n, k) = (rand_dims(rng, 1, 512), rand_dims(rng, 1, 512), rand_dims(rng, 1, 512));
+        let plan = router::route(m, n, k);
+        if !plan.split {
+            let chosen = plan.blocks[0].bucket;
+            for b in ftgemm::codegen::select::BUCKETS {
+                if b.fits(m, n, k) {
+                    assert!(
+                        chosen.waste(m, n, k) <= b.waste(m, n, k) + 1e-12,
+                        "{m}x{n}x{k}: {} not minimal vs {}",
+                        chosen.name(),
+                        b.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// JSON
+// ---------------------------------------------------------------------
+
+fn rand_json(rng: &mut Pcg32, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.f64() * 2e6 - 1e6).round() / 16.0),
+        3 => {
+            let len = rng.usize_below(12);
+            Json::Str(
+                (0..len)
+                    .map(|_| char::from_u32(0x20 + rng.below(0x7E - 0x20)).unwrap())
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.usize_below(5)).map(|_| rand_json(rng, depth - 1)).collect()),
+        _ => Json::from_pairs(
+            (0..rng.usize_below(5)).map(|i| (format!("k{i}"), rand_json(rng, depth - 1))),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrips() {
+    forall("json-roundtrip", |rng| {
+        let v = rand_json(rng, 3);
+        let compact = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(compact, v);
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(pretty, v);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Injection planner
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_seu_plans_have_unique_protection_domains() {
+    forall("seu-domains", |rng| {
+        let m = 64 * (1 + rng.usize_below(8));
+        let n = 64 * (1 + rng.usize_below(8));
+        let steps = 8 * (1 + rng.usize_below(8));
+        let (sub_m, sub_n, ve) = (32, 32, 8);
+        let domains = (m / sub_m) * (n / sub_n) * steps.div_ceil(ve);
+        let count = 1 + rng.usize_below(domains.min(16));
+        let plan = InjectionPlan::random_seu(m, n, steps, ve, sub_m, sub_n, count, rng);
+        assert_eq!(plan.len(), count);
+        let mut seen = std::collections::HashSet::new();
+        for e in &plan.injections {
+            assert!(e.row < m && e.col < n && e.step < steps);
+            assert!(
+                seen.insert((e.row / sub_m, e.col / sub_n, e.step / ve)),
+                "duplicate protection domain"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_chunking_never_loses_injections() {
+    forall("chunking", |rng| {
+        let count = rng.usize_below(40) + 1;
+        let plan = InjectionPlan {
+            injections: (0..count)
+                .map(|i| ftgemm::abft::injection::Injection {
+                    row: i,
+                    col: i,
+                    step: i,
+                    magnitude: 1.0 + i as f32,
+                })
+                .collect(),
+        };
+        let max_inj = rng.usize_below(8) + 1;
+        let chunks = plan.chunks(max_inj);
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total, count);
+        assert!(chunks.iter().all(|c| c.len() <= max_inj));
+    });
+}
+
+// ---------------------------------------------------------------------
+// Stats sanity used by bench reporting
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_geomean_between_min_and_max() {
+    forall("geomean-bounds", |rng| {
+        let xs: Vec<f64> = (0..rng.usize_below(20) + 1).map(|_| rng.f64() * 100.0 + 0.1).collect();
+        let g = geomean(&xs);
+        let mn = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mx = xs.iter().cloned().fold(0.0f64, f64::max);
+        assert!(g >= mn - 1e-9 && g <= mx + 1e-9);
+    });
+}
