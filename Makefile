@@ -1,0 +1,34 @@
+# Build orchestration for the two-language stack.
+#
+#   make artifacts   lower every kernel variant to HLO text (python/JAX, runs once)
+#   make build       release build of the rust serving stack
+#   make test        tier-1 gate: cargo build --release && cargo test -q
+#   make bench       hot-path benchmarks (writes BENCH_pipeline.json)
+#
+# The rust stack runs WITHOUT artifacts too: the engine falls back to the
+# built-in manifest + reference backend (see DESIGN.md "Substitutions").
+
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: artifacts build test bench lint clean
+
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS_DIR)
+
+build:
+	cargo build --release
+
+test:
+	cargo build --release
+	cargo test -q
+
+bench:
+	cargo bench --bench hotpath
+	cargo bench --bench ablation
+
+lint:
+	cargo fmt --check
+	cargo clippy --all-targets
+
+clean:
+	rm -rf target figures_out

@@ -2,9 +2,12 @@
 //!
 //! Covers the request-path components the §Perf pass optimizes:
 //! router planning, ABFT host verification, injection marshalling, host
-//! GEMM (the offline recompute path), JSON manifest parsing, and — when
-//! artifacts are present — live engine execution + the full coordinator
-//! round trip per policy.
+//! GEMM (the offline recompute path), JSON manifest parsing, live engine
+//! execution + the full coordinator round trip per policy, and the
+//! **worker-count axis**: 1-worker vs N-worker wall time on an oversize
+//! (split) shape served through the plan → schedule → execute pipeline.
+//! The worker sweep writes `BENCH_pipeline.json` next to the manifest it
+//! ran from.
 
 use std::hint::black_box;
 
@@ -13,6 +16,7 @@ use ftgemm::abft::injection::InjectionPlan;
 use ftgemm::abft::matrix::Matrix;
 use ftgemm::bench::Harness;
 use ftgemm::coordinator::{router, Coordinator, CoordinatorConfig, FtPolicy};
+use ftgemm::gpusim::{self, device::T4};
 use ftgemm::runtime::{Engine, EngineConfig};
 use ftgemm::util::json::Json;
 use ftgemm::util::rng::Pcg32;
@@ -111,5 +115,99 @@ fn main() {
         eprintln!("(artifacts not built — engine benches skipped)");
     }
 
+    bench_worker_pipeline();
+
     println!("\n== host hot paths ==\n{}", h.summary());
+}
+
+/// The acceptance benchmark of the plan → schedule → execute refactor:
+/// the same oversize (split) GEMM served with 1, 2, and 4 engine workers,
+/// results written to BENCH_pipeline.json alongside the analytic model.
+fn bench_worker_pipeline() {
+    const SHAPE: (usize, usize, usize) = (1024, 1024, 1024); // 2x2x2 huge blocks
+    const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+
+    let a = Matrix::rand_uniform(SHAPE.0, SHAPE.2, 10);
+    let b = Matrix::rand_uniform(SHAPE.2, SHAPE.1, 11);
+
+    let mut hq = Harness::quick();
+    let mut live = Json::Arr(Vec::new());
+    // NB: the backend is always the reference executor today; only the
+    // manifest source varies (builtin registry vs lowered artifacts).
+    let mut manifest_source = String::from("builtin");
+    let mut base_mean: Option<f64> = None;
+    let mut blocks = 0u64;
+    for &workers in &WORKER_COUNTS {
+        let engine = Engine::start(EngineConfig { workers, ..Default::default() })
+            .expect("engine starts (builtin manifest fallback)");
+        if !engine.manifest().is_builtin() {
+            manifest_source = "artifacts".into();
+        }
+        let coord = Coordinator::new(engine.clone(), CoordinatorConfig::default());
+        // warm every worker's executable cache before timing
+        let first = coord.gemm(&a, &b, FtPolicy::Online).expect("warmup gemm");
+        blocks = first.buckets.len() as u64;
+        let r = hq.bench(&format!("pipeline/split1024/workers{workers}"), || {
+            black_box(coord.gemm(&a, &b, FtPolicy::Online).unwrap());
+        });
+        let mean_s = r.mean.as_secs_f64();
+        let base = *base_mean.get_or_insert(mean_s);
+        let mut entry = Json::obj();
+        entry.set("workers", Json::Num(workers as f64));
+        entry.set("mean_s", Json::Num(mean_s));
+        entry.set("speedup_vs_1worker", Json::Num(base / mean_s));
+        entry.set("peak_inflight", Json::Num(engine.peak_inflight() as f64));
+        live.push(entry);
+    }
+    println!("\n== pipeline worker sweep ==\n{}", hq.summary());
+
+    let mut ideal = Json::Arr(Vec::new());
+    let mut modeled = Json::Arr(Vec::new());
+    for &workers in &WORKER_COUNTS {
+        let cost = gpusim::pipeline_wall(&T4, SHAPE.0, SHAPE.1, SHAPE.2, true, workers);
+        let mut e = Json::obj();
+        e.set("workers", Json::Num(workers as f64));
+        e.set("speedup", Json::Num(cost.ideal_speedup()));
+        ideal.push(e);
+        let mut e = Json::obj();
+        e.set("workers", Json::Num(workers as f64));
+        e.set(
+            "speedup",
+            Json::Num(gpusim::pipeline_speedup(&T4, SHAPE.0, SHAPE.1, SHAPE.2, true, workers)),
+        );
+        e.set("modeled_wall_s", Json::Num(cost.wall_s));
+        modeled.push(e);
+    }
+
+    let mut root = Json::obj();
+    root.set("schema", Json::Str("ftgemm-bench-pipeline/1".into()));
+    root.set(
+        "shape",
+        Json::Arr(vec![
+            Json::Num(SHAPE.0 as f64),
+            Json::Num(SHAPE.1 as f64),
+            Json::Num(SHAPE.2 as f64),
+        ]),
+    );
+    root.set("policy", Json::Str("online".into()));
+    root.set("backend", Json::Str("reference".into()));
+    root.set("manifest", Json::Str(manifest_source));
+    root.set("blocks", Json::Num(blocks as f64));
+    root.set("live", live);
+    let mut model = Json::obj();
+    model.set("ideal_wave_scaling", ideal);
+    model.set("gpusim_t4", modeled);
+    root.set("model", model);
+    root.set(
+        "note",
+        Json::Str(
+            "live = measured coordinator wall time for one oversize GEMM vs engine worker \
+             count; regenerate with `cargo bench --bench hotpath`"
+                .into(),
+        ),
+    );
+    match std::fs::write("BENCH_pipeline.json", root.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_pipeline.json"),
+        Err(e) => eprintln!("could not write BENCH_pipeline.json: {e}"),
+    }
 }

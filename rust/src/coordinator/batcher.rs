@@ -2,19 +2,21 @@
 //!
 //! Callers submit GEMM requests and receive a ticket; a background worker
 //! drains the queue, **groups requests by (bucket, policy)** so consecutive
-//! kernel launches hit the same warm executable (executable switches are
-//! the main source of cache-miss latency on the engine thread), and
-//! fulfills each ticket through a oneshot channel.
+//! kernel launches hit the same warm executables (executable switches are
+//! the main source of cache-miss latency on the engine workers), and
+//! fulfills each ticket through a oneshot channel. Execution goes through
+//! the same plan → schedule pipeline as direct [`Coordinator`] calls.
 //!
-//! Batching discipline: take everything currently queued (up to
-//! `max_batch`), order groups by arrival of their oldest member — bounded
-//! staleness, no starvation.
+//! Batching discipline: block on `recv` while idle (an idle batcher burns
+//! no CPU), then gather everything already queued — optionally waiting up
+//! to `batch_window` for stragglers — up to `max_batch`; order groups by
+//! arrival of their oldest member — bounded staleness, no starvation.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -27,7 +29,6 @@ use super::{Coordinator, FtPolicy, GemmResult};
 
 /// A submitted request awaiting execution.
 struct Pending {
-    seq: u64,
     a: Matrix,
     b: Matrix,
     policy: FtPolicy,
@@ -58,13 +59,16 @@ impl Ticket {
 pub struct BatcherConfig {
     /// Max requests drained per scheduling round.
     pub max_batch: usize,
-    /// Worker poll interval when idle.
-    pub idle_poll: Duration,
+    /// After the first request of a round arrives, keep gathering for this
+    /// long so co-batchable requests land in the same round. Zero = serve
+    /// whatever is already queued (no added latency). The worker blocks
+    /// (no polling) while idle regardless.
+    pub batch_window: Duration,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 64, idle_poll: Duration::from_millis(1) }
+        BatcherConfig { max_batch: 64, batch_window: Duration::ZERO }
     }
 }
 
@@ -97,67 +101,7 @@ impl Batcher {
         let wstats = Arc::clone(&stats);
         let handle = std::thread::Builder::new()
             .name("ftgemm-batcher".into())
-            .spawn(move || {
-                let mut queue: VecDeque<Pending> = VecDeque::new();
-                loop {
-                    // Drain whatever is available; block only when idle.
-                    if queue.is_empty() {
-                        match rx.recv() {
-                            Ok(Msg::Submit(p)) => queue.push_back(p),
-                            Ok(Msg::Shutdown) | Err(_) => break,
-                        }
-                    }
-                    let mut shutdown = false;
-                    while queue.len() < config.max_batch {
-                        match rx.try_recv() {
-                            Ok(Msg::Submit(p)) => queue.push_back(p),
-                            Ok(Msg::Shutdown) => {
-                                shutdown = true;
-                                break;
-                            }
-                            Err(_) => break,
-                        }
-                    }
-                    // Group by (bucket, policy), keep arrival order of the
-                    // oldest member per group.
-                    let round: Vec<Pending> = queue.drain(..).collect();
-                    let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
-                    for p in round {
-                        let bucket = select_bucket(p.a.rows(), p.b.cols(), p.a.cols())
-                            .map(|b| b.name().to_string())
-                            .unwrap_or_else(|| "split".into());
-                        let key = format!("{bucket}/{}", p.policy.name());
-                        match groups.iter_mut().find(|(k, _)| *k == key) {
-                            Some((_, v)) => v.push(p),
-                            None => groups.push((key, vec![p])),
-                        }
-                    }
-                    {
-                        let mut s = wstats.lock().unwrap();
-                        s.rounds += 1;
-                        s.groups += groups.len() as u64;
-                        for (_, v) in &groups {
-                            s.requests += v.len() as u64;
-                            if v.len() > 1 {
-                                s.coscheduled += v.len() as u64;
-                            }
-                        }
-                    }
-                    for (_, members) in groups {
-                        for p in members {
-                            let r = coord.gemm_with_faults(&p.a, &p.b, p.policy, &p.inj);
-                            let _ = p.reply.send(r);
-                        }
-                    }
-                    if shutdown {
-                        break;
-                    }
-                }
-                // Fail any stragglers.
-                for p in queue {
-                    let _ = p.reply.send(Err(anyhow!("batcher shut down")));
-                }
-            })
+            .spawn(move || worker_loop(coord, config, rx, wstats))
             .expect("spawn batcher");
         Batcher { tx, handle: Some(handle), stats }
     }
@@ -170,17 +114,8 @@ impl Batcher {
         policy: FtPolicy,
         inj: InjectionPlan,
     ) -> Result<Ticket> {
-        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
         let (otx, orx) = oneshot::channel();
-        let p = Pending {
-            seq: SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
-            a,
-            b,
-            policy,
-            inj,
-            reply: otx,
-        };
-        let _ = p.seq;
+        let p = Pending { a, b, policy, inj, reply: otx };
         self.tx
             .send(Msg::Submit(p))
             .map_err(|_| anyhow!("batcher is shut down"))?;
@@ -189,6 +124,92 @@ impl Batcher {
 
     pub fn stats(&self) -> BatchStats {
         *self.stats.lock().unwrap()
+    }
+}
+
+fn worker_loop(
+    coord: Coordinator,
+    config: BatcherConfig,
+    rx: Receiver<Msg>,
+    stats: Arc<Mutex<BatchStats>>,
+) {
+    let mut queue: VecDeque<Pending> = VecDeque::new();
+    loop {
+        // Idle: block until work arrives — no poll interval, no spin.
+        if queue.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Submit(p)) => queue.push_back(p),
+                Ok(Msg::Shutdown) | Err(_) => break,
+            }
+        }
+        // Gather the round: everything queued, plus (optionally) whatever
+        // trickles in during the batch window.
+        let mut shutdown = false;
+        let deadline =
+            (!config.batch_window.is_zero()).then(|| Instant::now() + config.batch_window);
+        while queue.len() < config.max_batch {
+            let msg = match deadline {
+                None => match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                },
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        break;
+                    }
+                    match rx.recv_timeout(d - now) {
+                        Ok(m) => m,
+                        Err(_) => break,
+                    }
+                }
+            };
+            match msg {
+                Msg::Submit(p) => queue.push_back(p),
+                Msg::Shutdown => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        // Group by (bucket, policy), keep arrival order of the oldest
+        // member per group.
+        let round: Vec<Pending> = queue.drain(..).collect();
+        let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
+        for p in round {
+            let bucket = select_bucket(p.a.rows(), p.b.cols(), p.a.cols())
+                .map(|b| b.name().to_string())
+                .unwrap_or_else(|| "split".into());
+            let key = format!("{bucket}/{}", p.policy.name());
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => v.push(p),
+                None => groups.push((key, vec![p])),
+            }
+        }
+        {
+            let mut s = stats.lock().unwrap();
+            s.rounds += 1;
+            s.groups += groups.len() as u64;
+            for (_, v) in &groups {
+                s.requests += v.len() as u64;
+                if v.len() > 1 {
+                    s.coscheduled += v.len() as u64;
+                }
+            }
+        }
+        for (_, members) in groups {
+            for p in members {
+                let r = coord.gemm_with_faults(&p.a, &p.b, p.policy, &p.inj);
+                let _ = p.reply.send(r);
+            }
+        }
+        if shutdown {
+            break;
+        }
+    }
+    // Fail any stragglers.
+    for p in queue {
+        let _ = p.reply.send(Err(anyhow!("batcher shut down")));
     }
 }
 
@@ -206,10 +227,11 @@ mod tests {
     use super::*;
 
     #[test]
-    fn default_config_sane() {
+    fn default_config_blocks_instead_of_polling() {
         let c = BatcherConfig::default();
         assert!(c.max_batch >= 1);
+        assert!(c.batch_window.is_zero());
     }
-    // End-to-end batcher tests (needing artifacts + engine) live in
+    // End-to-end batcher tests (engine + coordinator) live in
     // rust/tests/integration.rs.
 }

@@ -3,16 +3,21 @@
 //! This is the comparison system of Figs 12–16: an outer-product GEMM over
 //! *encoded* operands where every stage is a separate kernel launch —
 //! encode, K/K_s panel updates, and a verify/correct pass per panel. The
-//! coordinator chains one PJRT execution per launch, so the baseline pays
-//! the real cost of its extra memory passes (C^f re-read/re-written every
-//! panel), exactly the deficit the paper's fused kernels eliminate.
+//! pipeline is a thin client of the same [`plan`](super::plan) /
+//! [`scheduler`](super::scheduler) types as the fused serving path: one
+//! encode node plus a chain of per-panel nodes threading C^f, so the
+//! baseline pays the real cost of its extra memory passes (C^f re-read /
+//! re-written every panel), exactly the deficit the paper's fused kernels
+//! eliminate.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::abft::injection::InjectionPlan;
 use crate::abft::matrix::Matrix;
-use crate::runtime::engine::{Engine, Tensor};
-use crate::runtime::manifest::{Artifact, ArtifactKind};
+use crate::runtime::engine::Engine;
+
+use super::plan::{plan_ding, NodeOp};
+use super::scheduler::{Scheduler, SchedulerConfig};
 
 /// Outcome of a non-fused FT-GEMM.
 #[derive(Debug, Clone)]
@@ -26,9 +31,8 @@ pub struct DingResult {
 /// Driver for one bucket's Ding pipeline.
 pub struct DingPipeline {
     engine: Engine,
-    encode: Artifact,
-    step: Artifact,
-    verify: Artifact,
+    scheduler: Scheduler,
+    bucket: String,
     pub m: usize,
     pub n: usize,
     pub k: usize,
@@ -39,25 +43,28 @@ impl DingPipeline {
     /// Build the pipeline for a bucket that has ding artifacts
     /// ("medium" | "large" | "huge").
     pub fn new(engine: Engine, bucket: &str) -> Result<Self> {
-        let m = engine.manifest();
-        let encode = m
-            .find(ArtifactKind::DingEncode, bucket, None)
-            .cloned()
-            .ok_or_else(|| anyhow!("no ding_encode for {bucket}"))?;
-        let step = m
-            .find(ArtifactKind::DingStep, bucket, None)
-            .cloned()
-            .ok_or_else(|| anyhow!("no ding_step for {bucket}"))?;
-        let verify = m
-            .find(ArtifactKind::DingVerify, bucket, None)
-            .cloned()
-            .ok_or_else(|| anyhow!("no ding_verify for {bucket}"))?;
-        let (mm, nn, kk, ks) = (encode.m, encode.n, encode.k, step.ks);
-        Ok(DingPipeline { engine, encode, step, verify, m: mm, n: nn, k: kk, ks })
+        // Compile a fault-free plan up front: it both validates the
+        // artifact set and is the single source of the pipeline geometry.
+        let plan = plan_ding(engine.manifest(), bucket, &InjectionPlan::none())?;
+        let (m, n, k) = (plan.m, plan.n, plan.k);
+        let ks = plan
+            .nodes
+            .iter()
+            .find_map(|node| match &node.op {
+                NodeOp::DingPanel { ks, .. } => Some(*ks),
+                _ => None,
+            })
+            .unwrap_or(k);
+        let scheduler = Scheduler::new(engine.clone(), SchedulerConfig::default());
+        Ok(DingPipeline { engine, scheduler, bucket: bucket.to_string(), m, n, k, ks })
     }
 
     pub fn panels(&self) -> usize {
         self.k / self.ks
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 
     /// Run C = A·B with optional per-panel SEU injection.
@@ -65,7 +72,12 @@ impl DingPipeline {
     /// `inj.step` indexes the *panel* here (Ding's K_s protocol); the
     /// offset is applied host-side to C^f between the panel update and its
     /// verify launch — the fault window of the original scheme.
-    pub fn gemm_with_faults(&self, a: &Matrix, b: &Matrix, inj: &InjectionPlan) -> Result<DingResult> {
+    pub fn gemm_with_faults(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        inj: &InjectionPlan,
+    ) -> Result<DingResult> {
         if a.rows() != self.m || a.cols() != self.k || b.rows() != self.k || b.cols() != self.n {
             bail!(
                 "ding pipeline is fixed-shape {}x{}x{}; got {}x{} @ {}x{}",
@@ -78,69 +90,12 @@ impl DingPipeline {
                 b.cols()
             );
         }
-        let mut launches = 0u64;
-
-        // 1. encode: (A, B) -> (A^c, B^r)
-        let enc = self.engine.execute(
-            &self.encode.name,
-            vec![
-                Tensor::new(vec![self.m, self.k], a.data().to_vec()),
-                Tensor::new(vec![self.k, self.n], b.data().to_vec()),
-            ],
-        )?;
-        launches += 1;
-        let ac = &enc.outputs[self.encode.output_index("ac").unwrap()];
-        let br = &enc.outputs[self.encode.output_index("br").unwrap()];
-        let ac = Matrix::from_vec(self.m + 1, self.k, ac.data.clone());
-        let br = Matrix::from_vec(self.k, self.n + 1, br.data.clone());
-
-        // 2. panel loop: step -> (inject) -> verify+correct
-        let mut cf = Matrix::zeros(self.m + 1, self.n + 1);
-        let mut corrected = 0u64;
-        for (panel, s) in (0..self.k).step_by(self.ks).enumerate() {
-            let ac_panel = panel_cols(&ac, s, self.ks);
-            let br_panel = panel_rows(&br, s, self.ks);
-            let out = self.engine.execute(
-                &self.step.name,
-                vec![
-                    Tensor::new(vec![self.m + 1, self.n + 1], cf.into_data()),
-                    Tensor::new(vec![self.m + 1, self.ks], ac_panel.into_data()),
-                    Tensor::new(vec![self.ks, self.n + 1], br_panel.into_data()),
-                ],
-            )?;
-            launches += 1;
-            cf = Matrix::from_vec(
-                self.m + 1,
-                self.n + 1,
-                out.outputs[self.step.output_index("cf").unwrap()].data.clone(),
-            );
-
-            // host-side SEU injection into this panel's accumulation window
-            for e in &inj.injections {
-                if e.step == panel {
-                    cf.add_at(e.row, e.col, e.magnitude);
-                }
-            }
-
-            let ver = self.engine.execute(
-                &self.verify.name,
-                vec![Tensor::new(vec![self.m + 1, self.n + 1], cf.into_data())],
-            )?;
-            launches += 1;
-            cf = Matrix::from_vec(
-                self.m + 1,
-                self.n + 1,
-                ver.outputs[self.verify.output_index("cf").unwrap()].data.clone(),
-            );
-            corrected += ver.outputs[self.verify.output_index("errcount").unwrap()]
-                .scalar_sum()
-                .round() as u64;
-        }
-
+        let plan = plan_ding(self.engine.manifest(), &self.bucket, inj)?;
+        let out = self.scheduler.run(&plan, a, b)?;
         Ok(DingResult {
-            c: cf.slice_to(self.m, self.n),
-            errors_corrected: corrected,
-            kernel_launches: launches,
+            c: out.c,
+            errors_corrected: out.corrected,
+            kernel_launches: out.launches,
             panels: self.panels(),
         })
     }
@@ -150,27 +105,22 @@ impl DingPipeline {
     }
 }
 
-fn panel_cols(m: &Matrix, col0: usize, cols: usize) -> Matrix {
-    Matrix::from_fn(m.rows(), cols, |i, j| m.at(i, col0 + j))
-}
-
-fn panel_rows(m: &Matrix, row0: usize, rows: usize) -> Matrix {
-    Matrix::from_fn(rows, m.cols(), |i, j| m.at(row0 + i, j))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::engine::EngineConfig;
 
     #[test]
-    fn panel_extraction() {
-        let m = Matrix::from_fn(3, 6, |i, j| (i * 6 + j) as f32);
-        let p = panel_cols(&m, 2, 2);
-        assert_eq!(p.rows(), 3);
-        assert_eq!(p.at(0, 0), 2.0);
-        assert_eq!(p.at(2, 1), 15.0);
-        let q = panel_rows(&m, 1, 2);
-        assert_eq!(q.at(0, 0), 6.0);
-        assert_eq!(q.rows(), 2);
+    fn pipeline_dims_come_from_the_manifest() {
+        let engine = Engine::start(EngineConfig::default()).unwrap();
+        let pipe = DingPipeline::new(engine, "medium").unwrap();
+        assert_eq!((pipe.m, pipe.n, pipe.k, pipe.ks), (128, 128, 128, 64));
+        assert_eq!(pipe.panels(), 2);
+    }
+
+    #[test]
+    fn missing_bucket_is_rejected() {
+        let engine = Engine::start(EngineConfig::default()).unwrap();
+        assert!(DingPipeline::new(engine, "small").is_err());
     }
 }

@@ -1,40 +1,49 @@
 //! The L3 coordinator: a GEMM-serving engine with pluggable fault
-//! tolerance.
+//! tolerance, structured as an explicit plan → schedule → execute pipeline.
 //!
-//! This is the serving-side reproduction of the paper's system: requests of
-//! arbitrary shape are routed onto the AOT kernel buckets ([`router`]),
-//! executed through the PJRT engine, and protected by one of three
-//! [`FtPolicy`]s:
+//! This is the serving-side reproduction of the paper's system: a request
+//! of arbitrary shape is **compiled** by the [`plan`] module into an
+//! [`ExecutionPlan`](plan::ExecutionPlan) — block decomposition
+//! ([`router`]), per-block artifact + injection resolution, checksum/verify
+//! strategy, accumulation targets — and then **run** by the [`scheduler`],
+//! which dispatches independent plan nodes concurrently over the engine
+//! worker pool and folds partials into the output as they complete. Every
+//! serving path is a thin client of those two types:
+//!
+//! * [`Coordinator::gemm`] / [`Coordinator::gemm_with_faults`] — one
+//!   request, one plan;
+//! * [`batcher`] — dynamic request batching on top (vLLM-style: group by
+//!   bucket so consecutive executions reuse warm executables);
+//! * [`ding`] — the non-fused Ding'11 baseline (Figs 12–16), planned as an
+//!   encode node plus a chain of per-panel step/verify nodes.
+//!
+//! Protection is one of three [`FtPolicy`]s:
 //!
 //! * [`FtPolicy::None`] — the plain codegen GEMM (the §3 baseline);
 //! * [`FtPolicy::Online`] — the fused FT-GEMM: detection *and* correction
 //!   inside the kernel (§4, the paper's contribution);
 //! * [`FtPolicy::Offline`] — detect-only kernel + recompute-on-detection
-//!   (§5.5's comparison point);
-//!
-//! plus the [`ding`] module, the non-fused Ding'11 baseline pipeline
-//! (Figs 12–16) driven as separate kernel launches.
-//!
-//! [`batcher`] adds dynamic request batching on top (vLLM-style: group by
-//! bucket so consecutive executions reuse the warm executable).
+//!   (§5.5's comparison point).
 
 pub mod batcher;
 pub mod ding;
+pub mod plan;
 pub mod router;
+pub mod scheduler;
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::abft::checksum::{self, ChecksumPair, Thresholds};
 use crate::abft::injection::InjectionPlan;
 use crate::abft::matrix::Matrix;
 use crate::metrics::recorder::{Counters, LatencyRecorder};
-use crate::runtime::engine::{Engine, Tensor};
-use crate::runtime::manifest::{Artifact, ArtifactKind};
+use crate::runtime::engine::Engine;
 
-use router::BlockPlan;
+pub use plan::{ExecutionPlan, Planner};
+pub use scheduler::{Scheduler, SchedulerConfig};
 
 /// Fault-tolerance policy for a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,6 +80,9 @@ pub struct CoordinatorConfig {
     pub max_recomputes: usize,
     /// Detection thresholds for host-side verification.
     pub thresholds: Thresholds,
+    /// Concurrent plan-node dispatch threads; 0 = match the engine worker
+    /// count.
+    pub scheduler_threads: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -80,6 +92,7 @@ impl Default for CoordinatorConfig {
             host_verify: false,
             max_recomputes: 8,
             thresholds: Thresholds::default(),
+            scheduler_threads: 0,
         }
     }
 }
@@ -102,15 +115,21 @@ pub struct GemmResult {
 pub struct Coordinator {
     engine: Engine,
     config: CoordinatorConfig,
+    scheduler: Arc<Scheduler>,
     counters: Arc<Counters>,
     latency: Arc<LatencyRecorder>,
 }
 
 impl Coordinator {
     pub fn new(engine: Engine, config: CoordinatorConfig) -> Self {
+        let scheduler = Arc::new(Scheduler::new(
+            engine.clone(),
+            SchedulerConfig { threads: config.scheduler_threads },
+        ));
         Coordinator {
             engine,
             config,
+            scheduler,
             counters: Arc::new(Counters::new()),
             latency: Arc::new(LatencyRecorder::new()),
         }
@@ -124,12 +143,29 @@ impl Coordinator {
         &self.config
     }
 
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
+    }
+
     pub fn counters(&self) -> &Counters {
         &self.counters
     }
 
     pub fn latency(&self) -> &LatencyRecorder {
         &self.latency
+    }
+
+    /// Compile a request into its execution plan without running it
+    /// (introspection / dry-run).
+    pub fn plan(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        policy: FtPolicy,
+        inj: &InjectionPlan,
+    ) -> Result<ExecutionPlan> {
+        Planner::new(self.engine.manifest(), &self.config).plan_gemm(m, n, k, policy, inj)
     }
 
     /// C = A·B under `policy`, fault-free.
@@ -161,281 +197,44 @@ impl Coordinator {
         }
         Counters::bump(&self.counters.requests);
         let t0 = Instant::now();
-        let plan = router::route(a.rows(), b.cols(), a.cols());
+
+        let plan = self.plan(a.rows(), b.cols(), a.cols(), policy, inj)?;
         if plan.split {
             Counters::bump(&self.counters.batched_groups);
         }
-        if plan.blocks.iter().any(|bl| bl.is_padded()) {
+        if plan.is_padded() {
             Counters::bump(&self.counters.padded_requests);
         }
 
-        let mut c = Matrix::zeros(plan.m, plan.n);
-        let mut detected = 0u64;
-        let mut corrected = 0u64;
-        let mut recomputes = 0u64;
-        let mut launches = 0u64;
-        let mut buckets = Vec::with_capacity(plan.blocks.len());
-
-        for block in &plan.blocks {
-            let block_inj = localize_injections(inj, block);
-            let out = self.run_block(a, b, block, policy, &block_inj)?;
-            detected += out.detected;
-            corrected += out.corrected;
-            recomputes += out.recomputes;
-            launches += out.launches;
-            buckets.push(block.bucket.name());
-            // accumulate the block partial into the output region
-            for i in 0..block.m {
-                for j in 0..block.n {
-                    c.add_at(block.row0 + i, block.col0 + j, out.c.at(i, j));
-                }
-            }
-        }
+        let out = self.scheduler.run(&plan, a, b)?;
 
         if self.config.host_verify && inj.is_empty() {
             // Defense in depth: O(mk + kn) re-derivation of the product
             // checksums from the operands, compared against C.
             let pair = ChecksumPair::of_product(a, b);
-            if checksum::verify(&c, &pair, self.config.thresholds) != checksum::Detection::Clean {
+            if checksum::verify(&out.c, &pair, self.config.thresholds)
+                != checksum::Detection::Clean
+            {
                 bail!("host re-verification failed on a supposedly clean result");
             }
         }
 
         let exec_time = t0.elapsed();
         self.latency.record(exec_time);
-        Counters::add(&self.counters.executions, launches);
-        Counters::add(&self.counters.errors_detected, detected);
-        Counters::add(&self.counters.errors_corrected, corrected);
-        Counters::add(&self.counters.recomputes, recomputes);
+        Counters::add(&self.counters.executions, out.launches);
+        Counters::add(&self.counters.errors_detected, out.detected);
+        Counters::add(&self.counters.errors_corrected, out.corrected);
+        Counters::add(&self.counters.recomputes, out.recomputes);
         Ok(GemmResult {
-            c,
-            errors_detected: detected,
-            errors_corrected: corrected,
-            recomputes,
-            kernel_launches: launches,
+            c: out.c,
+            errors_detected: out.detected,
+            errors_corrected: out.corrected,
+            recomputes: out.recomputes,
+            kernel_launches: out.launches,
             exec_time,
-            buckets,
+            buckets: plan.block_buckets(),
         })
     }
-
-    // ------------------------------------------------------------------
-
-    fn artifact_for(&self, policy: FtPolicy, bucket: &str) -> Result<Artifact> {
-        let m = self.engine.manifest();
-        let found = match policy {
-            FtPolicy::None => m.find(ArtifactKind::Gemm, bucket, None),
-            FtPolicy::Online => m
-                .find(ArtifactKind::FtGemm, bucket, Some(self.config.ft_level.as_str()))
-                .or_else(|| m.find(ArtifactKind::FtGemm, bucket, Some("tb"))),
-            FtPolicy::Offline => m.find(ArtifactKind::FtDetect, bucket, None),
-        };
-        found
-            .cloned()
-            .ok_or_else(|| anyhow!("no {policy:?} artifact for bucket {bucket}"))
-    }
-
-    fn run_block(
-        &self,
-        a: &Matrix,
-        b: &Matrix,
-        block: &BlockPlan,
-        policy: FtPolicy,
-        inj: &InjectionPlan,
-    ) -> Result<BlockOutcome> {
-        let bk = &block.bucket;
-        // Extract + zero-pad operand blocks in one pass (one allocation
-        // and one row-wise copy each — §Perf).
-        let a_blk = extract_padded(a, block.row0, block.k0, block.m, block.k, bk.m, bk.k);
-        let b_blk = extract_padded(b, block.k0, block.col0, block.k, block.n, bk.k, bk.n);
-        match policy {
-            FtPolicy::None => {
-                if !inj.is_empty() {
-                    bail!("cannot inject into the unprotected kernel (no inj input); use Online/Offline");
-                }
-                let art = self.artifact_for(policy, bk.name())?;
-                let out = self.exec_gemm(&art, a_blk, b_blk)?;
-                Ok(BlockOutcome {
-                    c: out.slice_to(block.m, block.n),
-                    detected: 0,
-                    corrected: 0,
-                    recomputes: 0,
-                    launches: 1,
-                })
-            }
-            FtPolicy::Online => {
-                let art = self.artifact_for(policy, bk.name())?;
-                let (c_full, errs) = self.exec_ft(&art, a_blk, b_blk, inj)?;
-                Ok(BlockOutcome {
-                    c: c_full.slice_to(block.m, block.n),
-                    detected: errs,
-                    corrected: errs,
-                    recomputes: 0,
-                    launches: 1,
-                })
-            }
-            FtPolicy::Offline => {
-                // Detect-only artifact where available, else plain kernel +
-                // host-side detector (same detect→recompute control flow).
-                let detect_art = self.artifact_for(policy, bk.name()).ok();
-                let mut detected = 0u64;
-                let mut launches = 0u64;
-                let mut attempt = 0usize;
-                loop {
-                    // Injection only on the first attempt: the recompute
-                    // runs on presumed-healthy hardware (recompute-time
-                    // faults are treated analytically — gpusim::analytic).
-                    let this_inj =
-                        if attempt == 0 { inj.clone() } else { InjectionPlan::none() };
-                    launches += 1;
-                    let (c_full, errs) = match &detect_art {
-                        // operands are reused across recompute attempts, so
-                        // this path clones (the retry loop is cold)
-                        Some(art) => self.exec_ft(art, a_blk.clone(), b_blk.clone(), &this_inj)?,
-                        None => {
-                            let plain = self.artifact_for(FtPolicy::None, bk.name())?;
-                            let mut c_full =
-                                self.exec_gemm(&plain, a_blk.clone(), b_blk.clone())?;
-                            this_inj.apply_to(&mut c_full);
-                            let pair = ChecksumPair::of_product(&a_blk, &b_blk);
-                            let det =
-                                checksum::verify(&c_full, &pair, self.config.thresholds);
-                            let errs =
-                                if det == checksum::Detection::Clean { 0 } else { 1 };
-                            (c_full, errs)
-                        }
-                    };
-                    detected += errs;
-                    if errs == 0 {
-                        return Ok(BlockOutcome {
-                            c: c_full.slice_to(block.m, block.n),
-                            detected,
-                            corrected: 0,
-                            recomputes: attempt as u64,
-                            launches,
-                        });
-                    }
-                    attempt += 1;
-                    if attempt > self.config.max_recomputes {
-                        bail!(
-                            "offline ABFT: fault persisted after {} recomputes",
-                            self.config.max_recomputes
-                        );
-                    }
-                }
-            }
-        }
-    }
-
-    fn exec_gemm(&self, art: &Artifact, a: Matrix, b: Matrix) -> Result<Matrix> {
-        let (ar, ac, br2, bc) = (a.rows(), a.cols(), b.rows(), b.cols());
-        let out = self.engine.execute(
-            &art.name,
-            vec![
-                // moves, not copies: the padded operand blocks are owned
-                Tensor::new(vec![ar, ac], a.into_data()),
-                Tensor::new(vec![br2, bc], b.into_data()),
-            ],
-        )?;
-        let c_idx = art
-            .output_index("c")
-            .ok_or_else(|| anyhow!("{} has no 'c' output", art.name))?;
-        take_matrix(out, c_idx)
-    }
-
-    /// Execute an FT artifact (fused or detect-only); returns (C, errcount).
-    fn exec_ft(
-        &self,
-        art: &Artifact,
-        a: Matrix,
-        b: Matrix,
-        inj: &InjectionPlan,
-    ) -> Result<(Matrix, u64)> {
-        let max_inj = art.max_inj.max(1);
-        if inj.len() > max_inj {
-            bail!("{}: {} injections exceed kernel capacity {max_inj}", art.name, inj.len());
-        }
-        let (ar, ac, br2, bc) = (a.rows(), a.cols(), b.rows(), b.cols());
-        let out = self.engine.execute(
-            &art.name,
-            vec![
-                Tensor::new(vec![ar, ac], a.into_data()),
-                Tensor::new(vec![br2, bc], b.into_data()),
-                Tensor::new(vec![max_inj, 4], inj.to_tensor(max_inj)),
-            ],
-        )?;
-        let c_idx = art
-            .output_index("c")
-            .ok_or_else(|| anyhow!("{} has no 'c' output", art.name))?;
-        let e_idx = art
-            .output_index("errcount")
-            .ok_or_else(|| anyhow!("{} has no 'errcount' output", art.name))?;
-        let errs = out.outputs[e_idx].scalar_sum().round() as u64;
-        Ok((take_matrix(out, c_idx)?, errs))
-    }
-}
-
-struct BlockOutcome {
-    c: Matrix,
-    detected: u64,
-    corrected: u64,
-    recomputes: u64,
-    launches: u64,
-}
-
-/// Move output `idx` out of an [`ExecOutput`] as a Matrix (no data copy).
-fn take_matrix(out: crate::runtime::engine::ExecOutput, idx: usize) -> Result<Matrix> {
-    let t = out
-        .outputs
-        .into_iter()
-        .nth(idx)
-        .ok_or_else(|| anyhow!("output index {idx} out of range"))?;
-    if t.shape.len() != 2 {
-        bail!("output {idx} is not a matrix: shape {:?}", t.shape);
-    }
-    let (r, c) = (t.shape[0], t.shape[1]);
-    Ok(Matrix::from_vec(r, c, t.data))
-}
-
-/// Extract the `(rows, cols)` sub-matrix at `(row0, col0)`, zero-padded to
-/// `(pad_rows, pad_cols)`, in a single allocation + row-wise memcpy.
-fn extract_padded(
-    m: &Matrix,
-    row0: usize,
-    col0: usize,
-    rows: usize,
-    cols: usize,
-    pad_rows: usize,
-    pad_cols: usize,
-) -> Matrix {
-    debug_assert!(pad_rows >= rows && pad_cols >= cols);
-    let mut out = Matrix::zeros(pad_rows, pad_cols);
-    for i in 0..rows {
-        let src = &m.row(row0 + i)[col0..col0 + cols];
-        out.data_mut()[i * pad_cols..i * pad_cols + cols].copy_from_slice(src);
-    }
-    out
-}
-
-/// Translate global injection coordinates into a block's local frame; drop
-/// entries outside the block; split GEMMs inject on the first k-partial.
-fn localize_injections(inj: &InjectionPlan, block: &BlockPlan) -> InjectionPlan {
-    if inj.is_empty() {
-        return InjectionPlan::none();
-    }
-    let mut out = InjectionPlan::none();
-    for e in &inj.injections {
-        let in_rows = e.row >= block.row0 && e.row < block.row0 + block.m;
-        let in_cols = e.col >= block.col0 && e.col < block.col0 + block.n;
-        if in_rows && in_cols && block.k0 == 0 {
-            out.injections.push(crate::abft::injection::Injection {
-                row: e.row - block.row0,
-                col: e.col - block.col0,
-                step: e.step,
-                magnitude: e.magnitude,
-            });
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -450,39 +249,9 @@ mod tests {
     }
 
     #[test]
-    fn extract_padded_pulls_and_pads() {
-        let m = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
-        let s = extract_padded(&m, 1, 2, 2, 2, 3, 4);
-        assert_eq!((s.rows(), s.cols()), (3, 4));
-        assert_eq!(s.at(0, 0), 6.0);
-        assert_eq!(s.at(0, 1), 7.0);
-        assert_eq!(s.at(1, 0), 10.0);
-        assert_eq!(s.at(1, 1), 11.0);
-        // padding region is exact zero
-        assert_eq!(s.at(2, 3), 0.0);
-        assert_eq!(s.at(0, 2), 0.0);
-    }
-
-    #[test]
-    fn localize_filters_and_translates() {
-        let block = BlockPlan {
-            row0: 10,
-            col0: 20,
-            k0: 0,
-            m: 10,
-            n: 10,
-            k: 64,
-            bucket: crate::codegen::select::BUCKETS[0],
-        };
-        let inj = InjectionPlan {
-            injections: vec![
-                crate::abft::injection::Injection { row: 15, col: 25, step: 1, magnitude: 9.0 },
-                crate::abft::injection::Injection { row: 5, col: 25, step: 0, magnitude: 7.0 },
-            ],
-        };
-        let local = localize_injections(&inj, &block);
-        assert_eq!(local.len(), 1);
-        assert_eq!(local.injections[0].row, 5);
-        assert_eq!(local.injections[0].col, 5);
+    fn config_default_autosizes_scheduler() {
+        let cfg = CoordinatorConfig::default();
+        assert_eq!(cfg.scheduler_threads, 0);
+        assert_eq!(cfg.ft_level, "tb");
     }
 }

@@ -1,0 +1,469 @@
+//! Request planning: compile a request into an explicit [`ExecutionPlan`]
+//! before anything executes.
+//!
+//! Planning resolves *everything the execution will need* up front — block
+//! decomposition (via [`router`]), per-block injection localization,
+//! artifact resolution per (policy, bucket), checksum/verify strategy, and
+//! accumulation targets — so the [`scheduler`](super::scheduler) is a pure
+//! executor: it dispatches independent plan nodes concurrently over the
+//! engine pool and folds partials into the output as they complete. A plan
+//! that compiles cannot fail on a missing artifact mid-flight, and every
+//! serving path (`Coordinator::gemm`, the [`Batcher`](super::batcher), the
+//! non-fused [`ding`](super::ding) baseline) goes through these same types
+//! — there is exactly one block-execution loop in the system.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::abft::checksum::Thresholds;
+use crate::abft::injection::InjectionPlan;
+use crate::runtime::manifest::{ArtifactKind, Manifest};
+
+use super::router::{self, BlockPlan};
+use super::{CoordinatorConfig, FtPolicy};
+
+/// A compiled request: the DAG of kernel-level work that computes it.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// Output extents.
+    pub m: usize,
+    pub n: usize,
+    /// Reduction extent.
+    pub k: usize,
+    /// Detection thresholds for host-side verification fallbacks.
+    pub thresholds: Thresholds,
+    /// True when the request needed block decomposition.
+    pub split: bool,
+    /// Nodes in id order (`nodes[i].id == i`).
+    pub nodes: Vec<PlanNode>,
+}
+
+impl ExecutionPlan {
+    /// Bucket names of the block nodes, block order (what
+    /// `GemmResult::buckets` reports).
+    pub fn block_buckets(&self) -> Vec<&'static str> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                NodeOp::Block { block, .. } => Some(block.bucket.name()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Any block padded?
+    pub fn is_padded(&self) -> bool {
+        self.nodes.iter().any(|n| match &n.op {
+            NodeOp::Block { block, .. } => block.is_padded(),
+            _ => false,
+        })
+    }
+
+    /// Nodes with no dependencies — the initially dispatchable frontier.
+    pub fn roots(&self) -> usize {
+        self.nodes.iter().filter(|n| n.deps.is_empty()).count()
+    }
+}
+
+/// One schedulable unit of work.
+#[derive(Debug, Clone)]
+pub struct PlanNode {
+    pub id: usize,
+    /// Node ids that must complete first.
+    pub deps: Vec<usize>,
+    /// Dispatch-affinity label (the artifact bucket this node hits).
+    pub bucket: String,
+    pub op: NodeOp,
+}
+
+#[derive(Debug, Clone)]
+pub enum NodeOp {
+    /// One routed block: extract + zero-pad the operand blocks, run the
+    /// policy's kernel, slice the result, accumulate it at
+    /// `(block.row0, block.col0)`. Independent of every other block.
+    Block {
+        block: BlockPlan,
+        kernel: KernelOp,
+        /// Injections translated into the block's local frame.
+        inj: InjectionPlan,
+    },
+    /// Ding'11 encode launch: (A, B) -> (A^c, B^r).
+    DingEncode { artifact: String },
+    /// One Ding'11 panel: step launch, host-side fault window, verify
+    /// launch. Panels chain through C^f (deps: encode + previous panel).
+    DingPanel {
+        step_artifact: String,
+        verify_artifact: String,
+        /// Node id of the encode whose outputs this panel reads.
+        encode_node: usize,
+        /// Previous panel's node id (`None` for the first panel).
+        prev_node: Option<usize>,
+        /// k-offset and width of this panel.
+        s0: usize,
+        ks: usize,
+        /// Host-side injections landing in this panel's fault window.
+        inj: InjectionPlan,
+        /// The last panel yields the finished C^f.
+        last: bool,
+    },
+}
+
+/// Which kernel(s) a block node launches.
+#[derive(Debug, Clone)]
+pub enum KernelOp {
+    /// Unprotected codegen GEMM.
+    Plain { artifact: String },
+    /// Fused online ABFT: detect + correct in kernel, one launch.
+    Fused { artifact: String, max_inj: usize },
+    /// Offline ABFT: detect (in-kernel when a detect artifact exists, else
+    /// plain kernel + host checksum verify), recompute on detection.
+    DetectRecompute {
+        detect: Option<(String, usize)>,
+        plain: Option<String>,
+        max_recomputes: usize,
+    },
+}
+
+/// Compiles requests against a manifest + coordinator config.
+pub struct Planner<'a> {
+    manifest: &'a Manifest,
+    config: &'a CoordinatorConfig,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(manifest: &'a Manifest, config: &'a CoordinatorConfig) -> Self {
+        Planner { manifest, config }
+    }
+
+    /// Compile `C = A·B` under `policy` with SEU injection into a plan of
+    /// independent block nodes.
+    pub fn plan_gemm(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        policy: FtPolicy,
+        inj: &InjectionPlan,
+    ) -> Result<ExecutionPlan> {
+        if policy == FtPolicy::None && !inj.is_empty() {
+            bail!("cannot inject into the unprotected kernel (no inj input); use Online/Offline");
+        }
+        let route = router::route(m, n, k);
+        let mut nodes = Vec::with_capacity(route.blocks.len());
+        for (id, block) in route.blocks.iter().enumerate() {
+            let bucket = block.bucket.name();
+            let kernel = self.kernel_for(policy, bucket)?;
+            let local = localize_injections(inj, block);
+            if let KernelOp::Fused { artifact, max_inj } = &kernel {
+                if local.len() > *max_inj {
+                    bail!(
+                        "{artifact}: {} injections exceed kernel capacity {max_inj}",
+                        local.len()
+                    );
+                }
+            }
+            nodes.push(PlanNode {
+                id,
+                deps: Vec::new(),
+                bucket: bucket.to_string(),
+                op: NodeOp::Block { block: block.clone(), kernel, inj: local },
+            });
+        }
+        Ok(ExecutionPlan {
+            m,
+            n,
+            k,
+            thresholds: self.config.thresholds,
+            split: route.split,
+            nodes,
+        })
+    }
+
+    /// Resolve the kernel op serving (policy, bucket).
+    fn kernel_for(&self, policy: FtPolicy, bucket: &str) -> Result<KernelOp> {
+        let missing = |p: FtPolicy| anyhow!("no {p:?} artifact for bucket {bucket}");
+        Ok(match policy {
+            FtPolicy::None => KernelOp::Plain {
+                artifact: self
+                    .manifest
+                    .find(ArtifactKind::Gemm, bucket, None)
+                    .ok_or_else(|| missing(policy))?
+                    .name
+                    .clone(),
+            },
+            FtPolicy::Online => {
+                let art = self
+                    .manifest
+                    .find(ArtifactKind::FtGemm, bucket, Some(self.config.ft_level.as_str()))
+                    .or_else(|| self.manifest.find(ArtifactKind::FtGemm, bucket, Some("tb")))
+                    .ok_or_else(|| missing(policy))?;
+                KernelOp::Fused { artifact: art.name.clone(), max_inj: art.max_inj.max(1) }
+            }
+            FtPolicy::Offline => {
+                let detect = self
+                    .manifest
+                    .find(ArtifactKind::FtDetect, bucket, None)
+                    .map(|a| (a.name.clone(), a.max_inj.max(1)));
+                let plain = match &detect {
+                    Some(_) => None,
+                    None => Some(
+                        self.manifest
+                            .find(ArtifactKind::Gemm, bucket, None)
+                            .ok_or_else(|| missing(policy))?
+                            .name
+                            .clone(),
+                    ),
+                };
+                KernelOp::DetectRecompute {
+                    detect,
+                    plain,
+                    max_recomputes: self.config.max_recomputes,
+                }
+            }
+        })
+    }
+}
+
+/// Compile the non-fused Ding'11 baseline for one bucket into a plan:
+/// encode, then a chain of (step, inject, verify) panel nodes threading
+/// C^f. Needs only a manifest (no coordinator config).
+pub fn plan_ding(manifest: &Manifest, bucket: &str, inj: &InjectionPlan) -> Result<ExecutionPlan> {
+    let encode = manifest
+        .find(ArtifactKind::DingEncode, bucket, None)
+        .ok_or_else(|| anyhow!("no ding_encode for {bucket}"))?;
+    let step = manifest
+        .find(ArtifactKind::DingStep, bucket, None)
+        .ok_or_else(|| anyhow!("no ding_step for {bucket}"))?;
+    let verify = manifest
+        .find(ArtifactKind::DingVerify, bucket, None)
+        .ok_or_else(|| anyhow!("no ding_verify for {bucket}"))?;
+    let (m, n, k, ks) = (encode.m, encode.n, encode.k, step.ks.max(1));
+    let panels = k / ks;
+    // A ragged tail panel would need a differently-shaped step kernel; a
+    // manifest like that is malformed — fail loudly rather than compute a
+    // truncated reduction.
+    if panels == 0 || panels * ks != k {
+        bail!("ding pipeline for {bucket}: panel width ks={ks} must divide k={k}");
+    }
+
+    let mut nodes = Vec::with_capacity(panels + 1);
+    nodes.push(PlanNode {
+        id: 0,
+        deps: Vec::new(),
+        bucket: bucket.to_string(),
+        op: NodeOp::DingEncode { artifact: encode.name.clone() },
+    });
+    for panel in 0..panels {
+        let id = panel + 1;
+        let prev_node = (panel > 0).then_some(id - 1);
+        let mut deps = vec![0];
+        deps.extend(prev_node);
+        nodes.push(PlanNode {
+            id,
+            deps,
+            bucket: bucket.to_string(),
+            op: NodeOp::DingPanel {
+                step_artifact: step.name.clone(),
+                verify_artifact: verify.name.clone(),
+                encode_node: 0,
+                prev_node,
+                s0: panel * ks,
+                ks,
+                inj: InjectionPlan {
+                    injections: inj
+                        .injections
+                        .iter()
+                        .filter(|e| e.step == panel)
+                        .cloned()
+                        .collect(),
+                },
+                last: panel == panels - 1,
+            },
+        });
+    }
+    Ok(ExecutionPlan {
+        m,
+        n,
+        k,
+        thresholds: Thresholds::default(),
+        split: false,
+        nodes,
+    })
+}
+
+/// Translate global injection coordinates into a block's local frame; drop
+/// entries outside the block; split GEMMs inject on the first k-partial.
+pub fn localize_injections(inj: &InjectionPlan, block: &BlockPlan) -> InjectionPlan {
+    if inj.is_empty() {
+        return InjectionPlan::none();
+    }
+    let mut out = InjectionPlan::none();
+    for e in &inj.injections {
+        let in_rows = e.row >= block.row0 && e.row < block.row0 + block.m;
+        let in_cols = e.col >= block.col0 && e.col < block.col0 + block.n;
+        if in_rows && in_cols && block.k0 == 0 {
+            out.injections.push(crate::abft::injection::Injection {
+                row: e.row - block.row0,
+                col: e.col - block.col0,
+                step: e.step,
+                magnitude: e.magnitude,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abft::injection::Injection;
+
+    fn planner_fixture() -> (Manifest, CoordinatorConfig) {
+        (Manifest::builtin(), CoordinatorConfig::default())
+    }
+
+    #[test]
+    fn exact_fit_plans_one_plain_node() {
+        let (man, cfg) = planner_fixture();
+        let plan = Planner::new(&man, &cfg)
+            .plan_gemm(128, 128, 128, FtPolicy::None, &InjectionPlan::none())
+            .unwrap();
+        assert_eq!(plan.nodes.len(), 1);
+        assert!(!plan.split && !plan.is_padded());
+        assert_eq!(plan.block_buckets(), vec!["medium"]);
+        assert_eq!(plan.roots(), 1);
+        match &plan.nodes[0].op {
+            NodeOp::Block { kernel: KernelOp::Plain { artifact }, .. } => {
+                assert_eq!(artifact, "gemm_medium");
+            }
+            other => panic!("expected plain block, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn split_plan_nodes_are_independent_and_injections_localize() {
+        let (man, cfg) = planner_fixture();
+        let inj = InjectionPlan::single(550, 13, 2, 4096.0); // lands in block (1, 0)
+        let plan = Planner::new(&man, &cfg)
+            .plan_gemm(600, 600, 600, FtPolicy::Online, &inj)
+            .unwrap();
+        assert!(plan.split);
+        assert_eq!(plan.nodes.len(), 8);
+        assert_eq!(plan.roots(), 8, "block nodes must have no dependencies");
+        let carrying: Vec<_> = plan
+            .nodes
+            .iter()
+            .filter(|node| match &node.op {
+                NodeOp::Block { inj, .. } => !inj.is_empty(),
+                _ => false,
+            })
+            .collect();
+        assert_eq!(carrying.len(), 1, "exactly one block owns the injection");
+        match &carrying[0].op {
+            NodeOp::Block { block, inj, .. } => {
+                assert_eq!((block.row0, block.col0, block.k0), (512, 0, 0));
+                assert_eq!(inj.injections[0].row, 38);
+                assert_eq!(inj.injections[0].col, 13);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn online_level_fallback_and_offline_artifacts() {
+        let (man, _) = planner_fixture();
+        // "small" has only the tb fused level: warp request falls back
+        let cfg = CoordinatorConfig { ft_level: "warp".into(), ..Default::default() };
+        let plan = Planner::new(&man, &cfg)
+            .plan_gemm(64, 64, 64, FtPolicy::Online, &InjectionPlan::none())
+            .unwrap();
+        match &plan.nodes[0].op {
+            NodeOp::Block { kernel: KernelOp::Fused { artifact, .. }, .. } => {
+                assert_eq!(artifact, "ftgemm_tb_small");
+            }
+            other => panic!("{other:?}"),
+        }
+        // medium has a detect artifact; small falls back to host detection
+        let cfg = CoordinatorConfig::default();
+        let planner = Planner::new(&man, &cfg);
+        let medium = planner
+            .plan_gemm(128, 128, 128, FtPolicy::Offline, &InjectionPlan::none())
+            .unwrap();
+        match &medium.nodes[0].op {
+            NodeOp::Block { kernel: KernelOp::DetectRecompute { detect, plain, .. }, .. } => {
+                assert!(detect.is_some() && plain.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+        let small = planner
+            .plan_gemm(64, 64, 64, FtPolicy::Offline, &InjectionPlan::none())
+            .unwrap();
+        match &small.nodes[0].op {
+            NodeOp::Block { kernel: KernelOp::DetectRecompute { detect, plain, .. }, .. } => {
+                assert!(detect.is_none());
+                assert_eq!(plain.as_deref(), Some("gemm_small"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unprotected_kernel_refuses_injection_at_plan_time() {
+        let (man, cfg) = planner_fixture();
+        let err = Planner::new(&man, &cfg)
+            .plan_gemm(64, 64, 64, FtPolicy::None, &InjectionPlan::single(0, 0, 0, 9.0))
+            .unwrap_err();
+        assert!(err.to_string().contains("unprotected"));
+    }
+
+    #[test]
+    fn ding_plan_chains_panels_through_cf() {
+        let man = Manifest::builtin();
+        let plan = plan_ding(&man, "medium", &InjectionPlan::single(3, 4, 1, 512.0)).unwrap();
+        // medium: k=128, ks=64 -> encode + 2 panels
+        assert_eq!(plan.nodes.len(), 3);
+        assert_eq!(plan.roots(), 1);
+        assert!(matches!(plan.nodes[0].op, NodeOp::DingEncode { .. }));
+        match &plan.nodes[1].op {
+            NodeOp::DingPanel { prev_node, inj, last, s0, .. } => {
+                assert_eq!(*prev_node, None);
+                assert_eq!(*s0, 0);
+                assert!(inj.is_empty() && !last);
+            }
+            other => panic!("{other:?}"),
+        }
+        match &plan.nodes[2].op {
+            NodeOp::DingPanel { prev_node, inj, last, s0, .. } => {
+                assert_eq!(*prev_node, Some(1));
+                assert_eq!(plan.nodes[2].deps, vec![0, 1]);
+                assert_eq!(*s0, 64);
+                assert_eq!(inj.len(), 1, "step indexes the panel");
+                assert!(*last);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(plan_ding(&man, "small", &InjectionPlan::none()).is_err());
+    }
+
+    #[test]
+    fn localize_filters_and_translates() {
+        let block = BlockPlan {
+            row0: 10,
+            col0: 20,
+            k0: 0,
+            m: 10,
+            n: 10,
+            k: 64,
+            bucket: crate::codegen::select::BUCKETS[0],
+        };
+        let inj = InjectionPlan {
+            injections: vec![
+                Injection { row: 15, col: 25, step: 1, magnitude: 9.0 },
+                Injection { row: 5, col: 25, step: 0, magnitude: 7.0 },
+            ],
+        };
+        let local = localize_injections(&inj, &block);
+        assert_eq!(local.len(), 1);
+        assert_eq!(local.injections[0].row, 5);
+        assert_eq!(local.injections[0].col, 5);
+    }
+}

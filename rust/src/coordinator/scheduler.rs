@@ -1,0 +1,693 @@
+//! Plan execution: dispatch independent [`ExecutionPlan`] nodes
+//! concurrently over the engine worker pool and fold partials into the
+//! output as they complete.
+//!
+//! The scheduler is deliberately dumb: all routing/artifact/injection
+//! decisions were made at plan time ([`plan`](super::plan)), so running a
+//! node is mechanical — extract operand blocks, launch kernels, hand the
+//! partial back. Node jobs run on a bounded [`ThreadPool`] (sized to the
+//! engine worker count by default) and block inside `Engine::execute`;
+//! with `workers >= 2` the engine overlaps them, which is where the
+//! split-GEMM speedup comes from (BENCH_pipeline.json). Completions stream
+//! back over a channel; the caller's thread accumulates each block partial
+//! the moment it lands (the k-partial sum order is completion order —
+//! float-associativity drift is bounded by the usual GEMM tolerance).
+//!
+//! Failure model: the first node error wins; remaining in-flight nodes are
+//! drained (never detached) before the error returns, so a failed request
+//! cannot leak work into the next one.
+
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::abft::checksum::{self, ChecksumPair, Thresholds};
+use crate::abft::injection::InjectionPlan;
+use crate::abft::matrix::Matrix;
+use crate::runtime::engine::{Engine, ExecOutput, Tensor};
+use crate::util::pool::ThreadPool;
+
+use super::plan::{ExecutionPlan, KernelOp, NodeOp, PlanNode};
+use super::router::BlockPlan;
+
+/// Scheduler configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedulerConfig {
+    /// Concurrent node-dispatch threads; 0 = match the engine worker count.
+    pub threads: usize,
+}
+
+/// Aggregate outcome of one plan run.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub c: Matrix,
+    pub detected: u64,
+    pub corrected: u64,
+    pub recomputes: u64,
+    pub launches: u64,
+}
+
+/// Executes [`ExecutionPlan`]s against one engine. Owns a bounded thread
+/// pool; shared across requests (wrap in `Arc` to clone).
+pub struct Scheduler {
+    engine: Engine,
+    pool: ThreadPool,
+    threads: usize,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine, config: SchedulerConfig) -> Scheduler {
+        let threads = match config.threads {
+            0 => engine.worker_count(),
+            t => t,
+        }
+        .max(1);
+        Scheduler { pool: ThreadPool::new(threads), engine, threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Run a plan against operands `a`, `b`; blocks until every node is
+    /// accounted for.
+    pub fn run(&self, plan: &ExecutionPlan, a: &Matrix, b: &Matrix) -> Result<RunOutcome> {
+        let total = plan.nodes.len();
+        if total == 0 {
+            bail!("empty execution plan");
+        }
+
+        // Single-node fast path: no concurrency to buy, so skip the pool
+        // and the owned operand copies and run on the caller's thread.
+        if total == 1 && plan.nodes[0].deps.is_empty() {
+            let values = Mutex::new(HashMap::new());
+            let ctx = Ctx {
+                engine: &self.engine,
+                a,
+                b,
+                thresholds: plan.thresholds,
+                values: &values,
+            };
+            let done = exec_node(&ctx, &plan.nodes[0])?;
+            let mut c = Matrix::zeros(plan.m, plan.n);
+            if let Some((partial, row0, col0)) = done.partial {
+                accumulate(&mut c, &partial, row0, col0);
+            }
+            return Ok(RunOutcome {
+                c,
+                detected: done.detected,
+                corrected: done.corrected,
+                recomputes: done.recomputes,
+                launches: done.launches,
+            });
+        }
+
+        let ctx = Arc::new(OwnedCtx {
+            engine: self.engine.clone(),
+            a: Arc::new(a.clone()),
+            b: Arc::new(b.clone()),
+            thresholds: plan.thresholds,
+            values: Mutex::new(HashMap::new()),
+        });
+        let (tx, rx) = channel::<(usize, Result<NodeDone>)>();
+
+        // Dependency bookkeeping.
+        let mut deps_left: Vec<usize> = plan.nodes.iter().map(|n| n.deps.len()).collect();
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); total];
+        for node in &plan.nodes {
+            for &d in &node.deps {
+                if d >= total {
+                    bail!("plan node {} depends on unknown node {d}", node.id);
+                }
+                dependents[d].push(node.id);
+            }
+        }
+
+        let dispatch = |node: &PlanNode| {
+            let ctx = Arc::clone(&ctx);
+            let node = node.clone();
+            let tx = tx.clone();
+            self.pool.execute(move || {
+                // A panicking node must still produce a completion, or the
+                // recv loop below would wait forever.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    exec_node(&ctx.view(), &node)
+                }))
+                .unwrap_or_else(|_| Err(anyhow!("plan node {} panicked", node.id)));
+                let _ = tx.send((node.id, result));
+            });
+        };
+
+        let mut outstanding = 0usize;
+        let mut finished = 0usize;
+        for node in plan.nodes.iter().filter(|n| n.deps.is_empty()) {
+            dispatch(node);
+            outstanding += 1;
+        }
+
+        let mut c = Matrix::zeros(plan.m, plan.n);
+        let mut out = RunOutcome {
+            c: Matrix::zeros(0, 0),
+            detected: 0,
+            corrected: 0,
+            recomputes: 0,
+            launches: 0,
+        };
+        let mut first_err: Option<anyhow::Error> = None;
+
+        while outstanding > 0 {
+            let (id, result) = rx
+                .recv()
+                .map_err(|_| anyhow!("scheduler pool dropped a node completion"))?;
+            outstanding -= 1;
+            finished += 1;
+            match result {
+                Err(e) if first_err.is_none() => first_err = Some(e),
+                Err(_) => {}
+                Ok(done) => {
+                    out.detected += done.detected;
+                    out.corrected += done.corrected;
+                    out.recomputes += done.recomputes;
+                    out.launches += done.launches;
+                    if let Some((partial, row0, col0)) = done.partial {
+                        accumulate(&mut c, &partial, row0, col0);
+                    }
+                    if let Some(value) = done.value {
+                        ctx.values.lock().unwrap().insert(id, value);
+                    }
+                    if first_err.is_none() {
+                        for &dep in &dependents[id] {
+                            deps_left[dep] -= 1;
+                            if deps_left[dep] == 0 {
+                                dispatch(&plan.nodes[dep]);
+                                outstanding += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if finished != total {
+            bail!("execution plan deadlocked: {finished}/{total} nodes ran (cyclic deps?)");
+        }
+        out.c = c;
+        Ok(out)
+    }
+}
+
+/// Owned execution context shared by pooled node jobs.
+struct OwnedCtx {
+    engine: Engine,
+    a: Arc<Matrix>,
+    b: Arc<Matrix>,
+    thresholds: Thresholds,
+    values: Mutex<HashMap<usize, NodeValue>>,
+}
+
+impl OwnedCtx {
+    fn view(&self) -> Ctx<'_> {
+        Ctx {
+            engine: &self.engine,
+            a: &self.a,
+            b: &self.b,
+            thresholds: self.thresholds,
+            values: &self.values,
+        }
+    }
+}
+
+/// Borrowed view the node executors work against — also constructible
+/// directly from caller-borrowed operands on the single-node fast path
+/// (no operand copies).
+struct Ctx<'a> {
+    engine: &'a Engine,
+    a: &'a Matrix,
+    b: &'a Matrix,
+    thresholds: Thresholds,
+    /// Inter-node values (the Ding C^f chain and encode outputs).
+    values: &'a Mutex<HashMap<usize, NodeValue>>,
+}
+
+enum NodeValue {
+    Encoded { ac: Arc<Matrix>, br: Arc<Matrix> },
+    Cf(Matrix),
+}
+
+struct NodeDone {
+    /// Partial result + its (row0, col0) accumulation target.
+    partial: Option<(Matrix, usize, usize)>,
+    /// Value consumed by dependent nodes.
+    value: Option<NodeValue>,
+    detected: u64,
+    corrected: u64,
+    recomputes: u64,
+    launches: u64,
+}
+
+impl NodeDone {
+    fn new() -> NodeDone {
+        NodeDone {
+            partial: None,
+            value: None,
+            detected: 0,
+            corrected: 0,
+            recomputes: 0,
+            launches: 0,
+        }
+    }
+}
+
+fn exec_node(ctx: &Ctx<'_>, node: &PlanNode) -> Result<NodeDone> {
+    match &node.op {
+        NodeOp::Block { block, kernel, inj } => exec_block(ctx, block, kernel, inj),
+        NodeOp::DingEncode { artifact } => exec_ding_encode(ctx, artifact),
+        NodeOp::DingPanel {
+            step_artifact,
+            verify_artifact,
+            encode_node,
+            prev_node,
+            s0,
+            ks,
+            inj,
+            last,
+        } => exec_ding_panel(
+            ctx,
+            step_artifact,
+            verify_artifact,
+            *encode_node,
+            *prev_node,
+            *s0,
+            *ks,
+            inj,
+            *last,
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Block nodes (the Coordinator::gemm path)
+// ---------------------------------------------------------------------
+
+fn exec_block(
+    ctx: &Ctx<'_>,
+    block: &BlockPlan,
+    kernel: &KernelOp,
+    inj: &InjectionPlan,
+) -> Result<NodeDone> {
+    let bk = &block.bucket;
+    // Extract + zero-pad operand blocks in one pass (one allocation and
+    // one row-wise copy each — §Perf).
+    let a_blk = extract_padded(ctx.a, block.row0, block.k0, block.m, block.k, bk.m, bk.k);
+    let b_blk = extract_padded(ctx.b, block.k0, block.col0, block.k, block.n, bk.k, bk.n);
+    let mut done = NodeDone::new();
+
+    let c_full = match kernel {
+        KernelOp::Plain { artifact } => {
+            done.launches = 1;
+            exec_gemm(ctx, artifact, a_blk, b_blk)?
+        }
+        KernelOp::Fused { artifact, max_inj } => {
+            let (c_full, errs) = exec_ft(ctx, artifact, *max_inj, a_blk, b_blk, inj)?;
+            done.detected = errs;
+            done.corrected = errs;
+            done.launches = 1;
+            c_full
+        }
+        KernelOp::DetectRecompute { detect, plain, max_recomputes } => {
+            let mut attempt = 0usize;
+            loop {
+                // Injection only on the first attempt: the recompute runs
+                // on presumed-healthy hardware (recompute-time faults are
+                // treated analytically — gpusim::analytic).
+                let this_inj = if attempt == 0 { inj.clone() } else { InjectionPlan::none() };
+                done.launches += 1;
+                // Operands are reused across recompute attempts, so this
+                // path clones (the retry loop is cold).
+                let (c_full, errs) = match detect {
+                    Some((artifact, max_inj)) => {
+                        exec_ft(ctx, artifact, *max_inj, a_blk.clone(), b_blk.clone(), &this_inj)?
+                    }
+                    None => {
+                        let artifact = plain
+                            .as_deref()
+                            .ok_or_else(|| anyhow!("offline plan missing both kernels"))?;
+                        let mut c_full = exec_gemm(ctx, artifact, a_blk.clone(), b_blk.clone())?;
+                        this_inj.apply_to(&mut c_full);
+                        let pair = ChecksumPair::of_product(&a_blk, &b_blk);
+                        let errs = match checksum::verify(&c_full, &pair, ctx.thresholds) {
+                            checksum::Detection::Clean => 0,
+                            _ => 1,
+                        };
+                        (c_full, errs)
+                    }
+                };
+                done.detected += errs;
+                if errs == 0 {
+                    done.recomputes = attempt as u64;
+                    break c_full;
+                }
+                attempt += 1;
+                if attempt > *max_recomputes {
+                    bail!("offline ABFT: fault persisted after {max_recomputes} recomputes");
+                }
+            }
+        }
+    };
+
+    done.partial = Some((c_full.slice_to(block.m, block.n), block.row0, block.col0));
+    Ok(done)
+}
+
+fn exec_gemm(ctx: &Ctx<'_>, artifact: &str, a: Matrix, b: Matrix) -> Result<Matrix> {
+    let (ar, ac, br, bc) = (a.rows(), a.cols(), b.rows(), b.cols());
+    let out = ctx.engine.execute(
+        artifact,
+        vec![
+            // moves, not copies: the padded operand blocks are owned
+            Tensor::new(vec![ar, ac], a.into_data()),
+            Tensor::new(vec![br, bc], b.into_data()),
+        ],
+    )?;
+    take_matrix(ctx, artifact, out, "c")
+}
+
+/// Execute an FT artifact (fused or detect-only); returns (C, errcount).
+fn exec_ft(
+    ctx: &Ctx<'_>,
+    artifact: &str,
+    max_inj: usize,
+    a: Matrix,
+    b: Matrix,
+    inj: &InjectionPlan,
+) -> Result<(Matrix, u64)> {
+    if inj.len() > max_inj {
+        bail!("{artifact}: {} injections exceed kernel capacity {max_inj}", inj.len());
+    }
+    let (ar, ac, br, bc) = (a.rows(), a.cols(), b.rows(), b.cols());
+    let out = ctx.engine.execute(
+        artifact,
+        vec![
+            Tensor::new(vec![ar, ac], a.into_data()),
+            Tensor::new(vec![br, bc], b.into_data()),
+            Tensor::new(vec![max_inj, 4], inj.to_tensor(max_inj)),
+        ],
+    )?;
+    let e_idx = output_index(ctx, artifact, "errcount")?;
+    let errs = out.outputs[e_idx].scalar_sum().round() as u64;
+    Ok((take_matrix(ctx, artifact, out, "c")?, errs))
+}
+
+// ---------------------------------------------------------------------
+// Ding nodes (the non-fused baseline path)
+// ---------------------------------------------------------------------
+
+fn exec_ding_encode(ctx: &Ctx<'_>, artifact: &str) -> Result<NodeDone> {
+    let (a, b) = (ctx.a, ctx.b);
+    let out = ctx.engine.execute(
+        artifact,
+        vec![
+            Tensor::new(vec![a.rows(), a.cols()], a.data().to_vec()),
+            Tensor::new(vec![b.rows(), b.cols()], b.data().to_vec()),
+        ],
+    )?;
+    let ac_idx = output_index(ctx, artifact, "ac")?;
+    let br_idx = output_index(ctx, artifact, "br")?;
+    let ac = tensor_matrix(&out.outputs[ac_idx])?;
+    let br = tensor_matrix(&out.outputs[br_idx])?;
+    let mut done = NodeDone::new();
+    done.launches = 1;
+    done.value = Some(NodeValue::Encoded { ac: Arc::new(ac), br: Arc::new(br) });
+    Ok(done)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn exec_ding_panel(
+    ctx: &Ctx<'_>,
+    step_artifact: &str,
+    verify_artifact: &str,
+    encode_node: usize,
+    prev_node: Option<usize>,
+    s0: usize,
+    ks: usize,
+    inj: &InjectionPlan,
+    last: bool,
+) -> Result<NodeDone> {
+    let step_art = ctx.engine.manifest().get(step_artifact)?;
+    let (m, n) = (step_art.m, step_art.n);
+
+    // Pull the encode outputs (shared by every panel) and the previous
+    // panel's C^f (consumed exactly once) out of the value store.
+    let (ac, br, mut cf) = {
+        let mut values = ctx.values.lock().unwrap();
+        let (ac, br) = match values.get(&encode_node) {
+            Some(NodeValue::Encoded { ac, br }) => (Arc::clone(ac), Arc::clone(br)),
+            _ => bail!("ding panel scheduled before its encode output"),
+        };
+        let cf = match prev_node {
+            None => Matrix::zeros(m + 1, n + 1),
+            Some(p) => match values.remove(&p) {
+                Some(NodeValue::Cf(cf)) => cf,
+                _ => bail!("ding panel scheduled before its predecessor's C^f"),
+            },
+        };
+        (ac, br, cf)
+    };
+
+    let ac_panel = panel_cols(&ac, s0, ks);
+    let br_panel = panel_rows(&br, s0, ks);
+    let out = ctx.engine.execute(
+        step_artifact,
+        vec![
+            Tensor::new(vec![m + 1, n + 1], cf.into_data()),
+            Tensor::new(vec![m + 1, ks], ac_panel.into_data()),
+            Tensor::new(vec![ks, n + 1], br_panel.into_data()),
+        ],
+    )?;
+    cf = take_matrix(ctx, step_artifact, out, "cf")?;
+
+    // Host-side SEU injection into this panel's accumulation window — the
+    // fault window of the original scheme (between step and verify).
+    for e in &inj.injections {
+        cf.add_at(e.row, e.col, e.magnitude);
+    }
+
+    let out = ctx.engine.execute(
+        verify_artifact,
+        vec![Tensor::new(vec![m + 1, n + 1], cf.into_data())],
+    )?;
+    let e_idx = output_index(ctx, verify_artifact, "errcount")?;
+    let corrected = out.outputs[e_idx].scalar_sum().round() as u64;
+    cf = take_matrix(ctx, verify_artifact, out, "cf")?;
+
+    let mut done = NodeDone::new();
+    done.launches = 2;
+    done.detected = corrected;
+    done.corrected = corrected;
+    if last {
+        done.partial = Some((cf.slice_to(m, n), 0, 0));
+    } else {
+        done.value = Some(NodeValue::Cf(cf));
+    }
+    Ok(done)
+}
+
+// ---------------------------------------------------------------------
+// Shared plumbing
+// ---------------------------------------------------------------------
+
+fn accumulate(c: &mut Matrix, partial: &Matrix, row0: usize, col0: usize) {
+    let n = c.cols();
+    for i in 0..partial.rows() {
+        let base = (row0 + i) * n + col0;
+        let dst = &mut c.data_mut()[base..base + partial.cols()];
+        for (d, s) in dst.iter_mut().zip(partial.row(i)) {
+            *d += s;
+        }
+    }
+}
+
+fn output_index(ctx: &Ctx<'_>, artifact: &str, role: &str) -> Result<usize> {
+    ctx.engine
+        .manifest()
+        .get(artifact)?
+        .output_index(role)
+        .ok_or_else(|| anyhow!("{artifact} has no {role:?} output"))
+}
+
+/// Move the named output of an [`ExecOutput`] out as a Matrix (no copy).
+fn take_matrix(ctx: &Ctx<'_>, artifact: &str, out: ExecOutput, role: &str) -> Result<Matrix> {
+    let idx = output_index(ctx, artifact, role)?;
+    let t = out
+        .outputs
+        .into_iter()
+        .nth(idx)
+        .ok_or_else(|| anyhow!("output index {idx} out of range"))?;
+    if t.shape.len() != 2 {
+        bail!("{artifact} output {role:?} is not a matrix: shape {:?}", t.shape);
+    }
+    Ok(Matrix::from_vec(t.shape[0], t.shape[1], t.data))
+}
+
+fn tensor_matrix(t: &Tensor) -> Result<Matrix> {
+    if t.shape.len() != 2 {
+        bail!("expected a matrix, got shape {:?}", t.shape);
+    }
+    Ok(Matrix::from_vec(t.shape[0], t.shape[1], t.data.clone()))
+}
+
+/// Extract the `(rows, cols)` sub-matrix at `(row0, col0)`, zero-padded to
+/// `(pad_rows, pad_cols)`, in a single allocation + row-wise memcpy.
+fn extract_padded(
+    m: &Matrix,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    pad_rows: usize,
+    pad_cols: usize,
+) -> Matrix {
+    debug_assert!(pad_rows >= rows && pad_cols >= cols);
+    let mut out = Matrix::zeros(pad_rows, pad_cols);
+    for i in 0..rows {
+        let src = &m.row(row0 + i)[col0..col0 + cols];
+        out.data_mut()[i * pad_cols..i * pad_cols + cols].copy_from_slice(src);
+    }
+    out
+}
+
+fn panel_cols(m: &Matrix, col0: usize, cols: usize) -> Matrix {
+    Matrix::from_fn(m.rows(), cols, |i, j| m.at(i, col0 + j))
+}
+
+fn panel_rows(m: &Matrix, row0: usize, rows: usize) -> Matrix {
+    Matrix::from_fn(rows, m.cols(), |i, j| m.at(row0 + i, j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::{plan_ding, Planner};
+    use crate::coordinator::{CoordinatorConfig, FtPolicy};
+    use crate::runtime::engine::EngineConfig;
+
+    fn scheduler(workers: usize) -> Scheduler {
+        let engine = Engine::start(EngineConfig { workers, ..Default::default() }).unwrap();
+        Scheduler::new(engine, SchedulerConfig::default())
+    }
+
+    #[test]
+    fn threads_default_to_engine_workers() {
+        let s = scheduler(3);
+        assert_eq!(s.threads(), 3);
+    }
+
+    #[test]
+    fn runs_single_block_plan() {
+        let s = scheduler(1);
+        let cfg = CoordinatorConfig::default();
+        let plan = Planner::new(s.engine().manifest(), &cfg)
+            .plan_gemm(64, 64, 64, FtPolicy::None, &InjectionPlan::none())
+            .unwrap();
+        let a = Matrix::rand_uniform(64, 64, 1);
+        let b = Matrix::rand_uniform(64, 64, 2);
+        let out = s.run(&plan, &a, &b).unwrap();
+        assert_eq!(out.launches, 1);
+        assert!(out.c.max_abs_diff(&a.matmul(&b)) < 1e-3);
+    }
+
+    #[test]
+    fn split_plan_accumulates_k_partials() {
+        let s = scheduler(4);
+        let cfg = CoordinatorConfig::default();
+        let plan = Planner::new(s.engine().manifest(), &cfg)
+            .plan_gemm(600, 600, 600, FtPolicy::None, &InjectionPlan::none())
+            .unwrap();
+        let a = Matrix::rand_uniform(600, 600, 3);
+        let b = Matrix::rand_uniform(600, 600, 4);
+        let out = s.run(&plan, &a, &b).unwrap();
+        assert_eq!(out.launches, 8);
+        assert!(out.c.max_abs_diff(&a.matmul(&b)) < 5e-3);
+    }
+
+    #[test]
+    fn ding_plan_runs_through_the_same_scheduler() {
+        let s = scheduler(2);
+        let plan = plan_ding(s.engine().manifest(), "medium", &InjectionPlan::none()).unwrap();
+        let a = Matrix::rand_uniform(128, 128, 5);
+        let b = Matrix::rand_uniform(128, 128, 6);
+        let out = s.run(&plan, &a, &b).unwrap();
+        assert_eq!(out.launches, 1 + 2 * 2, "encode + 2 launches per panel");
+        assert!(out.c.max_abs_diff(&a.matmul(&b)) < 2e-3);
+    }
+
+    #[test]
+    fn node_error_propagates_and_drains() {
+        let s = scheduler(2);
+        let cfg = CoordinatorConfig::default();
+        let mut plan = Planner::new(s.engine().manifest(), &cfg)
+            .plan_gemm(600, 600, 600, FtPolicy::None, &InjectionPlan::none())
+            .unwrap();
+        // sabotage one node with a nonexistent artifact
+        if let NodeOp::Block { kernel: KernelOp::Plain { artifact }, .. } =
+            &mut plan.nodes[3].op
+        {
+            *artifact = "no_such_kernel".into();
+        }
+        let a = Matrix::rand_uniform(600, 600, 7);
+        let b = Matrix::rand_uniform(600, 600, 8);
+        let err = s.run(&plan, &a, &b).unwrap_err();
+        assert!(err.to_string().contains("not in manifest"));
+        // the scheduler remains serviceable
+        let ok_plan = Planner::new(s.engine().manifest(), &cfg)
+            .plan_gemm(64, 64, 64, FtPolicy::None, &InjectionPlan::none())
+            .unwrap();
+        assert!(s.run(&ok_plan, &a.slice_to(64, 64), &b.slice_to(64, 64)).is_ok());
+    }
+
+    #[test]
+    fn extract_padded_pulls_and_pads() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let s = extract_padded(&m, 1, 2, 2, 2, 3, 4);
+        assert_eq!((s.rows(), s.cols()), (3, 4));
+        assert_eq!(s.at(0, 0), 6.0);
+        assert_eq!(s.at(0, 1), 7.0);
+        assert_eq!(s.at(1, 0), 10.0);
+        assert_eq!(s.at(1, 1), 11.0);
+        // padding region is exact zero
+        assert_eq!(s.at(2, 3), 0.0);
+        assert_eq!(s.at(0, 2), 0.0);
+    }
+
+    #[test]
+    fn panel_extraction() {
+        let m = Matrix::from_fn(3, 6, |i, j| (i * 6 + j) as f32);
+        let p = panel_cols(&m, 2, 2);
+        assert_eq!(p.rows(), 3);
+        assert_eq!(p.at(0, 0), 2.0);
+        assert_eq!(p.at(2, 1), 15.0);
+        let q = panel_rows(&m, 1, 2);
+        assert_eq!(q.at(0, 0), 6.0);
+        assert_eq!(q.rows(), 2);
+    }
+
+    #[test]
+    fn accumulate_targets_offsets() {
+        let mut c = Matrix::zeros(4, 4);
+        let p = Matrix::from_fn(2, 2, |i, j| (i * 2 + j + 1) as f32);
+        accumulate(&mut c, &p, 1, 2);
+        accumulate(&mut c, &p, 1, 2);
+        assert_eq!(c.at(1, 2), 2.0);
+        assert_eq!(c.at(2, 3), 8.0);
+        assert_eq!(c.at(0, 0), 0.0);
+    }
+}

@@ -25,14 +25,19 @@
 //!   closed-source cuBLAS (the paper also treats it as a black box).
 //! * [`analytic`] — the §5.5 online-vs-offline expected-cost model
 //!   (Fig 22).
+//! * [`serving`] — the worker-count axis: what the engine worker pool buys
+//!   on split (oversize) requests served through the plan → schedule →
+//!   execute pipeline (BENCH_pipeline.json's model series).
 
 pub mod analytic;
 pub mod cublas;
 pub mod device;
 pub mod ft_model;
 pub mod kernel_model;
+pub mod serving;
 pub mod stepwise;
 
 pub use device::{DeviceSpec, A100, T4};
 pub use ft_model::{predict_ft, FtVariant};
 pub use kernel_model::{predict, KernelConfig, Prediction};
+pub use serving::{pipeline_speedup, pipeline_wall, ServingCost};

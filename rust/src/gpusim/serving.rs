@@ -1,0 +1,147 @@
+//! Serving-pipeline model: the worker-count axis of the analytic
+//! simulator.
+//!
+//! The plan → schedule → execute refactor makes split (oversize) GEMMs a
+//! set of independent block nodes; this module predicts what the engine
+//! worker pool buys on such a request. The model mirrors the scheduler's
+//! actual structure:
+//!
+//! * each block costs one bucket-shaped kernel execution
+//!   ([`predict_ft`]) plus the host-side operand extraction that rides on
+//!   the dispatching pool thread — these overlap across workers, so they
+//!   batch into `ceil(blocks / workers)` **waves**;
+//! * partial accumulation happens on the scheduler's completion loop and
+//!   serializes, so it scales with `blocks` regardless of pool width.
+//!
+//! `wall(W) = waves(W) · (t_block + t_extract) + blocks · t_accum`
+//!
+//! The `hotpath` bench prints this model next to live 1-vs-N-worker
+//! measurements (BENCH_pipeline.json); the gap between ideal wave scaling
+//! (`blocks / waves`) and the live curve is the host-side serial fraction.
+
+use crate::coordinator::router;
+
+use super::device::DeviceSpec;
+use super::ft_model::{predict_ft, FtLevel, FtVariant};
+
+/// Effective host copy bandwidth for extraction/accumulation traffic
+/// (GB/s) — a deliberately conservative single-channel memcpy figure.
+pub const HOST_COPY_GBS: f64 = 20.0;
+
+/// Cost breakdown of serving one (possibly split) GEMM through the
+/// pipeline with a given worker count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingCost {
+    pub blocks: usize,
+    /// Effective parallel width: min(workers, blocks).
+    pub width: usize,
+    /// ceil(blocks / width) kernel waves.
+    pub waves: usize,
+    /// Device time of one bucket-shaped block execution.
+    pub t_block_s: f64,
+    /// Host-side operand extraction per block (overlaps across workers).
+    pub t_extract_s: f64,
+    /// Host-side partial accumulation per block (serial).
+    pub t_accum_s: f64,
+    /// Modeled end-to-end wall time.
+    pub wall_s: f64,
+}
+
+impl ServingCost {
+    /// Upper bound on the pool speedup: pure wave scaling.
+    pub fn ideal_speedup(&self) -> f64 {
+        self.blocks as f64 / self.waves as f64
+    }
+}
+
+/// Model one request at (m, n, k) with `workers` engine workers.
+pub fn pipeline_wall(
+    dev: &DeviceSpec,
+    m: usize,
+    n: usize,
+    k: usize,
+    online_ft: bool,
+    workers: usize,
+) -> ServingCost {
+    let plan = router::route(m, n, k);
+    let blocks = plan.blocks.len();
+    let bucket = plan.blocks[0].bucket;
+    let params = bucket.class.params();
+    let variant = if online_ft { FtVariant::Fused(FtLevel::Tb) } else { FtVariant::None };
+    let t_block_s = predict_ft(dev, params, bucket.m, bucket.n, bucket.k, variant).time_s
+        + dev.launch_overhead_s;
+
+    let host_bps = HOST_COPY_GBS * 1e9;
+    let t_extract_s = ((bucket.m * bucket.k + bucket.k * bucket.n) * 4) as f64 / host_bps;
+    // read-modify-write of the output region per k-partial
+    let t_accum_s = (2 * bucket.m * bucket.n * 4) as f64 / host_bps;
+
+    let width = workers.max(1).min(blocks);
+    let waves = blocks.div_ceil(width);
+    let wall_s = waves as f64 * (t_block_s + t_extract_s) + blocks as f64 * t_accum_s;
+    ServingCost { blocks, width, waves, t_block_s, t_extract_s, t_accum_s, wall_s }
+}
+
+/// Modeled speedup of `workers` over a single worker for one request.
+pub fn pipeline_speedup(
+    dev: &DeviceSpec,
+    m: usize,
+    n: usize,
+    k: usize,
+    online_ft: bool,
+    workers: usize,
+) -> f64 {
+    let one = pipeline_wall(dev, m, n, k, online_ft, 1).wall_s;
+    let w = pipeline_wall(dev, m, n, k, online_ft, workers).wall_s;
+    one / w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::{A100, T4};
+
+    #[test]
+    fn single_block_requests_do_not_scale() {
+        let c = pipeline_wall(&T4, 128, 128, 128, true, 8);
+        assert_eq!((c.blocks, c.waves, c.width), (1, 1, 1));
+        assert!((pipeline_speedup(&T4, 128, 128, 128, true, 8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_1024_has_8_blocks_and_near_wave_scaling() {
+        let c1 = pipeline_wall(&T4, 1024, 1024, 1024, true, 1);
+        let c4 = pipeline_wall(&T4, 1024, 1024, 1024, true, 4);
+        assert_eq!(c1.blocks, 8);
+        assert_eq!(c1.waves, 8);
+        assert_eq!(c4.waves, 2);
+        assert!((c4.ideal_speedup() - 4.0).abs() < 1e-12);
+        // the serial host accumulation keeps the modeled curve well under
+        // the 4x wave bound on a device this fast
+        let s = pipeline_speedup(&T4, 1024, 1024, 1024, true, 4);
+        assert!(s > 1.3 && s < 4.0, "modeled speedup {s:.2}");
+    }
+
+    #[test]
+    fn speedup_monotone_and_bounded() {
+        let mut last = 0.0;
+        for w in [1usize, 2, 3, 4, 8, 16, 64] {
+            let s = pipeline_speedup(&A100, 1536, 1536, 1536, false, w);
+            assert!(s >= last - 1e-12, "w={w}: {s} < {last}");
+            let blocks = pipeline_wall(&A100, 1536, 1536, 1536, false, w).blocks;
+            assert!(s <= w.min(blocks) as f64 + 1e-9);
+            last = s;
+        }
+        // 27 blocks cap the pool benefit at 27x
+        assert_eq!(pipeline_wall(&A100, 1536, 1536, 1536, false, 64).width, 27);
+    }
+
+    #[test]
+    fn serial_accumulation_keeps_speedup_below_ideal() {
+        let c = pipeline_wall(&T4, 1024, 1024, 1024, true, 8);
+        let s = pipeline_speedup(&T4, 1024, 1024, 1024, true, 8);
+        assert_eq!(c.waves, 1);
+        assert!(s < c.ideal_speedup());
+        assert!(c.t_accum_s > 0.0 && c.t_extract_s > 0.0);
+    }
+}

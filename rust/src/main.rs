@@ -59,8 +59,8 @@ fn print_usage() {
          USAGE: ftgemm <command> [options]\n\n\
          COMMANDS:\n\
            info       artifact manifest + device model summary\n\
-           gemm       run one GEMM (--m --n --k --policy none|online|offline --inject N)\n\
-           campaign   SEU injection campaign (--rounds --errors --policy)\n\
+           gemm       run one GEMM (--m --n --k --policy none|online|offline --inject N --workers W)\n\
+           campaign   SEU injection campaign (--rounds --errors --policy --workers W)\n\
            figures    regenerate paper figures (--fig 9..22|table1 | --all) --out DIR\n\
            serve      line-protocol GEMM server on stdin (--config FILE)\n\
            table1     print Table 1 kernel parameters\n\
@@ -77,8 +77,8 @@ fn parse_policy(s: &str) -> anyhow::Result<FtPolicy> {
     })
 }
 
-fn start_coordinator(ft_level: &str) -> anyhow::Result<Coordinator> {
-    let engine = Engine::start(EngineConfig::default())?;
+fn start_coordinator(ft_level: &str, workers: usize) -> anyhow::Result<Coordinator> {
+    let engine = Engine::start(EngineConfig { workers, ..Default::default() })?;
     let cfg = CoordinatorConfig { ft_level: ft_level.into(), ..Default::default() };
     Ok(Coordinator::new(engine, cfg))
 }
@@ -101,7 +101,10 @@ fn cmd_info(rest: &[String]) -> anyhow::Result<()> {
                 );
             }
         }
-        Err(e) => println!("artifacts: not built ({e})"),
+        Err(e) => println!(
+            "artifacts: not built ({e}); serving falls back to the built-in manifest \
+             + reference backend"
+        ),
     }
     for d in [T4, A100] {
         println!(
@@ -124,6 +127,7 @@ fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
         .opt("policy", "none|online|offline", Some("online"))
         .opt("inject", "number of SEUs to inject", Some("0"))
         .opt("level", "online FT granularity tb|warp|thread", Some("tb"))
+        .opt("workers", "engine worker pool size", Some("1"))
         .opt("seed", "rng seed", Some("42"));
     let args = cmd.parse(rest)?;
     let (m, n, k) = (args.usize_or("m", 128), args.usize_or("n", 128), args.usize_or("k", 128));
@@ -131,7 +135,7 @@ fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
     let inject = args.usize_or("inject", 0);
     let seed = args.usize_or("seed", 42) as u64;
 
-    let coord = start_coordinator(args.str_or("level", "tb"))?;
+    let coord = start_coordinator(args.str_or("level", "tb"), args.usize_or("workers", 1))?;
     let a = Matrix::rand_uniform(m, k, seed);
     let b = Matrix::rand_uniform(k, n, seed + 1);
     let geom = ftgemm::faults::model::KernelGeom::for_shape(m, n, k);
@@ -169,9 +173,10 @@ fn cmd_campaign(rest: &[String]) -> anyhow::Result<()> {
         .opt("rounds", "number of GEMMs", Some("10"))
         .opt("errors", "SEUs per GEMM", Some("4"))
         .opt("policy", "online|offline", Some("online"))
+        .opt("workers", "engine worker pool size", Some("1"))
         .opt("seed", "rng seed", Some("7"));
     let args = cmd.parse(rest)?;
-    let coord = start_coordinator("tb")?;
+    let coord = start_coordinator("tb", args.usize_or("workers", 1))?;
     let campaign = FaultCampaign::new(
         coord,
         SeuModel::PerGemm { count: args.usize_or("errors", 4) },

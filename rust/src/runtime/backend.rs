@@ -1,0 +1,541 @@
+//! Kernel-execution backends for the engine workers.
+//!
+//! Each engine worker owns one [`Backend`] instance plus its compiled-
+//! artifact cache. Two implementations are envisioned:
+//!
+//! * [`ReferenceBackend`] (always available) — executes every artifact
+//!   *semantically* on the host from its manifest metadata: the GEMM is the
+//!   blocked CPU matmul, the fused FT kernels are emulated with the
+//!   Huang–Abraham checksum algebra at the kernel's protection granularity
+//!   (per sub-tile, per verification interval), and the Ding'11 stages
+//!   follow the encoded outer-product contract. Same inputs, same output
+//!   roles/shapes, same fault-tolerance observable behavior as the lowered
+//!   kernels — so the whole serving stack (router, planner, scheduler,
+//!   batcher, campaigns) runs in environments without PJRT or artifacts.
+//! * a PJRT backend — parses the AOT HLO text and executes it on a real
+//!   `PjRtClient`. The `xla` bindings are not vendorable in this build
+//!   environment; the integration point is this trait (one impl + one arm
+//!   in [`BackendKind`]). See DESIGN.md "Substitutions".
+//!
+//! Backends are constructed *inside* the worker thread (PJRT handles are
+//! `Rc`-based), which is why the trait has no `Send` bound.
+
+use std::collections::{BTreeMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::abft::checksum::{self, ChecksumPair, Detection, Thresholds};
+use crate::abft::injection::Injection;
+use crate::abft::matrix::Matrix;
+
+use super::engine::Tensor;
+use super::manifest::{Artifact, ArtifactKind};
+
+/// Which backend the engine workers run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Host-side semantic execution of the artifact contract.
+    #[default]
+    Reference,
+}
+
+/// One worker's kernel executor. `compile` is idempotent per artifact and
+/// returns whether work happened (the engine meters compile time/counts).
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn compile(&mut self, art: &Artifact) -> Result<bool>;
+    fn execute(&mut self, art: &Artifact, inputs: Vec<Tensor>) -> Result<Vec<Tensor>>;
+}
+
+pub fn create(kind: BackendKind) -> Box<dyn Backend> {
+    match kind {
+        BackendKind::Reference => Box::new(ReferenceBackend::new()),
+    }
+}
+
+/// Maximum verify/correct passes per protection domain: a corrected
+/// large-magnitude fault leaves an O(eps * magnitude) residue that the next
+/// pass refines, exactly like the kernel's periodic re-verification.
+const MAX_VERIFY_PASSES: usize = 4;
+
+pub struct ReferenceBackend {
+    compiled: HashSet<String>,
+    thresholds: Thresholds,
+}
+
+impl ReferenceBackend {
+    pub fn new() -> Self {
+        ReferenceBackend { compiled: HashSet::new(), thresholds: Thresholds::default() }
+    }
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn compile(&mut self, art: &Artifact) -> Result<bool> {
+        if self.compiled.contains(&art.name) {
+            return Ok(false);
+        }
+        // Structural validation stands in for real compilation.
+        match art.kind {
+            ArtifactKind::Gemm | ArtifactKind::Stepwise => {
+                ensure_role(art, "c")?;
+            }
+            ArtifactKind::FtGemm | ArtifactKind::FtDetect => {
+                ensure_role(art, "c")?;
+                ensure_role(art, "errcount")?;
+                if art.inputs.len() != 3 {
+                    bail!("{}: FT kernels take (a, b, inj), got {} inputs", art.name, art.inputs.len());
+                }
+            }
+            ArtifactKind::DingEncode => {
+                ensure_role(art, "ac")?;
+                ensure_role(art, "br")?;
+            }
+            ArtifactKind::DingStep => {
+                ensure_role(art, "cf")?;
+                if art.ks == 0 {
+                    bail!("{}: ding_step needs ks > 0", art.name);
+                }
+            }
+            ArtifactKind::DingVerify => {
+                ensure_role(art, "cf")?;
+                ensure_role(art, "errcount")?;
+            }
+        }
+        self.compiled.insert(art.name.clone());
+        Ok(true)
+    }
+
+    fn execute(&mut self, art: &Artifact, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        match art.kind {
+            ArtifactKind::Gemm | ArtifactKind::Stepwise => {
+                let (a, b) = two_matrices(art, inputs)?;
+                let c = a.matmul(&b);
+                build_outputs(art, [("c", c.into_data())].into_iter().collect())
+            }
+            ArtifactKind::FtGemm | ArtifactKind::FtDetect => {
+                let correct = art.kind == ArtifactKind::FtGemm;
+                let mut it = inputs.into_iter();
+                let a = matrix_input(art, it.next())?;
+                let b = matrix_input(art, it.next())?;
+                let inj = it.next().ok_or_else(|| anyhow!("{}: missing inj input", art.name))?;
+                let injections = decode_injections(&inj);
+                let (c, cr, cc, errgrid) = self.ft_gemm(art, &a, &b, &injections, correct)?;
+                build_outputs(
+                    art,
+                    [
+                        ("c", c.into_data()),
+                        ("cr", cr),
+                        ("cc", cc),
+                        ("errcount", errgrid),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            }
+            ArtifactKind::DingEncode => {
+                let (a, b) = two_matrices(art, inputs)?;
+                let (m, k, n) = (a.rows(), a.cols(), b.cols());
+                let mut ac = Matrix::zeros(m + 1, k);
+                for i in 0..m {
+                    ac.data_mut()[i * k..(i + 1) * k].copy_from_slice(a.row(i));
+                }
+                for (kk, s) in a.col_sums().into_iter().enumerate() {
+                    ac.set(m, kk, s);
+                }
+                let mut br = Matrix::zeros(k, n + 1);
+                for kk in 0..k {
+                    br.data_mut()[kk * (n + 1)..kk * (n + 1) + n].copy_from_slice(b.row(kk));
+                    br.set(kk, n, b.row(kk).iter().sum());
+                }
+                build_outputs(
+                    art,
+                    [("ac", ac.into_data()), ("br", br.into_data())].into_iter().collect(),
+                )
+            }
+            ArtifactKind::DingStep => {
+                let mut it = inputs.into_iter();
+                let mut cf = matrix_input(art, it.next())?;
+                let acp = matrix_input(art, it.next())?;
+                let brp = matrix_input(art, it.next())?;
+                let update = acp.matmul(&brp);
+                if (update.rows(), update.cols()) != (cf.rows(), cf.cols()) {
+                    bail!("{}: panel update shape mismatch", art.name);
+                }
+                for (dst, src) in cf.data_mut().iter_mut().zip(update.data()) {
+                    *dst += src;
+                }
+                build_outputs(art, [("cf", cf.into_data())].into_iter().collect())
+            }
+            ArtifactKind::DingVerify => {
+                let mut it = inputs.into_iter();
+                let mut cf = matrix_input(art, it.next())?;
+                let (m, n) = (cf.rows() - 1, cf.cols() - 1);
+                let carried = ChecksumPair {
+                    cr: (0..m).map(|i| cf.at(i, n)).collect(),
+                    cc: (0..n).map(|j| cf.at(m, j)).collect(),
+                };
+                let mut inner = cf.slice_to(m, n);
+                let corrected = verify_correct_loop(&mut inner, &carried, self.thresholds, true).0;
+                for i in 0..m {
+                    for j in 0..n {
+                        cf.set(i, j, inner.at(i, j));
+                    }
+                }
+                build_outputs(
+                    art,
+                    [("cf", cf.into_data()), ("errcount", vec![corrected as f32])]
+                        .into_iter()
+                        .collect(),
+                )
+            }
+        }
+    }
+}
+
+impl ReferenceBackend {
+    /// The fused (FT-)GEMM contract: compute C, apply the injected faults
+    /// interval by interval, and run the checksum verify/correct sweep over
+    /// each affected protection sub-tile — detection and (for the fused
+    /// online kernel) correction at exactly the granularity the lowered
+    /// kernel would.
+    fn ft_gemm(
+        &self,
+        art: &Artifact,
+        a: &Matrix,
+        b: &Matrix,
+        injections: &[Injection],
+        correct: bool,
+    ) -> Result<(Matrix, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (m, n) = (a.rows(), b.cols());
+        let (sub_m, sub_n) = protection_tile(art, m, n)?;
+        let (gm, gn) = (m.div_ceil(sub_m), n.div_ceil(sub_n));
+        let mut errgrid = vec![0.0f32; gm * gn];
+        let mut c = a.matmul(b);
+
+        if art.max_inj > 0 && injections.len() > art.max_inj {
+            bail!(
+                "{}: {} injections exceed kernel capacity {}",
+                art.name,
+                injections.len(),
+                art.max_inj
+            );
+        }
+
+        // Faults land per verification interval; the kernel corrects each
+        // interval's damage before the next accumulates (paper §4.1).
+        let verify_every = art.verify_every.max(1);
+        let mut by_interval: BTreeMap<usize, Vec<&Injection>> = BTreeMap::new();
+        for inj in injections {
+            by_interval.entry(inj.step / verify_every).or_default().push(inj);
+        }
+
+        for injs in by_interval.values() {
+            let mut touched: HashSet<(usize, usize)> = HashSet::new();
+            for inj in injs {
+                if inj.row < m && inj.col < n {
+                    c.add_at(inj.row, inj.col, inj.magnitude);
+                    touched.insert((inj.row / sub_m, inj.col / sub_n));
+                }
+            }
+            for (ti, tj) in touched {
+                let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
+                let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
+                let carried = tile_carried_checksums(a, b, r0, r1, c0, c1);
+                let mut tile = Matrix::from_fn(r1 - r0, c1 - c0, |i, j| c.at(r0 + i, c0 + j));
+                let (corrections, detections) =
+                    verify_correct_loop(&mut tile, &carried, self.thresholds, correct);
+                if corrections > 0 {
+                    for i in 0..(r1 - r0) {
+                        for j in 0..(c1 - c0) {
+                            c.set(r0 + i, c0 + j, tile.at(i, j));
+                        }
+                    }
+                }
+                errgrid[ti * gn + tj] += (corrections + detections) as f32;
+            }
+        }
+
+        let cr = c.row_sums();
+        let cc = c.col_sums();
+        Ok((c, cr, cc, errgrid))
+    }
+}
+
+/// Checksum sub-tile of an FT artifact: explicit manifest metadata first,
+/// then the Table-1 params for its level, then the whole output.
+fn protection_tile(art: &Artifact, m: usize, n: usize) -> Result<(usize, usize)> {
+    if art.sub_m > 0 && art.sub_n > 0 {
+        return Ok((art.sub_m, art.sub_n));
+    }
+    if let (Some(p), Some(level)) = (&art.params, art.ft_level.as_deref()) {
+        return p.sub_tile(level);
+    }
+    Ok((m.max(1), n.max(1)))
+}
+
+/// Carried (true-product) checksums of one output sub-tile, derived from
+/// the operands: `cr = A_rows · (B · e_cols)`, `cc = (eᵀ A_rows) · B_cols`.
+fn tile_carried_checksums(
+    a: &Matrix,
+    b: &Matrix,
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+) -> ChecksumPair {
+    let k = a.cols();
+    let mut be = vec![0.0f32; k];
+    for (kk, s) in be.iter_mut().enumerate() {
+        *s = b.row(kk)[c0..c1].iter().sum();
+    }
+    let cr = (r0..r1)
+        .map(|i| a.row(i).iter().zip(&be).map(|(x, y)| x * y).sum())
+        .collect();
+    let mut ea = vec![0.0f32; k];
+    for i in r0..r1 {
+        for (s, v) in ea.iter_mut().zip(a.row(i)) {
+            *s += v;
+        }
+    }
+    let mut cc = vec![0.0f32; c1 - c0];
+    for (kk, &w) in ea.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        for (s, v) in cc.iter_mut().zip(&b.row(kk)[c0..c1]) {
+            *s += w * v;
+        }
+    }
+    ChecksumPair { cr, cc }
+}
+
+/// Repeated verify(+correct) passes over one matrix against carried
+/// checksums. Returns (corrections, uncorrectable detections).
+fn verify_correct_loop(
+    c: &mut Matrix,
+    carried: &ChecksumPair,
+    th: Thresholds,
+    correct: bool,
+) -> (u64, u64) {
+    let mut corrections = 0u64;
+    for _ in 0..MAX_VERIFY_PASSES {
+        match checksum::verify(c, carried, th) {
+            Detection::Clean => return (corrections, 0),
+            det @ Detection::Single { .. } => {
+                if correct {
+                    checksum::correct(c, &det);
+                    corrections += 1;
+                } else {
+                    // Detect-only kernel: flag it, leave C corrupted.
+                    return (0, 1);
+                }
+            }
+            Detection::MultiError { .. } => {
+                // SEU violated inside one protection domain: detected but
+                // uncorrectable in-kernel.
+                return (corrections, 1);
+            }
+        }
+    }
+    (corrections, 0)
+}
+
+fn ensure_role(art: &Artifact, role: &str) -> Result<()> {
+    art.output_index(role)
+        .map(|_| ())
+        .ok_or_else(|| anyhow!("{}: no {role:?} output in manifest", art.name))
+}
+
+fn matrix_input(art: &Artifact, t: Option<Tensor>) -> Result<Matrix> {
+    let t = t.ok_or_else(|| anyhow!("{}: missing input", art.name))?;
+    if t.shape.len() != 2 {
+        bail!("{}: expected a matrix input, got shape {:?}", art.name, t.shape);
+    }
+    Ok(Matrix::from_vec(t.shape[0], t.shape[1], t.data))
+}
+
+fn two_matrices(art: &Artifact, inputs: Vec<Tensor>) -> Result<(Matrix, Matrix)> {
+    let mut it = inputs.into_iter();
+    let a = matrix_input(art, it.next())?;
+    let b = matrix_input(art, it.next())?;
+    Ok((a, b))
+}
+
+/// Decode the kernels' `(max_inj, 4)` injection descriptor rows; zero
+/// magnitude marks an unused slot.
+fn decode_injections(t: &Tensor) -> Vec<Injection> {
+    t.data
+        .chunks(4)
+        .filter(|r| r.len() == 4 && r[3] != 0.0)
+        .map(|r| Injection {
+            row: r[0] as usize,
+            col: r[1] as usize,
+            step: r[2] as usize,
+            magnitude: r[3],
+        })
+        .collect()
+}
+
+/// Map output roles (as `role -> flat data`) onto the artifact's declared
+/// output list. Semantically load-bearing roles must match the spec size
+/// exactly; auxiliary checksum layouts this backend does not model (the
+/// real kernels' tiled `cr`/`cc`) are zero-filled to spec.
+fn build_outputs(art: &Artifact, mut values: BTreeMap<&'static str, Vec<f32>>) -> Result<Vec<Tensor>> {
+    art.outputs
+        .iter()
+        .map(|spec| {
+            let need = spec.elements();
+            let data = match values.remove(spec.role.as_str()) {
+                Some(d) if d.len() == need => d,
+                Some(d) if matches!(spec.role.as_str(), "cr" | "cc") => {
+                    let _ = d;
+                    vec![0.0; need]
+                }
+                Some(d) => bail!(
+                    "{}: output {:?} size {} != manifest {}",
+                    art.name,
+                    spec.role,
+                    d.len(),
+                    need
+                ),
+                None => vec![0.0; need],
+            };
+            Ok(Tensor::new(spec.shape.clone(), data))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn backend_and_manifest() -> (ReferenceBackend, Manifest) {
+        (ReferenceBackend::new(), Manifest::builtin())
+    }
+
+    fn tensor2(m: &Matrix) -> Tensor {
+        Tensor::new(vec![m.rows(), m.cols()], m.data().to_vec())
+    }
+
+    #[test]
+    fn compile_is_idempotent() {
+        let (mut be, man) = backend_and_manifest();
+        let art = man.get("gemm_small").unwrap();
+        assert!(be.compile(art).unwrap());
+        assert!(!be.compile(art).unwrap());
+    }
+
+    #[test]
+    fn gemm_matches_host_matmul() {
+        let (mut be, man) = backend_and_manifest();
+        let art = man.get("gemm_small").unwrap();
+        let a = Matrix::rand_uniform(64, 64, 1);
+        let b = Matrix::rand_uniform(64, 64, 2);
+        let out = be.execute(art, vec![tensor2(&a), tensor2(&b)]).unwrap();
+        let got = Matrix::from_vec(64, 64, out[0].data.clone());
+        assert!(got.max_abs_diff(&a.matmul(&b)) < 1e-4);
+    }
+
+    #[test]
+    fn ftgemm_corrects_and_counts() {
+        let (mut be, man) = backend_and_manifest();
+        let art = man.get("ftgemm_tb_medium").unwrap();
+        let a = Matrix::rand_uniform(128, 128, 3);
+        let b = Matrix::rand_uniform(128, 128, 4);
+        let want = a.matmul(&b);
+        let inj = crate::abft::injection::InjectionPlan {
+            injections: vec![
+                Injection { row: 5, col: 9, step: 0, magnitude: 300.0 },
+                Injection { row: 77, col: 40, step: 6, magnitude: -1000.0 },
+                Injection { row: 127, col: 127, step: 12, magnitude: 64.0 },
+            ],
+        };
+        let out = be
+            .execute(
+                art,
+                vec![
+                    tensor2(&a),
+                    tensor2(&b),
+                    Tensor::new(vec![8, 4], inj.to_tensor(8)),
+                ],
+            )
+            .unwrap();
+        let c_idx = art.output_index("c").unwrap();
+        let e_idx = art.output_index("errcount").unwrap();
+        let got = Matrix::from_vec(128, 128, out[c_idx].data.clone());
+        assert!(out[e_idx].scalar_sum().round() as u64 >= 3);
+        assert!(got.max_abs_diff(&want) < 2e-2);
+    }
+
+    #[test]
+    fn ftdetect_flags_but_does_not_correct() {
+        let (mut be, man) = backend_and_manifest();
+        let art = man.get("ftdetect_medium").unwrap();
+        let a = Matrix::rand_uniform(128, 128, 5);
+        let b = Matrix::rand_uniform(128, 128, 6);
+        let want = a.matmul(&b);
+        let inj = crate::abft::injection::InjectionPlan::single(10, 10, 3, 444.0);
+        let out = be
+            .execute(
+                art,
+                vec![
+                    tensor2(&a),
+                    tensor2(&b),
+                    Tensor::new(vec![8, 4], inj.to_tensor(8)),
+                ],
+            )
+            .unwrap();
+        let c_idx = art.output_index("c").unwrap();
+        let e_idx = art.output_index("errcount").unwrap();
+        let got = Matrix::from_vec(128, 128, out[c_idx].data.clone());
+        assert!(out[e_idx].scalar_sum() >= 1.0);
+        // still corrupted: the offset survives
+        assert!((got.at(10, 10) - want.at(10, 10) - 444.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn ding_chain_reproduces_the_product() {
+        let (mut be, man) = backend_and_manifest();
+        let enc = man.get("ding_encode_medium").unwrap();
+        let step = man.get("ding_step_medium").unwrap();
+        let ver = man.get("ding_verify_medium").unwrap();
+        let (m, n, k, ks) = (enc.m, enc.n, enc.k, step.ks);
+        let a = Matrix::rand_uniform(m, k, 7);
+        let b = Matrix::rand_uniform(k, n, 8);
+
+        let out = be.execute(enc, vec![tensor2(&a), tensor2(&b)]).unwrap();
+        let ac = Matrix::from_vec(m + 1, k, out[0].data.clone());
+        let br = Matrix::from_vec(k, n + 1, out[1].data.clone());
+
+        let mut cf = Matrix::zeros(m + 1, n + 1);
+        let mut corrected = 0.0;
+        for s in (0..k).step_by(ks) {
+            let acp = Matrix::from_fn(m + 1, ks, |i, j| ac.at(i, s + j));
+            let brp = Matrix::from_fn(ks, n + 1, |i, j| br.at(s + i, j));
+            let out = be
+                .execute(step, vec![tensor2(&cf), tensor2(&acp), tensor2(&brp)])
+                .unwrap();
+            cf = Matrix::from_vec(m + 1, n + 1, out[0].data.clone());
+            // inject into the first panel's window only
+            if s == 0 {
+                cf.add_at(3, 4, 512.0);
+            }
+            let out = be.execute(ver, vec![tensor2(&cf)]).unwrap();
+            cf = Matrix::from_vec(m + 1, n + 1, out[0].data.clone());
+            corrected += out[1].scalar_sum();
+        }
+        assert!(corrected >= 1.0);
+        assert!(cf.slice_to(m, n).max_abs_diff(&a.matmul(&b)) < 2e-2);
+    }
+}

@@ -1,19 +1,25 @@
-//! The PJRT execution engine.
+//! The execution engine: a pool of worker threads, each owning its own
+//! kernel backend and compiled-executable cache.
 //!
-//! PJRT handles in the `xla` crate are `Rc`-based and must not cross
-//! threads, so a dedicated engine thread owns the `PjRtClient` plus the
-//! compiled-executable cache, and serves [`ExecRequest`]s from an mpsc
-//! queue (the vLLM engine-loop pattern). The cloneable [`Engine`] handle is
-//! `Send`, so the coordinator, the fault drivers and the bench harness can
-//! all submit work concurrently; responses return through per-request
-//! oneshot channels.
+//! Kernel clients (PJRT handles in particular) are `Rc`-based and must not
+//! cross threads, so each worker thread owns one [`Backend`] instance plus
+//! its cache, and serves requests from an mpsc queue (the vLLM engine-loop
+//! pattern, generalized from one thread to N). The cloneable [`Engine`]
+//! handle is `Send`, so the coordinator's scheduler, the fault drivers and
+//! the bench harness all submit work concurrently; responses return
+//! through per-request oneshot channels.
 //!
-//! Compilation (`HloModuleProto::from_text_file` → `client.compile`) runs
-//! once per artifact and is cached; the request path is parse-free.
+//! **Dispatch is warm-affine**: a request for an artifact prefers an idle
+//! worker that has already compiled it (the warm executable stays warm);
+//! if every warm worker is busy it spills to an idle cold worker — which
+//! pays one compile and is warm from then on, so a burst of same-bucket
+//! blocks floods the whole pool. Compilation happens once per (artifact,
+//! worker) and is cached thereafter.
 
-use std::collections::HashMap;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -21,6 +27,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::pool::oneshot;
 
+use super::backend::{self, Backend, BackendKind};
 use super::manifest::Manifest;
 
 /// A host tensor: row-major f32 with an explicit shape. The engine's only
@@ -58,9 +65,10 @@ pub struct ExecRequest {
 #[derive(Debug, Clone)]
 pub struct ExecOutput {
     pub outputs: Vec<Tensor>,
-    /// Pure device-execution time (excludes queueing).
+    /// Pure backend-execution time (excludes queueing).
     pub exec_time: Duration,
-    /// Set on the first call that had to compile the artifact.
+    /// Set on the first call that had to compile the artifact on the
+    /// serving worker.
     pub compile_time: Option<Duration>,
 }
 
@@ -75,13 +83,21 @@ enum Msg {
 /// Engine configuration.
 #[derive(Debug, Clone, Default)]
 pub struct EngineConfig {
-    /// Artifacts directory; `None` = discover (`FTGEMM_ARTIFACTS`, ./artifacts, ..).
+    /// Artifacts directory; `None` = discover (`FTGEMM_ARTIFACTS`,
+    /// ./artifacts, ..) and fall back to the built-in manifest.
     pub artifacts_dir: Option<std::path::PathBuf>,
-    /// Artifact names to compile eagerly at startup (empty = lazy).
+    /// Artifact names to compile eagerly at startup on every worker
+    /// (empty = lazy).
     pub precompile: Vec<String>,
+    /// Worker threads, each with its own backend + executable cache.
+    /// 0 is treated as 1.
+    pub workers: usize,
+    /// Which kernel backend the workers run.
+    pub backend: BackendKind,
 }
 
-/// Cumulative engine-side statistics.
+/// Cumulative engine-side statistics (per worker; [`Engine::stats`]
+/// aggregates).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EngineStats {
     pub executions: u64,
@@ -90,76 +106,128 @@ pub struct EngineStats {
     pub total_compile_secs: f64,
 }
 
-/// Cloneable, `Send` handle to the engine thread.
-#[derive(Clone)]
-pub struct Engine {
+impl EngineStats {
+    fn merge(&mut self, other: &EngineStats) {
+        self.executions += other.executions;
+        self.compiles += other.compiles;
+        self.total_exec_secs += other.total_exec_secs;
+        self.total_compile_secs += other.total_compile_secs;
+    }
+}
+
+/// A submitted request; `wait` blocks for the result.
+pub struct Pending {
+    rx: oneshot::OneReceiver<Result<ExecOutput>>,
+}
+
+impl Pending {
+    pub fn wait(self) -> Result<ExecOutput> {
+        self.rx.recv().map_err(|_| anyhow!("engine dropped request"))?
+    }
+}
+
+struct Worker {
     tx: Sender<Msg>,
+    /// Queued + running requests on this worker (dispatch load signal).
+    inflight: Arc<AtomicUsize>,
+    /// Artifacts (optimistically) resident in this worker's cache.
+    warmed: Mutex<HashSet<String>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+struct Shared {
     manifest: Arc<Manifest>,
-    _joiner: Arc<Joiner>,
+    workers: Vec<Worker>,
+    inflight_total: Arc<AtomicUsize>,
+    peak_inflight: Arc<AtomicUsize>,
 }
 
-struct Joiner {
-    tx: Sender<Msg>,
-    handle: Option<JoinHandle<()>>,
-}
-
-impl Drop for Joiner {
+impl Drop for Shared {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        for w in &self.workers {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        for w in &self.workers {
+            if let Some(h) = w.handle.lock().unwrap().take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
+/// Cloneable, `Send` handle to the engine worker pool.
+#[derive(Clone)]
+pub struct Engine {
+    shared: Arc<Shared>,
+}
+
 impl Engine {
-    /// Start the engine thread: load the manifest, spin up the PJRT CPU
-    /// client, optionally pre-compile artifacts.
+    /// Start the engine: load (or synthesize) the manifest and spin up the
+    /// worker pool.
     pub fn start(config: EngineConfig) -> Result<Engine> {
         let manifest = match &config.artifacts_dir {
             Some(d) => Manifest::load(d)?,
-            None => Manifest::discover()?,
+            None => match Manifest::discover_path() {
+                Some(d) => Manifest::load(d)?,
+                None => Manifest::builtin(),
+            },
         };
         let manifest = Arc::new(manifest);
-        let (tx, rx) = channel::<Msg>();
-        let thread_manifest = Arc::clone(&manifest);
-        let (ready_tx, ready_rx) = oneshot::channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("ftgemm-engine".into())
-            .spawn(move || {
-                let mut worker = match EngineWorker::new(thread_manifest) {
-                    Ok(w) => {
-                        let _ = ready_tx.send(Ok(()));
-                        w
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        Msg::Exec(req, reply) => {
-                            let _ = reply.send(worker.execute(&req));
+        let n = config.workers.max(1);
+        let inflight_total = Arc::new(AtomicUsize::new(0));
+        let peak_inflight = Arc::new(AtomicUsize::new(0));
+
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = channel::<Msg>();
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let (ready_tx, ready_rx) = oneshot::channel::<Result<()>>();
+            let thread_manifest = Arc::clone(&manifest);
+            let thread_inflight = Arc::clone(&inflight);
+            let thread_total = Arc::clone(&inflight_total);
+            let backend_kind = config.backend;
+            let handle = std::thread::Builder::new()
+                .name(format!("ftgemm-engine-{i}"))
+                .spawn(move || {
+                    // Backends may hold thread-confined (Rc-based) client
+                    // state, so construction happens here, in-thread.
+                    let mut worker = EngineWorker::new(
+                        thread_manifest,
+                        backend::create(backend_kind),
+                    );
+                    let _ = ready_tx.send(Ok(()));
+                    while let Ok(msg) = rx.recv() {
+                        match msg {
+                            Msg::Exec(req, reply) => {
+                                let out = worker.execute(req);
+                                thread_inflight.fetch_sub(1, Ordering::SeqCst);
+                                thread_total.fetch_sub(1, Ordering::SeqCst);
+                                let _ = reply.send(out);
+                            }
+                            Msg::Warm(name, reply) => {
+                                let _ = reply.send(worker.warm(&name));
+                            }
+                            Msg::Stats(reply) => {
+                                let _ = reply.send(worker.stats);
+                            }
+                            Msg::Shutdown => break,
                         }
-                        Msg::Warm(name, reply) => {
-                            let _ = reply.send(worker.warm(&name));
-                        }
-                        Msg::Stats(reply) => {
-                            let _ = reply.send(worker.stats);
-                        }
-                        Msg::Shutdown => break,
                     }
-                }
-            })
-            .context("spawn engine thread")?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("engine thread died during startup"))??;
+                })
+                .context("spawn engine worker thread")?;
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("engine worker {i} died during startup"))??;
+            workers.push(Worker {
+                tx,
+                inflight,
+                warmed: Mutex::new(HashSet::new()),
+                handle: Mutex::new(Some(handle)),
+            });
+        }
+
         let engine = Engine {
-            tx: tx.clone(),
-            manifest,
-            _joiner: Arc::new(Joiner { tx, handle: Some(handle) }),
+            shared: Arc::new(Shared { manifest, workers, inflight_total, peak_inflight }),
         };
         for name in &config.precompile {
             engine.warm(name)?;
@@ -168,91 +236,167 @@ impl Engine {
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        &self.shared.manifest
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn worker_count(&self) -> usize {
+        self.shared.workers.len()
+    }
+
+    /// Highest number of simultaneously queued/running requests observed —
+    /// the concurrency witness the pipeline tests and benches read.
+    pub fn peak_inflight(&self) -> usize {
+        self.shared.peak_inflight.load(Ordering::SeqCst)
     }
 
     /// Execute an artifact; blocks until the result is back.
     pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<ExecOutput> {
-        let (otx, orx) = oneshot::channel();
-        self.tx
-            .send(Msg::Exec(ExecRequest { artifact: artifact.into(), inputs }, otx))
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        orx.recv().map_err(|_| anyhow!("engine dropped request"))?
+        self.submit(artifact, inputs)?.wait()
     }
 
-    /// Compile an artifact ahead of time; returns compile duration
-    /// (zero if already cached).
+    /// Queue an execution on the affinity-chosen worker; returns
+    /// immediately with a [`Pending`] handle.
+    pub fn submit(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Pending> {
+        let (otx, orx) = oneshot::channel();
+        let w = &self.shared.workers[self.pick_worker(artifact)];
+        // Affinity bookkeeping only matters with siblings to choose from;
+        // skip the lock (and the allocation when already marked) otherwise.
+        if self.shared.workers.len() > 1 {
+            let mut warmed = w.warmed.lock().unwrap();
+            if !warmed.contains(artifact) {
+                warmed.insert(artifact.to_string());
+            }
+        }
+        w.inflight.fetch_add(1, Ordering::SeqCst);
+        let now = self.shared.inflight_total.fetch_add(1, Ordering::SeqCst) + 1;
+        self.shared.peak_inflight.fetch_max(now, Ordering::SeqCst);
+        let send = w
+            .tx
+            .send(Msg::Exec(ExecRequest { artifact: artifact.into(), inputs }, otx));
+        if send.is_err() {
+            w.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.shared.inflight_total.fetch_sub(1, Ordering::SeqCst);
+            bail!("engine worker thread gone");
+        }
+        Ok(Pending { rx: orx })
+    }
+
+    /// Warm-affine worker choice: idle warm > idle cold > least-loaded
+    /// warm > least-loaded overall.
+    fn pick_worker(&self, artifact: &str) -> usize {
+        let workers = &self.shared.workers;
+        if workers.len() == 1 {
+            return 0;
+        }
+        let mut best_any = 0usize;
+        let mut best_any_load = usize::MAX;
+        let mut best_warm: Option<usize> = None;
+        let mut best_warm_load = usize::MAX;
+        for (i, w) in workers.iter().enumerate() {
+            let load = w.inflight.load(Ordering::SeqCst);
+            let warm = w.warmed.lock().unwrap().contains(artifact);
+            if warm && load < best_warm_load {
+                best_warm = Some(i);
+                best_warm_load = load;
+            }
+            if load < best_any_load {
+                best_any = i;
+                best_any_load = load;
+            }
+        }
+        match best_warm {
+            Some(i) if best_warm_load == 0 => i,
+            _ if best_any_load == 0 => best_any,
+            Some(i) => i,
+            None => best_any,
+        }
+    }
+
+    /// Compile an artifact ahead of time on EVERY worker; returns the total
+    /// compile time (zero when already cached everywhere).
     pub fn warm(&self, artifact: &str) -> Result<Duration> {
-        let (otx, orx) = oneshot::channel();
-        self.tx
-            .send(Msg::Warm(artifact.into(), otx))
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        orx.recv().map_err(|_| anyhow!("engine dropped request"))?
+        let mut total = Duration::ZERO;
+        for w in &self.shared.workers {
+            let (otx, orx) = oneshot::channel();
+            w.tx
+                .send(Msg::Warm(artifact.into(), otx))
+                .map_err(|_| anyhow!("engine worker thread gone"))?;
+            let d = orx.recv().map_err(|_| anyhow!("engine dropped request"))??;
+            if !d.is_zero() {
+                w.warmed.lock().unwrap().insert(artifact.to_string());
+            }
+            total += d;
+        }
+        Ok(total)
     }
 
+    /// Aggregate statistics over the pool.
     pub fn stats(&self) -> Result<EngineStats> {
-        let (otx, orx) = oneshot::channel();
-        self.tx
-            .send(Msg::Stats(otx))
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        orx.recv().map_err(|_| anyhow!("engine dropped request"))
+        let mut agg = EngineStats::default();
+        for s in self.stats_per_worker()? {
+            agg.merge(&s);
+        }
+        Ok(agg)
+    }
+
+    /// Per-worker statistics, pool order.
+    pub fn stats_per_worker(&self) -> Result<Vec<EngineStats>> {
+        self.shared
+            .workers
+            .iter()
+            .map(|w| {
+                let (otx, orx) = oneshot::channel();
+                w.tx
+                    .send(Msg::Stats(otx))
+                    .map_err(|_| anyhow!("engine worker thread gone"))?;
+                orx.recv().map_err(|_| anyhow!("engine dropped request"))
+            })
+            .collect()
     }
 }
 
-/// Thread-confined worker: owns all PJRT state.
+/// Thread-confined worker: owns the backend and its compiled cache.
 struct EngineWorker {
-    client: xla::PjRtClient,
     manifest: Arc<Manifest>,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    backend: Box<dyn Backend>,
     stats: EngineStats,
 }
 
 impl EngineWorker {
-    fn new(manifest: Arc<Manifest>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        log::info!(
-            "engine up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(EngineWorker { client, manifest, cache: HashMap::new(), stats: EngineStats::default() })
+    fn new(manifest: Arc<Manifest>, backend: Box<dyn Backend>) -> Self {
+        log::info!("engine worker up: backend={}", backend.name());
+        EngineWorker { manifest, backend, stats: EngineStats::default() }
     }
 
     fn warm(&mut self, name: &str) -> Result<Duration> {
-        if self.cache.contains_key(name) {
+        let art = self.manifest.get(name)?.clone();
+        let t0 = Instant::now();
+        if !self.backend.compile(&art)? {
             return Ok(Duration::ZERO);
         }
-        let art = self.manifest.get(name)?;
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            art.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {:?}: {e:?}", art.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let dt = t0.elapsed();
+        // clamp away a zero reading: "compiled" must be distinguishable
+        // from "was already cached" at coarse clock resolution
+        let dt = t0.elapsed().max(Duration::from_nanos(1));
         self.stats.compiles += 1;
         self.stats.total_compile_secs += dt.as_secs_f64();
         log::debug!("compiled {name} in {dt:?}");
-        self.cache.insert(name.to_string(), exe);
         Ok(dt)
     }
 
-    fn execute(&mut self, req: &ExecRequest) -> Result<ExecOutput> {
-        let art = self.manifest.get(&req.artifact)?.clone();
-        // shape-check against the manifest before touching PJRT
-        if req.inputs.len() != art.inputs.len() {
+    fn execute(&mut self, req: ExecRequest) -> Result<ExecOutput> {
+        let ExecRequest { artifact, inputs } = req;
+        let art = self.manifest.get(&artifact)?.clone();
+        // shape-check against the manifest before touching the backend
+        if inputs.len() != art.inputs.len() {
             bail!(
                 "{}: expected {} inputs, got {}",
                 art.name,
                 art.inputs.len(),
-                req.inputs.len()
+                inputs.len()
             );
         }
-        for (i, (have, want)) in req.inputs.iter().zip(&art.inputs).enumerate() {
+        for (i, (have, want)) in inputs.iter().zip(&art.inputs).enumerate() {
             if have.shape != want.shape {
                 bail!(
                     "{}: input {i} shape {:?} != manifest {:?}",
@@ -262,60 +406,28 @@ impl EngineWorker {
                 );
             }
         }
-        let compile_time = match self.warm(&req.artifact)? {
+        let compile_time = match self.warm(&artifact)? {
             d if d.is_zero() => None,
             d => Some(d),
         };
-        let exe = self.cache.get(&req.artifact).expect("warmed above");
-
-        let literals = req
-            .inputs
-            .iter()
-            .map(|t| {
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::F32,
-                    &t.shape,
-                    bytes,
-                )
-                .map_err(|e| anyhow!("literal: {e:?}"))
-            })
-            .collect::<Result<Vec<_>>>()?;
 
         let t0 = Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e:?}", art.name))?;
-        let root = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let outputs = self.backend.execute(&art, inputs)?;
         let exec_time = t0.elapsed();
 
-        // aot.py lowers with return_tuple=True: root is always a tuple.
-        let parts = root
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple: {e:?}"))?;
-        if parts.len() != art.outputs.len() {
+        if outputs.len() != art.outputs.len() {
             bail!(
-                "{}: {} outputs from device, manifest says {}",
+                "{}: {} outputs from backend, manifest says {}",
                 art.name,
-                parts.len(),
+                outputs.len(),
                 art.outputs.len()
             );
         }
-        let outputs = parts
-            .into_iter()
-            .zip(&art.outputs)
-            .map(|(lit, spec)| {
-                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("readback: {e:?}"))?;
-                if data.len() != spec.elements() {
-                    bail!("{}: output size {} != {}", art.name, data.len(), spec.elements());
-                }
-                Ok(Tensor::new(spec.shape.clone(), data))
-            })
-            .collect::<Result<Vec<_>>>()?;
+        for (t, spec) in outputs.iter().zip(&art.outputs) {
+            if t.data.len() != spec.elements() {
+                bail!("{}: output size {} != {}", art.name, t.data.len(), spec.elements());
+            }
+        }
 
         self.stats.executions += 1;
         self.stats.total_exec_secs += exec_time.as_secs_f64();
@@ -325,12 +437,15 @@ impl EngineWorker {
 
 #[cfg(test)]
 mod tests {
-    //! Engine tests run only when artifacts exist (`make artifacts`); the
-    //! heavier integration suite lives in `rust/tests/`.
     use super::*;
 
-    fn engine() -> Option<Engine> {
-        Engine::start(EngineConfig::default()).ok()
+    fn engine() -> Engine {
+        Engine::start(EngineConfig::default()).expect("reference engine always starts")
+    }
+
+    fn engine_with_workers(n: usize) -> Engine {
+        Engine::start(EngineConfig { workers: n, ..Default::default() })
+            .expect("reference engine always starts")
     }
 
     #[test]
@@ -347,7 +462,7 @@ mod tests {
 
     #[test]
     fn executes_plain_gemm_against_host_matmul() {
-        let Some(eng) = engine() else { return };
+        let eng = engine();
         let a = crate::abft::Matrix::rand_uniform(64, 64, 1);
         let b = crate::abft::Matrix::rand_uniform(64, 64, 2);
         let out = eng
@@ -366,7 +481,7 @@ mod tests {
 
     #[test]
     fn rejects_wrong_input_shape() {
-        let Some(eng) = engine() else { return };
+        let eng = engine();
         let err = eng
             .execute("gemm_small", vec![Tensor::zeros(vec![2, 2]), Tensor::zeros(vec![64, 64])])
             .unwrap_err();
@@ -375,7 +490,7 @@ mod tests {
 
     #[test]
     fn warm_is_idempotent_and_caches() {
-        let Some(eng) = engine() else { return };
+        let eng = engine();
         let d1 = eng.warm("gemm_medium").unwrap();
         let d2 = eng.warm("gemm_medium").unwrap();
         assert!(d1 > Duration::ZERO);
@@ -385,10 +500,47 @@ mod tests {
     }
 
     #[test]
+    fn warm_reaches_every_worker() {
+        let eng = engine_with_workers(3);
+        eng.warm("gemm_small").unwrap();
+        let per = eng.stats_per_worker().unwrap();
+        assert_eq!(per.len(), 3);
+        assert!(per.iter().all(|s| s.compiles == 1));
+    }
+
+    #[test]
+    fn pool_spreads_same_artifact_across_workers() {
+        let eng = engine_with_workers(4);
+        let a = crate::abft::Matrix::rand_uniform(64, 64, 3);
+        let b = crate::abft::Matrix::rand_uniform(64, 64, 4);
+        let mk = || {
+            vec![
+                Tensor::new(vec![64, 64], a.data().to_vec()),
+                Tensor::new(vec![64, 64], b.data().to_vec()),
+            ]
+        };
+        // queue a burst without waiting: the affinity policy must spill
+        // beyond worker 0 once it is busy
+        let pending: Vec<Pending> =
+            (0..8).map(|_| eng.submit("gemm_small", mk()).unwrap()).collect();
+        for p in pending {
+            p.wait().unwrap();
+        }
+        let busy = eng
+            .stats_per_worker()
+            .unwrap()
+            .iter()
+            .filter(|s| s.executions > 0)
+            .count();
+        assert!(busy >= 2, "burst stayed on {busy} worker(s)");
+        assert!(eng.peak_inflight() >= 2);
+    }
+
+    #[test]
     fn handle_is_send_and_clone() {
         fn assert_send<T: Send>() {}
         assert_send::<Engine>();
-        let Some(eng) = engine() else { return };
+        let eng = engine();
         let e2 = eng.clone();
         let h = std::thread::spawn(move || e2.warm("gemm_small").map(|_| ()));
         h.join().unwrap().unwrap();

@@ -70,6 +70,9 @@ pub struct Artifact {
     pub ft_level: Option<String>,
     pub max_inj: usize,
     pub verify_every: usize,
+    /// Checksum protection sub-tile for FT kernels; 0 when not applicable.
+    pub sub_m: usize,
+    pub sub_n: usize,
 }
 
 impl Artifact {
@@ -99,15 +102,25 @@ impl Manifest {
     /// Locate the artifacts directory: `$FTGEMM_ARTIFACTS`, `./artifacts`,
     /// or `../artifacts` (tests run from the crate root or target dir).
     pub fn discover() -> Result<Manifest> {
+        match Self::discover_path() {
+            Some(dir) => Self::load(dir),
+            None => bail!(
+                "artifacts/manifest.json not found; run `make artifacts` or set FTGEMM_ARTIFACTS"
+            ),
+        }
+    }
+
+    /// Where [`Self::discover`] would load from, without loading. `None`
+    /// when no artifacts directory exists (the engine then falls back to
+    /// [`Self::builtin`]).
+    pub fn discover_path() -> Option<PathBuf> {
         if let Ok(dir) = std::env::var("FTGEMM_ARTIFACTS") {
-            return Self::load(dir);
+            return Some(PathBuf::from(dir));
         }
-        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
-            if Path::new(cand).join("manifest.json").exists() {
-                return Self::load(cand);
-            }
-        }
-        bail!("artifacts/manifest.json not found; run `make artifacts` or set FTGEMM_ARTIFACTS")
+        ["artifacts", "../artifacts", "../../artifacts"]
+            .iter()
+            .find(|cand| Path::new(cand).join("manifest.json").exists())
+            .map(PathBuf::from)
     }
 
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
@@ -171,6 +184,186 @@ impl Manifest {
                 }
         })
     }
+}
+
+// ---------------------------------------------------------------------
+// Built-in manifest: the same registry `python/compile/model.py` lowers,
+// described without the HLO files. Lets the engine serve through the
+// reference backend when `make artifacts` has not run (and in environments
+// without JAX at all) — see DESIGN.md "Substitutions".
+// ---------------------------------------------------------------------
+
+/// Fused-FT kernels track up to this many injected errors per execution
+/// (python `params.MAX_INJ` — keep in sync).
+pub const MAX_INJ: usize = 8;
+
+/// Default verification interval in k-steps (python `params.VERIFY_EVERY`).
+pub const VERIFY_EVERY: usize = 8;
+
+/// K_s panel widths for the non-fused Ding baseline (python `DING_KS`).
+pub const DING_KS: [(&str, usize); 3] = [("medium", 64), ("large", 128), ("huge", 256)];
+
+fn tensor(shape: &[usize], role: &str) -> TensorSpec {
+    TensorSpec { shape: shape.to_vec(), dtype: "float32".into(), role: role.into() }
+}
+
+impl Manifest {
+    /// The registry of `python/compile/model.py`, built in-process: every
+    /// artifact the AOT pipeline would lower, with the same names, shapes,
+    /// roles, and FT metadata. `file` paths are placeholders — only the
+    /// reference backend can execute a builtin manifest.
+    pub fn builtin() -> Manifest {
+        use crate::codegen::select::BUCKETS;
+
+        let dir = PathBuf::from("<builtin>");
+        let mut list: Vec<Artifact> = Vec::new();
+
+        for b in BUCKETS {
+            list.push(builtin_gemm(&b));
+            list.push(builtin_ft(&b, "tb", true, VERIFY_EVERY, None));
+        }
+        for name in ["medium", "huge"] {
+            let b = BUCKETS.iter().find(|b| b.name() == name).copied().expect("bucket");
+            list.push(builtin_ft(&b, "warp", true, VERIFY_EVERY, None));
+            list.push(builtin_ft(&b, "thread", true, VERIFY_EVERY, None));
+            list.push(builtin_ft(&b, "tb", false, VERIFY_EVERY, None));
+        }
+        for (name, ks) in DING_KS {
+            let b = BUCKETS.iter().find(|b| b.name() == name).copied().expect("bucket");
+            list.extend(builtin_ding(&b, ks));
+        }
+        // verify-interval ablation variants (bucket suffixed so the router
+        // never picks them; the ablation bench addresses them by name)
+        let medium = BUCKETS.iter().find(|b| b.name() == "medium").copied().expect("bucket");
+        for ve in [1, 4, 16] {
+            list.push(builtin_ft(&medium, "tb", true, ve, Some(format!("medium_ve{ve}"))));
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for art in list {
+            let replaced = artifacts.insert(art.name.clone(), art);
+            debug_assert!(replaced.is_none(), "duplicate builtin artifact name");
+        }
+        Manifest { dir, artifacts }
+    }
+
+    /// True when this manifest came from [`Self::builtin`] (no HLO files on
+    /// disk).
+    pub fn is_builtin(&self) -> bool {
+        self.dir == Path::new("<builtin>")
+    }
+}
+
+fn builtin_gemm(b: &crate::codegen::select::Bucket) -> Artifact {
+    let (m, n, k) = (b.m, b.n, b.k);
+    Artifact {
+        name: format!("gemm_{}", b.name()),
+        file: PathBuf::from("<builtin>").join(format!("gemm_{}.hlo.txt", b.name())),
+        kind: ArtifactKind::Gemm,
+        bucket: b.name().to_string(),
+        m,
+        n,
+        k,
+        ks: 0,
+        inputs: vec![tensor(&[m, k], ""), tensor(&[k, n], "")],
+        outputs: vec![tensor(&[m, n], "c")],
+        params: Some(b.class.params()),
+        ft_level: None,
+        max_inj: 0,
+        verify_every: 0,
+        sub_m: 0,
+        sub_n: 0,
+    }
+}
+
+fn builtin_ft(
+    b: &crate::codegen::select::Bucket,
+    level: &str,
+    correct: bool,
+    verify_every: usize,
+    bucket_override: Option<String>,
+) -> Artifact {
+    let (m, n, k) = (b.m, b.n, b.k);
+    let params = b.class.params();
+    let (sub_m, sub_n) = params.sub_tile(level).expect("known FT level");
+    let (gm, gn) = (m.div_ceil(sub_m), n.div_ceil(sub_n));
+    let name = if correct {
+        match &bucket_override {
+            Some(label) => format!("ftgemm_{level}_{label}"),
+            None => format!("ftgemm_{level}_{}", b.name()),
+        }
+    } else {
+        format!("ftdetect_{}", b.name())
+    };
+    Artifact {
+        name: name.clone(),
+        file: PathBuf::from("<builtin>").join(format!("{name}.hlo.txt")),
+        kind: if correct { ArtifactKind::FtGemm } else { ArtifactKind::FtDetect },
+        bucket: bucket_override.unwrap_or_else(|| b.name().to_string()),
+        m,
+        n,
+        k,
+        ks: 0,
+        inputs: vec![tensor(&[m, k], ""), tensor(&[k, n], ""), tensor(&[MAX_INJ, 4], "")],
+        outputs: vec![
+            tensor(&[m, n], "c"),
+            tensor(&[m], "cr"),
+            tensor(&[n], "cc"),
+            tensor(&[gm, gn], "errcount"),
+        ],
+        params: Some(params),
+        ft_level: Some(level.to_string()),
+        max_inj: MAX_INJ,
+        verify_every,
+        sub_m,
+        sub_n,
+    }
+}
+
+fn builtin_ding(b: &crate::codegen::select::Bucket, ks: usize) -> Vec<Artifact> {
+    let (m, n, k) = (b.m, b.n, b.k);
+    let base = |name: String, kind: ArtifactKind, inputs, outputs| Artifact {
+        file: PathBuf::from("<builtin>").join(format!("{name}.hlo.txt")),
+        name,
+        kind,
+        bucket: b.name().to_string(),
+        m,
+        n,
+        k,
+        ks,
+        inputs,
+        outputs,
+        params: Some(b.class.params()),
+        ft_level: None,
+        max_inj: 0,
+        verify_every: 0,
+        sub_m: 0,
+        sub_n: 0,
+    };
+    vec![
+        base(
+            format!("ding_encode_{}", b.name()),
+            ArtifactKind::DingEncode,
+            vec![tensor(&[m, k], ""), tensor(&[k, n], "")],
+            vec![tensor(&[m + 1, k], "ac"), tensor(&[k, n + 1], "br")],
+        ),
+        base(
+            format!("ding_step_{}", b.name()),
+            ArtifactKind::DingStep,
+            vec![
+                tensor(&[m + 1, n + 1], ""),
+                tensor(&[m + 1, ks], ""),
+                tensor(&[ks, n + 1], ""),
+            ],
+            vec![tensor(&[m + 1, n + 1], "cf")],
+        ),
+        base(
+            format!("ding_verify_{}", b.name()),
+            ArtifactKind::DingVerify,
+            vec![tensor(&[m + 1, n + 1], "")],
+            vec![tensor(&[m + 1, n + 1], "cf"), tensor(&[], "errcount")],
+        ),
+    ]
 }
 
 fn parse_tensor(j: &Json) -> Result<TensorSpec> {
@@ -249,6 +442,8 @@ fn parse_artifact(j: &Json, dir: &Path) -> Result<Artifact> {
             .map(str::to_string),
         max_inj: dim("max_inj"),
         verify_every: dim("verify_every"),
+        sub_m: dim("sub_m"),
+        sub_n: dim("sub_n"),
     })
 }
 
@@ -323,6 +518,37 @@ mod tests {
     #[test]
     fn rejects_bad_format_version() {
         assert!(Manifest::parse(r#"{"format": 9, "artifacts": []}"#, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn builtin_manifest_mirrors_python_registry() {
+        let m = Manifest::builtin();
+        assert!(m.is_builtin());
+        assert_eq!(m.len(), 28, "5 gemm + 5 ft_tb + 6 level/detect + 9 ding + 3 ablation");
+        for b in crate::codegen::select::BUCKETS {
+            assert!(m.find(ArtifactKind::Gemm, b.name(), None).is_some(), "{}", b.name());
+            assert!(m.find(ArtifactKind::FtGemm, b.name(), Some("tb")).is_some());
+        }
+        // warp/thread/detect only where the scheme comparison runs
+        assert!(m.find(ArtifactKind::FtGemm, "medium", Some("warp")).is_some());
+        assert!(m.find(ArtifactKind::FtGemm, "huge", Some("thread")).is_some());
+        assert!(m.find(ArtifactKind::FtDetect, "medium", None).is_some());
+        assert!(m.find(ArtifactKind::FtDetect, "small", None).is_none());
+        // ding stages for medium/large/huge only
+        assert!(m.find(ArtifactKind::DingStep, "medium", None).is_some());
+        assert!(m.find(ArtifactKind::DingEncode, "small", None).is_none());
+        let ft = m.get("ftgemm_tb_huge").unwrap();
+        assert_eq!((ft.sub_m, ft.sub_n), (128, 128));
+        assert_eq!(ft.max_inj, MAX_INJ);
+        assert_eq!(ft.output_index("errcount"), Some(3));
+        // ablation variants are invisible to the router (suffixed bucket)
+        let ve = m.get("ftgemm_tb_medium_ve16").unwrap();
+        assert_eq!(ve.verify_every, 16);
+        assert_eq!(ve.bucket, "medium_ve16");
+        // ding shapes carry the encoded row/column
+        let step = m.get("ding_step_huge").unwrap();
+        assert_eq!(step.ks, 256);
+        assert_eq!(step.inputs[1].shape, vec![513, 256]);
     }
 
     #[test]

@@ -1,21 +1,29 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
-//! executes them from the rust hot path.
+//! Runtime: loads the AOT artifact manifest and executes kernels from the
+//! rust hot path through a worker pool.
 //!
 //! Structure:
 //! * [`manifest`] — parses `artifacts/manifest.json` (shapes, roles, tile
-//!   params, FT metadata) produced by `python/compile/aot.py`.
-//! * [`engine`] — the execution engine. PJRT handles in the `xla` crate are
-//!   `Rc`-based (not `Send`), so a dedicated **engine thread** owns the
-//!   `PjRtClient` and the compiled-executable cache; the rest of the
-//!   process talks to it through an [`Engine`] handle over mpsc channels
-//!   (the vLLM engine-loop pattern). Compilation happens once per artifact
-//!   (lazily or eagerly at startup) and is cached thereafter.
+//!   params, FT metadata) produced by `python/compile/aot.py`, or
+//!   synthesizes the same registry in-process ([`Manifest::builtin`]) when
+//!   artifacts are absent.
+//! * [`backend`] — pluggable kernel executors. Kernel clients (PJRT) are
+//!   `Rc`-based and thread-confined, so each engine worker constructs its
+//!   own backend instance in-thread. The always-available
+//!   [`backend::ReferenceBackend`] executes the artifact contract
+//!   semantically on the host (see DESIGN.md "Substitutions").
+//! * [`engine`] — the execution engine: a configurable pool of worker
+//!   threads (the vLLM engine-loop pattern, generalized from one thread to
+//!   N), each owning one backend + compiled-executable cache, with
+//!   warm-affine request dispatch. Compilation happens once per (artifact,
+//!   worker), lazily or eagerly at startup, and is cached thereafter.
 //!
-//! Python never runs here: the HLO text was produced at build time and the
-//! engine only parses/compiles/executes it.
+//! Python never runs here: kernels were lowered at build time and the
+//! engine only compiles/executes them.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, EngineConfig, ExecOutput, ExecRequest};
+pub use backend::{Backend, BackendKind, ReferenceBackend};
+pub use engine::{Engine, EngineConfig, ExecOutput, ExecRequest, Pending};
 pub use manifest::{Artifact, ArtifactKind, Manifest, TensorSpec};

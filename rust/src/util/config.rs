@@ -143,6 +143,9 @@ impl Config {
         if let Some(n) = self.usize("coordinator.max_recomputes")? {
             cfg.max_recomputes = n;
         }
+        if let Some(n) = self.usize("coordinator.scheduler_threads")? {
+            cfg.scheduler_threads = n;
+        }
         let mut th = Thresholds::default();
         if let Some(x) = self.num("coordinator.threshold_rel")? {
             th.rel = x as f32;
@@ -167,6 +170,12 @@ impl Config {
                 .filter(|s| !s.is_empty())
                 .collect();
         }
+        if let Some(n) = self.usize("engine.workers")? {
+            if n == 0 {
+                bail!("engine.workers must be >= 1");
+            }
+            cfg.workers = n;
+        }
         Ok(cfg)
     }
 
@@ -179,8 +188,8 @@ impl Config {
             }
             cfg.max_batch = n;
         }
-        if let Some(us) = self.usize("batcher.idle_poll_us")? {
-            cfg.idle_poll = std::time::Duration::from_micros(us as u64);
+        if let Some(us) = self.usize("batcher.batch_window_us")? {
+            cfg.batch_window = std::time::Duration::from_micros(us as u64);
         }
         Ok(cfg)
     }
@@ -228,16 +237,18 @@ mod tests {
 [engine]
 artifacts_dir = "artifacts"          # where make artifacts wrote
 precompile = "gemm_medium, ftgemm_tb_medium"
+workers = 4
 
 [coordinator]
 ft_level = "warp"
 host_verify = true
 max_recomputes = 3
 threshold_rel = 2e-4
+scheduler_threads = 6
 
 [batcher]
 max_batch = 32
-idle_poll_us = 500
+batch_window_us = 500
 "#;
 
     #[test]
@@ -256,12 +267,14 @@ idle_poll_us = 500
         assert_eq!(coord.ft_level, "warp");
         assert!(coord.host_verify);
         assert_eq!(coord.max_recomputes, 3);
+        assert_eq!(coord.scheduler_threads, 6);
         assert!((coord.thresholds.rel - 2e-4).abs() < 1e-9);
         let eng = c.engine().unwrap();
         assert_eq!(eng.precompile, vec!["gemm_medium", "ftgemm_tb_medium"]);
+        assert_eq!(eng.workers, 4);
         let b = c.batcher().unwrap();
         assert_eq!(b.max_batch, 32);
-        assert_eq!(b.idle_poll, std::time::Duration::from_micros(500));
+        assert_eq!(b.batch_window, std::time::Duration::from_micros(500));
     }
 
     #[test]
@@ -300,6 +313,8 @@ idle_poll_us = 500
         assert!(c.coordinator().is_err());
         let c = Config::parse("[batcher]\nmax_batch = 0").unwrap();
         assert!(c.batcher().is_err());
+        let c = Config::parse("[engine]\nworkers = 0").unwrap();
+        assert!(c.engine().is_err());
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! End-to-end integration: engine + coordinator + batcher + ding baseline
-//! against the real AOT artifacts. Requires `make artifacts` (the suite
-//! fails loudly if they're missing — CI must build them first).
+//! End-to-end integration: engine pool + planner/scheduler + coordinator +
+//! batcher + ding baseline. Runs against the AOT artifacts when `make
+//! artifacts` has been run, and against the built-in manifest + reference
+//! backend otherwise — the serving semantics under test are identical.
 
 use std::sync::OnceLock;
 
@@ -15,11 +16,12 @@ use ftgemm::runtime::{Engine, EngineConfig};
 fn engine() -> Engine {
     static ENGINE: OnceLock<Engine> = OnceLock::new();
     ENGINE
-        .get_or_init(|| {
-            Engine::start(EngineConfig::default())
-                .expect("artifacts missing — run `make artifacts` first")
-        })
+        .get_or_init(|| Engine::start(EngineConfig::default()).expect("engine starts"))
         .clone()
+}
+
+fn pool_engine(workers: usize) -> Engine {
+    Engine::start(EngineConfig { workers, ..Default::default() }).expect("engine starts")
 }
 
 fn coordinator() -> Coordinator {
@@ -406,4 +408,82 @@ fn oversize_online_ft_corrects_in_owning_block() {
     let out = coord.gemm_with_faults(&a, &b, FtPolicy::Online, &inj).unwrap();
     assert!(out.errors_corrected >= 1);
     check_close(&out.c, &want, 5e-2, "split + injected");
+}
+
+// ---------------------------------------------------------------------
+// The plan -> schedule -> execute pipeline over the engine worker pool
+// ---------------------------------------------------------------------
+
+#[test]
+fn split_gemm_executes_blocks_concurrently_with_pool() {
+    // 4 workers, 8 independent huge blocks: the engine must observe
+    // overlapping executions (the concurrency the refactor exists for).
+    let engine = pool_engine(4);
+    let coord = Coordinator::new(engine.clone(), CoordinatorConfig::default());
+    let a = Matrix::rand_uniform(1024, 1024, 94);
+    let b = Matrix::rand_uniform(1024, 1024, 95);
+    let out = coord.gemm(&a, &b, FtPolicy::None).unwrap();
+    assert_eq!(out.kernel_launches, 8);
+    check_close(&out.c, &a.matmul(&b), 1e-2, "pooled split");
+    assert!(
+        engine.peak_inflight() >= 2,
+        "blocks never overlapped (peak inflight {})",
+        engine.peak_inflight()
+    );
+    let busy = engine
+        .stats_per_worker()
+        .unwrap()
+        .iter()
+        .filter(|s| s.executions > 0)
+        .count();
+    assert!(busy >= 2, "all blocks served by {busy} worker(s)");
+}
+
+#[test]
+fn pool_results_match_single_worker_results() {
+    let a = Matrix::rand_uniform(700, 600, 96);
+    let b = Matrix::rand_uniform(600, 650, 97);
+    let single = Coordinator::new(pool_engine(1), CoordinatorConfig::default())
+        .gemm(&a, &b, FtPolicy::Online)
+        .unwrap();
+    let pooled = Coordinator::new(pool_engine(4), CoordinatorConfig::default())
+        .gemm(&a, &b, FtPolicy::Online)
+        .unwrap();
+    assert_eq!(single.kernel_launches, pooled.kernel_launches);
+    assert_eq!(single.buckets, pooled.buckets);
+    // accumulation order differs (completion order), so roundoff-level drift
+    check_close(&pooled.c, &single.c, 1e-3, "pool determinism");
+}
+
+#[test]
+fn plan_introspection_matches_execution() {
+    let coord = coordinator();
+    let plan = coord.plan(600, 600, 600, FtPolicy::Online, &InjectionPlan::none()).unwrap();
+    assert!(plan.split);
+    assert_eq!(plan.nodes.len(), 8);
+    assert_eq!(plan.roots(), 8);
+    let a = Matrix::rand_uniform(600, 600, 98);
+    let b = Matrix::rand_uniform(600, 600, 99);
+    let out = coord.gemm(&a, &b, FtPolicy::Online).unwrap();
+    assert_eq!(out.kernel_launches as usize, plan.nodes.len());
+    assert_eq!(out.buckets, plan.block_buckets());
+}
+
+#[test]
+fn batcher_rides_the_same_pipeline_under_a_pool() {
+    let coord = Coordinator::new(pool_engine(2), CoordinatorConfig::default());
+    let batcher = Batcher::start(coord.clone(), BatcherConfig::default());
+    let mut tickets = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..4u64 {
+        let a = Matrix::rand_uniform(600, 600, 300 + i);
+        let b = Matrix::rand_uniform(600, 600, 400 + i);
+        wants.push(a.matmul(&b));
+        tickets.push(batcher.submit(a, b, FtPolicy::None, InjectionPlan::none()).unwrap());
+    }
+    for (t, want) in tickets.into_iter().zip(&wants) {
+        check_close(&t.wait().unwrap().c, want, 1e-2, "batched split");
+    }
+    // every split request went through the scheduler: 8 launches each
+    assert_eq!(coord.counters().snapshot().executions, 4 * 8);
 }

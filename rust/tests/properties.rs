@@ -128,6 +128,132 @@ fn prop_route_covers_output_exactly_once() {
     });
 }
 
+/// Brute-force coverage check: within every k-partial (distinct `k0`), the
+/// blocks must tile the full output exactly once, and each (row0, col0)
+/// family must contain every k-partial.
+fn assert_exact_cover(m: usize, n: usize, k: usize) {
+    let plan = router::route(m, n, k);
+    let mut k0s: Vec<usize> = plan.blocks.iter().map(|b| b.k0).collect();
+    k0s.sort_unstable();
+    k0s.dedup();
+    for &k0 in &k0s {
+        let mut cover = vec![0u8; m * n];
+        for b in plan.blocks.iter().filter(|b| b.k0 == k0) {
+            for i in b.row0..b.row0 + b.m {
+                for j in b.col0..b.col0 + b.n {
+                    cover[i * n + j] += 1;
+                }
+            }
+        }
+        assert!(
+            cover.iter().all(|&c| c == 1),
+            "{m}x{n}x{k}: k-partial at k0={k0} does not tile the output exactly once"
+        );
+    }
+    // brute-force k_splits: every (row0, col0) family holds every k0
+    let mut families: Vec<(usize, usize)> =
+        plan.blocks.iter().map(|b| (b.row0, b.col0)).collect();
+    families.sort_unstable();
+    families.dedup();
+    for &(r0, c0) in &families {
+        let count = plan.blocks.iter().filter(|b| (b.row0, b.col0) == (r0, c0)).count();
+        assert_eq!(count, k0s.len(), "{m}x{n}x{k}: family ({r0},{c0})");
+        let ksum: usize = plan
+            .blocks
+            .iter()
+            .filter(|b| (b.row0, b.col0) == (r0, c0))
+            .map(|b| b.k)
+            .sum();
+        assert_eq!(ksum, k, "{m}x{n}x{k}: family ({r0},{c0}) k coverage");
+    }
+    assert_eq!(plan.k_splits(), k0s.len(), "{m}x{n}x{k}: k_splits");
+    assert_eq!(plan.blocks.len(), families.len() * k0s.len());
+}
+
+#[test]
+fn prop_route_exactly_once_per_k_partial() {
+    forall("route-exact-cover", |rng| {
+        let (m, n, k) =
+            (rand_dims(rng, 1, 1300), rand_dims(rng, 1, 1300), rand_dims(rng, 1, 1300));
+        assert_exact_cover(m, n, k);
+    });
+}
+
+#[test]
+fn prop_padded_flops_agree_with_brute_force() {
+    forall("route-flop-accounting", |rng| {
+        let (m, n, k) =
+            (rand_dims(rng, 1, 1300), rand_dims(rng, 1, 1300), rand_dims(rng, 1, 1300));
+        let plan = router::route(m, n, k);
+        // independent tally: walk the blocks, multiply out bucket volumes
+        let mut brute = 0.0f64;
+        for b in &plan.blocks {
+            brute += 2.0 * (b.bucket.m as f64) * (b.bucket.n as f64) * (b.bucket.k as f64);
+        }
+        assert!((plan.padded_flops() - brute).abs() < 1e-6 * brute.max(1.0));
+        assert!((plan.useful_flops() - 2.0 * (m * n * k) as f64).abs() < 1.0);
+        // padding can only add work; equality exactly when nothing is padded
+        if plan.blocks.iter().all(|b| !b.is_padded()) {
+            assert_eq!(plan.padded_flops(), plan.useful_flops(), "{m}x{n}x{k}");
+        } else {
+            assert!(plan.padded_flops() > plan.useful_flops(), "{m}x{n}x{k}");
+        }
+    });
+}
+
+#[test]
+fn prop_irregular_example_shapes_route_correctly() {
+    // the shapes examples/irregular_shapes.rs serves live, pinned here with
+    // their expected routing outcomes
+    use ftgemm::codegen::ShapeClass;
+    let cases: &[(usize, usize, usize, ShapeClass, usize, usize)] = &[
+        // (m, n, k, bucket class of block 0, blocks, k_splits)
+        (31, 17, 53, ShapeClass::Small, 1, 1),
+        (64, 64, 64, ShapeClass::Small, 1, 1),
+        (100, 90, 70, ShapeClass::Medium, 1, 1),
+        (97, 430, 211, ShapeClass::Tall, 1, 1),
+        (250, 250, 250, ShapeClass::Large, 1, 1),
+        (257, 257, 257, ShapeClass::Huge, 1, 1),
+        (640, 640, 640, ShapeClass::Huge, 8, 2),
+    ];
+    for &(m, n, k, class, blocks, k_splits) in cases {
+        let plan = router::route(m, n, k);
+        assert_eq!(plan.blocks[0].bucket.class, class, "{m}x{n}x{k}");
+        assert_eq!(plan.blocks.len(), blocks, "{m}x{n}x{k}");
+        assert_eq!(plan.k_splits(), k_splits, "{m}x{n}x{k}");
+        assert_eq!(plan.split, blocks > 1, "{m}x{n}x{k}");
+        assert_exact_cover(m, n, k);
+    }
+}
+
+#[test]
+fn prop_planner_emits_one_independent_node_per_block() {
+    use ftgemm::coordinator::plan::{NodeOp, Planner};
+    use ftgemm::coordinator::{CoordinatorConfig, FtPolicy};
+    use ftgemm::runtime::Manifest;
+
+    let manifest = Manifest::builtin();
+    let config = CoordinatorConfig::default();
+    forall("planner-node-per-block", |rng| {
+        let (m, n, k) =
+            (rand_dims(rng, 1, 1200), rand_dims(rng, 1, 1200), rand_dims(rng, 1, 1200));
+        let route = router::route(m, n, k);
+        for policy in [FtPolicy::None, FtPolicy::Online, FtPolicy::Offline] {
+            let plan = Planner::new(&manifest, &config)
+                .plan_gemm(m, n, k, policy, &ftgemm::abft::injection::InjectionPlan::none())
+                .unwrap();
+            assert_eq!(plan.nodes.len(), route.blocks.len());
+            assert_eq!(plan.roots(), plan.nodes.len(), "block nodes are independent");
+            for (node, block) in plan.nodes.iter().zip(&route.blocks) {
+                match &node.op {
+                    NodeOp::Block { block: nb, .. } => assert_eq!(nb, block),
+                    other => panic!("unexpected node {other:?}"),
+                }
+            }
+        }
+    });
+}
+
 #[test]
 fn prop_non_split_requests_use_minimal_waste_bucket() {
     forall("route-waste", |rng| {
