@@ -1,13 +1,15 @@
-//! Worker-pool scaling: the tentpole of the plan → schedule → execute
-//! refactor, live.
+//! Worker-pool scaling, two ways: within one split request, and across
+//! many concurrently submitted requests.
 //!
 //!     cargo run --release --example engine_pool
 //!
-//! Serves one oversize (split) FT-GEMM — 1024³, which the router
+//! Part 1 serves one oversize (split) FT-GEMM — 1024³, which the router
 //! decomposes into 8 huge-bucket blocks — through engines with 1, 2, and
 //! 4 workers, and prints the measured wall times next to the gpusim
-//! serving model. Works with or without AOT artifacts (reference backend
-//! fallback).
+//! serving model. Part 2 holds 8 *distinct* requests in flight at once
+//! through `Coordinator::submit`, the cross-request concurrency the
+//! submission API exists for. Works with or without AOT artifacts
+//! (reference backend fallback).
 
 use std::time::Instant;
 
@@ -45,6 +47,44 @@ fn main() -> anyhow::Result<()> {
             gpusim::pipeline_speedup(&T4, m, n, k, true, workers),
         );
     }
+
+    // --- cross-request concurrency: 8 distinct requests, one pool -------
+    println!("\n8 concurrent submitted requests (4 workers, max_inflight 8):\n");
+    let engine = Engine::start(EngineConfig { workers: 4, ..Default::default() })?;
+    let coord = Coordinator::new(
+        engine.clone(),
+        CoordinatorConfig { max_inflight: 8, ..Default::default() },
+    );
+    let mats: Vec<(Matrix, Matrix)> = (0..8u64)
+        .map(|i| {
+            (Matrix::rand_uniform(512, 512, 10 + i), Matrix::rand_uniform(512, 512, 30 + i))
+        })
+        .collect();
+    let wants: Vec<Matrix> = mats.iter().map(|(a, b)| a.matmul(b)).collect();
+    // warm the pool on the huge bucket, then time the whole wave
+    coord.gemm(&mats[0].0, &mats[0].1, FtPolicy::Online)?;
+    let t0 = Instant::now();
+    let tickets: Vec<Ticket> = mats
+        .iter()
+        .map(|(a, b)| {
+            coord.submit(GemmRequest::new(a.clone(), b.clone()).policy(FtPolicy::Online))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    println!(
+        "submitted: queue depth {} (bound {}), engine inflight {}",
+        coord.queue_depth(),
+        coord.max_inflight(),
+        engine.inflight()
+    );
+    for (t, want) in tickets.into_iter().zip(&wants) {
+        let resp = t.wait()?;
+        assert!(resp.result.c.max_abs_diff(want) < 1e-2);
+    }
+    println!(
+        "8 requests done in {:?}; engine peak inflight {}",
+        t0.elapsed(),
+        engine.peak_inflight()
+    );
     println!("\nengine_pool OK");
     Ok(())
 }

@@ -186,7 +186,7 @@ fn main() -> anyhow::Result<()> {
     let tickets: Vec<_> = (0..batches)
         .map(|bi| {
             let x = Matrix::rand_uniform(batch, 784, 1000 + bi as u64);
-            batcher.submit(x, mlp.w1.clone(), FtPolicy::Online, InjectionPlan::none())
+            batcher.submit(GemmRequest::new(x, mlp.w1.clone()).policy(FtPolicy::Online))
         })
         .collect::<Result<_, _>>()?;
     for t in tickets {

@@ -1,47 +1,68 @@
-//! Quickstart: one fault-tolerant GEMM through the public API.
+//! Quickstart: the request-centric serving API in one screen.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Starts the PJRT engine, routes a 100x80x60 request (padded into the
-//! `small` bucket), injects one SEU, and shows the online kernel detect
-//! and correct it — result still matches the host reference.
+//! Starts the engine, builds a `GemmRequest` for an irregular 100x80x60
+//! GEMM (padded into the `small` bucket), submits it for a `Ticket`, then
+//! does it again with an injected SEU and per-request options — the
+//! online kernel detects and corrects the fault, and the result still
+//! matches the host reference.
 
 use ftgemm::abft::injection::InjectionPlan;
 use ftgemm::prelude::*;
 
 fn main() -> anyhow::Result<()> {
-    // 1. engine: loads artifacts/manifest.json, owns the PJRT client
+    // 1. engine: loads artifacts/manifest.json (or the built-in registry)
     let engine = Engine::start(EngineConfig::default())?;
     println!("loaded {} AOT artifacts", engine.manifest().len());
 
-    // 2. coordinator: routing + fault-tolerance policies
+    // 2. coordinator: the submission queue + planner + scheduler
     let coord = Coordinator::new(engine, CoordinatorConfig::default());
 
-    // 3. an irregular GEMM — the router pads it into a Table-1 bucket
+    // 3. an irregular GEMM — the router pads it into a Table-1 bucket.
+    //    submit() returns a Ticket immediately; wait() blocks for the
+    //    result + request metadata.
     let a = Matrix::rand_uniform(100, 60, 1);
     let b = Matrix::rand_uniform(60, 80, 2);
-
-    let clean = coord.gemm(&a, &b, FtPolicy::Online)?;
+    let clean = coord
+        .submit(GemmRequest::new(a.clone(), b.clone()).policy(FtPolicy::Online))?
+        .wait()?;
     println!(
-        "clean run: bucket={:?} launches={} errors={}",
-        clean.buckets, clean.kernel_launches, clean.errors_detected
+        "clean run: id={} bucket={:?} launches={} errors={} queued={:?}",
+        clean.meta.id,
+        clean.result.buckets,
+        clean.result.kernel_launches,
+        clean.result.errors_detected,
+        clean.meta.queued
     );
 
-    // 4. same GEMM with a simulated silent data corruption: +1000 on the
-    //    accumulator of C[17, 23] at k-step 0 (the §5.3 protocol)
-    let inj = InjectionPlan::single(17, 23, 0, 1000.0);
-    let hit = coord.gemm_with_faults(&a, &b, FtPolicy::Online, &inj)?;
+    // 4. same GEMM with a simulated silent data corruption (+1000 on the
+    //    accumulator of C[17, 23] at k-step 0 — the §5.3 protocol) and
+    //    per-request options: high priority and a generous deadline.
+    let hit = coord
+        .submit(
+            GemmRequest::new(a.clone(), b.clone())
+                .policy(FtPolicy::Online)
+                .inject(InjectionPlan::single(17, 23, 0, 1000.0))
+                .priority(Priority::High)
+                .deadline(std::time::Duration::from_secs(30)),
+        )?
+        .wait()?;
     println!(
         "injected run: detected={} corrected={} (in-kernel, no recompute)",
-        hit.errors_detected, hit.errors_corrected
+        hit.result.errors_detected, hit.result.errors_corrected
     );
 
     // 5. verify against the host reference
     let want = a.matmul(&b);
-    let diff = hit.c.max_abs_diff(&want);
+    let diff = hit.result.c.max_abs_diff(&want);
     println!("max |C - reference| = {diff:.3e}");
     assert!(diff < 1e-2, "online ABFT must hide the fault");
-    assert_eq!(hit.errors_corrected, 1);
+    assert_eq!(hit.result.errors_corrected, 1);
+
+    // 6. the blocking one-liner is still there: gemm == submit + wait
+    let direct = coord.gemm(&a, &b, FtPolicy::Online)?;
+    assert!(direct.c.max_abs_diff(&want) < 1e-2);
     println!("quickstart OK");
     Ok(())
 }

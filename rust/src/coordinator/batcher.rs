@@ -1,11 +1,15 @@
-//! Dynamic request batching (vLLM-style).
+//! Dynamic request batching (vLLM-style) over the submission API.
 //!
-//! Callers submit GEMM requests and receive a ticket; a background worker
-//! drains the queue, **groups requests by (bucket, policy)** so consecutive
-//! kernel launches hit the same warm executables (executable switches are
-//! the main source of cache-miss latency on the engine workers), and
-//! fulfills each ticket through a oneshot channel. Execution goes through
-//! the same plan → schedule pipeline as direct [`Coordinator`] calls.
+//! Callers submit [`GemmRequest`]s and receive the same [`Ticket`] handle
+//! that [`Coordinator::submit`] returns; a background worker drains the
+//! queue, **groups requests by (bucket, policy)** so consecutive kernel
+//! launches hit the same warm executables (executable switches are the
+//! main source of cache-miss latency on the engine workers), and then
+//! forwards each group — in arrival order of its oldest member — into the
+//! coordinator's submission queue. The batcher owns **no execution path
+//! of its own**: once a round is flushed, dispatch, priority, deadlines,
+//! cancellation, and completion are all the coordinator's, and a ticket
+//! handed out here behaves exactly like one from a direct `submit`.
 //!
 //! Batching discipline: block on `recv` while idle (an idle batcher burns
 //! no CPU), then gather everything already queued — optionally waiting up
@@ -20,38 +24,20 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::abft::injection::InjectionPlan;
-use crate::abft::matrix::Matrix;
 use crate::codegen::select::select_bucket;
-use crate::util::pool::oneshot;
+use crate::metrics::recorder::Counters;
 
-use super::{Coordinator, FtPolicy, GemmResult};
+use super::request::{Completion, GemmRequest, Ticket, TicketStatus};
+use super::Coordinator;
 
-/// A submitted request awaiting execution.
+/// A request waiting for its batching round, already paired with the
+/// ticket the caller holds.
 struct Pending {
-    a: Matrix,
-    b: Matrix,
-    policy: FtPolicy,
-    inj: InjectionPlan,
-    reply: oneshot::OneSender<Result<GemmResult>>,
-}
-
-/// Ticket for a submitted request.
-pub struct Ticket {
-    rx: oneshot::OneReceiver<Result<GemmResult>>,
-}
-
-impl Ticket {
-    /// Block until the result is ready.
-    pub fn wait(self) -> Result<GemmResult> {
-        self.rx.recv().map_err(|_| anyhow!("batcher dropped the request"))?
-    }
-
-    pub fn wait_timeout(self, d: Duration) -> Result<GemmResult> {
-        self.rx
-            .recv_timeout(d)
-            .map_err(|_| anyhow!("batcher response timed out"))?
-    }
+    req: GemmRequest,
+    completion: Completion,
+    /// When the caller's ticket was minted: deadlines and queue-time
+    /// metadata count from here, not from the round flush.
+    submitted: Instant,
 }
 
 /// Batcher configuration.
@@ -77,8 +63,10 @@ enum Msg {
     Shutdown,
 }
 
-/// Dynamic batcher over a [`Coordinator`].
+/// Dynamic batcher over a [`Coordinator`] — a grouping stage in front of
+/// [`Coordinator::submit`].
 pub struct Batcher {
+    coord: Coordinator,
     tx: Sender<Msg>,
     handle: Option<JoinHandle<()>>,
     stats: Arc<Mutex<BatchStats>>,
@@ -99,27 +87,31 @@ impl Batcher {
         let (tx, rx) = channel::<Msg>();
         let stats = Arc::new(Mutex::new(BatchStats::default()));
         let wstats = Arc::clone(&stats);
+        let wcoord = coord.clone();
         let handle = std::thread::Builder::new()
             .name("ftgemm-batcher".into())
-            .spawn(move || worker_loop(coord, config, rx, wstats))
+            .spawn(move || worker_loop(wcoord, config, rx, wstats))
             .expect("spawn batcher");
-        Batcher { tx, handle: Some(handle), stats }
+        Batcher { coord, tx, handle: Some(handle), stats }
     }
 
-    /// Submit a request; returns a [`Ticket`] immediately.
-    pub fn submit(
-        &self,
-        a: Matrix,
-        b: Matrix,
-        policy: FtPolicy,
-        inj: InjectionPlan,
-    ) -> Result<Ticket> {
-        let (otx, orx) = oneshot::channel();
-        let p = Pending { a, b, policy, inj, reply: otx };
-        self.tx
-            .send(Msg::Submit(p))
-            .map_err(|_| anyhow!("batcher is shut down"))?;
-        Ok(Ticket { rx: orx })
+    /// Submit a request; returns its [`Ticket`] immediately. The ticket is
+    /// the same handle [`Coordinator::submit`] returns — wait, poll, and
+    /// cancel behave identically (a cancel that lands before the batching
+    /// round flushes skips coordinator submission entirely).
+    pub fn submit(&self, req: GemmRequest) -> Result<Ticket> {
+        let (ticket, completion) = self.coord.new_ticket();
+        let pending = Pending { req, completion, submitted: Instant::now() };
+        match self.tx.send(Msg::Submit(pending)) {
+            Ok(()) => Ok(ticket),
+            Err(send) => {
+                if let Msg::Submit(p) = send.0 {
+                    p.completion
+                        .abort(TicketStatus::Failed, anyhow!("batcher is shut down"));
+                }
+                Err(anyhow!("batcher is shut down"))
+            }
+        }
     }
 
     pub fn stats(&self) -> BatchStats {
@@ -177,11 +169,12 @@ fn worker_loop(
         let round: Vec<Pending> = queue.drain(..).collect();
         let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
         for p in round {
-            let bucket = select_bucket(p.a.rows(), p.b.cols(), p.a.cols())
+            let (m, n, k) = p.req.shape();
+            let bucket = select_bucket(m, n, k)
                 .map(|b| b.name().to_string())
                 .unwrap_or_else(|| "split".into());
-            let key = format!("{bucket}/{}", p.policy.name());
-            match groups.iter_mut().find(|(k, _)| *k == key) {
+            let key = format!("{bucket}/{}", p.req.get_policy().name());
+            match groups.iter_mut().find(|(g, _)| *g == key) {
                 Some((_, v)) => v.push(p),
                 None => groups.push((key, vec![p])),
             }
@@ -197,10 +190,22 @@ fn worker_loop(
                 }
             }
         }
+        // Flush the round group by group into the coordinator's queue.
+        // Warm-affine engine dispatch does the rest: consecutive
+        // same-bucket requests hit warm executables. Rejections
+        // (admission control / shutdown) already settled the ticket
+        // inside submit_prepared.
         for (_, members) in groups {
             for p in members {
-                let r = coord.gemm_with_faults(&p.a, &p.b, p.policy, &p.inj);
-                let _ = p.reply.send(r);
+                if p.completion.is_canceled() {
+                    // count it as a (canceled) request, as the direct
+                    // submit path would — canceled must never exceed
+                    // requests in a snapshot
+                    Counters::bump(&coord.counters().requests);
+                    Counters::bump(&coord.counters().canceled);
+                    continue;
+                }
+                let _ = coord.submit_prepared(p.req, p.completion, p.submitted);
             }
         }
         if shutdown {
@@ -209,7 +214,7 @@ fn worker_loop(
     }
     // Fail any stragglers.
     for p in queue {
-        let _ = p.reply.send(Err(anyhow!("batcher shut down")));
+        p.completion.abort(TicketStatus::Failed, anyhow!("batcher shut down"));
     }
 }
 
@@ -232,6 +237,6 @@ mod tests {
         assert!(c.max_batch >= 1);
         assert!(c.batch_window.is_zero());
     }
-    // End-to-end batcher tests (engine + coordinator) live in
+    // End-to-end batcher tests (engine + coordinator + tickets) live in
     // rust/tests/integration.rs.
 }

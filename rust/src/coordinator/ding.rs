@@ -3,12 +3,13 @@
 //! This is the comparison system of Figs 12–16: an outer-product GEMM over
 //! *encoded* operands where every stage is a separate kernel launch —
 //! encode, K/K_s panel updates, and a verify/correct pass per panel. The
-//! pipeline is a thin client of the same [`plan`](super::plan) /
-//! [`scheduler`](super::scheduler) types as the fused serving path: one
-//! encode node plus a chain of per-panel nodes threading C^f, so the
-//! baseline pays the real cost of its extra memory passes (C^f re-read /
-//! re-written every panel), exactly the deficit the paper's fused kernels
-//! eliminate.
+//! pipeline is a thin client of the **same submission API** as the fused
+//! serving path: each run is a [`GemmRequest::ding`] submitted through
+//! [`Coordinator::submit`], planned as one encode node plus a chain of
+//! per-panel nodes threading C^f, and dispatched from the same
+//! priority/deadline queue as every other request — so the baseline pays
+//! the real cost of its extra memory passes (C^f re-read / re-written
+//! every panel), exactly the deficit the paper's fused kernels eliminate.
 
 use anyhow::{bail, Result};
 
@@ -17,7 +18,8 @@ use crate::abft::matrix::Matrix;
 use crate::runtime::engine::Engine;
 
 use super::plan::{plan_ding, NodeOp};
-use super::scheduler::{Scheduler, SchedulerConfig};
+use super::request::{GemmRequest, Ticket};
+use super::Coordinator;
 
 /// Outcome of a non-fused FT-GEMM.
 #[derive(Debug, Clone)]
@@ -28,10 +30,10 @@ pub struct DingResult {
     pub panels: usize,
 }
 
-/// Driver for one bucket's Ding pipeline.
+/// Driver for one bucket's Ding pipeline — a shape-checked front end over
+/// [`Coordinator::submit`].
 pub struct DingPipeline {
-    engine: Engine,
-    scheduler: Scheduler,
+    coord: Coordinator,
     bucket: String,
     pub m: usize,
     pub n: usize,
@@ -42,10 +44,10 @@ pub struct DingPipeline {
 impl DingPipeline {
     /// Build the pipeline for a bucket that has ding artifacts
     /// ("medium" | "large" | "huge").
-    pub fn new(engine: Engine, bucket: &str) -> Result<Self> {
+    pub fn new(coord: Coordinator, bucket: &str) -> Result<Self> {
         // Compile a fault-free plan up front: it both validates the
         // artifact set and is the single source of the pipeline geometry.
-        let plan = plan_ding(engine.manifest(), bucket, &InjectionPlan::none())?;
+        let plan = plan_ding(coord.engine().manifest(), bucket, &InjectionPlan::none())?;
         let (m, n, k) = (plan.m, plan.n, plan.k);
         let ks = plan
             .nodes
@@ -55,8 +57,7 @@ impl DingPipeline {
                 _ => None,
             })
             .unwrap_or(k);
-        let scheduler = Scheduler::new(engine.clone(), SchedulerConfig::default());
-        Ok(DingPipeline { engine, scheduler, bucket: bucket.to_string(), m, n, k, ks })
+        Ok(DingPipeline { coord, bucket: bucket.to_string(), m, n, k, ks })
     }
 
     pub fn panels(&self) -> usize {
@@ -64,20 +65,20 @@ impl DingPipeline {
     }
 
     pub fn engine(&self) -> &Engine {
-        &self.engine
+        self.coord.engine()
     }
 
-    /// Run C = A·B with optional per-panel SEU injection.
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Submit one Ding-baseline run; returns the coordinator's [`Ticket`]
+    /// immediately (wait/poll/cancel as usual).
     ///
     /// `inj.step` indexes the *panel* here (Ding's K_s protocol); the
     /// offset is applied host-side to C^f between the panel update and its
     /// verify launch — the fault window of the original scheme.
-    pub fn gemm_with_faults(
-        &self,
-        a: &Matrix,
-        b: &Matrix,
-        inj: &InjectionPlan,
-    ) -> Result<DingResult> {
+    pub fn submit(&self, a: Matrix, b: Matrix, inj: InjectionPlan) -> Result<Ticket> {
         if a.rows() != self.m || a.cols() != self.k || b.rows() != self.k || b.cols() != self.n {
             bail!(
                 "ding pipeline is fixed-shape {}x{}x{}; got {}x{} @ {}x{}",
@@ -90,12 +91,22 @@ impl DingPipeline {
                 b.cols()
             );
         }
-        let plan = plan_ding(self.engine.manifest(), &self.bucket, inj)?;
-        let out = self.scheduler.run(&plan, a, b)?;
+        self.coord.submit(GemmRequest::ding(a, b, &self.bucket).inject(inj))
+    }
+
+    /// Run C = A·B with optional per-panel SEU injection; blocking
+    /// wrapper over [`DingPipeline::submit`].
+    pub fn gemm_with_faults(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        inj: &InjectionPlan,
+    ) -> Result<DingResult> {
+        let resp = self.submit(a.clone(), b.clone(), inj.clone())?.wait()?;
         Ok(DingResult {
-            c: out.c,
-            errors_corrected: out.corrected,
-            kernel_launches: out.launches,
+            c: resp.result.c,
+            errors_corrected: resp.result.errors_corrected,
+            kernel_launches: resp.result.kernel_launches,
             panels: self.panels(),
         })
     }
@@ -108,19 +119,23 @@ impl DingPipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::CoordinatorConfig;
     use crate::runtime::engine::EngineConfig;
+
+    fn coordinator() -> Coordinator {
+        let engine = Engine::start(EngineConfig::default()).unwrap();
+        Coordinator::new(engine, CoordinatorConfig::default())
+    }
 
     #[test]
     fn pipeline_dims_come_from_the_manifest() {
-        let engine = Engine::start(EngineConfig::default()).unwrap();
-        let pipe = DingPipeline::new(engine, "medium").unwrap();
+        let pipe = DingPipeline::new(coordinator(), "medium").unwrap();
         assert_eq!((pipe.m, pipe.n, pipe.k, pipe.ks), (128, 128, 128, 64));
         assert_eq!(pipe.panels(), 2);
     }
 
     #[test]
     fn missing_bucket_is_rejected() {
-        let engine = Engine::start(EngineConfig::default()).unwrap();
-        assert!(DingPipeline::new(engine, "small").is_err());
+        assert!(DingPipeline::new(coordinator(), "small").is_err());
     }
 }

@@ -1,21 +1,31 @@
-//! The L3 coordinator: a GEMM-serving engine with pluggable fault
-//! tolerance, structured as an explicit plan → schedule → execute pipeline.
+//! The L3 coordinator: an async, request-centric GEMM-serving engine with
+//! pluggable fault tolerance, structured as an explicit submit → plan →
+//! schedule → execute pipeline.
 //!
-//! This is the serving-side reproduction of the paper's system: a request
-//! of arbitrary shape is **compiled** by the [`plan`] module into an
+//! The serving surface is an owned, self-describing [`GemmRequest`]
+//! (operands + [`FtPolicy`] + per-request [`RequestOptions`]) submitted
+//! with [`Coordinator::submit`], which returns immediately with a
+//! [`Ticket`] — a wait/poll/cancel handle. Submitted requests enter a
+//! deadline/priority-aware queue (`submit.rs`) drained by a bounded pool
+//! of dispatchers (the admission-control limit on in-flight plans); each
+//! dispatched request is **compiled** by [`plan`] into an
 //! [`ExecutionPlan`](plan::ExecutionPlan) — block decomposition
-//! ([`router`]), per-block artifact + injection resolution, checksum/verify
-//! strategy, accumulation targets — and then **run** by the [`scheduler`],
-//! which dispatches independent plan nodes concurrently over the engine
-//! worker pool and folds partials into the output as they complete. Every
-//! serving path is a thin client of those two types:
+//! ([`router`]), per-block artifact + injection resolution, checksum /
+//! verify strategy, accumulation targets — and **run** by the
+//! [`scheduler`], which spreads independent plan nodes over the engine
+//! worker pool. Requests therefore overlap with each other exactly like
+//! the blocks of one split request do.
 //!
-//! * [`Coordinator::gemm`] / [`Coordinator::gemm_with_faults`] — one
-//!   request, one plan;
+//! Every serving path is a thin client of the same submission API:
+//!
+//! * [`Coordinator::gemm`] / [`Coordinator::gemm_with_faults`] — blocking
+//!   convenience wrappers: `submit(...)` + [`Ticket::wait`];
 //! * [`batcher`] — dynamic request batching on top (vLLM-style: group by
-//!   bucket so consecutive executions reuse warm executables);
-//! * [`ding`] — the non-fused Ding'11 baseline (Figs 12–16), planned as an
-//!   encode node plus a chain of per-panel step/verify nodes.
+//!   bucket so consecutive executions reuse warm executables), feeding the
+//!   same queue and handing out the same tickets;
+//! * [`ding`] — the non-fused Ding'11 baseline (Figs 12–16), submitted as
+//!   a [`GemmRequest::ding`] and planned as an encode node plus a chain of
+//!   per-panel step/verify nodes.
 //!
 //! Protection is one of three [`FtPolicy`]s:
 //!
@@ -28,8 +38,10 @@
 pub mod batcher;
 pub mod ding;
 pub mod plan;
+pub mod request;
 pub mod router;
 pub mod scheduler;
+mod submit;
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -41,9 +53,17 @@ use crate::abft::injection::InjectionPlan;
 use crate::abft::matrix::Matrix;
 use crate::metrics::recorder::{Counters, LatencyRecorder};
 use crate::runtime::engine::Engine;
+use crate::runtime::manifest::ArtifactKind;
 
 pub use plan::{ExecutionPlan, Planner};
+pub use request::{
+    FtLevel, GemmRequest, GemmResponse, HostVerify, Priority, RequestMeta, RequestOptions,
+    Ticket, TicketStatus,
+};
 pub use scheduler::{Scheduler, SchedulerConfig};
+
+use request::{Completion, Route};
+use submit::Submission;
 
 /// Fault-tolerance policy for a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,15 +87,17 @@ impl FtPolicy {
     }
 }
 
-/// Coordinator configuration.
+/// Coordinator configuration — the **defaults** a [`GemmRequest`] inherits
+/// when its [`RequestOptions`] leave a knob unset.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// FT granularity for the online policy: "tb" | "warp" | "thread".
-    /// Buckets without that level fall back to "tb" (always present).
-    pub ft_level: String,
-    /// Re-verify returned C against operand-derived checksums on the host
-    /// (defense in depth; O(mk + kn) extra host work).
-    pub host_verify: bool,
+    /// FT granularity for the online policy. Buckets lowered without that
+    /// level fall back to [`FtLevel::Tb`] (always present).
+    pub ft_level: FtLevel,
+    /// Host-side re-verification of returned results against
+    /// operand-derived checksums (defense in depth; O(mk + kn) extra host
+    /// work). See [`HostVerify`] for how injected runs are treated.
+    pub host_verify: HostVerify,
     /// Max recompute attempts for the offline policy before giving up.
     pub max_recomputes: usize,
     /// Detection thresholds for host-side verification.
@@ -83,17 +105,48 @@ pub struct CoordinatorConfig {
     /// Concurrent plan-node dispatch threads; 0 = match the engine worker
     /// count.
     pub scheduler_threads: usize,
+    /// Admission-control bound: how many submitted requests may be
+    /// dispatched (planning/executing) at once. 0 = twice the engine
+    /// worker count (min 2).
+    pub max_inflight: usize,
+    /// Reject submissions once this many requests are queued awaiting
+    /// dispatch (fail fast instead of accumulating unbounded latency).
+    /// 0 = unbounded.
+    pub max_queue: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
-            ft_level: "tb".into(),
-            host_verify: false,
+            ft_level: FtLevel::Tb,
+            host_verify: HostVerify::Off,
             max_recomputes: 8,
             thresholds: Thresholds::default(),
             scheduler_threads: 0,
+            max_inflight: 0,
+            max_queue: 0,
         }
+    }
+}
+
+impl CoordinatorConfig {
+    /// This config with a request's option overrides applied — what one
+    /// dispatched request actually runs under.
+    pub fn effective(&self, opts: &RequestOptions) -> CoordinatorConfig {
+        let mut cfg = self.clone();
+        if let Some(level) = opts.ft_level {
+            cfg.ft_level = level;
+        }
+        if let Some(th) = opts.thresholds {
+            cfg.thresholds = th;
+        }
+        if let Some(hv) = opts.host_verify {
+            cfg.host_verify = hv;
+        }
+        if let Some(n) = opts.max_recomputes {
+            cfg.max_recomputes = n;
+        }
+        cfg
     }
 }
 
@@ -105,100 +158,40 @@ pub struct GemmResult {
     pub errors_corrected: u64,
     pub recomputes: u64,
     pub kernel_launches: u64,
+    /// Plan + execute + verify wall time (excludes queue wait — that is
+    /// [`RequestMeta::queued`]).
     pub exec_time: Duration,
-    /// Which buckets served the request (one entry per block).
+    /// Which buckets served the request (one entry per block; empty for
+    /// Ding-baseline requests).
     pub buckets: Vec<&'static str>,
 }
 
-/// The serving coordinator. Cheap to clone (`Arc` internals); thread-safe.
-#[derive(Clone)]
-pub struct Coordinator {
-    engine: Engine,
-    config: CoordinatorConfig,
-    scheduler: Arc<Scheduler>,
-    counters: Arc<Counters>,
-    latency: Arc<LatencyRecorder>,
+/// Shared execution state: everything a dispatcher needs to run one
+/// request end to end.
+pub(crate) struct Core {
+    pub(crate) engine: Engine,
+    pub(crate) config: CoordinatorConfig,
+    pub(crate) scheduler: Scheduler,
+    pub(crate) counters: Counters,
+    pub(crate) latency: LatencyRecorder,
 }
 
-impl Coordinator {
-    pub fn new(engine: Engine, config: CoordinatorConfig) -> Self {
-        let scheduler = Arc::new(Scheduler::new(
-            engine.clone(),
-            SchedulerConfig { threads: config.scheduler_threads },
-        ));
-        Coordinator {
-            engine,
-            config,
-            scheduler,
-            counters: Arc::new(Counters::new()),
-            latency: Arc::new(LatencyRecorder::new()),
-        }
-    }
-
-    pub fn engine(&self) -> &Engine {
-        &self.engine
-    }
-
-    pub fn config(&self) -> &CoordinatorConfig {
-        &self.config
-    }
-
-    pub fn scheduler(&self) -> &Scheduler {
-        &self.scheduler
-    }
-
-    pub fn counters(&self) -> &Counters {
-        &self.counters
-    }
-
-    pub fn latency(&self) -> &LatencyRecorder {
-        &self.latency
-    }
-
-    /// Compile a request into its execution plan without running it
-    /// (introspection / dry-run).
-    pub fn plan(
-        &self,
-        m: usize,
-        n: usize,
-        k: usize,
-        policy: FtPolicy,
-        inj: &InjectionPlan,
-    ) -> Result<ExecutionPlan> {
-        Planner::new(self.engine.manifest(), &self.config).plan_gemm(m, n, k, policy, inj)
-    }
-
-    /// C = A·B under `policy`, fault-free.
-    pub fn gemm(&self, a: &Matrix, b: &Matrix, policy: FtPolicy) -> Result<GemmResult> {
-        self.gemm_with_faults(a, b, policy, &InjectionPlan::none())
-    }
-
-    /// C = A·B under `policy` with SEU injection (§5.3 protocol).
-    ///
-    /// Injection coordinates are global output positions; `step` indexes
-    /// the serving bucket's k-loop (clamped kernel-side). For split
-    /// (oversize) GEMMs, each injection lands in the block containing its
-    /// (row, col) at the first k-partial.
-    pub fn gemm_with_faults(
-        &self,
-        a: &Matrix,
-        b: &Matrix,
-        policy: FtPolicy,
-        inj: &InjectionPlan,
-    ) -> Result<GemmResult> {
-        if a.cols() != b.rows() {
-            bail!(
-                "inner dimensions disagree: {}x{} @ {}x{}",
-                a.rows(),
-                a.cols(),
-                b.rows(),
-                b.cols()
-            );
-        }
-        Counters::bump(&self.counters.requests);
+impl Core {
+    /// Plan, schedule, and (optionally) host-verify one request. Runs on a
+    /// dispatcher thread.
+    pub(crate) fn execute(&self, req: &GemmRequest) -> Result<GemmResult> {
         let t0 = Instant::now();
-
-        let plan = self.plan(a.rows(), b.cols(), a.cols(), policy, inj)?;
+        let cfg = self.config.effective(&req.opts);
+        let plan = match &req.route {
+            Route::Blocks => Planner::new(self.engine.manifest(), &cfg).plan_gemm(
+                req.a.rows(),
+                req.b.cols(),
+                req.a.cols(),
+                req.policy,
+                &req.inj,
+            )?,
+            Route::Ding { bucket } => plan::plan_ding(self.engine.manifest(), bucket, &req.inj)?,
+        };
         if plan.split {
             Counters::bump(&self.counters.batched_groups);
         }
@@ -206,15 +199,20 @@ impl Coordinator {
             Counters::bump(&self.counters.padded_requests);
         }
 
-        let out = self.scheduler.run(&plan, a, b)?;
+        let out = self.scheduler.run_shared(&plan, Arc::clone(&req.a), Arc::clone(&req.b))?;
 
-        if self.config.host_verify && inj.is_empty() {
-            // Defense in depth: O(mk + kn) re-derivation of the product
-            // checksums from the operands, compared against C.
-            let pair = ChecksumPair::of_product(a, b);
-            if checksum::verify(&out.c, &pair, self.config.thresholds)
-                != checksum::Detection::Clean
-            {
+        let reverify = match cfg.host_verify {
+            HostVerify::Off => false,
+            // An injected-and-corrected result carries an O(eps·magnitude)
+            // correction residue that can trip the thresholds even though
+            // the result is good, so CleanOnly skips injected runs —
+            // explicitly, per HostVerify's contract.
+            HostVerify::CleanOnly => req.inj.is_empty(),
+            HostVerify::Always => true,
+        };
+        if reverify {
+            let pair = ChecksumPair::of_product(&req.a, &req.b);
+            if checksum::verify(&out.c, &pair, cfg.thresholds) != checksum::Detection::Clean {
                 bail!("host re-verification failed on a supposedly clean result");
             }
         }
@@ -237,6 +235,191 @@ impl Coordinator {
     }
 }
 
+/// The serving coordinator. Cheap to clone (`Arc` internals); thread-safe.
+/// The last clone to drop shuts the dispatcher pool down, failing any
+/// still-queued tickets.
+#[derive(Clone)]
+pub struct Coordinator {
+    core: Arc<Core>,
+    submission: Arc<Submission>,
+}
+
+impl Coordinator {
+    pub fn new(engine: Engine, config: CoordinatorConfig) -> Self {
+        let scheduler = Scheduler::new(
+            engine.clone(),
+            SchedulerConfig { threads: config.scheduler_threads },
+        );
+        let dispatchers = match config.max_inflight {
+            0 => (engine.worker_count() * 2).max(2),
+            n => n,
+        };
+        let max_queue = config.max_queue;
+        let core = Arc::new(Core {
+            engine,
+            config,
+            scheduler,
+            counters: Counters::new(),
+            latency: LatencyRecorder::new(),
+        });
+        let submission = Arc::new(Submission::start(Arc::clone(&core), dispatchers, max_queue));
+        Coordinator { core, submission }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.core.engine
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.core.config
+    }
+
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.core.scheduler
+    }
+
+    pub fn counters(&self) -> &Counters {
+        &self.core.counters
+    }
+
+    pub fn latency(&self) -> &LatencyRecorder {
+        &self.core.latency
+    }
+
+    /// The admission-control bound: dispatcher threads executing
+    /// submitted requests concurrently.
+    pub fn max_inflight(&self) -> usize {
+        self.submission.dispatchers()
+    }
+
+    /// Requests queued but not yet dispatched.
+    pub fn queue_depth(&self) -> usize {
+        self.submission.queue_depth()
+    }
+
+    /// Compile a request into its execution plan without running it
+    /// (introspection / dry-run). Uses the coordinator's default options.
+    pub fn plan(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        policy: FtPolicy,
+        inj: &InjectionPlan,
+    ) -> Result<ExecutionPlan> {
+        Planner::new(self.core.engine.manifest(), &self.core.config)
+            .plan_gemm(m, n, k, policy, inj)
+    }
+
+    /// Submit an owned [`GemmRequest`]; returns immediately with the
+    /// [`Ticket`] to wait/poll/cancel on. Shape validation happens here
+    /// (fail fast); everything else — planning, artifact resolution,
+    /// execution, verification — happens on a dispatcher and settles the
+    /// ticket.
+    pub fn submit(&self, req: GemmRequest) -> Result<Ticket> {
+        self.validate(&req)?;
+        self.submission.submit(req)
+    }
+
+    /// Enqueue a request against a ticket that was handed out earlier
+    /// (the batcher path). `submitted` is when that ticket was minted —
+    /// deadlines and queue-time metadata count from it, so time spent in
+    /// the batcher's round is not forgiven. On rejection the completion
+    /// is settled with the same error that is returned.
+    pub(crate) fn submit_prepared(
+        &self,
+        req: GemmRequest,
+        completion: Completion,
+        submitted: Instant,
+    ) -> Result<()> {
+        if let Err(e) = self.validate(&req) {
+            completion.abort(TicketStatus::Failed, anyhow::anyhow!("{e:#}"));
+            return Err(e);
+        }
+        self.submission.push(req, completion, submitted)
+    }
+
+    /// Mint a (ticket, completion) pair without enqueueing anything yet.
+    pub(crate) fn new_ticket(&self) -> (Ticket, Completion) {
+        self.submission.new_ticket()
+    }
+
+    fn validate(&self, req: &GemmRequest) -> Result<()> {
+        match &req.route {
+            Route::Blocks => {
+                if req.a.cols() != req.b.rows() {
+                    bail!(
+                        "inner dimensions disagree: {}x{} @ {}x{}",
+                        req.a.rows(),
+                        req.a.cols(),
+                        req.b.rows(),
+                        req.b.cols()
+                    );
+                }
+            }
+            Route::Ding { bucket } => {
+                // Ding plans are bucket-fixed-shape; fail fast with the
+                // geometry instead of an opaque backend shape error from
+                // deep inside the encode node.
+                let enc = self
+                    .core
+                    .engine
+                    .manifest()
+                    .find(ArtifactKind::DingEncode, bucket, None)
+                    .ok_or_else(|| anyhow::anyhow!("no ding_encode artifact for {bucket}"))?;
+                let ok = req.a.rows() == enc.m
+                    && req.a.cols() == enc.k
+                    && req.b.rows() == enc.k
+                    && req.b.cols() == enc.n;
+                if !ok {
+                    bail!(
+                        "ding request for {bucket} is fixed-shape {}x{}x{}; got {}x{} @ {}x{}",
+                        enc.m,
+                        enc.n,
+                        enc.k,
+                        req.a.rows(),
+                        req.a.cols(),
+                        req.b.rows(),
+                        req.b.cols()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// C = A·B under `policy`, fault-free. Blocking convenience wrapper:
+    /// `submit(...)` + [`Ticket::wait`].
+    pub fn gemm(&self, a: &Matrix, b: &Matrix, policy: FtPolicy) -> Result<GemmResult> {
+        self.gemm_with_faults(a, b, policy, &InjectionPlan::none())
+    }
+
+    /// C = A·B under `policy` with SEU injection (§5.3 protocol).
+    /// Blocking convenience wrapper over [`Coordinator::submit`].
+    ///
+    /// Injection coordinates are global output positions; `step` indexes
+    /// the serving bucket's k-loop (clamped kernel-side). For split
+    /// (oversize) GEMMs, each injection lands in the block containing its
+    /// (row, col) at the first k-partial.
+    ///
+    /// Note on defense in depth: under [`HostVerify::CleanOnly`] (the mode
+    /// the boolean config key maps to), an injected request is **not**
+    /// host-re-verified — the in-kernel correction leaves a residue that
+    /// host thresholds may flag on a good result. Opt into
+    /// [`HostVerify::Always`] (config or [`RequestOptions`]) to re-verify
+    /// injected runs too.
+    pub fn gemm_with_faults(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        policy: FtPolicy,
+        inj: &InjectionPlan,
+    ) -> Result<GemmResult> {
+        let req = GemmRequest::new(a.clone(), b.clone()).policy(policy).inject(inj.clone());
+        Ok(self.submit(req)?.wait()?.result)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,9 +432,33 @@ mod tests {
     }
 
     #[test]
-    fn config_default_autosizes_scheduler() {
+    fn config_default_autosizes_scheduler_and_pool() {
         let cfg = CoordinatorConfig::default();
         assert_eq!(cfg.scheduler_threads, 0);
-        assert_eq!(cfg.ft_level, "tb");
+        assert_eq!(cfg.ft_level, FtLevel::Tb);
+        assert_eq!(cfg.host_verify, HostVerify::Off);
+        assert_eq!(cfg.max_inflight, 0);
+        assert_eq!(cfg.max_queue, 0);
+    }
+
+    #[test]
+    fn effective_config_applies_request_overrides() {
+        let base = CoordinatorConfig::default();
+        let opts = RequestOptions {
+            ft_level: Some(FtLevel::Warp),
+            max_recomputes: Some(2),
+            host_verify: Some(HostVerify::Always),
+            thresholds: Some(Thresholds { rel: 0.5, abs: 0.25 }),
+            ..Default::default()
+        };
+        let eff = base.effective(&opts);
+        assert_eq!(eff.ft_level, FtLevel::Warp);
+        assert_eq!(eff.max_recomputes, 2);
+        assert_eq!(eff.host_verify, HostVerify::Always);
+        assert!((eff.thresholds.rel - 0.5).abs() < 1e-9);
+        // unset fields keep the coordinator defaults
+        let eff = base.effective(&RequestOptions::default());
+        assert_eq!(eff.ft_level, FtLevel::Tb);
+        assert_eq!(eff.max_recomputes, 8);
     }
 }

@@ -372,7 +372,8 @@ mod tests {
     fn online_level_fallback_and_offline_artifacts() {
         let (man, _) = planner_fixture();
         // "small" has only the tb fused level: warp request falls back
-        let cfg = CoordinatorConfig { ft_level: "warp".into(), ..Default::default() };
+        let cfg =
+            CoordinatorConfig { ft_level: crate::coordinator::FtLevel::Warp, ..Default::default() };
         let plan = Planner::new(&man, &cfg)
             .plan_gemm(64, 64, 64, FtPolicy::Online, &InjectionPlan::none())
             .unwrap();

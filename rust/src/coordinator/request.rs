@@ -1,0 +1,725 @@
+//! The request-centric serving surface: an owned, self-describing
+//! [`GemmRequest`] submitted via [`Coordinator::submit`] for a [`Ticket`].
+//!
+//! A request carries everything the serving stack needs — operands, the
+//! [`FtPolicy`], and per-request [`RequestOptions`] (FT granularity,
+//! detection thresholds, host-verify mode, recompute budget, injection
+//! plan, priority, deadline) — so callers can keep many requests with
+//! *different* protection schemes in flight at once, the way FT-BLAS and
+//! arithmetic-intensity-guided FT vary the scheme per routine/layer
+//! rather than per process. The [`Ticket`] is the wait/poll/cancel handle;
+//! its result is the existing [`GemmResult`] plus request-scoped
+//! [`RequestMeta`].
+//!
+//! [`Coordinator::submit`]: super::Coordinator::submit
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::abft::checksum::Thresholds;
+use crate::abft::injection::InjectionPlan;
+use crate::abft::matrix::Matrix;
+
+use super::{FtPolicy, GemmResult};
+
+/// FT granularity of the online policy's fused kernels (the paper's three
+/// checksum placements). Buckets lowered without the requested level fall
+/// back to [`FtLevel::Tb`], which every FT bucket carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum FtLevel {
+    /// Thread-block-level checksums (always present).
+    #[default]
+    Tb,
+    /// Warp-level checksums.
+    Warp,
+    /// Thread-level checksums.
+    Thread,
+}
+
+impl FtLevel {
+    pub const ALL: [FtLevel; 3] = [FtLevel::Tb, FtLevel::Warp, FtLevel::Thread];
+
+    /// The manifest/artifact spelling (`"tb" | "warp" | "thread"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FtLevel::Tb => "tb",
+            FtLevel::Warp => "warp",
+            FtLevel::Thread => "thread",
+        }
+    }
+}
+
+impl fmt::Display for FtLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for FtLevel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<FtLevel> {
+        match s {
+            "tb" => Ok(FtLevel::Tb),
+            "warp" => Ok(FtLevel::Warp),
+            "thread" => Ok(FtLevel::Thread),
+            other => Err(anyhow!("unknown FT level {other:?} (tb|warp|thread)")),
+        }
+    }
+}
+
+/// When the coordinator re-derives the product checksums from the operands
+/// on the host and checks the returned `C` against them (defense in depth;
+/// `O(mk + kn)` extra host work per request).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HostVerify {
+    /// Never re-verify.
+    #[default]
+    Off,
+    /// Re-verify only requests with **no injection plan**. An injected
+    /// SEU that the kernel corrected leaves an `O(eps·magnitude)`
+    /// residue, which can trip the thresholds on a result that is in
+    /// fact good — so injected runs are deliberately not re-verified
+    /// under this mode. Use [`HostVerify::Always`] to verify them anyway.
+    CleanOnly,
+    /// Re-verify every request, injected or not. Pair with thresholds
+    /// loose enough to absorb the correction residue.
+    Always,
+}
+
+impl HostVerify {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HostVerify::Off => "off",
+            HostVerify::CleanOnly => "clean_only",
+            HostVerify::Always => "always",
+        }
+    }
+}
+
+impl FromStr for HostVerify {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<HostVerify> {
+        match s {
+            "off" => Ok(HostVerify::Off),
+            "clean_only" => Ok(HostVerify::CleanOnly),
+            "always" => Ok(HostVerify::Always),
+            other => Err(anyhow!("unknown host-verify mode {other:?} (off|clean_only|always)")),
+        }
+    }
+}
+
+/// Dispatch priority. Higher priorities dequeue first; within a priority,
+/// earlier deadline first, then submission order (FIFO).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+impl FromStr for Priority {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Priority> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => Err(anyhow!("unknown priority {other:?} (low|normal|high)")),
+        }
+    }
+}
+
+/// Per-request knobs. `None` fields inherit the coordinator's
+/// [`CoordinatorConfig`](super::CoordinatorConfig) defaults.
+#[derive(Debug, Clone, Default)]
+pub struct RequestOptions {
+    /// Online-policy FT granularity override.
+    pub ft_level: Option<FtLevel>,
+    /// Detection-threshold override (host-side verification paths).
+    pub thresholds: Option<Thresholds>,
+    /// Host re-verification mode override.
+    pub host_verify: Option<HostVerify>,
+    /// Offline-policy recompute budget override.
+    pub max_recomputes: Option<usize>,
+    /// Dequeue priority.
+    pub priority: Priority,
+    /// Fail the request (status [`TicketStatus::Expired`]) if it is still
+    /// queued this long after submission.
+    pub deadline: Option<Duration>,
+}
+
+/// How a request is compiled into an execution plan.
+#[derive(Debug, Clone)]
+pub(crate) enum Route {
+    /// The standard path: block decomposition + per-block kernel nodes.
+    Blocks,
+    /// The non-fused Ding'11 baseline for one fixed-shape bucket:
+    /// encode node + chained per-panel step/verify nodes.
+    Ding { bucket: String },
+}
+
+/// An owned, self-describing GEMM request: operands + policy + injection
+/// plan + per-request options, built fluently and submitted with
+/// [`Coordinator::submit`](super::Coordinator::submit).
+///
+/// ```
+/// use ftgemm::prelude::*;
+///
+/// let engine = Engine::start(EngineConfig::default())?;
+/// let coord = Coordinator::new(engine, CoordinatorConfig::default());
+///
+/// let a = Matrix::rand_uniform(64, 64, 1);
+/// let b = Matrix::rand_uniform(64, 64, 2);
+/// let want = a.matmul(&b);
+///
+/// let ticket = coord.submit(
+///     GemmRequest::new(a, b)
+///         .policy(FtPolicy::Online)
+///         .priority(Priority::High)
+///         .deadline(std::time::Duration::from_secs(30)),
+/// )?;
+/// let resp = ticket.wait()?;
+/// assert!(resp.result.c.max_abs_diff(&want) < 1e-3);
+/// assert_eq!(resp.meta.policy, FtPolicy::Online);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Debug, Clone)]
+pub struct GemmRequest {
+    /// Operands are shared (`Arc`): cloning a request, parking it in the
+    /// batcher, and fanning its blocks across the scheduler pool are all
+    /// refcount bumps, never matrix copies.
+    pub(crate) a: Arc<Matrix>,
+    pub(crate) b: Arc<Matrix>,
+    pub(crate) policy: FtPolicy,
+    pub(crate) inj: InjectionPlan,
+    pub(crate) route: Route,
+    pub(crate) opts: RequestOptions,
+}
+
+impl GemmRequest {
+    /// `C = A·B` under [`FtPolicy::Online`] (the paper's default scheme);
+    /// override with [`GemmRequest::policy`]. Takes owned `Matrix` or
+    /// `Arc<Matrix>` operands — pass `Arc`s to share one operand across
+    /// many requests without copies.
+    pub fn new(a: impl Into<Arc<Matrix>>, b: impl Into<Arc<Matrix>>) -> GemmRequest {
+        GemmRequest {
+            a: a.into(),
+            b: b.into(),
+            policy: FtPolicy::Online,
+            inj: InjectionPlan::none(),
+            route: Route::Blocks,
+            opts: RequestOptions::default(),
+        }
+    }
+
+    /// A request for the non-fused Ding'11 baseline pipeline of `bucket`
+    /// (operands must match the bucket's fixed shape).
+    pub fn ding(
+        a: impl Into<Arc<Matrix>>,
+        b: impl Into<Arc<Matrix>>,
+        bucket: &str,
+    ) -> GemmRequest {
+        GemmRequest { route: Route::Ding { bucket: bucket.to_string() }, ..GemmRequest::new(a, b) }
+    }
+
+    pub fn policy(mut self, policy: FtPolicy) -> GemmRequest {
+        self.policy = policy;
+        self
+    }
+
+    /// Attach an SEU injection plan (§5.3 protocol; global output
+    /// coordinates).
+    pub fn inject(mut self, inj: InjectionPlan) -> GemmRequest {
+        self.inj = inj;
+        self
+    }
+
+    /// Replace the whole option block at once.
+    pub fn options(mut self, opts: RequestOptions) -> GemmRequest {
+        self.opts = opts;
+        self
+    }
+
+    pub fn ft_level(mut self, level: FtLevel) -> GemmRequest {
+        self.opts.ft_level = Some(level);
+        self
+    }
+
+    pub fn thresholds(mut self, th: Thresholds) -> GemmRequest {
+        self.opts.thresholds = Some(th);
+        self
+    }
+
+    pub fn host_verify(mut self, mode: HostVerify) -> GemmRequest {
+        self.opts.host_verify = Some(mode);
+        self
+    }
+
+    pub fn max_recomputes(mut self, n: usize) -> GemmRequest {
+        self.opts.max_recomputes = Some(n);
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> GemmRequest {
+        self.opts.priority = p;
+        self
+    }
+
+    /// Expire the request if it is still queued `d` after submission.
+    pub fn deadline(mut self, d: Duration) -> GemmRequest {
+        self.opts.deadline = Some(d);
+        self
+    }
+
+    /// Output shape `(m, n)` and reduction extent `k` of the request.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.a.rows(), self.b.cols(), self.a.cols())
+    }
+
+    pub fn get_policy(&self) -> FtPolicy {
+        self.policy
+    }
+
+    pub fn get_options(&self) -> &RequestOptions {
+        &self.opts
+    }
+
+    pub fn injections(&self) -> &InjectionPlan {
+        &self.inj
+    }
+}
+
+/// Request-scoped metadata returned alongside the [`GemmResult`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestMeta {
+    /// Coordinator-assigned request id (unique per coordinator).
+    pub id: u64,
+    pub policy: FtPolicy,
+    pub priority: Priority,
+    /// Time spent queued between submission and dispatch.
+    pub queued: Duration,
+    /// Global dispatch-order stamp: request X dequeued before request Y
+    /// iff `X.dispatch_seq < Y.dispatch_seq` (the priority-ordering
+    /// witness the tests read).
+    pub dispatch_seq: u64,
+}
+
+/// A fulfilled request: the computation result plus its [`RequestMeta`].
+#[derive(Debug, Clone)]
+pub struct GemmResponse {
+    pub result: GemmResult,
+    pub meta: RequestMeta,
+}
+
+/// Observable lifecycle of a [`Ticket`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TicketStatus {
+    /// Submitted, not yet dispatched.
+    Queued,
+    /// Dispatched; a plan is executing.
+    Running,
+    /// Finished successfully; `wait` returns `Ok`.
+    Done,
+    /// Finished with an error; `wait` returns `Err`.
+    Failed,
+    /// Canceled before dispatch.
+    Canceled,
+    /// Deadline passed while still queued.
+    Expired,
+}
+
+struct Slot {
+    status: TicketStatus,
+    outcome: Option<Result<GemmResponse>>,
+    /// Absolute queue deadline, stamped at enqueue. Lets the ticket side
+    /// (`poll`/`wait`) expire itself even if no dispatcher ever dequeues
+    /// the entry (e.g. priority starvation under a saturated pool).
+    deadline: Option<Instant>,
+}
+
+struct TicketShared {
+    id: u64,
+    slot: Mutex<Slot>,
+    cv: Condvar,
+}
+
+impl TicketShared {
+    /// Queued past the deadline → settle as Expired. Safe to call from
+    /// either side; the queue's dequeue-time check aborts the same way,
+    /// and whichever fires first wins (the other is a no-op).
+    fn expire_due(&self, slot: &mut Slot) {
+        if slot.status != TicketStatus::Queued {
+            return;
+        }
+        if let Some(d) = slot.deadline {
+            if Instant::now() >= d {
+                slot.status = TicketStatus::Expired;
+                slot.outcome = Some(Err(anyhow!(
+                    "request {}: deadline exceeded while queued",
+                    self.id
+                )));
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Wait/poll/cancel handle for a submitted [`GemmRequest`].
+pub struct Ticket {
+    shared: Arc<TicketShared>,
+}
+
+impl Ticket {
+    /// Coordinator-assigned request id.
+    pub fn id(&self) -> u64 {
+        self.shared.id
+    }
+
+    /// Non-blocking status probe. A queued ticket whose deadline has
+    /// passed reports (and settles as) [`TicketStatus::Expired`] here,
+    /// without waiting for a dispatcher to reach it.
+    pub fn poll(&self) -> TicketStatus {
+        let mut slot = self.shared.slot.lock().unwrap();
+        self.shared.expire_due(&mut slot);
+        slot.status
+    }
+
+    /// Cancel the request if it has not been dispatched yet. Returns
+    /// `true` iff **this call** canceled it (it was still queued); once a
+    /// request is running it runs to completion and `cancel` returns
+    /// `false`.
+    pub fn cancel(&self) -> bool {
+        let mut slot = self.shared.slot.lock().unwrap();
+        if slot.status != TicketStatus::Queued {
+            return false;
+        }
+        slot.status = TicketStatus::Canceled;
+        slot.outcome =
+            Some(Err(anyhow!("request {} canceled before dispatch", self.shared.id)));
+        self.shared.cv.notify_all();
+        true
+    }
+
+    /// Block until the request settles; consumes the ticket. A queued
+    /// request past its deadline settles as Expired right here — waiting
+    /// never outlives the deadline just because every dispatcher is busy.
+    pub fn wait(self) -> Result<GemmResponse> {
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            self.shared.expire_due(&mut slot);
+            if let Some(outcome) = slot.outcome.take() {
+                return outcome;
+            }
+            let queue_deadline =
+                if slot.status == TicketStatus::Queued { slot.deadline } else { None };
+            slot = match queue_deadline {
+                None => self.shared.cv.wait(slot).unwrap(),
+                Some(d) => {
+                    let timeout = d.saturating_duration_since(Instant::now());
+                    self.shared.cv.wait_timeout(slot, timeout).unwrap().0
+                }
+            };
+        }
+    }
+
+    /// Like [`Ticket::wait`], but gives up (with an error) after `d`.
+    /// Consumes the ticket either way — a timed-out request keeps running
+    /// detached and its result is dropped on completion.
+    pub fn wait_timeout(self, d: Duration) -> Result<GemmResponse> {
+        let give_up = Instant::now() + d;
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            self.shared.expire_due(&mut slot);
+            if let Some(outcome) = slot.outcome.take() {
+                return outcome;
+            }
+            let now = Instant::now();
+            if now >= give_up {
+                return Err(anyhow!(
+                    "request {}: no result within {d:?} (status {:?})",
+                    self.shared.id,
+                    slot.status
+                ));
+            }
+            let mut until = give_up;
+            if slot.status == TicketStatus::Queued {
+                if let Some(dl) = slot.deadline {
+                    until = until.min(dl);
+                }
+            }
+            let (guard, _) = self
+                .shared
+                .cv
+                .wait_timeout(slot, until.saturating_duration_since(now))
+                .unwrap();
+            slot = guard;
+        }
+    }
+}
+
+impl fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Ticket")
+            .field("id", &self.shared.id)
+            .field("status", &self.poll())
+            .finish()
+    }
+}
+
+/// Producer side of a [`Ticket`]: held by the submission queue (or the
+/// batcher while a request waits for its round) and consumed exactly once
+/// to settle the ticket.
+pub(crate) struct Completion {
+    shared: Arc<TicketShared>,
+}
+
+impl Completion {
+    pub(crate) fn id(&self) -> u64 {
+        self.shared.id
+    }
+
+    pub(crate) fn is_canceled(&self) -> bool {
+        self.status() == TicketStatus::Canceled
+    }
+
+    /// Current status, applying deadline self-expiry first so queue-side
+    /// bookkeeping (compaction, depth) never counts an expired corpse as
+    /// live.
+    pub(crate) fn status(&self) -> TicketStatus {
+        let mut slot = self.shared.slot.lock().unwrap();
+        self.shared.expire_due(&mut slot);
+        slot.status
+    }
+
+    /// Record the absolute queue deadline so the ticket side can expire
+    /// itself (called at enqueue). Wakes any waiter already blocked on
+    /// the ticket: a batched request reaches the queue *after* its ticket
+    /// was handed out, and a waiter sleeping without a deadline must
+    /// recompute its sleep against the new one.
+    pub(crate) fn set_deadline(&self, d: Instant) {
+        let mut slot = self.shared.slot.lock().unwrap();
+        slot.deadline = Some(d);
+        self.shared.expire_due(&mut slot);
+        self.shared.cv.notify_all();
+    }
+
+    /// Queued → Running. Returns `false` (and leaves the ticket alone) if
+    /// the request was canceled in the meantime.
+    pub(crate) fn start(&self) -> bool {
+        let mut slot = self.shared.slot.lock().unwrap();
+        if slot.status != TicketStatus::Queued {
+            return false;
+        }
+        slot.status = TicketStatus::Running;
+        true
+    }
+
+    /// Settle with an execution outcome (status Done / Failed).
+    pub(crate) fn finish(self, meta: RequestMeta, result: Result<GemmResult>) {
+        let mut slot = self.shared.slot.lock().unwrap();
+        if slot.outcome.is_some() || slot.status == TicketStatus::Canceled {
+            return;
+        }
+        match result {
+            Ok(result) => {
+                slot.status = TicketStatus::Done;
+                slot.outcome = Some(Ok(GemmResponse { result, meta }));
+            }
+            Err(e) => {
+                slot.status = TicketStatus::Failed;
+                slot.outcome = Some(Err(e));
+            }
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Settle without having run: rejected, expired, or shut down.
+    pub(crate) fn abort(self, status: TicketStatus, err: anyhow::Error) {
+        let mut slot = self.shared.slot.lock().unwrap();
+        if slot.outcome.is_some() || slot.status == TicketStatus::Canceled {
+            return;
+        }
+        slot.status = status;
+        slot.outcome = Some(Err(err));
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for Completion {
+    /// Last line of defense: a completion dropped without settling (an
+    /// executor panicked, or a holding queue was torn down abruptly)
+    /// fails the ticket instead of leaving `wait` blocked forever.
+    /// `finish`/`abort` set the outcome before this runs, so the normal
+    /// paths are no-ops here.
+    fn drop(&mut self) {
+        if let Ok(mut slot) = self.shared.slot.lock() {
+            if slot.outcome.is_none() && slot.status != TicketStatus::Canceled {
+                slot.status = TicketStatus::Failed;
+                slot.outcome = Some(Err(anyhow!(
+                    "request {} abandoned without a result",
+                    self.shared.id
+                )));
+                self.shared.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// New (ticket, completion) pair for request `id`.
+pub(crate) fn ticket(id: u64) -> (Ticket, Completion) {
+    let shared = Arc::new(TicketShared {
+        id,
+        slot: Mutex::new(Slot { status: TicketStatus::Queued, outcome: None, deadline: None }),
+        cv: Condvar::new(),
+    });
+    (Ticket { shared: Arc::clone(&shared) }, Completion { shared })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ft_level_parses_and_round_trips() {
+        for level in FtLevel::ALL {
+            assert_eq!(level.as_str().parse::<FtLevel>().unwrap(), level);
+        }
+        assert_eq!("tb".parse::<FtLevel>().unwrap(), FtLevel::Tb);
+        assert_eq!("warp".parse::<FtLevel>().unwrap(), FtLevel::Warp);
+        assert_eq!("thread".parse::<FtLevel>().unwrap(), FtLevel::Thread);
+        assert!("threadblock".parse::<FtLevel>().is_err());
+        assert!("".parse::<FtLevel>().is_err());
+        assert_eq!(FtLevel::default(), FtLevel::Tb, "fallback level is tb");
+    }
+
+    #[test]
+    fn priority_orders_low_normal_high() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!("high".parse::<Priority>().unwrap(), Priority::High);
+        assert!("urgent".parse::<Priority>().is_err());
+    }
+
+    #[test]
+    fn host_verify_parses() {
+        assert_eq!("off".parse::<HostVerify>().unwrap(), HostVerify::Off);
+        assert_eq!("clean_only".parse::<HostVerify>().unwrap(), HostVerify::CleanOnly);
+        assert_eq!("always".parse::<HostVerify>().unwrap(), HostVerify::Always);
+        assert!("sometimes".parse::<HostVerify>().is_err());
+        assert_eq!(HostVerify::default(), HostVerify::Off);
+    }
+
+    #[test]
+    fn builder_accumulates_options() {
+        let a = Matrix::zeros(4, 6);
+        let b = Matrix::zeros(6, 2);
+        let req = GemmRequest::new(a, b)
+            .policy(FtPolicy::Offline)
+            .ft_level(FtLevel::Warp)
+            .max_recomputes(3)
+            .priority(Priority::High)
+            .deadline(Duration::from_millis(250))
+            .inject(InjectionPlan::single(1, 1, 0, 9.0));
+        assert_eq!(req.shape(), (4, 2, 6));
+        assert_eq!(req.get_policy(), FtPolicy::Offline);
+        assert_eq!(req.get_options().ft_level, Some(FtLevel::Warp));
+        assert_eq!(req.get_options().max_recomputes, Some(3));
+        assert_eq!(req.get_options().priority, Priority::High);
+        assert_eq!(req.get_options().deadline, Some(Duration::from_millis(250)));
+        assert_eq!(req.injections().len(), 1);
+    }
+
+    #[test]
+    fn cancel_flips_queued_tickets_only_once() {
+        let (t, _c) = ticket(7);
+        assert_eq!(t.id(), 7);
+        assert_eq!(t.poll(), TicketStatus::Queued);
+        assert!(t.cancel());
+        assert!(!t.cancel(), "second cancel is a no-op");
+        assert_eq!(t.poll(), TicketStatus::Canceled);
+        let err = t.wait().unwrap_err();
+        assert!(err.to_string().contains("canceled"), "{err}");
+    }
+
+    #[test]
+    fn start_refuses_canceled_requests() {
+        let (t, c) = ticket(1);
+        assert!(t.cancel());
+        assert!(!c.start());
+    }
+
+    #[test]
+    fn finish_settles_and_wait_returns() {
+        let (t, c) = ticket(3);
+        assert!(c.start());
+        let meta = RequestMeta {
+            id: 3,
+            policy: FtPolicy::None,
+            priority: Priority::Normal,
+            queued: Duration::ZERO,
+            dispatch_seq: 0,
+        };
+        let result = GemmResult {
+            c: Matrix::zeros(1, 1),
+            errors_detected: 0,
+            errors_corrected: 0,
+            recomputes: 0,
+            kernel_launches: 1,
+            exec_time: Duration::from_millis(1),
+            buckets: vec!["small"],
+        };
+        c.finish(meta, Ok(result));
+        assert_eq!(t.poll(), TicketStatus::Done);
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.meta.id, 3);
+        assert_eq!(resp.result.kernel_launches, 1);
+    }
+
+    #[test]
+    fn abort_reports_status_and_error() {
+        let (t, c) = ticket(4);
+        c.abort(TicketStatus::Expired, anyhow!("deadline exceeded"));
+        assert_eq!(t.poll(), TicketStatus::Expired);
+        assert!(t.wait().unwrap_err().to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn dropped_completion_fails_the_ticket_instead_of_hanging() {
+        let (t, c) = ticket(9);
+        drop(c); // e.g. the executor panicked before settling
+        assert_eq!(t.poll(), TicketStatus::Failed);
+        let err = t.wait().unwrap_err();
+        assert!(err.to_string().contains("abandoned"), "{err}");
+        // a canceled ticket keeps its cancel outcome through the drop
+        let (t, c) = ticket(10);
+        assert!(t.cancel());
+        drop(c);
+        assert_eq!(t.poll(), TicketStatus::Canceled);
+    }
+
+    #[test]
+    fn wait_timeout_gives_up_on_unsettled_tickets() {
+        let (t, _c) = ticket(5);
+        let err = t.wait_timeout(Duration::from_millis(10)).unwrap_err();
+        assert!(err.to_string().contains("no result"), "{err}");
+    }
+}

@@ -13,6 +13,11 @@
 //! the moment it lands (the k-partial sum order is completion order —
 //! float-associativity drift is bounded by the usual GEMM tolerance).
 //!
+//! `run` is `&self` and re-entrant: the coordinator's submission
+//! dispatchers call it concurrently for distinct requests, so one shared
+//! pool interleaves the nodes of many in-flight plans (each run keeps its
+//! own completion channel and bookkeeping).
+//!
 //! Failure model: the first node error wins; remaining in-flight nodes are
 //! drained (never detached) before the error returns, so a failed request
 //! cannot leak work into the next one.
@@ -75,43 +80,74 @@ impl Scheduler {
         &self.engine
     }
 
-    /// Run a plan against operands `a`, `b`; blocks until every node is
-    /// accounted for.
+    /// Run a plan against borrowed operands `a`, `b`; blocks until every
+    /// node is accounted for. Multi-node plans copy the operands once
+    /// into shared ownership — callers that already hold `Arc`s (the
+    /// submission dispatchers) should use [`Scheduler::run_shared`].
     pub fn run(&self, plan: &ExecutionPlan, a: &Matrix, b: &Matrix) -> Result<RunOutcome> {
-        let total = plan.nodes.len();
-        if total == 0 {
+        if plan.nodes.is_empty() {
             bail!("empty execution plan");
         }
-
-        // Single-node fast path: no concurrency to buy, so skip the pool
-        // and the owned operand copies and run on the caller's thread.
-        if total == 1 && plan.nodes[0].deps.is_empty() {
-            let values = Mutex::new(HashMap::new());
-            let ctx = Ctx {
-                engine: &self.engine,
-                a,
-                b,
-                thresholds: plan.thresholds,
-                values: &values,
-            };
-            let done = exec_node(&ctx, &plan.nodes[0])?;
-            let mut c = Matrix::zeros(plan.m, plan.n);
-            if let Some((partial, row0, col0)) = done.partial {
-                accumulate(&mut c, &partial, row0, col0);
-            }
-            return Ok(RunOutcome {
-                c,
-                detected: done.detected,
-                corrected: done.corrected,
-                recomputes: done.recomputes,
-                launches: done.launches,
-            });
+        if is_single_node(plan) {
+            return self.run_single(plan, a, b);
         }
+        self.run_pooled(plan, Arc::new(a.clone()), Arc::new(b.clone()))
+    }
 
+    /// Like [`Scheduler::run`] but with shared operands: the multi-node
+    /// path clones refcounts, never matrices.
+    pub fn run_shared(
+        &self,
+        plan: &ExecutionPlan,
+        a: Arc<Matrix>,
+        b: Arc<Matrix>,
+    ) -> Result<RunOutcome> {
+        if plan.nodes.is_empty() {
+            bail!("empty execution plan");
+        }
+        if is_single_node(plan) {
+            return self.run_single(plan, &a, &b);
+        }
+        self.run_pooled(plan, a, b)
+    }
+
+    /// Single-node fast path: no concurrency to buy, so skip the pool and
+    /// any owned operand copies and run on the caller's thread.
+    fn run_single(&self, plan: &ExecutionPlan, a: &Matrix, b: &Matrix) -> Result<RunOutcome> {
+        let values = Mutex::new(HashMap::new());
+        let ctx = Ctx {
+            engine: &self.engine,
+            a,
+            b,
+            thresholds: plan.thresholds,
+            values: &values,
+        };
+        let done = exec_node(&ctx, &plan.nodes[0])?;
+        let mut c = Matrix::zeros(plan.m, plan.n);
+        if let Some((partial, row0, col0)) = done.partial {
+            accumulate(&mut c, &partial, row0, col0);
+        }
+        Ok(RunOutcome {
+            c,
+            detected: done.detected,
+            corrected: done.corrected,
+            recomputes: done.recomputes,
+            launches: done.launches,
+        })
+    }
+
+    /// Multi-node path: fan the DAG out over the bounded pool.
+    fn run_pooled(
+        &self,
+        plan: &ExecutionPlan,
+        a: Arc<Matrix>,
+        b: Arc<Matrix>,
+    ) -> Result<RunOutcome> {
+        let total = plan.nodes.len();
         let ctx = Arc::new(OwnedCtx {
             engine: self.engine.clone(),
-            a: Arc::new(a.clone()),
-            b: Arc::new(b.clone()),
+            a,
+            b,
             thresholds: plan.thresholds,
             values: Mutex::new(HashMap::new()),
         });
@@ -203,6 +239,10 @@ impl Scheduler {
         out.c = c;
         Ok(out)
     }
+}
+
+fn is_single_node(plan: &ExecutionPlan) -> bool {
+    plan.nodes.len() == 1 && plan.nodes[0].deps.is_empty()
 }
 
 /// Owned execution context shared by pooled node jobs.

@@ -1,0 +1,370 @@
+//! The submission queue behind [`Coordinator::submit`]: admission control
+//! plus deadline/priority-aware dispatch of whole requests.
+//!
+//! Submitted requests enter a priority queue (higher [`Priority`] first,
+//! then earlier deadline, then FIFO) and are drained by a fixed pool of
+//! dispatcher threads — the **admission-control bound on in-flight
+//! plans** (`CoordinatorConfig::max_inflight`). Each dispatcher compiles
+//! and runs one request at a time through the shared plan → schedule →
+//! execute pipeline, so distinct requests overlap on the engine worker
+//! pool exactly like the blocks of one split request do. A second,
+//! optional bound (`max_queue`) rejects submissions outright once the
+//! backlog is that deep — fail fast at the front door instead of
+//! accumulating unbounded latency.
+//!
+//! Cancellation is resolved at dequeue time: a canceled ticket is
+//! dropped without running (entries are deleted lazily, with compaction
+//! at admission pressure so corpses never hold `max_queue` quota).
+//! Deadlines are enforced from **both** sides: the dispatcher expires a
+//! late entry at dequeue, and the ticket itself expires on `poll`/`wait`
+//! once the deadline passes — so a starved request fails on time even if
+//! no dispatcher ever reaches it. Shutdown (the last `Coordinator` clone
+//! dropping) fails everything still queued and joins the dispatchers —
+//! in-flight requests drain, never detach.
+//!
+//! [`Coordinator::submit`]: super::Coordinator::submit
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::metrics::recorder::Counters;
+
+use super::request::{ticket, Completion, GemmRequest, Priority, RequestMeta, Ticket, TicketStatus};
+use super::Core;
+
+/// One queued request. Ordering (via `Ord`) is dequeue preference:
+/// priority desc, then earlier deadline, then submission order.
+pub(crate) struct Entry {
+    priority: Priority,
+    deadline: Option<Instant>,
+    seq: u64,
+    submitted: Instant,
+    req: GemmRequest,
+    completion: Completion,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // BinaryHeap pops the maximum: greater = dispatched earlier.
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| match (self.deadline, other.deadline) {
+                // an earlier deadline outranks a later one; no deadline
+                // ranks last within the priority class
+                (Some(a), Some(b)) => b.cmp(&a),
+                (Some(_), None) => CmpOrdering::Greater,
+                (None, Some(_)) => CmpOrdering::Less,
+                (None, None) => CmpOrdering::Equal,
+            })
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct QueueInner {
+    heap: BinaryHeap<Entry>,
+    shutdown: bool,
+}
+
+struct SubmitState {
+    queue: Mutex<QueueInner>,
+    cv: Condvar,
+    /// Monotonic submission stamp (FIFO tiebreak).
+    seq: AtomicU64,
+    /// Monotonic request-id source for tickets.
+    next_id: AtomicU64,
+    /// Monotonic dequeue stamp (`RequestMeta::dispatch_seq`).
+    dispatch_seq: AtomicU64,
+    /// Reject submissions once this many requests are queued; 0 = no cap.
+    max_queue: usize,
+}
+
+/// The coordinator's submission machinery: queue + dispatcher pool.
+pub(crate) struct Submission {
+    state: Arc<SubmitState>,
+    core: Arc<Core>,
+    dispatchers: usize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Submission {
+    pub(crate) fn start(core: Arc<Core>, dispatchers: usize, max_queue: usize) -> Submission {
+        let state = Arc::new(SubmitState {
+            queue: Mutex::new(QueueInner { heap: BinaryHeap::new(), shutdown: false }),
+            cv: Condvar::new(),
+            seq: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+            dispatch_seq: AtomicU64::new(0),
+            max_queue,
+        });
+        let workers = (0..dispatchers.max(1))
+            .map(|i| {
+                let state = Arc::clone(&state);
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name(format!("ftgemm-dispatch-{i}"))
+                    .spawn(move || dispatcher_loop(&core, &state))
+                    .expect("spawn dispatcher")
+            })
+            .collect();
+        Submission { state, core, dispatchers: dispatchers.max(1), workers }
+    }
+
+    /// The in-flight bound (dispatcher-thread count).
+    pub(crate) fn dispatchers(&self) -> usize {
+        self.dispatchers
+    }
+
+    /// Live requests queued but not yet dispatched. Canceled and
+    /// self-expired tickets settle immediately but their entries are
+    /// deleted lazily (at dequeue or at admission-pressure compaction),
+    /// so count them out.
+    pub(crate) fn queue_depth(&self) -> usize {
+        self.state
+            .queue
+            .lock()
+            .unwrap()
+            .heap
+            .iter()
+            .filter(|e| e.completion.status() == TicketStatus::Queued)
+            .count()
+    }
+
+    /// Mint a fresh (ticket, completion) pair with a coordinator-unique
+    /// request id. Used directly by clients (the batcher) that hand the
+    /// ticket out *before* the request reaches the queue.
+    pub(crate) fn new_ticket(&self) -> (Ticket, Completion) {
+        ticket(self.state.next_id.fetch_add(1, Ordering::Relaxed) + 1)
+    }
+
+    /// Enqueue a request against an already-minted completion.
+    /// `submitted` is the instant the caller handed out the ticket — for
+    /// the batcher that predates this call by up to a batching round, and
+    /// deadlines/queue-time metadata count from it, not from here. On
+    /// rejection (shutdown / admission control) the completion is settled
+    /// with the same error that is returned.
+    pub(crate) fn push(
+        &self,
+        req: GemmRequest,
+        completion: Completion,
+        submitted: Instant,
+    ) -> Result<()> {
+        let priority = req.opts.priority;
+        let deadline = req.opts.deadline.map(|d| submitted + d);
+        let mut q = self.state.queue.lock().unwrap();
+        if q.shutdown {
+            drop(q);
+            completion.abort(TicketStatus::Failed, anyhow!("coordinator is shut down"));
+            bail!("coordinator is shut down");
+        }
+        if self.state.max_queue > 0 && q.heap.len() >= self.state.max_queue {
+            // Settled entries (canceled tickets, or deadline self-expiry
+            // via poll/wait) are deleted lazily; don't let corpses hold
+            // admission quota against live traffic. Compacted entries get
+            // their counter bump here instead of at dequeue.
+            q.heap.retain(|e| match e.completion.status() {
+                TicketStatus::Queued => true,
+                TicketStatus::Canceled => {
+                    Counters::bump(&self.core.counters.canceled);
+                    false
+                }
+                TicketStatus::Expired => {
+                    Counters::bump(&self.core.counters.expired);
+                    false
+                }
+                _ => false,
+            });
+        }
+        if self.state.max_queue > 0 && q.heap.len() >= self.state.max_queue {
+            let depth = q.heap.len();
+            drop(q);
+            completion.abort(
+                TicketStatus::Failed,
+                anyhow!("admission control: {depth} requests queued (max_queue)"),
+            );
+            bail!("admission control: {depth} requests already queued (max_queue = {})",
+                self.state.max_queue);
+        }
+        Counters::bump(&self.core.counters.requests);
+        if let Some(d) = deadline {
+            // admitted: the ticket side can now expire itself (poll/wait)
+            // even if no dispatcher ever reaches the entry
+            completion.set_deadline(d);
+        }
+        q.heap.push(Entry {
+            priority,
+            deadline,
+            seq: self.state.seq.fetch_add(1, Ordering::Relaxed),
+            submitted,
+            req,
+            completion,
+        });
+        drop(q);
+        self.state.cv.notify_one();
+        Ok(())
+    }
+
+    /// Mint a ticket and enqueue in one step (the `Coordinator::submit`
+    /// fast path).
+    pub(crate) fn submit(&self, req: GemmRequest) -> Result<Ticket> {
+        let (ticket, completion) = self.new_ticket();
+        self.push(req, completion, Instant::now())?;
+        Ok(ticket)
+    }
+}
+
+impl Drop for Submission {
+    fn drop(&mut self) {
+        let drained: Vec<Entry> = {
+            let mut q = self.state.queue.lock().unwrap();
+            q.shutdown = true;
+            self.state.cv.notify_all();
+            q.heap.drain().collect()
+        };
+        for e in drained {
+            e.completion.abort(
+                TicketStatus::Failed,
+                anyhow!("coordinator shut down with request {} still queued", e.completion.id()),
+            );
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher_loop(core: &Arc<Core>, state: &Arc<SubmitState>) {
+    loop {
+        // dispatch_seq is taken under the queue lock so the stamps agree
+        // with dequeue order even with several dispatchers popping.
+        let (entry, dispatch_seq) = {
+            let mut q = state.queue.lock().unwrap();
+            loop {
+                if let Some(e) = q.heap.pop() {
+                    break (e, state.dispatch_seq.fetch_add(1, Ordering::SeqCst));
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = state.cv.wait(q).unwrap();
+            }
+        };
+        let Entry { priority, deadline, submitted, req, completion, .. } = entry;
+        if completion.is_canceled() {
+            Counters::bump(&core.counters.canceled);
+            continue;
+        }
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            Counters::bump(&core.counters.expired);
+            completion.abort(
+                TicketStatus::Expired,
+                anyhow!(
+                    "request {}: deadline exceeded after {:?} in queue",
+                    completion.id(),
+                    submitted.elapsed()
+                ),
+            );
+            continue;
+        }
+        let meta = RequestMeta {
+            id: completion.id(),
+            policy: req.policy,
+            priority,
+            queued: submitted.elapsed(),
+            dispatch_seq,
+        };
+        if !completion.start() {
+            // canceled in the window between the checks above
+            Counters::bump(&core.counters.canceled);
+            continue;
+        }
+        // A panicking request must not kill the dispatcher (that would
+        // silently shrink the admission bound) nor strand its waiter.
+        let id = completion.id();
+        let result = catch_unwind(AssertUnwindSafe(|| core.execute(&req)))
+            .unwrap_or_else(|_| Err(anyhow!("request {id} panicked during execution")));
+        completion.finish(meta, result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abft::matrix::Matrix;
+    use std::time::Duration;
+
+    fn entry(priority: Priority, deadline: Option<Duration>, seq: u64) -> Entry {
+        let now = Instant::now();
+        let (_t, completion) = ticket(seq);
+        Entry {
+            priority,
+            deadline: deadline.map(|d| now + d),
+            seq,
+            submitted: now,
+            req: GemmRequest::new(Matrix::zeros(1, 1), Matrix::zeros(1, 1)),
+            completion,
+        }
+    }
+
+    fn pop_order(mut entries: Vec<Entry>) -> Vec<u64> {
+        let mut heap = BinaryHeap::new();
+        for e in entries.drain(..) {
+            heap.push(e);
+        }
+        let mut order = Vec::new();
+        while let Some(e) = heap.pop() {
+            order.push(e.seq);
+        }
+        order
+    }
+
+    #[test]
+    fn priority_outranks_everything() {
+        let order = pop_order(vec![
+            entry(Priority::Low, None, 0),
+            entry(Priority::High, None, 1),
+            entry(Priority::Normal, Some(Duration::from_millis(1)), 2),
+        ]);
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn earlier_deadline_outranks_within_priority() {
+        let order = pop_order(vec![
+            entry(Priority::Normal, None, 0),
+            entry(Priority::Normal, Some(Duration::from_secs(5)), 1),
+            entry(Priority::Normal, Some(Duration::from_secs(1)), 2),
+        ]);
+        assert_eq!(order, vec![2, 1, 0], "deadline asc, deadline-free last");
+    }
+
+    #[test]
+    fn fifo_breaks_remaining_ties() {
+        let order = pop_order(vec![
+            entry(Priority::Normal, None, 2),
+            entry(Priority::Normal, None, 0),
+            entry(Priority::Normal, None, 1),
+        ]);
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+}

@@ -2,12 +2,13 @@
 //! an [`SeuModel`](super::SeuModel) and tally what happened — the driver
 //! behind Figs 16/21 and `examples/error_storm.rs`.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::abft::matrix::Matrix;
-use crate::coordinator::{Coordinator, FtPolicy};
+use crate::coordinator::{Coordinator, FtPolicy, GemmRequest};
 use crate::util::rng::Pcg32;
 
 use super::model::{KernelGeom, SeuModel};
@@ -68,11 +69,17 @@ impl FaultCampaign {
         let geom = self.geom_override.unwrap_or_else(|| KernelGeom::for_shape(m, n, k));
 
         for round in 0..rounds {
-            let a = Matrix::rand_uniform(m, k, self.seed ^ (round as u64) << 1);
-            let b = Matrix::rand_uniform(k, n, self.seed ^ ((round as u64) << 1 | 1));
+            // Arc'd operands: the submitted request shares them (refcount
+            // bump), and the reference matmul below reads the same data —
+            // the hot loop never copies a matrix.
+            let a = Arc::new(Matrix::rand_uniform(m, k, self.seed ^ (round as u64) << 1));
+            let b = Arc::new(Matrix::rand_uniform(k, n, self.seed ^ ((round as u64) << 1 | 1)));
             let plan = self.model.plan(&geom, t0.elapsed().as_secs_f64(), &mut rng);
             report.injected += plan.len() as u64;
-            let out = self.coordinator.gemm_with_faults(&a, &b, self.policy, &plan)?;
+            let req = GemmRequest::new(Arc::clone(&a), Arc::clone(&b))
+                .policy(self.policy)
+                .inject(plan);
+            let out = self.coordinator.submit(req)?.wait()?.result;
             report.gemms += 1;
             report.detected += out.errors_detected;
             report.corrected += out.errors_corrected;

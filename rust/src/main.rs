@@ -11,7 +11,9 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use ftgemm::abft::matrix::Matrix;
-use ftgemm::coordinator::{Coordinator, CoordinatorConfig, FtPolicy};
+use ftgemm::coordinator::{
+    Coordinator, CoordinatorConfig, FtLevel, FtPolicy, GemmRequest, Priority,
+};
 use ftgemm::faults::{FaultCampaign, SeuModel};
 use ftgemm::figures::catalog;
 use ftgemm::gpusim::device::{A100, T4};
@@ -59,7 +61,8 @@ fn print_usage() {
          USAGE: ftgemm <command> [options]\n\n\
          COMMANDS:\n\
            info       artifact manifest + device model summary\n\
-           gemm       run one GEMM (--m --n --k --policy none|online|offline --inject N --workers W)\n\
+           gemm       run one GEMM (--m --n --k --policy none|online|offline --inject N\n\
+                      --workers W --priority low|normal|high --deadline-ms D)\n\
            campaign   SEU injection campaign (--rounds --errors --policy --workers W)\n\
            figures    regenerate paper figures (--fig 9..22|table1 | --all) --out DIR\n\
            serve      line-protocol GEMM server on stdin (--config FILE)\n\
@@ -77,9 +80,19 @@ fn parse_policy(s: &str) -> anyhow::Result<FtPolicy> {
     })
 }
 
-fn start_coordinator(ft_level: &str, workers: usize) -> anyhow::Result<Coordinator> {
+/// The CLI boundary of the typed [`FtLevel`]: parse or die with the
+/// accepted spellings.
+fn parse_level(s: &str) -> anyhow::Result<FtLevel> {
+    s.parse::<FtLevel>()
+}
+
+fn parse_priority(s: &str) -> anyhow::Result<Priority> {
+    s.parse::<Priority>()
+}
+
+fn start_coordinator(ft_level: FtLevel, workers: usize) -> anyhow::Result<Coordinator> {
     let engine = Engine::start(EngineConfig { workers, ..Default::default() })?;
-    let cfg = CoordinatorConfig { ft_level: ft_level.into(), ..Default::default() };
+    let cfg = CoordinatorConfig { ft_level, ..Default::default() };
     Ok(Coordinator::new(engine, cfg))
 }
 
@@ -128,26 +141,40 @@ fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
         .opt("inject", "number of SEUs to inject", Some("0"))
         .opt("level", "online FT granularity tb|warp|thread", Some("tb"))
         .opt("workers", "engine worker pool size", Some("1"))
+        .opt("priority", "dispatch priority low|normal|high", Some("normal"))
+        .opt("deadline-ms", "fail if still queued after this long; 0 = none", Some("0"))
         .opt("seed", "rng seed", Some("42"));
     let args = cmd.parse(rest)?;
     let (m, n, k) = (args.usize_or("m", 128), args.usize_or("n", 128), args.usize_or("k", 128));
     let policy = parse_policy(args.str_or("policy", "online"))?;
     let inject = args.usize_or("inject", 0);
     let seed = args.usize_or("seed", 42) as u64;
+    let priority = parse_priority(args.str_or("priority", "normal"))?;
+    let deadline_ms = args.usize_or("deadline-ms", 0);
 
-    let coord = start_coordinator(args.str_or("level", "tb"), args.usize_or("workers", 1))?;
+    let level = parse_level(args.str_or("level", "tb"))?;
+    let coord = start_coordinator(level, args.usize_or("workers", 1))?;
     let a = Matrix::rand_uniform(m, k, seed);
     let b = Matrix::rand_uniform(k, n, seed + 1);
+    let want = a.matmul(&b);
     let geom = ftgemm::faults::model::KernelGeom::for_shape(m, n, k);
     let mut rng = ftgemm::util::rng::Pcg32::seeded(seed);
     let plan = SeuModel::PerGemm { count: inject }.plan(&geom, 0.0, &mut rng);
 
-    let out = coord.gemm_with_faults(&a, &b, policy, &plan)?;
-    let want = a.matmul(&b);
+    let mut req = GemmRequest::new(a, b).policy(policy).inject(plan.clone()).priority(priority);
+    if deadline_ms > 0 {
+        req = req.deadline(std::time::Duration::from_millis(deadline_ms as u64));
+    }
+    let resp = coord.submit(req)?.wait()?;
+    let (out, meta) = (resp.result, resp.meta);
     println!(
-        "C = A({m}x{k}) * B({k}x{n})  policy={}  buckets={:?}",
+        "C = A({m}x{k}) * B({k}x{n})  policy={}  buckets={:?}  request id={} priority={} \
+         queued={:?}",
         policy.name(),
-        out.buckets
+        out.buckets,
+        meta.id,
+        meta.priority.as_str(),
+        meta.queued
     );
     println!(
         "injected {}  detected {}  corrected {}  recomputes {}  launches {}",
@@ -176,7 +203,7 @@ fn cmd_campaign(rest: &[String]) -> anyhow::Result<()> {
         .opt("workers", "engine worker pool size", Some("1"))
         .opt("seed", "rng seed", Some("7"));
     let args = cmd.parse(rest)?;
-    let coord = start_coordinator("tb", args.usize_or("workers", 1))?;
+    let coord = start_coordinator(FtLevel::Tb, args.usize_or("workers", 1))?;
     let campaign = FaultCampaign::new(
         coord,
         SeuModel::PerGemm { count: args.usize_or("errors", 4) },
@@ -229,9 +256,10 @@ fn cmd_table1() -> anyhow::Result<()> {
 }
 
 /// The launcher: a line-protocol server over stdin/stdout driving the
-/// batcher. Protocol (one request per line):
+/// batcher (itself a grouping stage over `Coordinator::submit`). Protocol
+/// (one request per line):
 ///
-///     GEMM <m> <n> <k> <policy> [seed] [inject]
+///     GEMM <m> <n> <k> <policy> [seed] [inject] [priority]
 ///     STATS
 ///     QUIT
 ///
@@ -253,7 +281,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let coord = Coordinator::new(engine, cfg.coordinator()?);
     let batcher = Batcher::start(coord.clone(), cfg.batcher()?);
 
-    eprintln!("ftgemm serve: ready (GEMM m n k policy [seed] [inject] | STATS | QUIT)");
+    eprintln!("ftgemm serve: ready (GEMM m n k policy [seed] [inject] [priority] | STATS | QUIT)");
     let stdin = std::io::stdin();
     let mut id = 0u64;
     for line in stdin.lock().lines() {
@@ -264,10 +292,14 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             ["QUIT"] | ["quit"] => break,
             ["STATS"] | ["stats"] => {
                 println!(
-                    "OK stats counters={:?} batch={:?} mean_latency_s={:.6}",
+                    "OK stats counters={:?} batch={:?} mean_latency_s={:.6} queued={} \
+                     max_inflight={} engine_inflight={}",
                     coord.counters().snapshot(),
                     batcher.stats(),
-                    coord.latency().mean_secs()
+                    coord.latency().mean_secs(),
+                    coord.queue_depth(),
+                    coord.max_inflight(),
+                    coord.engine().inflight()
                 );
             }
             ["GEMM", m, n, k, policy, tail @ ..] | ["gemm", m, n, k, policy, tail @ ..] => {
@@ -299,19 +331,26 @@ fn serve_one(
     let policy = parse_policy(policy)?;
     let seed: u64 = tail.first().and_then(|s| s.parse().ok()).unwrap_or(1);
     let inject: usize = tail.get(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let priority = match tail.get(2) {
+        Some(p) => parse_priority(p)?,
+        None => Priority::Normal,
+    };
     let a = Matrix::rand_uniform(m, k, seed);
     let b = Matrix::rand_uniform(k, n, seed + 1);
     let geom = ftgemm::faults::model::KernelGeom::for_shape(m, n, k);
     let mut rng = ftgemm::util::rng::Pcg32::seeded(seed);
     let plan = SeuModel::PerGemm { count: inject }.plan(&geom, 0.0, &mut rng);
-    let out = batcher.submit(a, b, policy, plan)?.wait()?;
+    let req = GemmRequest::new(a, b).policy(policy).inject(plan).priority(priority);
+    let resp = batcher.submit(req)?.wait()?;
+    let out = resp.result;
     Ok(format!(
-        "buckets={:?} detected={} corrected={} recomputes={} launches={} time_us={}",
+        "buckets={:?} detected={} corrected={} recomputes={} launches={} time_us={} queued_us={}",
         out.buckets,
         out.errors_detected,
         out.errors_corrected,
         out.recomputes,
         out.kernel_launches,
-        out.exec_time.as_micros()
+        out.exec_time.as_micros(),
+        resp.meta.queued.as_micros()
     ))
 }

@@ -73,6 +73,10 @@ pub struct Counters {
     pub recomputes: AtomicU64,
     pub padded_requests: AtomicU64,
     pub batched_groups: AtomicU64,
+    /// Requests canceled before dispatch (ticket surface).
+    pub canceled: AtomicU64,
+    /// Requests whose deadline passed while queued.
+    pub expired: AtomicU64,
 }
 
 impl Counters {
@@ -101,6 +105,8 @@ impl Counters {
             recomputes: Self::get(&self.recomputes),
             padded_requests: Self::get(&self.padded_requests),
             batched_groups: Self::get(&self.batched_groups),
+            canceled: Self::get(&self.canceled),
+            expired: Self::get(&self.expired),
         }
     }
 }
@@ -114,6 +120,8 @@ pub struct CounterSnapshot {
     pub recomputes: u64,
     pub padded_requests: u64,
     pub batched_groups: u64,
+    pub canceled: u64,
+    pub expired: u64,
 }
 
 #[cfg(test)]

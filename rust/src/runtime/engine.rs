@@ -124,6 +124,17 @@ impl Pending {
     pub fn wait(self) -> Result<ExecOutput> {
         self.rx.recv().map_err(|_| anyhow!("engine dropped request"))?
     }
+
+    /// Non-blocking completion probe: `None` while the request is still
+    /// in flight. The result is handed out exactly once — after this
+    /// returns `Some`, the handle is spent and `wait` would error.
+    pub fn try_wait(&self) -> Option<Result<ExecOutput>> {
+        match self.rx.try_recv() {
+            Ok(Some(r)) => Some(r),
+            Ok(None) => None,
+            Err(_) => Some(Err(anyhow!("engine dropped request"))),
+        }
+    }
 }
 
 struct Worker {
@@ -248,6 +259,12 @@ impl Engine {
     /// the concurrency witness the pipeline tests and benches read.
     pub fn peak_inflight(&self) -> usize {
         self.shared.peak_inflight.load(Ordering::SeqCst)
+    }
+
+    /// Requests currently queued or running across the pool (live load
+    /// signal; the serving layer reports it next to its queue depth).
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight_total.load(Ordering::SeqCst)
     }
 
     /// Execute an artifact; blocks until the result is back.
@@ -534,6 +551,35 @@ mod tests {
             .count();
         assert!(busy >= 2, "burst stayed on {busy} worker(s)");
         assert!(eng.peak_inflight() >= 2);
+    }
+
+    #[test]
+    fn try_wait_polls_to_completion() {
+        let eng = engine();
+        let a = crate::abft::Matrix::rand_uniform(64, 64, 5);
+        let b = crate::abft::Matrix::rand_uniform(64, 64, 6);
+        let pending = eng
+            .submit(
+                "gemm_small",
+                vec![
+                    Tensor::new(vec![64, 64], a.data().to_vec()),
+                    Tensor::new(vec![64, 64], b.data().to_vec()),
+                ],
+            )
+            .unwrap();
+        let mut polls = 0usize;
+        let out = loop {
+            match pending.try_wait() {
+                Some(r) => break r.unwrap(),
+                None => {
+                    polls += 1;
+                    assert!(polls < 100_000, "request never completed");
+                    std::thread::yield_now();
+                }
+            }
+        };
+        assert_eq!(out.outputs[0].shape, vec![64, 64]);
+        assert_eq!(eng.inflight(), 0, "completed request left the load counter");
     }
 
     #[test]

@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::abft::checksum::Thresholds;
 use crate::coordinator::batcher::BatcherConfig;
-use crate::coordinator::CoordinatorConfig;
+use crate::coordinator::{CoordinatorConfig, FtLevel, HostVerify};
 use crate::runtime::EngineConfig;
 
 /// Parsed config: `section.key -> raw value`.
@@ -67,7 +67,8 @@ impl Config {
             if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
                 bail!("line {}: bad key {key:?}", lineno + 1);
             }
-            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let full =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
             let parsed = parse_value(val.trim())
                 .with_context(|| format!("line {}: value for {full}", lineno + 1))?;
             if values.insert(full.clone(), parsed).is_some() {
@@ -128,23 +129,44 @@ impl Config {
     // ------------------------------------------------------------------
 
     /// `[coordinator]` section → [`CoordinatorConfig`]; unset keys keep
-    /// defaults. Validates the FT level.
+    /// defaults. This is the boundary where the stringly config becomes
+    /// typed: `ft_level` parses into [`FtLevel`] (rejecting unknown
+    /// levels) and `host_verify` accepts a boolean (`true` =
+    /// [`HostVerify::CleanOnly`] — injected runs are deliberately not
+    /// re-verified) or one of `"off" | "clean_only" | "always"`.
     pub fn coordinator(&self) -> Result<CoordinatorConfig> {
         let mut cfg = CoordinatorConfig::default();
         if let Some(level) = self.str("coordinator.ft_level")? {
-            if !matches!(level, "tb" | "warp" | "thread") {
-                bail!("coordinator.ft_level must be tb|warp|thread, got {level:?}");
-            }
-            cfg.ft_level = level.to_string();
+            cfg.ft_level = level.parse::<FtLevel>().map_err(|_| {
+                anyhow!("coordinator.ft_level must be tb|warp|thread, got {level:?}")
+            })?;
         }
-        if let Some(b) = self.bool("coordinator.host_verify")? {
-            cfg.host_verify = b;
-        }
+        cfg.host_verify = match self.get("coordinator.host_verify") {
+            None => cfg.host_verify,
+            Some(Value::Bool(true)) => HostVerify::CleanOnly,
+            Some(Value::Bool(false)) => HostVerify::Off,
+            Some(Value::Str(mode)) => mode.parse::<HostVerify>().map_err(|_| {
+                anyhow!(
+                    "coordinator.host_verify must be a boolean or off|clean_only|always, \
+                     got {mode:?}"
+                )
+            })?,
+            Some(v) => bail!(
+                "coordinator.host_verify: expected boolean or string, got {}",
+                v.type_name()
+            ),
+        };
         if let Some(n) = self.usize("coordinator.max_recomputes")? {
             cfg.max_recomputes = n;
         }
         if let Some(n) = self.usize("coordinator.scheduler_threads")? {
             cfg.scheduler_threads = n;
+        }
+        if let Some(n) = self.usize("coordinator.max_inflight")? {
+            cfg.max_inflight = n;
+        }
+        if let Some(n) = self.usize("coordinator.max_queue")? {
+            cfg.max_queue = n;
         }
         let mut th = Thresholds::default();
         if let Some(x) = self.num("coordinator.threshold_rel")? {
@@ -245,6 +267,8 @@ host_verify = true
 max_recomputes = 3
 threshold_rel = 2e-4
 scheduler_threads = 6
+max_inflight = 8
+max_queue = 256
 
 [batcher]
 max_batch = 32
@@ -264,10 +288,12 @@ batch_window_us = 500
     fn typed_loaders_build_configs() {
         let c = Config::parse(SAMPLE).unwrap();
         let coord = c.coordinator().unwrap();
-        assert_eq!(coord.ft_level, "warp");
-        assert!(coord.host_verify);
+        assert_eq!(coord.ft_level, FtLevel::Warp);
+        assert_eq!(coord.host_verify, HostVerify::CleanOnly, "true maps to clean-only");
         assert_eq!(coord.max_recomputes, 3);
         assert_eq!(coord.scheduler_threads, 6);
+        assert_eq!(coord.max_inflight, 8);
+        assert_eq!(coord.max_queue, 256);
         assert!((coord.thresholds.rel - 2e-4).abs() < 1e-9);
         let eng = c.engine().unwrap();
         assert_eq!(eng.precompile, vec!["gemm_medium", "ftgemm_tb_medium"]);
@@ -281,8 +307,24 @@ batch_window_us = 500
     fn defaults_when_unset() {
         let c = Config::parse("").unwrap();
         let coord = c.coordinator().unwrap();
-        assert_eq!(coord.ft_level, "tb");
-        assert!(!coord.host_verify);
+        assert_eq!(coord.ft_level, FtLevel::Tb);
+        assert_eq!(coord.host_verify, HostVerify::Off);
+        assert_eq!(coord.max_inflight, 0, "0 = autosize to the engine pool");
+        assert_eq!(coord.max_queue, 0, "0 = unbounded");
+    }
+
+    #[test]
+    fn host_verify_accepts_bool_or_mode_string() {
+        let c = Config::parse("[coordinator]\nhost_verify = false").unwrap();
+        assert_eq!(c.coordinator().unwrap().host_verify, HostVerify::Off);
+        let c = Config::parse("[coordinator]\nhost_verify = \"always\"").unwrap();
+        assert_eq!(c.coordinator().unwrap().host_verify, HostVerify::Always);
+        let c = Config::parse("[coordinator]\nhost_verify = \"clean_only\"").unwrap();
+        assert_eq!(c.coordinator().unwrap().host_verify, HostVerify::CleanOnly);
+        let c = Config::parse("[coordinator]\nhost_verify = \"maybe\"").unwrap();
+        assert!(c.coordinator().is_err());
+        let c = Config::parse("[coordinator]\nhost_verify = 1").unwrap();
+        assert!(c.coordinator().is_err());
     }
 
     #[test]

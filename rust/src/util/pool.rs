@@ -160,6 +160,17 @@ pub mod oneshot {
             self.0.recv().map_err(|_| RecvError)
         }
 
+        /// Non-blocking probe: `Ok(None)` while the value is pending,
+        /// `Ok(Some(v))` exactly once when it lands, `Err` if the sender
+        /// was dropped (or the value was already taken).
+        pub fn try_recv(&self) -> Result<Option<T>, RecvError> {
+            match self.0.try_recv() {
+                Ok(v) => Ok(Some(v)),
+                Err(std::sync::mpsc::TryRecvError::Empty) => Ok(None),
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => Err(RecvError),
+            }
+        }
+
         pub fn recv_timeout(self, d: std::time::Duration) -> Result<T, RecvError> {
             self.0.recv_timeout(d).map_err(|_| RecvError)
         }
@@ -233,5 +244,15 @@ mod tests {
         let (tx, rx) = oneshot::channel::<i32>();
         drop(tx);
         assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn oneshot_try_recv_probes_without_blocking() {
+        let (tx, rx) = oneshot::channel::<i32>();
+        assert_eq!(rx.try_recv(), Ok(None));
+        tx.send(5).unwrap();
+        assert_eq!(rx.try_recv(), Ok(Some(5)));
+        // value already taken: the channel reports disconnection
+        assert!(rx.try_recv().is_err());
     }
 }

@@ -1,15 +1,21 @@
-//! End-to-end integration: engine pool + planner/scheduler + coordinator +
-//! batcher + ding baseline. Runs against the AOT artifacts when `make
-//! artifacts` has been run, and against the built-in manifest + reference
-//! backend otherwise — the serving semantics under test are identical.
+//! End-to-end integration: engine pool + submission queue +
+//! planner/scheduler + coordinator + batcher + ding baseline. Runs
+//! against the AOT artifacts when `make artifacts` has been run, and
+//! against the built-in manifest + reference backend otherwise — the
+//! serving semantics under test are identical.
 
 use std::sync::OnceLock;
+use std::time::Duration;
 
+use ftgemm::abft::checksum::Thresholds;
 use ftgemm::abft::injection::{Injection, InjectionPlan};
 use ftgemm::abft::matrix::Matrix;
 use ftgemm::coordinator::batcher::{Batcher, BatcherConfig};
 use ftgemm::coordinator::ding::DingPipeline;
-use ftgemm::coordinator::{Coordinator, CoordinatorConfig, FtPolicy};
+use ftgemm::coordinator::{
+    Coordinator, CoordinatorConfig, FtLevel, FtPolicy, GemmRequest, HostVerify, Priority,
+    TicketStatus,
+};
 use ftgemm::faults::{FaultCampaign, SeuModel};
 use ftgemm::runtime::{Engine, EngineConfig};
 
@@ -82,7 +88,7 @@ fn oversize_gemm_splits_and_accumulates() {
 
 #[test]
 fn host_verify_accepts_clean_results() {
-    let cfg = CoordinatorConfig { host_verify: true, ..Default::default() };
+    let cfg = CoordinatorConfig { host_verify: HostVerify::CleanOnly, ..Default::default() };
     let coord = Coordinator::new(engine(), cfg);
     let a = Matrix::rand_uniform(64, 64, 9);
     let b = Matrix::rand_uniform(64, 64, 10);
@@ -145,8 +151,8 @@ fn online_ft_on_padded_shape_corrects() {
 
 #[test]
 fn warp_and_thread_levels_also_correct() {
-    for level in ["warp", "thread"] {
-        let cfg = CoordinatorConfig { ft_level: level.into(), ..Default::default() };
+    for level in [FtLevel::Warp, FtLevel::Thread] {
+        let cfg = CoordinatorConfig { ft_level: level, ..Default::default() };
         let coord = Coordinator::new(engine(), cfg);
         let a = Matrix::rand_uniform(128, 128, 17);
         let b = Matrix::rand_uniform(128, 128, 18);
@@ -154,7 +160,7 @@ fn warp_and_thread_levels_also_correct() {
         let inj = InjectionPlan::single(30, 31, 2, 777.0);
         let out = coord.gemm_with_faults(&a, &b, FtPolicy::Online, &inj).unwrap();
         assert_eq!(out.errors_corrected, 1, "{level}");
-        check_close(&out.c, &want, 2e-2, level);
+        check_close(&out.c, &want, 2e-2, level.as_str());
     }
 }
 
@@ -216,7 +222,7 @@ fn offline_without_detect_artifact_uses_host_detector() {
 
 #[test]
 fn ding_pipeline_matches_host_gemm() {
-    let pipe = DingPipeline::new(engine(), "medium").unwrap();
+    let pipe = DingPipeline::new(coordinator(), "medium").unwrap();
     let a = Matrix::rand_uniform(128, 128, 27);
     let b = Matrix::rand_uniform(128, 128, 28);
     let out = pipe.gemm(&a, &b).unwrap();
@@ -228,7 +234,7 @@ fn ding_pipeline_matches_host_gemm() {
 
 #[test]
 fn ding_pipeline_corrects_per_panel_faults() {
-    let pipe = DingPipeline::new(engine(), "medium").unwrap();
+    let pipe = DingPipeline::new(coordinator(), "medium").unwrap();
     let a = Matrix::rand_uniform(128, 128, 29);
     let b = Matrix::rand_uniform(128, 128, 30);
     let want = a.matmul(&b);
@@ -247,7 +253,7 @@ fn ding_pipeline_corrects_per_panel_faults() {
 fn fused_uses_fewer_launches_than_ding() {
     // the structural claim behind the paper's speedup: one launch vs 1+2P
     let coord = coordinator();
-    let pipe = DingPipeline::new(engine(), "medium").unwrap();
+    let pipe = DingPipeline::new(coord.clone(), "medium").unwrap();
     let a = Matrix::rand_uniform(128, 128, 31);
     let b = Matrix::rand_uniform(128, 128, 32);
     let fused = coord.gemm(&a, &b, FtPolicy::Online).unwrap();
@@ -274,15 +280,31 @@ fn batcher_serves_mixed_shapes_and_policies() {
         let a = Matrix::rand_uniform(m, k, 100 + i);
         let b = Matrix::rand_uniform(k, n, 200 + i);
         wants.push(a.matmul(&b));
-        tickets.push(batcher.submit(a, b, policy, InjectionPlan::none()).unwrap());
+        tickets.push(batcher.submit(GemmRequest::new(a, b).policy(policy)).unwrap());
     }
     for (t, want) in tickets.into_iter().zip(&wants) {
         let out = t.wait().unwrap();
-        check_close(&out.c, want, 2e-3, "batched");
+        check_close(&out.result.c, want, 2e-3, "batched");
     }
     let stats = batcher.stats();
     assert_eq!(stats.requests, 12);
     assert!(stats.groups >= 1);
+}
+
+#[test]
+fn batcher_tickets_are_coordinator_tickets() {
+    // A ticket handed out by the batcher supports the same cancel/poll
+    // surface as a direct submit, and ids stay coordinator-unique.
+    let coord = coordinator();
+    let batcher = Batcher::start(coord.clone(), BatcherConfig::default());
+    let a = Matrix::rand_uniform(64, 64, 61);
+    let b = Matrix::rand_uniform(64, 64, 62);
+    let batched = batcher.submit(GemmRequest::new(a.clone(), b.clone())).unwrap();
+    let direct = coord.submit(GemmRequest::new(a, b)).unwrap();
+    assert_ne!(batched.id(), direct.id());
+    let br = batched.wait().unwrap();
+    let dr = direct.wait().unwrap();
+    check_close(&br.result.c, &dr.result.c, 1e-4, "batched vs direct");
 }
 
 // ---------------------------------------------------------------------
@@ -361,7 +383,7 @@ fn wrong_input_count_rejected() {
 
 #[test]
 fn ding_pipeline_rejects_wrong_shape() {
-    let pipe = DingPipeline::new(engine(), "medium").unwrap();
+    let pipe = DingPipeline::new(coordinator(), "medium").unwrap();
     let a = Matrix::rand_uniform(64, 64, 1);
     let b = Matrix::rand_uniform(64, 64, 2);
     assert!(pipe.gemm(&a, &b).is_err());
@@ -370,7 +392,7 @@ fn ding_pipeline_rejects_wrong_shape() {
 #[test]
 fn ding_pipeline_missing_bucket_errors() {
     // "small" has no ding artifacts
-    assert!(DingPipeline::new(engine(), "small").is_err());
+    assert!(DingPipeline::new(coordinator(), "small").is_err());
 }
 
 #[test]
@@ -380,7 +402,7 @@ fn serve_config_roundtrip() {
         .or_else(|_| ftgemm::util::config::Config::load("../ftgemm.toml"))
         .unwrap();
     let coord = cfg.coordinator().unwrap();
-    assert_eq!(coord.ft_level, "tb");
+    assert_eq!(coord.ft_level, FtLevel::Tb);
     let eng = cfg.engine().unwrap();
     assert!(eng.precompile.contains(&"gemm_medium".to_string()));
     assert!(cfg.batcher().is_ok());
@@ -479,11 +501,374 @@ fn batcher_rides_the_same_pipeline_under_a_pool() {
         let a = Matrix::rand_uniform(600, 600, 300 + i);
         let b = Matrix::rand_uniform(600, 600, 400 + i);
         wants.push(a.matmul(&b));
-        tickets.push(batcher.submit(a, b, FtPolicy::None, InjectionPlan::none()).unwrap());
+        tickets.push(
+            batcher.submit(GemmRequest::new(a, b).policy(FtPolicy::None)).unwrap(),
+        );
     }
     for (t, want) in tickets.into_iter().zip(&wants) {
-        check_close(&t.wait().unwrap().c, want, 1e-2, "batched split");
+        check_close(&t.wait().unwrap().result.c, want, 1e-2, "batched split");
     }
     // every split request went through the scheduler: 8 launches each
     assert_eq!(coord.counters().snapshot().executions, 4 * 8);
+}
+
+// ---------------------------------------------------------------------
+// The async submission surface: GemmRequest -> submit -> Ticket
+// ---------------------------------------------------------------------
+
+/// Occupies a single dispatcher for ~hundreds of ms (one exact huge-bucket
+/// block on the reference backend) so follow-up submissions stay queued.
+fn occupier_request(seed: u64) -> GemmRequest {
+    let a = Matrix::rand_uniform(512, 512, seed);
+    let b = Matrix::rand_uniform(512, 512, seed + 1);
+    GemmRequest::new(a, b).policy(FtPolicy::None)
+}
+
+/// A coordinator with exactly one dispatcher: everything behind the
+/// occupier is dequeued strictly in priority order.
+fn single_dispatch_coordinator(max_queue: usize) -> Coordinator {
+    let cfg = CoordinatorConfig { max_inflight: 1, max_queue, ..Default::default() };
+    Coordinator::new(pool_engine(1), cfg)
+}
+
+#[test]
+fn gemm_is_a_submit_wait_wrapper() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(128, 128, 500);
+    let b = Matrix::rand_uniform(128, 128, 501);
+    let direct = coord.gemm(&a, &b, FtPolicy::Online).unwrap();
+    let resp = coord
+        .submit(GemmRequest::new(a.clone(), b.clone()).policy(FtPolicy::Online))
+        .unwrap()
+        .wait()
+        .unwrap();
+    check_close(&resp.result.c, &direct.c, 1e-4, "submit vs gemm");
+    assert_eq!(resp.result.buckets, direct.buckets);
+    assert_eq!(resp.meta.policy, FtPolicy::Online);
+    assert_eq!(resp.meta.priority, Priority::Normal);
+}
+
+#[test]
+fn ticket_polls_through_to_done() {
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(64, 64, 510);
+    let b = Matrix::rand_uniform(64, 64, 511);
+    let t = coord.submit(GemmRequest::new(a, b).policy(FtPolicy::None)).unwrap();
+    assert!(t.id() >= 1);
+    let mut spins = 0usize;
+    loop {
+        match t.poll() {
+            TicketStatus::Done => break,
+            TicketStatus::Queued | TicketStatus::Running => {
+                spins += 1;
+                assert!(spins < 20_000, "request never settled");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            other => panic!("unexpected status {other:?}"),
+        }
+    }
+    assert!(t.wait().is_ok());
+}
+
+#[test]
+fn eight_concurrent_tickets_match_single_worker_reference() {
+    // The acceptance bar: >= 8 tickets from distinct requests in flight
+    // at once on a multi-worker engine, every result matching the
+    // single-worker reference coordinator.
+    let single = Coordinator::new(pool_engine(1), CoordinatorConfig::default());
+    let pooled = Coordinator::new(
+        pool_engine(4),
+        CoordinatorConfig { max_inflight: 8, ..Default::default() },
+    );
+    let mk = |m: usize, k: usize, n: usize, seed: u64| {
+        (Matrix::rand_uniform(m, k, seed), Matrix::rand_uniform(k, n, seed + 1000))
+    };
+    let requests: Vec<(Matrix, Matrix, FtPolicy)> = vec![
+        { let (a, b) = mk(64, 64, 64, 600); (a, b, FtPolicy::None) },
+        { let (a, b) = mk(128, 128, 128, 601); (a, b, FtPolicy::Online) },
+        { let (a, b) = mk(100, 70, 90, 602); (a, b, FtPolicy::Online) },
+        { let (a, b) = mk(64, 64, 64, 603); (a, b, FtPolicy::Offline) },
+        { let (a, b) = mk(128, 128, 128, 604); (a, b, FtPolicy::None) },
+        { let (a, b) = mk(100, 200, 480, 605); (a, b, FtPolicy::None) },
+        { let (a, b) = mk(600, 600, 600, 606); (a, b, FtPolicy::Online) },
+        { let (a, b) = mk(128, 128, 128, 607); (a, b, FtPolicy::Offline) },
+        { let (a, b) = mk(64, 64, 64, 608); (a, b, FtPolicy::Online) },
+    ];
+    let wants: Vec<Matrix> = requests
+        .iter()
+        .map(|(a, b, policy)| single.gemm(a, b, *policy).unwrap().c)
+        .collect();
+
+    let tickets: Vec<_> = requests
+        .iter()
+        .map(|(a, b, policy)| {
+            pooled
+                .submit(GemmRequest::new(a.clone(), b.clone()).policy(*policy))
+                .unwrap()
+        })
+        .collect();
+    assert!(tickets.len() >= 8, "need >= 8 tickets in flight");
+
+    let mut ids = std::collections::HashSet::new();
+    let mut seqs = std::collections::HashSet::new();
+    for (i, (t, want)) in tickets.into_iter().zip(&wants).enumerate() {
+        let resp = t.wait().unwrap();
+        // completion-order accumulation drifts at roundoff level only
+        check_close(&resp.result.c, want, 5e-3, &format!("request {i} vs single-worker"));
+        assert!(ids.insert(resp.meta.id), "duplicate request id");
+        assert!(seqs.insert(resp.meta.dispatch_seq), "duplicate dispatch seq");
+    }
+}
+
+#[test]
+fn cancel_before_dispatch_returns_canceled_status() {
+    let coord = single_dispatch_coordinator(0);
+    let blocker = coord.submit(occupier_request(620)).unwrap();
+    let a = Matrix::rand_uniform(64, 64, 622);
+    let b = Matrix::rand_uniform(64, 64, 623);
+    let victim = coord.submit(GemmRequest::new(a, b).policy(FtPolicy::None)).unwrap();
+    assert!(victim.cancel(), "queued request must be cancelable");
+    assert!(!victim.cancel(), "second cancel reports false");
+    assert_eq!(victim.poll(), TicketStatus::Canceled);
+    let err = victim.wait().unwrap_err();
+    assert!(err.to_string().contains("canceled"), "{err}");
+    // the blocker is unaffected and the coordinator keeps serving
+    assert!(blocker.wait().is_ok());
+    // the dispatcher discards the canceled entry shortly after the blocker
+    // frees it; the counter bump is asynchronous to victim.wait()
+    let mut spins = 0usize;
+    while coord.counters().snapshot().canceled == 0 {
+        spins += 1;
+        assert!(spins < 10_000, "canceled counter never bumped");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[test]
+fn deadline_expired_requests_fail_cleanly() {
+    let coord = single_dispatch_coordinator(0);
+    let blocker = coord.submit(occupier_request(630)).unwrap();
+    let a = Matrix::rand_uniform(64, 64, 632);
+    let b = Matrix::rand_uniform(64, 64, 633);
+    let doomed = coord
+        .submit(
+            GemmRequest::new(a.clone(), b.clone())
+                .policy(FtPolicy::None)
+                .deadline(Duration::ZERO),
+        )
+        .unwrap();
+    let err = doomed.wait().unwrap_err();
+    assert!(err.to_string().contains("deadline"), "{err}");
+    assert!(blocker.wait().is_ok());
+    // the expired-counter bump happens when the dispatcher reaps the
+    // entry, asynchronously to doomed.wait() (which can self-expire)
+    let mut spins = 0usize;
+    while coord.counters().snapshot().expired == 0 {
+        spins += 1;
+        assert!(spins < 10_000, "expired counter never bumped");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // a generous deadline passes untouched
+    let relaxed = coord
+        .submit(GemmRequest::new(a, b).policy(FtPolicy::None).deadline(Duration::from_secs(60)))
+        .unwrap();
+    assert!(relaxed.wait().is_ok());
+}
+
+#[test]
+fn deadline_fires_without_a_dispatcher_ever_dequeuing() {
+    // Starvation case: the only dispatcher is busy for the whole deadline
+    // window, so expiry must come from the ticket side — wait() returns
+    // at the deadline, not when the blocker finally frees the dispatcher.
+    let coord = single_dispatch_coordinator(0);
+    let blocker = coord.submit(occupier_request(720)).unwrap();
+    // make sure the blocker holds the dispatcher before queueing behind it
+    let mut spins = 0usize;
+    while blocker.poll() == TicketStatus::Queued {
+        spins += 1;
+        assert!(spins < 20_000, "blocker never dispatched");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let a = Matrix::rand_uniform(64, 64, 722);
+    let b = Matrix::rand_uniform(64, 64, 723);
+    let starved = coord
+        .submit(
+            GemmRequest::new(a, b)
+                .policy(FtPolicy::None)
+                .deadline(Duration::from_millis(20)),
+        )
+        .unwrap();
+    let err = starved.wait().unwrap_err();
+    assert!(err.to_string().contains("deadline"), "{err}");
+    // the blocker was still running when the starved request expired
+    assert!(blocker.wait().is_ok());
+}
+
+#[test]
+fn priority_ordering_observed_under_saturated_pool() {
+    let coord = single_dispatch_coordinator(0);
+    let blocker = coord.submit(occupier_request(640)).unwrap();
+    let submit_small = |seed: u64, p: Priority| {
+        let a = Matrix::rand_uniform(64, 64, seed);
+        let b = Matrix::rand_uniform(64, 64, seed + 1);
+        coord
+            .submit(GemmRequest::new(a, b).policy(FtPolicy::None).priority(p))
+            .unwrap()
+    };
+    let low1 = submit_small(642, Priority::Low);
+    let high = submit_small(644, Priority::High);
+    let normal = submit_small(646, Priority::Normal);
+    let low2 = submit_small(648, Priority::Low);
+    blocker.wait().unwrap();
+    let (low1, high, normal, low2) = (
+        low1.wait().unwrap().meta,
+        high.wait().unwrap().meta,
+        normal.wait().unwrap().meta,
+        low2.wait().unwrap().meta,
+    );
+    assert!(high.dispatch_seq < normal.dispatch_seq, "high before normal");
+    assert!(normal.dispatch_seq < low1.dispatch_seq, "normal before low");
+    assert!(low1.dispatch_seq < low2.dispatch_seq, "FIFO within a priority");
+}
+
+#[test]
+fn admission_control_rejects_when_queue_is_full() {
+    let coord = single_dispatch_coordinator(2);
+    let mut settled = vec![coord.submit(occupier_request(650)).unwrap()];
+    let mut rejected = 0usize;
+    for i in 0..5u64 {
+        let a = Matrix::rand_uniform(64, 64, 660 + i);
+        let b = Matrix::rand_uniform(64, 64, 670 + i);
+        match coord.submit(GemmRequest::new(a, b).policy(FtPolicy::None)) {
+            Ok(t) => settled.push(t),
+            Err(e) => {
+                rejected += 1;
+                assert!(e.to_string().contains("admission"), "{e}");
+            }
+        }
+    }
+    assert!(rejected >= 1, "queue bound never enforced");
+    // everything that was admitted still completes
+    for t in settled {
+        assert!(t.wait().is_ok());
+    }
+}
+
+#[test]
+fn host_verify_gate_is_explicit_for_injected_requests() {
+    // Impossible thresholds make any host re-verification fail — which is
+    // exactly how we can observe whether it ran.
+    let coord = coordinator();
+    let a = Matrix::rand_uniform(128, 128, 680);
+    let b = Matrix::rand_uniform(128, 128, 681);
+    let inj = InjectionPlan::single(5, 9, 0, 500.0);
+    let strict = Thresholds { rel: 0.0, abs: 1e-12 };
+
+    // CleanOnly (what `host_verify = true` maps to): the injected run is
+    // deliberately NOT re-verified, so even impossible thresholds pass.
+    let skipped = coord
+        .submit(
+            GemmRequest::new(a.clone(), b.clone())
+                .policy(FtPolicy::Online)
+                .inject(inj.clone())
+                .host_verify(HostVerify::CleanOnly)
+                .thresholds(strict),
+        )
+        .unwrap()
+        .wait();
+    assert!(skipped.is_ok(), "CleanOnly must skip injected runs: {skipped:?}");
+
+    // Always: the gate is opened explicitly and the verification runs.
+    let verified = coord
+        .submit(
+            GemmRequest::new(a, b)
+                .policy(FtPolicy::Online)
+                .inject(inj)
+                .host_verify(HostVerify::Always)
+                .thresholds(strict),
+        )
+        .unwrap()
+        .wait();
+    let err = verified.unwrap_err();
+    assert!(err.to_string().contains("re-verification"), "{err}");
+}
+
+#[test]
+fn per_request_ft_level_overrides_coordinator_default() {
+    let coord = coordinator(); // default level: tb
+    let a = Matrix::rand_uniform(128, 128, 690);
+    let b = Matrix::rand_uniform(128, 128, 691);
+    let want = a.matmul(&b);
+    let inj = InjectionPlan::single(30, 31, 2, 777.0);
+    for level in [FtLevel::Warp, FtLevel::Thread] {
+        let resp = coord
+            .submit(
+                GemmRequest::new(a.clone(), b.clone())
+                    .policy(FtPolicy::Online)
+                    .inject(inj.clone())
+                    .ft_level(level),
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(resp.result.errors_corrected, 1, "{level}");
+        check_close(&resp.result.c, &want, 2e-2, level.as_str());
+    }
+}
+
+#[test]
+fn ding_request_shape_validated_at_submit() {
+    // GemmRequest::ding is public; wrong-shape operands must be rejected
+    // at the fail-fast validation point with the bucket geometry, not as
+    // an opaque backend error from inside the encode node.
+    let coord = coordinator();
+    let err = coord
+        .submit(GemmRequest::ding(Matrix::zeros(64, 64), Matrix::zeros(64, 64), "medium"))
+        .unwrap_err();
+    assert!(err.to_string().contains("fixed-shape"), "{err}");
+    // unknown bucket also fails fast
+    let err = coord
+        .submit(GemmRequest::ding(Matrix::zeros(64, 64), Matrix::zeros(64, 64), "nope"))
+        .unwrap_err();
+    assert!(err.to_string().contains("ding_encode"), "{err}");
+}
+
+#[test]
+fn canceled_entries_do_not_hold_admission_quota() {
+    // max_queue corpses: cancel everything queued, then a live request
+    // must still be admitted (lazy deletion is compacted at admission).
+    let coord = single_dispatch_coordinator(2);
+    let blocker = coord.submit(occupier_request(710)).unwrap();
+    // wait until the blocker actually occupies the dispatcher, so it no
+    // longer holds a queue slot itself
+    let mut spins = 0usize;
+    while blocker.poll() == TicketStatus::Queued {
+        spins += 1;
+        assert!(spins < 20_000, "blocker never dispatched");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mk = |s: u64| {
+        let a = Matrix::rand_uniform(64, 64, s);
+        let b = Matrix::rand_uniform(64, 64, s + 1);
+        GemmRequest::new(a, b).policy(FtPolicy::None)
+    };
+    let q1 = coord.submit(mk(712)).unwrap();
+    let q2 = coord.submit(mk(714)).unwrap();
+    assert!(q1.cancel() && q2.cancel());
+    // both queue slots are corpses now; a live submit must succeed
+    let live = coord.submit(mk(716)).unwrap();
+    assert!(blocker.wait().is_ok());
+    assert!(live.wait().is_ok());
+}
+
+#[test]
+fn ding_submission_rides_the_ticket_surface() {
+    let pipe = DingPipeline::new(coordinator(), "medium").unwrap();
+    let a = Matrix::rand_uniform(128, 128, 700);
+    let b = Matrix::rand_uniform(128, 128, 701);
+    let t = pipe.submit(a.clone(), b.clone(), InjectionPlan::none()).unwrap();
+    let resp = t.wait().unwrap();
+    assert_eq!(resp.result.kernel_launches as usize, 1 + 2 * pipe.panels());
+    assert!(resp.result.buckets.is_empty(), "ding plans have no block nodes");
+    check_close(&resp.result.c, &a.matmul(&b), 2e-3, "ding via ticket");
 }

@@ -89,7 +89,8 @@ fn prop_clean_products_never_flag() {
 fn prop_pad_slice_roundtrip_preserves_gemm() {
     forall("pad-slice-gemm", |rng| {
         let (m, k, n) = (rand_dims(rng, 1, 30), rand_dims(rng, 1, 30), rand_dims(rng, 1, 30));
-        let (pm, pk, pn) = (m + rng.usize_below(20), k + rng.usize_below(20), n + rng.usize_below(20));
+        let (pm, pk, pn) =
+            (m + rng.usize_below(20), k + rng.usize_below(20), n + rng.usize_below(20));
         let a = Matrix::rand_uniform(m, k, rng.next_u64());
         let b = Matrix::rand_uniform(k, n, rng.next_u64());
         let direct = a.matmul(&b);
@@ -356,6 +357,86 @@ fn prop_chunking_never_loses_injections() {
         assert_eq!(total, count);
         assert!(chunks.iter().all(|c| c.len() <= max_inj));
     });
+}
+
+// ---------------------------------------------------------------------
+// Submission surface (GemmRequest / FtLevel / dispatch ordering)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_ft_level_string_round_trip() {
+    use ftgemm::coordinator::FtLevel;
+    for level in FtLevel::ALL {
+        assert_eq!(level.as_str().parse::<FtLevel>().unwrap(), level);
+    }
+    forall("ft-level-garbage-rejected", |rng| {
+        // random ASCII that is not one of the three spellings must fail
+        let len = rng.usize_below(8) + 1;
+        let s: String =
+            (0..len).map(|_| char::from_u32(0x61 + rng.below(26)).unwrap()).collect();
+        match s.as_str() {
+            "tb" | "warp" | "thread" => assert!(s.parse::<FtLevel>().is_ok()),
+            _ => assert!(s.parse::<FtLevel>().is_err(), "{s:?} should not parse"),
+        }
+    });
+}
+
+/// Randomized version of the integration priority test: under a saturated
+/// single-dispatcher coordinator, any shuffle of priorities dequeues
+/// sorted by (priority desc, submission order). Few cases — each run
+/// holds a real occupier GEMM on the dispatcher.
+#[test]
+fn prop_saturated_dispatch_order_is_priority_then_fifo() {
+    use ftgemm::abft::matrix::Matrix;
+    use ftgemm::coordinator::{
+        Coordinator, CoordinatorConfig, FtPolicy, GemmRequest, Priority,
+    };
+    use ftgemm::runtime::{Engine, EngineConfig};
+
+    const PRIORITIES: [Priority; 3] = [Priority::Low, Priority::Normal, Priority::High];
+    for case in 0..4u64 {
+        let seed = 0xD15A + case * 7919;
+        let mut rng = Pcg32::seeded(seed);
+        let engine = Engine::start(EngineConfig::default()).unwrap();
+        let coord = Coordinator::new(
+            engine,
+            CoordinatorConfig { max_inflight: 1, ..Default::default() },
+        );
+        // hold the only dispatcher on one exact huge-bucket block
+        let blocker = coord
+            .submit(GemmRequest::new(
+                Matrix::rand_uniform(512, 512, seed),
+                Matrix::rand_uniform(512, 512, seed + 1),
+            ).policy(FtPolicy::None))
+            .unwrap();
+        let picks: Vec<Priority> =
+            (0..8).map(|_| PRIORITIES[rng.usize_below(3)]).collect();
+        let tickets: Vec<_> = picks
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                let a = Matrix::rand_uniform(64, 64, seed + 10 + i as u64);
+                let b = Matrix::rand_uniform(64, 64, seed + 50 + i as u64);
+                coord
+                    .submit(GemmRequest::new(a, b).policy(FtPolicy::None).priority(p))
+                    .unwrap()
+            })
+            .collect();
+        blocker.wait().unwrap();
+        let metas: Vec<_> =
+            tickets.into_iter().map(|t| t.wait().unwrap().meta).collect();
+        // expected dequeue order: priority desc, then submission order
+        let mut expect: Vec<usize> = (0..picks.len()).collect();
+        expect.sort_by_key(|&i| (std::cmp::Reverse(picks[i]), i));
+        let seqs: Vec<u64> = expect.iter().map(|&i| metas[i].dispatch_seq).collect();
+        for w in seqs.windows(2) {
+            assert!(
+                w[0] < w[1],
+                "seed {seed:#x}: dispatch order violated priority-then-FIFO \
+                 (picks {picks:?}, seqs {seqs:?})"
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
