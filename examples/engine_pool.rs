@@ -6,10 +6,13 @@
 //! Part 1 serves one oversize (split) FT-GEMM — 1024³, which the router
 //! decomposes into 8 huge-bucket blocks — through engines with 1, 2, and
 //! 4 workers, and prints the measured wall times next to the gpusim
-//! serving model. Part 2 holds 8 *distinct* requests in flight at once
-//! through `Coordinator::submit`, the cross-request concurrency the
-//! submission API exists for. Works with or without AOT artifacts
-//! (reference backend fallback).
+//! serving model. Part 2 re-serves the same request on the `blocked`
+//! backend (`--backend` on the CLI, `[engine].backend` in config) — the
+//! cache-blocked, register-tiled, multithreaded executor with fused ABFT.
+//! Part 3 holds 8 *distinct* requests in flight at once through
+//! `Coordinator::submit`, the cross-request concurrency the submission
+//! API exists for. Works with or without AOT artifacts (reference
+//! backend fallback).
 
 use std::time::Instant;
 
@@ -46,6 +49,26 @@ fn main() -> anyhow::Result<()> {
             engine.peak_inflight(),
             gpusim::pipeline_speedup(&T4, m, n, k, true, workers),
         );
+    }
+
+    // --- backend axis: same request, reference vs blocked executor ------
+    println!("\nbackend shootout: same 1024^3 FT-GEMM, 1 engine worker:\n");
+    println!("{:>10} {:>10} {:>9}", "backend", "wall", "speedup");
+    let mut ref_wall = None;
+    for backend in ["reference", "blocked"] {
+        let engine = Engine::start(EngineConfig {
+            workers: 1,
+            backend: backend.into(),
+            ..Default::default()
+        })?;
+        let coord = Coordinator::new(engine, CoordinatorConfig::default());
+        coord.gemm(&a, &b, FtPolicy::Online)?; // warm the executable cache
+        let t0 = Instant::now();
+        let out = coord.gemm(&a, &b, FtPolicy::Online)?;
+        let wall = t0.elapsed();
+        assert!(out.c.max_abs_diff(&want) < 1e-2, "{backend} diverged");
+        let base = *ref_wall.get_or_insert(wall.as_secs_f64());
+        println!("{backend:>10} {wall:>10.2?} {:>8.2}x", base / wall.as_secs_f64());
     }
 
     // --- cross-request concurrency: 8 distinct requests, one pool -------

@@ -120,46 +120,60 @@ fn main() {
     println!("\n== host hot paths ==\n{}", h.summary());
 }
 
-/// The acceptance benchmark of the plan → schedule → execute refactor:
-/// the same oversize (split) GEMM served with 1, 2, and 4 engine workers,
-/// results written to BENCH_pipeline.json alongside the analytic model.
+/// The acceptance benchmark of the pipeline + backend work: the same
+/// oversize (split) FT-GEMM served with 1, 2, and 4 engine workers on
+/// **both registered backends**, results written to BENCH_pipeline.json
+/// alongside the analytic model. The `gate` block is what CI's
+/// `bench-check` binary enforces: blocked >= 2x reference at the 1024^3
+/// point with FT enabled.
 fn bench_worker_pipeline() {
     const SHAPE: (usize, usize, usize) = (1024, 1024, 1024); // 2x2x2 huge blocks
     const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+    const BACKENDS: [&str; 2] = ["reference", "blocked"];
 
     let a = Matrix::rand_uniform(SHAPE.0, SHAPE.2, 10);
     let b = Matrix::rand_uniform(SHAPE.2, SHAPE.1, 11);
 
     let mut hq = Harness::quick();
     let mut live = Json::Arr(Vec::new());
-    // NB: the backend is always the reference executor today; only the
-    // manifest source varies (builtin registry vs lowered artifacts).
     let mut manifest_source = String::from("builtin");
-    let mut base_mean: Option<f64> = None;
     let mut blocks = 0u64;
-    for &workers in &WORKER_COUNTS {
-        let engine = Engine::start(EngineConfig { workers, ..Default::default() })
+    // mean wall time per backend at the workers=1 gate point
+    let mut gate_means: Vec<(&str, f64)> = Vec::new();
+    for &backend in &BACKENDS {
+        let mut base_mean: Option<f64> = None;
+        for &workers in &WORKER_COUNTS {
+            let engine = Engine::start(EngineConfig {
+                workers,
+                backend: backend.to_string(),
+                ..Default::default()
+            })
             .expect("engine starts (builtin manifest fallback)");
-        if !engine.manifest().is_builtin() {
-            manifest_source = "artifacts".into();
+            if !engine.manifest().is_builtin() {
+                manifest_source = "artifacts".into();
+            }
+            let coord = Coordinator::new(engine.clone(), CoordinatorConfig::default());
+            // warm every worker's executable cache before timing
+            let first = coord.gemm(&a, &b, FtPolicy::Online).expect("warmup gemm");
+            blocks = first.buckets.len() as u64;
+            let r = hq.bench(&format!("pipeline/split1024/{backend}/workers{workers}"), || {
+                black_box(coord.gemm(&a, &b, FtPolicy::Online).unwrap());
+            });
+            let mean_s = r.mean.as_secs_f64();
+            let base = *base_mean.get_or_insert(mean_s);
+            if workers == 1 {
+                gate_means.push((backend, mean_s));
+            }
+            let mut entry = Json::obj();
+            entry.set("backend", Json::Str(backend.into()));
+            entry.set("workers", Json::Num(workers as f64));
+            entry.set("mean_s", Json::Num(mean_s));
+            entry.set("speedup_vs_1worker", Json::Num(base / mean_s));
+            entry.set("peak_inflight", Json::Num(engine.peak_inflight() as f64));
+            live.push(entry);
         }
-        let coord = Coordinator::new(engine.clone(), CoordinatorConfig::default());
-        // warm every worker's executable cache before timing
-        let first = coord.gemm(&a, &b, FtPolicy::Online).expect("warmup gemm");
-        blocks = first.buckets.len() as u64;
-        let r = hq.bench(&format!("pipeline/split1024/workers{workers}"), || {
-            black_box(coord.gemm(&a, &b, FtPolicy::Online).unwrap());
-        });
-        let mean_s = r.mean.as_secs_f64();
-        let base = *base_mean.get_or_insert(mean_s);
-        let mut entry = Json::obj();
-        entry.set("workers", Json::Num(workers as f64));
-        entry.set("mean_s", Json::Num(mean_s));
-        entry.set("speedup_vs_1worker", Json::Num(base / mean_s));
-        entry.set("peak_inflight", Json::Num(engine.peak_inflight() as f64));
-        live.push(entry);
     }
-    println!("\n== pipeline worker sweep ==\n{}", hq.summary());
+    println!("\n== pipeline worker/backend sweep ==\n{}", hq.summary());
 
     let mut ideal = Json::Arr(Vec::new());
     let mut modeled = Json::Arr(Vec::new());
@@ -180,7 +194,7 @@ fn bench_worker_pipeline() {
     }
 
     let mut root = Json::obj();
-    root.set("schema", Json::Str("ftgemm-bench-pipeline/1".into()));
+    root.set("schema", Json::Str("ftgemm-bench-pipeline/2".into()));
     root.set(
         "shape",
         Json::Arr(vec![
@@ -190,10 +204,34 @@ fn bench_worker_pipeline() {
         ]),
     );
     root.set("policy", Json::Str("online".into()));
-    root.set("backend", Json::Str("reference".into()));
+    root.set(
+        "backends",
+        Json::Arr(BACKENDS.iter().map(|b| Json::Str((*b).into())).collect()),
+    );
     root.set("manifest", Json::Str(manifest_source));
     root.set("blocks", Json::Num(blocks as f64));
     root.set("live", live);
+    let reference_mean = gate_means
+        .iter()
+        .find(|(b, _)| *b == "reference")
+        .map(|(_, s)| *s)
+        .unwrap_or(f64::NAN);
+    let blocked_mean = gate_means
+        .iter()
+        .find(|(b, _)| *b == "blocked")
+        .map(|(_, s)| *s)
+        .unwrap_or(f64::NAN);
+    let mut gate = Json::obj();
+    gate.set("point", Json::Str("workers=1".into()));
+    gate.set("reference_mean_s", Json::Num(reference_mean));
+    gate.set("blocked_mean_s", Json::Num(blocked_mean));
+    gate.set("blocked_speedup", Json::Num(reference_mean / blocked_mean));
+    root.set("gate", gate);
+    println!(
+        "gate: blocked {blocked_mean:.4}s vs reference {reference_mean:.4}s \
+         ({:.2}x) at 1024^3, FT on",
+        reference_mean / blocked_mean
+    );
     let mut model = Json::obj();
     model.set("ideal_wave_scaling", ideal);
     model.set("gpusim_t4", modeled);
@@ -201,8 +239,9 @@ fn bench_worker_pipeline() {
     root.set(
         "note",
         Json::Str(
-            "live = measured coordinator wall time for one oversize GEMM vs engine worker \
-             count; regenerate with `cargo bench --bench hotpath`"
+            "live = measured coordinator wall time for one oversize FT-GEMM vs engine worker \
+             count and backend; `gate` is the workers=1 blocked-vs-reference comparison the CI \
+             bench-check binary enforces; regenerate with `cargo bench --bench hotpath`"
                 .into(),
         ),
     );

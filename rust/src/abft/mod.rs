@@ -10,6 +10,11 @@
 //!
 //! Everything is plain rust over row-major `Vec<f32>`; the pure-rust GEMM
 //! in [`matrix`] is the CPU witness used by tests and the recompute path.
+//!
+//! This module also owns [`FtLevel`] — the paper's three checksum
+//! placements — as the single shared type: the coordinator's request
+//! surface, the gpusim overhead model, and the execution backends all
+//! re-export it from here.
 
 pub mod checksum;
 pub mod injection;
@@ -18,3 +23,81 @@ pub mod matrix;
 pub use checksum::{ChecksumPair, Detection, Thresholds};
 pub use injection::{Injection, InjectionPlan};
 pub use matrix::Matrix;
+
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::anyhow;
+
+/// FT granularity of a fused kernel (the paper's three checksum
+/// placements). Buckets lowered without the requested level fall back to
+/// [`FtLevel::Tb`], which every FT bucket carries.
+///
+/// The one `Tb`/`Warp`/`Thread` enum of the system: the coordinator
+/// (request options, config, CLI), the gpusim overhead model
+/// ([`crate::gpusim::ft_model::FtVariant`]) and the host backends'
+/// checksum-granularity mapping all share this type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum FtLevel {
+    /// Thread-block-level checksums (always present).
+    #[default]
+    Tb,
+    /// Warp-level checksums.
+    Warp,
+    /// Thread-level checksums.
+    Thread,
+}
+
+impl FtLevel {
+    pub const ALL: [FtLevel; 3] = [FtLevel::Tb, FtLevel::Warp, FtLevel::Thread];
+
+    /// The manifest/artifact spelling (`"tb" | "warp" | "thread"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FtLevel::Tb => "tb",
+            FtLevel::Warp => "warp",
+            FtLevel::Thread => "thread",
+        }
+    }
+
+    /// Alias for [`FtLevel::as_str`] (the gpusim model's historical
+    /// spelling).
+    pub fn name(&self) -> &'static str {
+        self.as_str()
+    }
+}
+
+impl fmt::Display for FtLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for FtLevel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<FtLevel> {
+        match s {
+            "tb" => Ok(FtLevel::Tb),
+            "warp" => Ok(FtLevel::Warp),
+            "thread" => Ok(FtLevel::Thread),
+            other => Err(anyhow!("unknown FT level {other:?} (tb|warp|thread)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ft_level_is_the_shared_type() {
+        for level in FtLevel::ALL {
+            assert_eq!(level.as_str().parse::<FtLevel>().unwrap(), level);
+            assert_eq!(level.name(), level.as_str());
+            assert_eq!(format!("{level}"), level.as_str());
+        }
+        assert_eq!(FtLevel::default(), FtLevel::Tb);
+        assert!("threadblock".parse::<FtLevel>().is_err());
+    }
+}

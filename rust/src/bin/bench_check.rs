@@ -1,0 +1,126 @@
+//! `bench-check` — schema + perf-gate validator for `BENCH_pipeline.json`.
+//!
+//!     cargo run --release --bin bench-check -- [FILE] [--min-speedup X]
+//!
+//! CI runs this right after `cargo bench --bench hotpath`, replacing the
+//! old silent upload-whatever-was-written flow with an enforced gate:
+//!
+//! * the file must parse and match schema `ftgemm-bench-pipeline/2` —
+//!   1024^3 shape, a non-empty `live` series with positive wall times,
+//!   and both backends measured at the workers=1 gate point;
+//! * the blocked backend must be at least `--min-speedup` (default 2.0)
+//!   times faster than the reference backend at that point, FT enabled.
+//!
+//! Exit code 0 = valid and fast enough; anything else fails the CI job.
+
+use std::process::ExitCode;
+
+use ftgemm::util::cli::Command;
+use ftgemm::util::json::Json;
+
+const SCHEMA: &str = "ftgemm-bench-pipeline/2";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("bench-check", "validate BENCH_pipeline.json and enforce the perf gate")
+        .opt("min-speedup", "required blocked-vs-reference speedup at 1024^3", Some("2.0"));
+    let args = match cmd.parse(&argv) {
+        Ok(args) => args,
+        Err(e) => {
+            eprintln!("bench-check: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let path = args.positional.first().map(String::as_str).unwrap_or("BENCH_pipeline.json");
+    let min_speedup = args.f64_or("min-speedup", 2.0);
+    match check(path, min_speedup) {
+        Ok(speedup) => {
+            println!(
+                "bench-check OK: {path} valid, blocked backend {speedup:.2}x reference \
+                 (gate {min_speedup:.2}x)"
+            );
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("bench-check FAILED: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Validate the file; returns the measured blocked-vs-reference speedup.
+fn check(path: &str, min_speedup: f64) -> anyhow::Result<f64> {
+    use anyhow::{anyhow, bail, Context};
+
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path} (run `cargo bench --bench hotpath` first)"))?;
+    let root = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+
+    let schema = root
+        .path("schema")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing schema field"))?;
+    if schema != SCHEMA {
+        bail!("schema {schema:?}, want {SCHEMA:?} (placeholder file? bench not run?)");
+    }
+    let shape: Vec<usize> = root
+        .path("shape")
+        .and_then(Json::as_arr)
+        .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default();
+    if shape != [1024, 1024, 1024] {
+        bail!("gate point must be 1024^3, got shape {shape:?}");
+    }
+    if root.path("policy").and_then(Json::as_str) != Some("online") {
+        bail!("gate must run with FT enabled (policy=online)");
+    }
+
+    let live = root
+        .path("live")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing live[] series (placeholder file? bench not run?)"))?;
+    if live.is_empty() {
+        bail!("live[] series is empty");
+    }
+    let mut gate_reference = None;
+    let mut gate_blocked = None;
+    for (i, entry) in live.iter().enumerate() {
+        let backend = entry
+            .path("backend")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("live[{i}]: missing backend"))?;
+        let workers = entry
+            .path("workers")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("live[{i}]: missing workers"))?;
+        let mean_s = entry
+            .path("mean_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("live[{i}]: missing mean_s"))?;
+        if workers == 0 {
+            bail!("live[{i}]: workers must be >= 1");
+        }
+        if !(mean_s.is_finite() && mean_s > 0.0) {
+            bail!("live[{i}]: mean_s {mean_s} is not a positive finite wall time");
+        }
+        if workers == 1 {
+            match backend {
+                "reference" => gate_reference = Some(mean_s),
+                "blocked" => gate_blocked = Some(mean_s),
+                _ => {}
+            }
+        }
+    }
+    let reference =
+        gate_reference.ok_or_else(|| anyhow!("no reference-backend workers=1 measurement"))?;
+    let blocked =
+        gate_blocked.ok_or_else(|| anyhow!("no blocked-backend workers=1 measurement"))?;
+    let speedup = reference / blocked;
+    if speedup < min_speedup {
+        bail!(
+            "perf gate: blocked backend is only {speedup:.2}x reference at 1024^3 \
+             (reference {reference:.4}s, blocked {blocked:.4}s; need >= {min_speedup:.2}x)"
+        );
+    }
+    Ok(speedup)
+}

@@ -11,4 +11,4 @@ pub mod params;
 pub mod select;
 
 pub use params::{KernelParams, ShapeClass, TABLE1};
-pub use select::{select_class, select_params, Bucket, BUCKETS};
+pub use select::{host_tiles, select_class, select_params, Bucket, HostTiles, BUCKETS};

@@ -65,6 +65,76 @@ pub const BUCKETS: [Bucket; 5] = [
     Bucket { class: ShapeClass::Huge, m: 512, n: 512, k: 512 },
 ];
 
+/// Blocked-host-backend tile parameters — the CPU analogue of the Table-1
+/// kernel template parameters. `mc`/`nc` bound the macro tile a pool job
+/// computes (L2/L3 residency of the packed panels), `mr`/`nr` are the
+/// register micro-tile, and `kc` is the reduction depth held in registers
+/// per micro-tile.
+///
+/// Invariants (checked by [`HostTiles::validate`]):
+/// * all dimensions are positive powers of two and `mr | mc`, `nr | nc`,
+///   mirroring the GPU template's warp/thread divisibility rules;
+/// * `mc`/`nc` are multiples of every protection sub-tile the shape
+///   class's FT artifacts use (`sub_m <= m_tb <= mc`), so fused checksum
+///   encoding never splits a protection domain across pack blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostTiles {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+    pub mr: usize,
+    pub nr: usize,
+}
+
+impl HostTiles {
+    /// Same spirit as [`KernelParams::validate`]: positive powers of two,
+    /// micro tile divides macro tile.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let all = [self.mc, self.kc, self.nc, self.mr, self.nr];
+        if all.iter().any(|&v| v == 0) {
+            anyhow::bail!("host tile sizes must be positive: {self:?}");
+        }
+        if [self.mc, self.nc, self.mr, self.nr].iter().any(|&v| !v.is_power_of_two()) {
+            anyhow::bail!("host macro/micro tiles must be powers of two: {self:?}");
+        }
+        if self.mc % self.mr != 0 || self.nc % self.nr != 0 {
+            anyhow::bail!("micro tile must divide macro tile: {self:?}");
+        }
+        Ok(())
+    }
+}
+
+/// Per-shape-class host blocking presets (kc is filled in per shape by
+/// [`host_tiles`]). Order matches [`ShapeClass`].
+///
+/// Mind the class/bucket offset: the heuristic maps a 512-wide shape to
+/// `Large` (splits at <= 512) while the artifact serving it is the
+/// *huge* bucket with 128x128 protection tiles — so the `Large` entry
+/// keeps `mc`/`nc` at 128 to preserve fused-encode alignment for the
+/// flagship 512^3 FT artifacts (checked by the blocked backend's
+/// alignment test).
+const HOST_TILE_TABLE: [(ShapeClass, HostTiles); 5] = [
+    (ShapeClass::Small, HostTiles { mc: 64, kc: 0, nc: 64, mr: 4, nr: 4 }),
+    (ShapeClass::Medium, HostTiles { mc: 64, kc: 0, nc: 64, mr: 8, nr: 4 }),
+    (ShapeClass::Large, HostTiles { mc: 128, kc: 0, nc: 128, mr: 8, nr: 8 }),
+    (ShapeClass::Tall, HostTiles { mc: 64, kc: 0, nc: 128, mr: 4, nr: 8 }),
+    (ShapeClass::Huge, HostTiles { mc: 128, kc: 0, nc: 128, mr: 8, nr: 8 }),
+];
+
+/// Pick blocked-backend tile parameters from the problem shape — the same
+/// shape-class heuristic that picks kernel templates picks the host
+/// blocking. `kc` is the full reduction depth: at our bucket sizes
+/// (k <= 512) the micro-kernel holds its accumulators in registers across
+/// the whole k sweep, which is both fastest and keeps the per-element fold
+/// order identical to the reference backend (the parity suite relies on
+/// this).
+pub fn host_tiles(m: usize, n: usize, k: usize) -> HostTiles {
+    let class = select_class(m, n, k);
+    let mut t = HOST_TILE_TABLE[class as usize].1;
+    t.kc = k.max(1);
+    t
+}
+
 /// Route a request shape to the artifact bucket that minimizes padding
 /// waste among the buckets that fit. `None` when the request exceeds every
 /// bucket (the coordinator then splits the GEMM — see
@@ -117,6 +187,31 @@ mod tests {
         assert_eq!(select_bucket(300, 300, 300).unwrap().class, ShapeClass::Huge);
         // oversize
         assert!(select_bucket(1000, 1000, 1000).is_none());
+    }
+
+    #[test]
+    fn host_tile_table_validates_and_covers_ft_granularities() {
+        for (class, entry) in HOST_TILE_TABLE {
+            let p = class.params();
+            // kc==0 placeholder fails validation until host_tiles fills it
+            assert!(entry.validate().is_err());
+            let t = HostTiles { kc: 64, ..entry };
+            t.validate().unwrap();
+            // fused encoding alignment: every protection sub-tile of this
+            // class fits whole inside a pack block
+            assert_eq!(t.mc % p.m_tb, 0, "{}", class.name());
+            assert_eq!(t.nc % p.n_tb, 0, "{}", class.name());
+        }
+    }
+
+    #[test]
+    fn host_tiles_follow_the_class_heuristic() {
+        assert_eq!(host_tiles(64, 64, 64).mr, 4);
+        let huge = HostTiles { mc: 128, kc: 512, nc: 128, mr: 8, nr: 8 };
+        assert_eq!(host_tiles(512, 512, 512), huge);
+        // kc is the full reduction depth
+        assert_eq!(host_tiles(512, 512, 77).kc, 77);
+        assert_eq!(host_tiles(64, 1024, 256).nr, 8, "tall class");
     }
 
     #[test]

@@ -183,13 +183,9 @@ impl Core {
         let t0 = Instant::now();
         let cfg = self.config.effective(&req.opts);
         let plan = match &req.route {
-            Route::Blocks => Planner::new(self.engine.manifest(), &cfg).plan_gemm(
-                req.a.rows(),
-                req.b.cols(),
-                req.a.cols(),
-                req.policy,
-                &req.inj,
-            )?,
+            Route::Blocks => Planner::new(self.engine.manifest(), &cfg)
+                .for_backend(self.engine.backend())
+                .plan_gemm(req.a.rows(), req.b.cols(), req.a.cols(), req.policy, &req.inj)?,
             Route::Ding { bucket } => plan::plan_ding(self.engine.manifest(), bucket, &req.inj)?,
         };
         if plan.split {
@@ -298,7 +294,8 @@ impl Coordinator {
     }
 
     /// Compile a request into its execution plan without running it
-    /// (introspection / dry-run). Uses the coordinator's default options.
+    /// (introspection / dry-run). Uses the coordinator's default options
+    /// and the engine backend's capabilities.
     pub fn plan(
         &self,
         m: usize,
@@ -308,6 +305,7 @@ impl Coordinator {
         inj: &InjectionPlan,
     ) -> Result<ExecutionPlan> {
         Planner::new(self.core.engine.manifest(), &self.core.config)
+            .for_backend(self.core.engine.backend())
             .plan_gemm(m, n, k, policy, inj)
     }
 

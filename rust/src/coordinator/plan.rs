@@ -16,6 +16,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::abft::checksum::Thresholds;
 use crate::abft::injection::InjectionPlan;
+use crate::runtime::backend::BackendInfo;
 use crate::runtime::manifest::{ArtifactKind, Manifest};
 
 use super::router::{self, BlockPlan};
@@ -123,15 +124,27 @@ pub enum KernelOp {
     },
 }
 
-/// Compiles requests against a manifest + coordinator config.
+/// Compiles requests against a manifest + coordinator config + the
+/// serving backend's capabilities.
 pub struct Planner<'a> {
     manifest: &'a Manifest,
     config: &'a CoordinatorConfig,
+    /// Capabilities of the backend the plan will execute on. Defaults to
+    /// fully capable; [`Planner::for_backend`] narrows it (a backend
+    /// without in-kernel fused FT gets the online policy compiled to the
+    /// detect-and-recompute strategy instead of an unservable plan).
+    fused_ft: bool,
 }
 
 impl<'a> Planner<'a> {
     pub fn new(manifest: &'a Manifest, config: &'a CoordinatorConfig) -> Self {
-        Planner { manifest, config }
+        Planner { manifest, config, fused_ft: true }
+    }
+
+    /// Resolve artifacts against what `backend` can actually execute.
+    pub fn for_backend(mut self, backend: BackendInfo) -> Self {
+        self.fused_ft = backend.fused_ft;
+        self
     }
 
     /// Compile `C = A·B` under `policy` with SEU injection into a plan of
@@ -190,7 +203,7 @@ impl<'a> Planner<'a> {
                     .name
                     .clone(),
             },
-            FtPolicy::Online => {
+            FtPolicy::Online if self.fused_ft => {
                 let art = self
                     .manifest
                     .find(ArtifactKind::FtGemm, bucket, Some(self.config.ft_level.as_str()))
@@ -198,27 +211,36 @@ impl<'a> Planner<'a> {
                     .ok_or_else(|| missing(policy))?;
                 KernelOp::Fused { artifact: art.name.clone(), max_inj: art.max_inj.max(1) }
             }
-            FtPolicy::Offline => {
-                let detect = self
-                    .manifest
-                    .find(ArtifactKind::FtDetect, bucket, None)
-                    .map(|a| (a.name.clone(), a.max_inj.max(1)));
-                let plain = match &detect {
-                    Some(_) => None,
-                    None => Some(
-                        self.manifest
-                            .find(ArtifactKind::Gemm, bucket, None)
-                            .ok_or_else(|| missing(policy))?
-                            .name
-                            .clone(),
-                    ),
-                };
-                KernelOp::DetectRecompute {
-                    detect,
-                    plain,
-                    max_recomputes: self.config.max_recomputes,
-                }
-            }
+            // Backend without in-kernel fused FT (a future PJRT client
+            // serving detect-only HLO, say): the online policy degrades to
+            // the offline strategy at plan time rather than failing.
+            FtPolicy::Online => self.offline_kernel(bucket, policy)?,
+            FtPolicy::Offline => self.offline_kernel(bucket, policy)?,
+        })
+    }
+
+    /// The detect-and-recompute strategy for one bucket: in-kernel
+    /// detection when a detect artifact exists, host checksum detection
+    /// over the plain kernel otherwise.
+    fn offline_kernel(&self, bucket: &str, policy: FtPolicy) -> Result<KernelOp> {
+        let detect = self
+            .manifest
+            .find(ArtifactKind::FtDetect, bucket, None)
+            .map(|a| (a.name.clone(), a.max_inj.max(1)));
+        let plain = match &detect {
+            Some(_) => None,
+            None => Some(
+                self.manifest
+                    .find(ArtifactKind::Gemm, bucket, None)
+                    .ok_or_else(|| anyhow!("no {policy:?} artifact for bucket {bucket}"))?
+                    .name
+                    .clone(),
+            ),
+        };
+        Ok(KernelOp::DetectRecompute {
+            detect,
+            plain,
+            max_recomputes: self.config.max_recomputes,
         })
     }
 }
@@ -405,6 +427,31 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn online_degrades_to_detect_recompute_without_fused_ft() {
+        let (man, cfg) = planner_fixture();
+        let caps = BackendInfo { name: "nofuse", description: "test", fused_ft: false };
+        let plan = Planner::new(&man, &cfg)
+            .for_backend(caps)
+            .plan_gemm(128, 128, 128, FtPolicy::Online, &InjectionPlan::none())
+            .unwrap();
+        match &plan.nodes[0].op {
+            NodeOp::Block { kernel: KernelOp::DetectRecompute { detect, .. }, .. } => {
+                assert!(detect.is_some(), "medium bucket has a detect artifact");
+            }
+            other => panic!("expected detect+recompute, got {other:?}"),
+        }
+        // a fully capable backend keeps the fused kernel
+        let plan = Planner::new(&man, &cfg)
+            .for_backend(BackendInfo { name: "full", description: "test", fused_ft: true })
+            .plan_gemm(128, 128, 128, FtPolicy::Online, &InjectionPlan::none())
+            .unwrap();
+        assert!(matches!(
+            &plan.nodes[0].op,
+            NodeOp::Block { kernel: KernelOp::Fused { .. }, .. }
+        ));
     }
 
     #[test]

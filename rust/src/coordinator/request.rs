@@ -26,51 +26,10 @@ use crate::abft::matrix::Matrix;
 
 use super::{FtPolicy, GemmResult};
 
-/// FT granularity of the online policy's fused kernels (the paper's three
-/// checksum placements). Buckets lowered without the requested level fall
-/// back to [`FtLevel::Tb`], which every FT bucket carries.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
-pub enum FtLevel {
-    /// Thread-block-level checksums (always present).
-    #[default]
-    Tb,
-    /// Warp-level checksums.
-    Warp,
-    /// Thread-level checksums.
-    Thread,
-}
-
-impl FtLevel {
-    pub const ALL: [FtLevel; 3] = [FtLevel::Tb, FtLevel::Warp, FtLevel::Thread];
-
-    /// The manifest/artifact spelling (`"tb" | "warp" | "thread"`).
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            FtLevel::Tb => "tb",
-            FtLevel::Warp => "warp",
-            FtLevel::Thread => "thread",
-        }
-    }
-}
-
-impl fmt::Display for FtLevel {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(self.as_str())
-    }
-}
-
-impl FromStr for FtLevel {
-    type Err = anyhow::Error;
-
-    fn from_str(s: &str) -> Result<FtLevel> {
-        match s {
-            "tb" => Ok(FtLevel::Tb),
-            "warp" => Ok(FtLevel::Warp),
-            "thread" => Ok(FtLevel::Thread),
-            other => Err(anyhow!("unknown FT level {other:?} (tb|warp|thread)")),
-        }
-    }
-}
+/// The shared FT-granularity enum (re-exported from [`crate::abft`]): the
+/// same type the gpusim overhead model and the execution backends use, so
+/// "which checksum placement" is spelled identically across the system.
+pub use crate::abft::FtLevel;
 
 /// When the coordinator re-derives the product checksums from the operands
 /// on the host and checks the returned `C` against them (defense in depth;

@@ -23,23 +23,10 @@ use crate::codegen::params::KernelParams;
 use super::device::DeviceSpec;
 use super::kernel_model::{predict_with_extras, KernelConfig, Prediction};
 
-/// FT granularity of a fused kernel.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum FtLevel {
-    Thread,
-    Warp,
-    Tb,
-}
-
-impl FtLevel {
-    pub fn name(&self) -> &'static str {
-        match self {
-            FtLevel::Thread => "thread",
-            FtLevel::Warp => "warp",
-            FtLevel::Tb => "tb",
-        }
-    }
-}
+/// The shared FT-granularity enum (re-exported from [`crate::abft`]) —
+/// the same type the coordinator's request surface uses, so model
+/// predictions and served requests agree on what "warp level" means.
+pub use crate::abft::FtLevel;
 
 /// Which protection scheme a prediction is for.
 #[derive(Debug, Clone, Copy, PartialEq)]

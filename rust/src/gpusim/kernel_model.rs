@@ -132,6 +132,7 @@ pub fn issue_efficiency(dev: &DeviceSpec, cfg: &KernelConfig, extra_instr: f64) 
 
 /// Predict execution of C += A·B with `extra_flops` / `extra_instr` /
 /// `extra_bytes` hooks for the FT models.
+#[allow(clippy::too_many_arguments)]
 pub fn predict_with_extras(
     dev: &DeviceSpec,
     cfg: &KernelConfig,

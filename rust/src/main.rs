@@ -62,10 +62,12 @@ fn print_usage() {
          COMMANDS:\n\
            info       artifact manifest + device model summary\n\
            gemm       run one GEMM (--m --n --k --policy none|online|offline --inject N\n\
-                      --workers W --priority low|normal|high --deadline-ms D)\n\
-           campaign   SEU injection campaign (--rounds --errors --policy --workers W)\n\
+                      --workers W --backend reference|blocked --priority low|normal|high\n\
+                      --deadline-ms D)\n\
+           campaign   SEU injection campaign (--rounds --errors --policy --workers W\n\
+                      --backend B)\n\
            figures    regenerate paper figures (--fig 9..22|table1 | --all) --out DIR\n\
-           serve      line-protocol GEMM server on stdin (--config FILE)\n\
+           serve      line-protocol GEMM server on stdin (--config FILE --backend B)\n\
            table1     print Table 1 kernel parameters\n\
            help       this text"
     );
@@ -90,8 +92,16 @@ fn parse_priority(s: &str) -> anyhow::Result<Priority> {
     s.parse::<Priority>()
 }
 
-fn start_coordinator(ft_level: FtLevel, workers: usize) -> anyhow::Result<Coordinator> {
-    let engine = Engine::start(EngineConfig { workers, ..Default::default() })?;
+fn start_coordinator(
+    ft_level: FtLevel,
+    workers: usize,
+    backend: &str,
+) -> anyhow::Result<Coordinator> {
+    let engine = Engine::start(EngineConfig {
+        workers,
+        backend: backend.to_string(),
+        ..Default::default()
+    })?;
     let cfg = CoordinatorConfig { ft_level, ..Default::default() };
     Ok(Coordinator::new(engine, cfg))
 }
@@ -129,6 +139,12 @@ fn cmd_info(rest: &[String]) -> anyhow::Result<()> {
             d.dram_gbs
         );
     }
+    let reg = ftgemm::runtime::BackendRegistry::global();
+    println!("backends:");
+    for name in reg.names() {
+        let info = reg.info(name)?;
+        println!("  {:10} fused_ft={}  {}", info.name, info.fused_ft, info.description);
+    }
     Ok(())
 }
 
@@ -141,6 +157,7 @@ fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
         .opt("inject", "number of SEUs to inject", Some("0"))
         .opt("level", "online FT granularity tb|warp|thread", Some("tb"))
         .opt("workers", "engine worker pool size", Some("1"))
+        .opt("backend", "execution backend reference|blocked", Some("reference"))
         .opt("priority", "dispatch priority low|normal|high", Some("normal"))
         .opt("deadline-ms", "fail if still queued after this long; 0 = none", Some("0"))
         .opt("seed", "rng seed", Some("42"));
@@ -153,7 +170,11 @@ fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
     let deadline_ms = args.usize_or("deadline-ms", 0);
 
     let level = parse_level(args.str_or("level", "tb"))?;
-    let coord = start_coordinator(level, args.usize_or("workers", 1))?;
+    let coord = start_coordinator(
+        level,
+        args.usize_or("workers", 1),
+        args.str_or("backend", "reference"),
+    )?;
     let a = Matrix::rand_uniform(m, k, seed);
     let b = Matrix::rand_uniform(k, n, seed + 1);
     let want = a.matmul(&b);
@@ -201,9 +222,14 @@ fn cmd_campaign(rest: &[String]) -> anyhow::Result<()> {
         .opt("errors", "SEUs per GEMM", Some("4"))
         .opt("policy", "online|offline", Some("online"))
         .opt("workers", "engine worker pool size", Some("1"))
+        .opt("backend", "execution backend reference|blocked", Some("reference"))
         .opt("seed", "rng seed", Some("7"));
     let args = cmd.parse(rest)?;
-    let coord = start_coordinator(FtLevel::Tb, args.usize_or("workers", 1))?;
+    let coord = start_coordinator(
+        FtLevel::Tb,
+        args.usize_or("workers", 1),
+        args.str_or("backend", "reference"),
+    )?;
     let campaign = FaultCampaign::new(
         coord,
         SeuModel::PerGemm { count: args.usize_or("errors", 4) },
@@ -271,13 +297,18 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     use std::io::BufRead;
 
     let cmd = Command::new("serve", "line-protocol GEMM server on stdin")
-        .opt("config", "config file (TOML subset)", None);
+        .opt("config", "config file (TOML subset)", None)
+        .opt("backend", "override [engine].backend (reference|blocked)", None);
     let args = cmd.parse(rest)?;
     let cfg = match args.get("config") {
         Some(path) => ftgemm::util::config::Config::load(path)?,
         None => ftgemm::util::config::Config::default(),
     };
-    let engine = Engine::start(cfg.engine()?)?;
+    let mut engine_cfg = cfg.engine()?;
+    if let Some(backend) = args.get("backend") {
+        engine_cfg.backend = backend.to_string();
+    }
+    let engine = Engine::start(engine_cfg)?;
     let coord = Coordinator::new(engine, cfg.coordinator()?);
     let batcher = Batcher::start(coord.clone(), cfg.batcher()?);
 

@@ -1,26 +1,35 @@
-//! Kernel-execution backends for the engine workers.
+//! Kernel-execution backends for the engine workers, and the registry
+//! that names them.
 //!
 //! Each engine worker owns one [`Backend`] instance plus its compiled-
-//! artifact cache. Two implementations are envisioned:
+//! artifact cache. Implementations:
 //!
-//! * [`ReferenceBackend`] (always available) — executes every artifact
-//!   *semantically* on the host from its manifest metadata: the GEMM is the
-//!   blocked CPU matmul, the fused FT kernels are emulated with the
-//!   Huang–Abraham checksum algebra at the kernel's protection granularity
-//!   (per sub-tile, per verification interval), and the Ding'11 stages
-//!   follow the encoded outer-product contract. Same inputs, same output
-//!   roles/shapes, same fault-tolerance observable behavior as the lowered
-//!   kernels — so the whole serving stack (router, planner, scheduler,
-//!   batcher, campaigns) runs in environments without PJRT or artifacts.
+//! * [`ReferenceBackend`] (`"reference"`, always available) — executes
+//!   every artifact *semantically* on the host from its manifest metadata:
+//!   the GEMM is the blocked CPU matmul, the fused FT kernels are emulated
+//!   with the Huang–Abraham checksum algebra at the kernel's protection
+//!   granularity (per sub-tile, per verification interval), and the
+//!   Ding'11 stages follow the encoded outer-product contract. Same
+//!   inputs, same output roles/shapes, same fault-tolerance observable
+//!   behavior as the lowered kernels — so the whole serving stack (router,
+//!   planner, scheduler, batcher, campaigns) runs in environments without
+//!   PJRT or artifacts.
+//! * [`BlockedBackend`](super::blocked::BlockedBackend) (`"blocked"`) —
+//!   the high-performance host engine: cache-blocked, register-tiled,
+//!   multithreaded GEMM with checksum encoding fused into operand packing
+//!   and per-tile verification fused into the block sweep (the paper's
+//!   kernel-fusion strategy at host level). See `runtime/blocked.rs`.
 //! * a PJRT backend — parses the AOT HLO text and executes it on a real
 //!   `PjRtClient`. The `xla` bindings are not vendorable in this build
-//!   environment; the integration point is this trait (one impl + one arm
-//!   in [`BackendKind`]). See DESIGN.md "Substitutions".
+//!   environment; the integration point is this trait plus one
+//!   [`BackendRegistry`] entry. See DESIGN.md "Substitutions".
 //!
 //! Backends are constructed *inside* the worker thread (PJRT handles are
-//! `Rc`-based), which is why the trait has no `Send` bound.
+//! `Rc`-based), which is why the trait has no `Send` bound and the
+//! registry hands out `Send + Sync` **factories** rather than instances.
 
 use std::collections::{BTreeMap, HashSet};
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -31,14 +40,6 @@ use crate::abft::matrix::Matrix;
 use super::engine::Tensor;
 use super::manifest::{Artifact, ArtifactKind};
 
-/// Which backend the engine workers run.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub enum BackendKind {
-    /// Host-side semantic execution of the artifact contract.
-    #[default]
-    Reference,
-}
-
 /// One worker's kernel executor. `compile` is idempotent per artifact and
 /// returns whether work happened (the engine meters compile time/counts).
 pub trait Backend {
@@ -47,16 +48,115 @@ pub trait Backend {
     fn execute(&mut self, art: &Artifact, inputs: Vec<Tensor>) -> Result<Vec<Tensor>>;
 }
 
-pub fn create(kind: BackendKind) -> Box<dyn Backend> {
-    match kind {
-        BackendKind::Reference => Box::new(ReferenceBackend::new()),
+/// Backend metadata the serving layers key decisions on (capability
+/// resolution happens at plan time — see `coordinator::plan`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendInfo {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// Executes `FtGemm`/`FtDetect` artifacts with the checksum work fused
+    /// into its GEMM loops (in-backend detect + correct). The planner
+    /// routes `FtPolicy::Online` requests on backends without this
+    /// capability to the detect-and-recompute strategy instead.
+    pub fused_ft: bool,
+}
+
+/// What a backend factory gets told about the engine constructing it.
+#[derive(Debug, Clone, Copy)]
+pub struct BackendCtx {
+    /// Engine worker threads in the pool — each gets its own backend
+    /// instance, so a backend with internal parallelism should divide the
+    /// machine by this (the blocked backend does).
+    pub workers: usize,
+}
+
+/// Constructs one backend instance per engine worker. Factories are
+/// `Send + Sync` so the engine can move them into worker threads; the
+/// instances they build are thread-confined (no `Send` bound on
+/// [`Backend`]).
+pub type BackendFactory = Arc<dyn Fn(&BackendCtx) -> Box<dyn Backend> + Send + Sync>;
+
+/// Named backend catalog: `EngineConfig::backend` / `--backend` strings
+/// resolve here, and each engine worker constructs its executor from the
+/// resolved factory. [`BackendRegistry::global`] carries the built-in
+/// backends; embedders compose custom registries with
+/// [`BackendRegistry::empty`] + [`BackendRegistry::register`] and serve
+/// them via [`Engine::start_with`](super::engine::Engine::start_with).
+pub struct BackendRegistry {
+    entries: BTreeMap<&'static str, (BackendInfo, BackendFactory)>,
+}
+
+impl BackendRegistry {
+    /// The name an empty/unset backend selection resolves to.
+    pub const DEFAULT: &'static str = "reference";
+
+    /// An empty registry (for tests/embedders composing their own set).
+    pub fn empty() -> BackendRegistry {
+        BackendRegistry { entries: BTreeMap::new() }
+    }
+
+    /// The built-in catalog: `reference` and `blocked`.
+    pub fn builtin() -> BackendRegistry {
+        let mut reg = BackendRegistry::empty();
+        reg.register(
+            BackendInfo {
+                name: "reference",
+                description: "semantic host executor (naive-blocked GEMM, oracle for parity)",
+                fused_ft: true,
+            },
+            Arc::new(|_ctx: &BackendCtx| Box::new(ReferenceBackend::new()) as Box<dyn Backend>),
+        );
+        reg.register(
+            BackendInfo {
+                name: "blocked",
+                description: "cache-blocked register-tiled multithreaded GEMM with fused ABFT",
+                fused_ft: true,
+            },
+            Arc::new(|ctx: &BackendCtx| {
+                Box::new(super::blocked::BlockedBackend::for_engine(ctx.workers))
+                    as Box<dyn Backend>
+            }),
+        );
+        reg
+    }
+
+    /// The process-wide registry of built-in backends.
+    pub fn global() -> &'static BackendRegistry {
+        static GLOBAL: OnceLock<BackendRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(BackendRegistry::builtin)
+    }
+
+    /// Register (or replace) a backend under `info.name`.
+    pub fn register(&mut self, info: BackendInfo, factory: BackendFactory) {
+        self.entries.insert(info.name, (info, factory));
+    }
+
+    /// Resolve a backend selection; `""` means [`BackendRegistry::DEFAULT`].
+    pub fn resolve(&self, name: &str) -> Result<(BackendInfo, BackendFactory)> {
+        let name = if name.is_empty() { Self::DEFAULT } else { name };
+        self.entries
+            .get(name)
+            .map(|(info, factory)| (*info, Arc::clone(factory)))
+            .ok_or_else(|| {
+                anyhow!("unknown backend {name:?} (known: {})", self.names().join("|"))
+            })
+    }
+
+    /// Metadata for one backend.
+    pub fn info(&self, name: &str) -> Result<BackendInfo> {
+        self.resolve(name).map(|(info, _)| info)
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.keys().copied().collect()
     }
 }
 
 /// Maximum verify/correct passes per protection domain: a corrected
 /// large-magnitude fault leaves an O(eps * magnitude) residue that the next
 /// pass refines, exactly like the kernel's periodic re-verification.
-const MAX_VERIFY_PASSES: usize = 4;
+pub(crate) const MAX_VERIFY_PASSES: usize = 4;
 
 pub struct ReferenceBackend {
     compiled: HashSet<String>,
@@ -84,196 +184,222 @@ impl Backend for ReferenceBackend {
         if self.compiled.contains(&art.name) {
             return Ok(false);
         }
-        // Structural validation stands in for real compilation.
-        match art.kind {
-            ArtifactKind::Gemm | ArtifactKind::Stepwise => {
-                ensure_role(art, "c")?;
-            }
-            ArtifactKind::FtGemm | ArtifactKind::FtDetect => {
-                ensure_role(art, "c")?;
-                ensure_role(art, "errcount")?;
-                if art.inputs.len() != 3 {
-                    bail!("{}: FT kernels take (a, b, inj), got {} inputs", art.name, art.inputs.len());
-                }
-            }
-            ArtifactKind::DingEncode => {
-                ensure_role(art, "ac")?;
-                ensure_role(art, "br")?;
-            }
-            ArtifactKind::DingStep => {
-                ensure_role(art, "cf")?;
-                if art.ks == 0 {
-                    bail!("{}: ding_step needs ks > 0", art.name);
-                }
-            }
-            ArtifactKind::DingVerify => {
-                ensure_role(art, "cf")?;
-                ensure_role(art, "errcount")?;
-            }
-        }
+        validate_artifact(art)?;
         self.compiled.insert(art.name.clone());
         Ok(true)
     }
 
     fn execute(&mut self, art: &Artifact, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
-        match art.kind {
-            ArtifactKind::Gemm | ArtifactKind::Stepwise => {
-                let (a, b) = two_matrices(art, inputs)?;
-                let c = a.matmul(&b);
-                build_outputs(art, [("c", c.into_data())].into_iter().collect())
+        execute_semantic(art, inputs, self.thresholds, &|a, b| a.matmul(b))
+    }
+}
+
+/// Structural validation standing in for real compilation — shared by
+/// every host backend.
+pub(crate) fn validate_artifact(art: &Artifact) -> Result<()> {
+    match art.kind {
+        ArtifactKind::Gemm | ArtifactKind::Stepwise => {
+            ensure_role(art, "c")?;
+        }
+        ArtifactKind::FtGemm | ArtifactKind::FtDetect => {
+            ensure_role(art, "c")?;
+            ensure_role(art, "errcount")?;
+            if art.inputs.len() != 3 {
+                bail!("{}: FT kernels take (a, b, inj), got {} inputs", art.name, art.inputs.len());
             }
-            ArtifactKind::FtGemm | ArtifactKind::FtDetect => {
-                let correct = art.kind == ArtifactKind::FtGemm;
-                let mut it = inputs.into_iter();
-                let a = matrix_input(art, it.next())?;
-                let b = matrix_input(art, it.next())?;
-                let inj = it.next().ok_or_else(|| anyhow!("{}: missing inj input", art.name))?;
-                let injections = decode_injections(&inj);
-                let (c, cr, cc, errgrid) = self.ft_gemm(art, &a, &b, &injections, correct)?;
-                build_outputs(
-                    art,
-                    [
-                        ("c", c.into_data()),
-                        ("cr", cr),
-                        ("cc", cc),
-                        ("errcount", errgrid),
-                    ]
+        }
+        ArtifactKind::DingEncode => {
+            ensure_role(art, "ac")?;
+            ensure_role(art, "br")?;
+        }
+        ArtifactKind::DingStep => {
+            ensure_role(art, "cf")?;
+            if art.ks == 0 {
+                bail!("{}: ding_step needs ks > 0", art.name);
+            }
+        }
+        ArtifactKind::DingVerify => {
+            ensure_role(art, "cf")?;
+            ensure_role(art, "errcount")?;
+        }
+    }
+    Ok(())
+}
+
+/// Execute one artifact semantically with a pluggable GEMM kernel — the
+/// shared interpreter both host backends delegate to (the blocked backend
+/// intercepts `FtGemm`/`FtDetect` with its fused path and routes the rest
+/// here with its tiled kernel).
+pub(crate) fn execute_semantic(
+    art: &Artifact,
+    inputs: Vec<Tensor>,
+    thresholds: Thresholds,
+    gemm: &dyn Fn(&Matrix, &Matrix) -> Matrix,
+) -> Result<Vec<Tensor>> {
+    match art.kind {
+        ArtifactKind::Gemm | ArtifactKind::Stepwise => {
+            let (a, b) = two_matrices(art, inputs)?;
+            let c = gemm(&a, &b);
+            build_outputs(art, [("c", c.into_data())].into_iter().collect())
+        }
+        ArtifactKind::FtGemm | ArtifactKind::FtDetect => {
+            let correct = art.kind == ArtifactKind::FtGemm;
+            let mut it = inputs.into_iter();
+            let a = matrix_input(art, it.next())?;
+            let b = matrix_input(art, it.next())?;
+            let inj = it.next().ok_or_else(|| anyhow!("{}: missing inj input", art.name))?;
+            let injections = decode_injections(&inj);
+            let (c, cr, cc, errgrid) =
+                semantic_ft_gemm(art, &a, &b, &injections, correct, thresholds, gemm)?;
+            build_outputs(
+                art,
+                [
+                    ("c", c.into_data()),
+                    ("cr", cr),
+                    ("cc", cc),
+                    ("errcount", errgrid),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        }
+        ArtifactKind::DingEncode => {
+            let (a, b) = two_matrices(art, inputs)?;
+            let (m, k, n) = (a.rows(), a.cols(), b.cols());
+            let mut ac = Matrix::zeros(m + 1, k);
+            for i in 0..m {
+                ac.data_mut()[i * k..(i + 1) * k].copy_from_slice(a.row(i));
+            }
+            for (kk, s) in a.col_sums().into_iter().enumerate() {
+                ac.set(m, kk, s);
+            }
+            let mut br = Matrix::zeros(k, n + 1);
+            for kk in 0..k {
+                br.data_mut()[kk * (n + 1)..kk * (n + 1) + n].copy_from_slice(b.row(kk));
+                br.set(kk, n, b.row(kk).iter().sum());
+            }
+            build_outputs(
+                art,
+                [("ac", ac.into_data()), ("br", br.into_data())].into_iter().collect(),
+            )
+        }
+        ArtifactKind::DingStep => {
+            let mut it = inputs.into_iter();
+            let mut cf = matrix_input(art, it.next())?;
+            let acp = matrix_input(art, it.next())?;
+            let brp = matrix_input(art, it.next())?;
+            let update = gemm(&acp, &brp);
+            if (update.rows(), update.cols()) != (cf.rows(), cf.cols()) {
+                bail!("{}: panel update shape mismatch", art.name);
+            }
+            for (dst, src) in cf.data_mut().iter_mut().zip(update.data()) {
+                *dst += src;
+            }
+            build_outputs(art, [("cf", cf.into_data())].into_iter().collect())
+        }
+        ArtifactKind::DingVerify => {
+            let mut it = inputs.into_iter();
+            let mut cf = matrix_input(art, it.next())?;
+            let (m, n) = (cf.rows() - 1, cf.cols() - 1);
+            let carried = ChecksumPair {
+                cr: (0..m).map(|i| cf.at(i, n)).collect(),
+                cc: (0..n).map(|j| cf.at(m, j)).collect(),
+            };
+            let mut inner = cf.slice_to(m, n);
+            let corrected = verify_correct_loop(&mut inner, &carried, thresholds, true).0;
+            for i in 0..m {
+                for j in 0..n {
+                    cf.set(i, j, inner.at(i, j));
+                }
+            }
+            build_outputs(
+                art,
+                [("cf", cf.into_data()), ("errcount", vec![corrected as f32])]
                     .into_iter()
                     .collect(),
-                )
-            }
-            ArtifactKind::DingEncode => {
-                let (a, b) = two_matrices(art, inputs)?;
-                let (m, k, n) = (a.rows(), a.cols(), b.cols());
-                let mut ac = Matrix::zeros(m + 1, k);
-                for i in 0..m {
-                    ac.data_mut()[i * k..(i + 1) * k].copy_from_slice(a.row(i));
-                }
-                for (kk, s) in a.col_sums().into_iter().enumerate() {
-                    ac.set(m, kk, s);
-                }
-                let mut br = Matrix::zeros(k, n + 1);
-                for kk in 0..k {
-                    br.data_mut()[kk * (n + 1)..kk * (n + 1) + n].copy_from_slice(b.row(kk));
-                    br.set(kk, n, b.row(kk).iter().sum());
-                }
-                build_outputs(
-                    art,
-                    [("ac", ac.into_data()), ("br", br.into_data())].into_iter().collect(),
-                )
-            }
-            ArtifactKind::DingStep => {
-                let mut it = inputs.into_iter();
-                let mut cf = matrix_input(art, it.next())?;
-                let acp = matrix_input(art, it.next())?;
-                let brp = matrix_input(art, it.next())?;
-                let update = acp.matmul(&brp);
-                if (update.rows(), update.cols()) != (cf.rows(), cf.cols()) {
-                    bail!("{}: panel update shape mismatch", art.name);
-                }
-                for (dst, src) in cf.data_mut().iter_mut().zip(update.data()) {
-                    *dst += src;
-                }
-                build_outputs(art, [("cf", cf.into_data())].into_iter().collect())
-            }
-            ArtifactKind::DingVerify => {
-                let mut it = inputs.into_iter();
-                let mut cf = matrix_input(art, it.next())?;
-                let (m, n) = (cf.rows() - 1, cf.cols() - 1);
-                let carried = ChecksumPair {
-                    cr: (0..m).map(|i| cf.at(i, n)).collect(),
-                    cc: (0..n).map(|j| cf.at(m, j)).collect(),
-                };
-                let mut inner = cf.slice_to(m, n);
-                let corrected = verify_correct_loop(&mut inner, &carried, self.thresholds, true).0;
-                for i in 0..m {
-                    for j in 0..n {
-                        cf.set(i, j, inner.at(i, j));
-                    }
-                }
-                build_outputs(
-                    art,
-                    [("cf", cf.into_data()), ("errcount", vec![corrected as f32])]
-                        .into_iter()
-                        .collect(),
-                )
-            }
+            )
         }
     }
 }
 
-impl ReferenceBackend {
-    /// The fused (FT-)GEMM contract: compute C, apply the injected faults
-    /// interval by interval, and run the checksum verify/correct sweep over
-    /// each affected protection sub-tile — detection and (for the fused
-    /// online kernel) correction at exactly the granularity the lowered
-    /// kernel would.
-    fn ft_gemm(
-        &self,
-        art: &Artifact,
-        a: &Matrix,
-        b: &Matrix,
-        injections: &[Injection],
-        correct: bool,
-    ) -> Result<(Matrix, Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let (m, n) = (a.rows(), b.cols());
-        let (sub_m, sub_n) = protection_tile(art, m, n)?;
-        let (gm, gn) = (m.div_ceil(sub_m), n.div_ceil(sub_n));
-        let mut errgrid = vec![0.0f32; gm * gn];
-        let mut c = a.matmul(b);
+/// The fused (FT-)GEMM contract: compute C, apply the injected faults
+/// interval by interval, and run the checksum verify/correct sweep over
+/// each affected protection sub-tile — detection and (for the fused
+/// online kernel) correction at exactly the granularity the lowered
+/// kernel would.
+pub(crate) fn semantic_ft_gemm(
+    art: &Artifact,
+    a: &Matrix,
+    b: &Matrix,
+    injections: &[Injection],
+    correct: bool,
+    thresholds: Thresholds,
+    gemm: &dyn Fn(&Matrix, &Matrix) -> Matrix,
+) -> Result<(Matrix, Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let (m, n) = (a.rows(), b.cols());
+    let (sub_m, sub_n) = protection_tile(art, m, n)?;
+    let (gm, gn) = (m.div_ceil(sub_m), n.div_ceil(sub_n));
+    let mut errgrid = vec![0.0f32; gm * gn];
+    let mut c = gemm(a, b);
 
-        if art.max_inj > 0 && injections.len() > art.max_inj {
-            bail!(
-                "{}: {} injections exceed kernel capacity {}",
-                art.name,
-                injections.len(),
-                art.max_inj
-            );
-        }
+    check_injection_capacity(art, injections.len())?;
 
-        // Faults land per verification interval; the kernel corrects each
-        // interval's damage before the next accumulates (paper §4.1).
-        let verify_every = art.verify_every.max(1);
-        let mut by_interval: BTreeMap<usize, Vec<&Injection>> = BTreeMap::new();
-        for inj in injections {
-            by_interval.entry(inj.step / verify_every).or_default().push(inj);
-        }
-
-        for injs in by_interval.values() {
-            let mut touched: HashSet<(usize, usize)> = HashSet::new();
-            for inj in injs {
-                if inj.row < m && inj.col < n {
-                    c.add_at(inj.row, inj.col, inj.magnitude);
-                    touched.insert((inj.row / sub_m, inj.col / sub_n));
-                }
+    for injs in group_by_interval(art, injections).values() {
+        let mut touched: HashSet<(usize, usize)> = HashSet::new();
+        for inj in injs {
+            if inj.row < m && inj.col < n {
+                c.add_at(inj.row, inj.col, inj.magnitude);
+                touched.insert((inj.row / sub_m, inj.col / sub_n));
             }
-            for (ti, tj) in touched {
-                let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
-                let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
-                let carried = tile_carried_checksums(a, b, r0, r1, c0, c1);
-                let mut tile = Matrix::from_fn(r1 - r0, c1 - c0, |i, j| c.at(r0 + i, c0 + j));
-                let (corrections, detections) =
-                    verify_correct_loop(&mut tile, &carried, self.thresholds, correct);
-                if corrections > 0 {
-                    for i in 0..(r1 - r0) {
-                        for j in 0..(c1 - c0) {
-                            c.set(r0 + i, c0 + j, tile.at(i, j));
-                        }
+        }
+        for (ti, tj) in touched {
+            let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
+            let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
+            let carried = tile_carried_checksums(a, b, r0, r1, c0, c1);
+            let mut tile = Matrix::from_fn(r1 - r0, c1 - c0, |i, j| c.at(r0 + i, c0 + j));
+            let (corrections, detections) =
+                verify_correct_loop(&mut tile, &carried, thresholds, correct);
+            if corrections > 0 {
+                for i in 0..(r1 - r0) {
+                    for j in 0..(c1 - c0) {
+                        c.set(r0 + i, c0 + j, tile.at(i, j));
                     }
                 }
-                errgrid[ti * gn + tj] += (corrections + detections) as f32;
             }
+            errgrid[ti * gn + tj] += (corrections + detections) as f32;
         }
-
-        let cr = c.row_sums();
-        let cc = c.col_sums();
-        Ok((c, cr, cc, errgrid))
     }
+
+    let cr = c.row_sums();
+    let cc = c.col_sums();
+    Ok((c, cr, cc, errgrid))
+}
+
+/// Enforce the kernel's injection-slot capacity.
+pub(crate) fn check_injection_capacity(art: &Artifact, count: usize) -> Result<()> {
+    if art.max_inj > 0 && count > art.max_inj {
+        bail!("{}: {count} injections exceed kernel capacity {}", art.name, art.max_inj);
+    }
+    Ok(())
+}
+
+/// Faults land per verification interval; the kernel corrects each
+/// interval's damage before the next accumulates (paper §4.1).
+pub(crate) fn group_by_interval<'a>(
+    art: &Artifact,
+    injections: &'a [Injection],
+) -> BTreeMap<usize, Vec<&'a Injection>> {
+    let verify_every = art.verify_every.max(1);
+    let mut by_interval: BTreeMap<usize, Vec<&Injection>> = BTreeMap::new();
+    for inj in injections {
+        by_interval.entry(inj.step / verify_every).or_default().push(inj);
+    }
+    by_interval
 }
 
 /// Checksum sub-tile of an FT artifact: explicit manifest metadata first,
 /// then the Table-1 params for its level, then the whole output.
-fn protection_tile(art: &Artifact, m: usize, n: usize) -> Result<(usize, usize)> {
+pub(crate) fn protection_tile(art: &Artifact, m: usize, n: usize) -> Result<(usize, usize)> {
     if art.sub_m > 0 && art.sub_n > 0 {
         return Ok((art.sub_m, art.sub_n));
     }
@@ -285,7 +411,7 @@ fn protection_tile(art: &Artifact, m: usize, n: usize) -> Result<(usize, usize)>
 
 /// Carried (true-product) checksums of one output sub-tile, derived from
 /// the operands: `cr = A_rows · (B · e_cols)`, `cc = (eᵀ A_rows) · B_cols`.
-fn tile_carried_checksums(
+pub(crate) fn tile_carried_checksums(
     a: &Matrix,
     b: &Matrix,
     r0: usize,
@@ -298,15 +424,34 @@ fn tile_carried_checksums(
     for (kk, s) in be.iter_mut().enumerate() {
         *s = b.row(kk)[c0..c1].iter().sum();
     }
-    let cr = (r0..r1)
-        .map(|i| a.row(i).iter().zip(&be).map(|(x, y)| x * y).sum())
-        .collect();
     let mut ea = vec![0.0f32; k];
     for i in r0..r1 {
         for (s, v) in ea.iter_mut().zip(a.row(i)) {
             *s += v;
         }
     }
+    carried_from_sums(a, b, r0, r1, c0, c1, &be, &ea)
+}
+
+/// Finish the carried checksums from precomputed operand sums: `be[k]` is
+/// the column-range sum of B over `[c0, c1)` and `ea[k]` the row-range sum
+/// of A over `[r0, r1)` (both in ascending index fold order). The blocked
+/// backend computes these during operand packing — fused encoding — and
+/// lands here so both backends produce bit-identical checksums.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn carried_from_sums(
+    a: &Matrix,
+    b: &Matrix,
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+    be: &[f32],
+    ea: &[f32],
+) -> ChecksumPair {
+    let cr = (r0..r1)
+        .map(|i| a.row(i).iter().zip(be).map(|(x, y)| x * y).sum())
+        .collect();
     let mut cc = vec![0.0f32; c1 - c0];
     for (kk, &w) in ea.iter().enumerate() {
         if w == 0.0 {
@@ -321,7 +466,7 @@ fn tile_carried_checksums(
 
 /// Repeated verify(+correct) passes over one matrix against carried
 /// checksums. Returns (corrections, uncorrectable detections).
-fn verify_correct_loop(
+pub(crate) fn verify_correct_loop(
     c: &mut Matrix,
     carried: &ChecksumPair,
     th: Thresholds,
@@ -356,7 +501,7 @@ fn ensure_role(art: &Artifact, role: &str) -> Result<()> {
         .ok_or_else(|| anyhow!("{}: no {role:?} output in manifest", art.name))
 }
 
-fn matrix_input(art: &Artifact, t: Option<Tensor>) -> Result<Matrix> {
+pub(crate) fn matrix_input(art: &Artifact, t: Option<Tensor>) -> Result<Matrix> {
     let t = t.ok_or_else(|| anyhow!("{}: missing input", art.name))?;
     if t.shape.len() != 2 {
         bail!("{}: expected a matrix input, got shape {:?}", art.name, t.shape);
@@ -364,7 +509,7 @@ fn matrix_input(art: &Artifact, t: Option<Tensor>) -> Result<Matrix> {
     Ok(Matrix::from_vec(t.shape[0], t.shape[1], t.data))
 }
 
-fn two_matrices(art: &Artifact, inputs: Vec<Tensor>) -> Result<(Matrix, Matrix)> {
+pub(crate) fn two_matrices(art: &Artifact, inputs: Vec<Tensor>) -> Result<(Matrix, Matrix)> {
     let mut it = inputs.into_iter();
     let a = matrix_input(art, it.next())?;
     let b = matrix_input(art, it.next())?;
@@ -373,7 +518,7 @@ fn two_matrices(art: &Artifact, inputs: Vec<Tensor>) -> Result<(Matrix, Matrix)>
 
 /// Decode the kernels' `(max_inj, 4)` injection descriptor rows; zero
 /// magnitude marks an unused slot.
-fn decode_injections(t: &Tensor) -> Vec<Injection> {
+pub(crate) fn decode_injections(t: &Tensor) -> Vec<Injection> {
     t.data
         .chunks(4)
         .filter(|r| r.len() == 4 && r[3] != 0.0)
@@ -390,7 +535,10 @@ fn decode_injections(t: &Tensor) -> Vec<Injection> {
 /// output list. Semantically load-bearing roles must match the spec size
 /// exactly; auxiliary checksum layouts this backend does not model (the
 /// real kernels' tiled `cr`/`cc`) are zero-filled to spec.
-fn build_outputs(art: &Artifact, mut values: BTreeMap<&'static str, Vec<f32>>) -> Result<Vec<Tensor>> {
+pub(crate) fn build_outputs(
+    art: &Artifact,
+    mut values: BTreeMap<&'static str, Vec<f32>>,
+) -> Result<Vec<Tensor>> {
     art.outputs
         .iter()
         .map(|spec| {
@@ -426,6 +574,34 @@ mod tests {
 
     fn tensor2(m: &Matrix) -> Tensor {
         Tensor::new(vec![m.rows(), m.cols()], m.data().to_vec())
+    }
+
+    #[test]
+    fn registry_lists_builtins_and_resolves_default() {
+        let reg = BackendRegistry::global();
+        assert_eq!(reg.names(), vec!["blocked", "reference"]);
+        let ctx = BackendCtx { workers: 2 };
+        let (info, factory) = reg.resolve("").unwrap();
+        assert_eq!(info.name, "reference");
+        assert_eq!((*factory)(&ctx).name(), "reference");
+        let (info, factory) = reg.resolve("blocked").unwrap();
+        assert!(info.fused_ft);
+        assert_eq!((*factory)(&ctx).name(), "blocked");
+        let err = reg.resolve("pjrt").unwrap_err();
+        assert!(err.to_string().contains("unknown backend"), "{err}");
+        assert!(err.to_string().contains("blocked|reference"), "{err}");
+    }
+
+    #[test]
+    fn custom_registry_entries_resolve() {
+        let mut reg = BackendRegistry::empty();
+        assert!(reg.resolve("").is_err(), "empty registry has no default");
+        reg.register(
+            BackendInfo { name: "custom", description: "test", fused_ft: false },
+            Arc::new(|_ctx: &BackendCtx| Box::new(ReferenceBackend::new()) as Box<dyn Backend>),
+        );
+        assert!(!reg.info("custom").unwrap().fused_ft);
+        assert_eq!(reg.names(), vec!["custom"]);
     }
 
     #[test]

@@ -1,0 +1,687 @@
+//! `BlockedBackend` — the high-performance host execution engine: a
+//! cache-blocked, register-tiled, multithreaded f32 GEMM whose FT artifact
+//! kinds fuse checksum encoding and per-tile verification into the
+//! packing / macro-tile loops. This is the paper's kernel-fusion strategy
+//! (§4) transplanted to host level:
+//!
+//! * **packing fuses encoding** — while operand panels are packed into
+//!   the micro-kernel layout, the per-protection-tile operand sums
+//!   (`e·A` row sums, `B·e` column sums) are accumulated in the same
+//!   pass, so the checksums the verifier needs already exist when the
+//!   compute sweep finishes (the §4.1 "checksum FMAs ride the prefetch"
+//!   idea);
+//! * **the block sweep fuses verification** — injected intervals are
+//!   verified/corrected per protection sub-tile, in parallel over the
+//!   touched tiles, at the granularity the artifact's FT level dictates:
+//!   `thread` level maps to micro-tile-sized domains, `warp` to
+//!   panel-sized, `tb` to block-sized — the same thread/warp/threadblock
+//!   checksum placements as the lowered kernels.
+//!
+//! Tile parameters (MC/KC/NC/MR/NR) come from
+//! [`codegen::select::host_tiles`](crate::codegen::select::host_tiles) —
+//! the same shape-class heuristic that picks kernel templates picks the
+//! host blocking. Threading rides the existing [`ThreadPool`]; each
+//! engine worker owns one instance, so the default width is available
+//! cores divided by the engine worker count, capped at 8
+//! (`FTGEMM_BLOCKED_THREADS` overrides).
+//!
+//! Numerical contract: every output element is accumulated as a single
+//! ascending-`k` fold (register-resident across the whole reduction —
+//! `KC` is the full `k` at our bucket sizes), the **same fold order as
+//! the reference backend's host matmul**, and the verify/correct sweep
+//! shares the reference implementation's checksum algebra verbatim. The
+//! parity property suite (`tests/properties.rs`) holds the two backends
+//! element-wise equal, clean and injected, at all three FT levels.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::abft::checksum::Thresholds;
+use crate::abft::injection::Injection;
+use crate::abft::matrix::Matrix;
+use crate::codegen::select::{host_tiles, HostTiles};
+use crate::util::pool::ThreadPool;
+
+use super::backend::{self, Backend};
+use super::engine::Tensor;
+use super::manifest::{Artifact, ArtifactKind};
+
+/// Below this FLOP count the pool fan-out costs more than it buys; the
+/// kernel falls back to the reference host matmul (identical results).
+const PARALLEL_FLOP_FLOOR: usize = 64 * 64 * 64;
+
+pub struct BlockedBackend {
+    compiled: HashSet<String>,
+    thresholds: Thresholds,
+    pool: ThreadPool,
+    threads: usize,
+}
+
+impl BlockedBackend {
+    /// Pool width from `FTGEMM_BLOCKED_THREADS`, else available cores
+    /// (capped at 8 — beyond that the packing bandwidth saturates first).
+    pub fn new() -> Self {
+        Self::for_engine(1)
+    }
+
+    /// Sized for an engine running `engine_workers` backend instances
+    /// side by side: the machine is divided between them, so an N-worker
+    /// engine does not oversubscribe cores by N x pool width.
+    /// `FTGEMM_BLOCKED_THREADS` overrides the per-instance width.
+    pub fn for_engine(engine_workers: usize) -> Self {
+        let threads = std::env::var("FTGEMM_BLOCKED_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                let cores =
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+                (cores / engine_workers.max(1)).clamp(1, 8)
+            });
+        Self::with_threads(threads)
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        let threads = threads.max(1);
+        BlockedBackend {
+            compiled: HashSet::new(),
+            thresholds: Thresholds::default(),
+            pool: ThreadPool::new(threads),
+            threads,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The multithreaded blocked GEMM (plain path and Ding panel updates).
+    fn gemm(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        assert_eq!(k, b.rows(), "inner dims");
+        if m * n * k < PARALLEL_FLOP_FLOOR || m == 0 || n == 0 || k == 0 {
+            return a.matmul(b);
+        }
+        let t = host_tiles(m, n, k);
+        let pa: Vec<Vec<f32>> = row_blocks(m, t.mc)
+            .map(|(i0, mb)| pack_a(a, i0, mb, t.mr))
+            .collect();
+        let pb: Vec<Vec<f32>> = col_blocks(n, t.nc)
+            .map(|(j0, nb)| pack_b(b, j0, nb, t.nr))
+            .collect();
+        self.compute_blocks(Arc::new(pa), Arc::new(pb), m, n, k, t)
+    }
+
+    /// Fan the macro-tile jobs over the pool and assemble C.
+    fn compute_blocks(
+        &self,
+        pa: Arc<Vec<Vec<f32>>>,
+        pb: Arc<Vec<Vec<f32>>>,
+        m: usize,
+        n: usize,
+        k: usize,
+        t: HostTiles,
+    ) -> Matrix {
+        let rows: Vec<(usize, usize)> = row_blocks(m, t.mc).collect();
+        let cols: Vec<(usize, usize)> = col_blocks(n, t.nc).collect();
+        let jobs: Vec<(usize, usize)> = (0..rows.len())
+            .flat_map(|ri| (0..cols.len()).map(move |ci| (ri, ci)))
+            .collect();
+        let (rows_c, cols_c) = (rows.clone(), cols.clone());
+        let tiles = self.pool.map(jobs.clone(), move |(ri, ci)| {
+            let (_, mb) = rows_c[ri];
+            let (_, nb) = cols_c[ci];
+            compute_macro_tile(&pa[ri], &pb[ci], mb, nb, k, t.mr, t.nr)
+        });
+        let mut c = Matrix::zeros(m, n);
+        for ((ri, ci), tile) in jobs.into_iter().zip(tiles) {
+            let (i0, mb) = rows[ri];
+            let (j0, nb) = cols[ci];
+            for r in 0..mb {
+                let dst = &mut c.data_mut()[(i0 + r) * n + j0..(i0 + r) * n + j0 + nb];
+                dst.copy_from_slice(&tile[r * nb..r * nb + nb]);
+            }
+        }
+        c
+    }
+
+    /// The fused FT-GEMM: checksum encoding rides the packing pass, the
+    /// compute sweep runs over the pool, and each injected verification
+    /// interval triggers a parallel verify/correct sweep over the touched
+    /// protection sub-tiles. Observable behavior (C, errcount grid)
+    /// matches [`backend::semantic_ft_gemm`] exactly.
+    fn fused_ft(
+        &self,
+        art: &Artifact,
+        a: Matrix,
+        b: Matrix,
+        injections: Vec<Injection>,
+        correct: bool,
+    ) -> Result<(Matrix, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let (sub_m, sub_n) = backend::protection_tile(art, m, n)?;
+        let (gm, gn) = (m.div_ceil(sub_m), n.div_ceil(sub_n));
+        backend::check_injection_capacity(art, injections.len())?;
+
+        let t = host_tiles(m, n, k);
+        // Fused encoding needs protection tiles that never span pack
+        // blocks; the shape-class tile tables guarantee this for every
+        // builtin artifact. Misaligned (custom-manifest) protection
+        // geometry falls back to on-demand per-tile encoding — same
+        // values, computed at verify time instead of pack time.
+        let aligned = sub_m <= t.mc
+            && t.mc % sub_m == 0
+            && sub_n <= t.nc
+            && t.nc % sub_n == 0
+            && m * n * k >= PARALLEL_FLOP_FLOOR;
+
+        let (mut c, ea, be) = if aligned {
+            let mut ea: Vec<Vec<f32>> = vec![vec![0.0f32; k]; gm];
+            let mut be: Vec<Vec<f32>> = vec![vec![0.0f32; k]; gn];
+            let mut pa = Vec::new();
+            for (i0, mb) in row_blocks(m, t.mc) {
+                pa.push(pack_a_encode(&a, i0, mb, t.mr, sub_m, &mut ea));
+            }
+            let mut pb = Vec::new();
+            for (j0, nb) in col_blocks(n, t.nc) {
+                pb.push(pack_b_encode(&b, j0, nb, t.nr, sub_n, &mut be));
+            }
+            let c = self.compute_blocks(Arc::new(pa), Arc::new(pb), m, n, k, t);
+            (c, ea, be)
+        } else {
+            (self.gemm(&a, &b), Vec::new(), Vec::new())
+        };
+
+        let mut errgrid = vec![0.0f32; gm * gn];
+        let a = Arc::new(a);
+        let b = Arc::new(b);
+        let ea = Arc::new(ea);
+        let be = Arc::new(be);
+        for injs in backend::group_by_interval(art, &injections).values() {
+            let mut touched: HashSet<(usize, usize)> = HashSet::new();
+            for inj in injs {
+                if inj.row < m && inj.col < n {
+                    c.add_at(inj.row, inj.col, inj.magnitude);
+                    touched.insert((inj.row / sub_m, inj.col / sub_n));
+                }
+            }
+            if touched.is_empty() {
+                continue;
+            }
+            // Snapshot each touched tile, verify/correct them in parallel
+            // (tiles are disjoint protection domains), fold the outcomes
+            // back in.
+            let jobs: Vec<(usize, usize, Matrix)> = touched
+                .into_iter()
+                .map(|(ti, tj)| {
+                    let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
+                    let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
+                    let tile =
+                        Matrix::from_fn(r1 - r0, c1 - c0, |i, j| c.at(r0 + i, c0 + j));
+                    (ti, tj, tile)
+                })
+                .collect();
+            let th = self.thresholds;
+            let (a2, b2, ea2, be2) =
+                (Arc::clone(&a), Arc::clone(&b), Arc::clone(&ea), Arc::clone(&be));
+            let verified = self.pool.map(jobs, move |(ti, tj, mut tile)| {
+                let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
+                let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
+                let carried = if ea2.is_empty() {
+                    backend::tile_carried_checksums(&a2, &b2, r0, r1, c0, c1)
+                } else {
+                    backend::carried_from_sums(&a2, &b2, r0, r1, c0, c1, &be2[tj], &ea2[ti])
+                };
+                let (corrections, detections) =
+                    backend::verify_correct_loop(&mut tile, &carried, th, correct);
+                (ti, tj, tile, corrections, detections)
+            });
+            for (ti, tj, tile, corrections, detections) in verified {
+                if corrections > 0 {
+                    let (r0, c0) = (ti * sub_m, tj * sub_n);
+                    for i in 0..tile.rows() {
+                        for j in 0..tile.cols() {
+                            c.set(r0 + i, c0 + j, tile.at(i, j));
+                        }
+                    }
+                }
+                errgrid[ti * gn + tj] += (corrections + detections) as f32;
+            }
+        }
+
+        let cr = c.row_sums();
+        let cc = c.col_sums();
+        Ok((c, cr, cc, errgrid))
+    }
+}
+
+impl Default for BlockedBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for BlockedBackend {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn compile(&mut self, art: &Artifact) -> Result<bool> {
+        if self.compiled.contains(&art.name) {
+            return Ok(false);
+        }
+        backend::validate_artifact(art)?;
+        if art.m > 0 && art.n > 0 && art.k > 0 {
+            let t = host_tiles(art.m, art.n, art.k);
+            log::debug!(
+                "blocked tiles for {}: MC={} KC={} NC={} MR={} NR={} ({} threads)",
+                art.name,
+                t.mc,
+                t.kc,
+                t.nc,
+                t.mr,
+                t.nr,
+                self.threads
+            );
+        }
+        self.compiled.insert(art.name.clone());
+        Ok(true)
+    }
+
+    fn execute(&mut self, art: &Artifact, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let this: &BlockedBackend = self;
+        match art.kind {
+            ArtifactKind::FtGemm | ArtifactKind::FtDetect => {
+                let correct = art.kind == ArtifactKind::FtGemm;
+                let mut it = inputs.into_iter();
+                let a = backend::matrix_input(art, it.next())?;
+                let b = backend::matrix_input(art, it.next())?;
+                let inj =
+                    it.next().ok_or_else(|| anyhow!("{}: missing inj input", art.name))?;
+                let injections = backend::decode_injections(&inj);
+                let (c, cr, cc, errgrid) = this.fused_ft(art, a, b, injections, correct)?;
+                backend::build_outputs(
+                    art,
+                    [
+                        ("c", c.into_data()),
+                        ("cr", cr),
+                        ("cc", cc),
+                        ("errcount", errgrid),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            }
+            _ => backend::execute_semantic(art, inputs, this.thresholds, &|a, b| {
+                this.gemm(a, b)
+            }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocking geometry
+// ---------------------------------------------------------------------
+
+fn row_blocks(m: usize, mc: usize) -> impl Iterator<Item = (usize, usize)> {
+    (0..m).step_by(mc.max(1)).map(move |i0| (i0, mc.min(m - i0)))
+}
+
+fn col_blocks(n: usize, nc: usize) -> impl Iterator<Item = (usize, usize)> {
+    (0..n).step_by(nc.max(1)).map(move |j0| (j0, nc.min(n - j0)))
+}
+
+// ---------------------------------------------------------------------
+// Packing (with optional fused checksum encoding)
+// ---------------------------------------------------------------------
+
+/// Pack rows `[i0, i0+mb)` of A into MR-row micro-panels, k-major within a
+/// panel, zero-padded to a whole panel, feeding every stored element to
+/// `sink(i, kk, v)` — the single source of truth for both the A panel
+/// layout (panel `ip` occupies `[ip*k*mr, (ip+1)*k*mr)`, element
+/// `(kk, r) -> a[i0 + ip*mr + r][kk]`) and the encode fold order
+/// (ascending `i` per `(tile, kk)`, which
+/// [`backend::tile_carried_checksums`] mirrors).
+fn pack_a_sink(
+    a: &Matrix,
+    i0: usize,
+    mb: usize,
+    mr: usize,
+    mut sink: impl FnMut(usize, usize, f32),
+) -> Vec<f32> {
+    let k = a.cols();
+    let panels = mb.div_ceil(mr);
+    let mut out = vec![0.0f32; panels * k * mr];
+    for ip in 0..panels {
+        let base = ip * k * mr;
+        for r in 0..mr.min(mb - ip * mr) {
+            let i = i0 + ip * mr + r;
+            let row = a.row(i);
+            for (kk, &v) in row.iter().enumerate() {
+                out[base + kk * mr + r] = v;
+                sink(i, kk, v);
+            }
+        }
+    }
+    out
+}
+
+fn pack_a(a: &Matrix, i0: usize, mb: usize, mr: usize) -> Vec<f32> {
+    pack_a_sink(a, i0, mb, mr, |_i, _kk, _v| {})
+}
+
+/// [`pack_a`] with the encode fused in: row-range sums per protection row
+/// tile (`ea[i / sub_m][kk] += a[i][kk]`).
+fn pack_a_encode(
+    a: &Matrix,
+    i0: usize,
+    mb: usize,
+    mr: usize,
+    sub_m: usize,
+    ea: &mut [Vec<f32>],
+) -> Vec<f32> {
+    pack_a_sink(a, i0, mb, mr, |i, kk, v| ea[i / sub_m][kk] += v)
+}
+
+/// Pack columns `[j0, j0+nb)` of B into NR-column micro-panels, k-major
+/// within a panel, zero-padded, feeding every stored element to
+/// `sink(j, kk, v)` — the single source of truth for both the B panel
+/// layout (panel `jp` occupies `[jp*k*nr, (jp+1)*k*nr)`, element
+/// `(kk, c) -> b[kk][j0 + jp*nr + c]`) and the encode fold order
+/// (ascending `j` per `(tile, kk)`).
+fn pack_b_sink(
+    b: &Matrix,
+    j0: usize,
+    nb: usize,
+    nr: usize,
+    mut sink: impl FnMut(usize, usize, f32),
+) -> Vec<f32> {
+    let k = b.rows();
+    let panels = nb.div_ceil(nr);
+    let mut out = vec![0.0f32; panels * k * nr];
+    for kk in 0..k {
+        let row = b.row(kk);
+        for jp in 0..panels {
+            let base = jp * k * nr + kk * nr;
+            for c in 0..nr.min(nb - jp * nr) {
+                let j = j0 + jp * nr + c;
+                out[base + c] = row[j];
+                sink(j, kk, row[j]);
+            }
+        }
+    }
+    out
+}
+
+fn pack_b(b: &Matrix, j0: usize, nb: usize, nr: usize) -> Vec<f32> {
+    pack_b_sink(b, j0, nb, nr, |_j, _kk, _v| {})
+}
+
+/// [`pack_b`] with the encode fused in: column-range sums per protection
+/// column tile (`be[j / sub_n][kk] += b[kk][j]`).
+fn pack_b_encode(
+    b: &Matrix,
+    j0: usize,
+    nb: usize,
+    nr: usize,
+    sub_n: usize,
+    be: &mut [Vec<f32>],
+) -> Vec<f32> {
+    pack_b_sink(b, j0, nb, nr, |j, kk, v| be[j / sub_n][kk] += v)
+}
+
+// ---------------------------------------------------------------------
+// Macro tile + micro kernel
+// ---------------------------------------------------------------------
+
+/// One (mb x nb) macro tile from packed operands; returns the row-major
+/// tile buffer.
+fn compute_macro_tile(
+    pa: &[f32],
+    pb: &[f32],
+    mb: usize,
+    nb: usize,
+    k: usize,
+    mr: usize,
+    nr: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; mb * nb];
+    let ipanels = mb.div_ceil(mr);
+    let jpanels = nb.div_ceil(nr);
+    for jp in 0..jpanels {
+        let pbp = &pb[jp * k * nr..(jp + 1) * k * nr];
+        for ip in 0..ipanels {
+            let pap = &pa[ip * k * mr..(ip + 1) * k * mr];
+            let (r0, c0) = (ip * mr, jp * nr);
+            match (mr, nr) {
+                (8, 8) => micro_into::<8, 8>(k, pap, pbp, &mut out, r0, c0, mb, nb),
+                (8, 4) => micro_into::<8, 4>(k, pap, pbp, &mut out, r0, c0, mb, nb),
+                (4, 8) => micro_into::<4, 8>(k, pap, pbp, &mut out, r0, c0, mb, nb),
+                (4, 4) => micro_into::<4, 4>(k, pap, pbp, &mut out, r0, c0, mb, nb),
+                _ => micro_generic(k, mr, nr, pap, pbp, &mut out, r0, c0, mb, nb),
+            }
+        }
+    }
+    out
+}
+
+/// The register-tiled micro-kernel: an MR x NR accumulator array carried
+/// across the full reduction (single ascending-k fold per element — the
+/// reference backend's fold order), then clamped into the tile buffer.
+#[allow(clippy::too_many_arguments)]
+fn micro_into<const MR: usize, const NR: usize>(
+    k: usize,
+    pap: &[f32],
+    pbp: &[f32],
+    out: &mut [f32],
+    r0: usize,
+    c0: usize,
+    mb: usize,
+    nb: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..k {
+        let af = &pap[kk * MR..kk * MR + MR];
+        let bf = &pbp[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let ar = af[r];
+            for c in 0..NR {
+                acc[r][c] += ar * bf[c];
+            }
+        }
+    }
+    let rows = MR.min(mb - r0);
+    let cols = NR.min(nb - c0);
+    for (r, acc_row) in acc.iter().enumerate().take(rows) {
+        let dst = &mut out[(r0 + r) * nb + c0..(r0 + r) * nb + c0 + cols];
+        dst.copy_from_slice(&acc_row[..cols]);
+    }
+}
+
+/// Fallback for tile tables outside the monomorphized MR/NR set.
+#[allow(clippy::too_many_arguments)]
+fn micro_generic(
+    k: usize,
+    mr: usize,
+    nr: usize,
+    pap: &[f32],
+    pbp: &[f32],
+    out: &mut [f32],
+    r0: usize,
+    c0: usize,
+    mb: usize,
+    nb: usize,
+) {
+    let mut acc = vec![0.0f32; mr * nr];
+    for kk in 0..k {
+        let af = &pap[kk * mr..kk * mr + mr];
+        let bf = &pbp[kk * nr..kk * nr + nr];
+        for r in 0..mr {
+            let ar = af[r];
+            let dst = &mut acc[r * nr..r * nr + nr];
+            for (d, &bv) in dst.iter_mut().zip(bf) {
+                *d += ar * bv;
+            }
+        }
+    }
+    let rows = mr.min(mb - r0);
+    let cols = nr.min(nb - c0);
+    for r in 0..rows {
+        let dst = &mut out[(r0 + r) * nb + c0..(r0 + r) * nb + c0 + cols];
+        dst.copy_from_slice(&acc[r * nr..r * nr + cols]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abft::injection::InjectionPlan;
+    use crate::runtime::backend::ReferenceBackend;
+    use crate::runtime::manifest::Manifest;
+
+    fn tensor2(m: &Matrix) -> Tensor {
+        Tensor::new(vec![m.rows(), m.cols()], m.data().to_vec())
+    }
+
+    #[test]
+    fn blocked_gemm_matches_reference_on_bucket_and_odd_shapes() {
+        let be = BlockedBackend::with_threads(4);
+        for (m, k, n, seed) in [
+            (64usize, 64usize, 64usize, 1u64),
+            (128, 128, 128, 2),
+            (512, 512, 512, 3),
+            (129, 64, 65, 4), // ding panel-update geometry
+            (100, 70, 90, 5),
+            (1, 300, 2, 6),
+        ] {
+            let a = Matrix::rand_uniform(m, k, seed);
+            let b = Matrix::rand_uniform(k, n, seed + 100);
+            let diff = be.gemm(&a, &b).max_abs_diff(&a.matmul(&b));
+            assert!(diff < 1e-4, "({m},{k},{n}) diff {diff}");
+        }
+    }
+
+    #[test]
+    fn packing_layout_roundtrips() {
+        let a = Matrix::from_fn(5, 3, |i, j| (i * 3 + j) as f32);
+        let pa = pack_a(&a, 1, 4, 4);
+        // panel 0, k=1, r=2 -> a[1 + 2][1] = a[3][1] = 10
+        assert_eq!(pa[4 + 2], 10.0);
+        let pb = pack_b(&a.transpose(), 1, 4, 4);
+        // transpose is 3x5; panel 0, kk=1, c=2 -> bT[1][1 + 2] = a[3][1]
+        assert_eq!(pb[4 + 2], 10.0);
+    }
+
+    #[test]
+    fn fused_ft_parity_with_reference_backend() {
+        let man = Manifest::builtin();
+        let mut blocked = BlockedBackend::with_threads(4);
+        let mut reference = ReferenceBackend::new();
+        for name in ["ftgemm_tb_medium", "ftgemm_warp_medium", "ftgemm_thread_huge"] {
+            let art = man.get(name).unwrap();
+            let a = Matrix::rand_uniform(art.m, art.k, 11);
+            let b = Matrix::rand_uniform(art.k, art.n, 12);
+            let mut rng = crate::util::rng::Pcg32::seeded(13);
+            let plan = InjectionPlan::random_seu(
+                art.m,
+                art.n,
+                art.k / 8,
+                art.verify_every,
+                art.sub_m,
+                art.sub_n,
+                3,
+                &mut rng,
+            );
+            let inputs = || {
+                vec![
+                    tensor2(&a),
+                    tensor2(&b),
+                    Tensor::new(vec![art.max_inj, 4], plan.to_tensor(art.max_inj)),
+                ]
+            };
+            let got = blocked.execute(art, inputs()).unwrap();
+            let want = reference.execute(art, inputs()).unwrap();
+            let c_idx = art.output_index("c").unwrap();
+            let e_idx = art.output_index("errcount").unwrap();
+            let gc = Matrix::from_vec(art.m, art.n, got[c_idx].data.clone());
+            let wc = Matrix::from_vec(art.m, art.n, want[c_idx].data.clone());
+            let diff = gc.max_abs_diff(&wc);
+            assert!(diff < 1e-3, "{name}: C diverged by {diff}");
+            assert_eq!(
+                got[e_idx].data, want[e_idx].data,
+                "{name}: errcount grids diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn ding_chain_runs_on_the_blocked_backend() {
+        let man = Manifest::builtin();
+        let mut be = BlockedBackend::with_threads(2);
+        let enc = man.get("ding_encode_medium").unwrap();
+        let step = man.get("ding_step_medium").unwrap();
+        let ver = man.get("ding_verify_medium").unwrap();
+        let (m, n, k, ks) = (enc.m, enc.n, enc.k, step.ks);
+        let a = Matrix::rand_uniform(m, k, 21);
+        let b = Matrix::rand_uniform(k, n, 22);
+        let out = be.execute(enc, vec![tensor2(&a), tensor2(&b)]).unwrap();
+        let ac = Matrix::from_vec(m + 1, k, out[0].data.clone());
+        let br = Matrix::from_vec(k, n + 1, out[1].data.clone());
+        let mut cf = Matrix::zeros(m + 1, n + 1);
+        for s in (0..k).step_by(ks) {
+            let acp = Matrix::from_fn(m + 1, ks, |i, j| ac.at(i, s + j));
+            let brp = Matrix::from_fn(ks, n + 1, |i, j| br.at(s + i, j));
+            let out = be
+                .execute(step, vec![tensor2(&cf), tensor2(&acp), tensor2(&brp)])
+                .unwrap();
+            cf = Matrix::from_vec(m + 1, n + 1, out[0].data.clone());
+            let out = be.execute(ver, vec![tensor2(&cf)]).unwrap();
+            cf = Matrix::from_vec(m + 1, n + 1, out[0].data.clone());
+        }
+        assert!(cf.slice_to(m, n).max_abs_diff(&a.matmul(&b)) < 2e-2);
+    }
+
+    #[test]
+    fn builtin_ft_artifacts_get_fused_encode_alignment() {
+        // every builtin FT artifact's protection tiles must sit whole
+        // inside the pack blocks its shape class selects, or the fused
+        // packing-time encode silently degrades to on-demand
+        let man = Manifest::builtin();
+        let mut seen = 0usize;
+        for art in man.iter() {
+            if !matches!(art.kind, ArtifactKind::FtGemm | ArtifactKind::FtDetect) {
+                continue;
+            }
+            let t = host_tiles(art.m, art.n, art.k);
+            assert!(
+                art.sub_m <= t.mc && t.mc % art.sub_m == 0,
+                "{}: sub_m {} vs mc {}",
+                art.name,
+                art.sub_m,
+                t.mc
+            );
+            assert!(
+                art.sub_n <= t.nc && t.nc % art.sub_n == 0,
+                "{}: sub_n {} vs nc {}",
+                art.name,
+                art.sub_n,
+                t.nc
+            );
+            seen += 1;
+        }
+        assert!(seen >= 10, "expected the FT artifact registry, saw {seen}");
+    }
+
+    #[test]
+    fn compile_validates_and_is_idempotent() {
+        let man = Manifest::builtin();
+        let mut be = BlockedBackend::with_threads(1);
+        let art = man.get("gemm_medium").unwrap();
+        assert!(be.compile(art).unwrap());
+        assert!(!be.compile(art).unwrap());
+        assert_eq!(be.name(), "blocked");
+        assert_eq!(be.threads(), 1);
+    }
+}

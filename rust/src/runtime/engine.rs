@@ -17,6 +17,7 @@
 //! worker) and is cached thereafter.
 
 use std::collections::HashSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
@@ -27,7 +28,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::pool::oneshot;
 
-use super::backend::{self, Backend, BackendKind};
+use super::backend::{Backend, BackendCtx, BackendInfo, BackendRegistry};
 use super::manifest::Manifest;
 
 /// A host tensor: row-major f32 with an explicit shape. The engine's only
@@ -92,8 +93,9 @@ pub struct EngineConfig {
     /// Worker threads, each with its own backend + executable cache.
     /// 0 is treated as 1.
     pub workers: usize,
-    /// Which kernel backend the workers run.
-    pub backend: BackendKind,
+    /// Which kernel backend the workers run, by [`BackendRegistry`] name
+    /// (`"reference"` | `"blocked"`); empty = the registry default.
+    pub backend: String,
 }
 
 /// Cumulative engine-side statistics (per worker; [`Engine::stats`]
@@ -148,6 +150,7 @@ struct Worker {
 
 struct Shared {
     manifest: Arc<Manifest>,
+    backend: BackendInfo,
     workers: Vec<Worker>,
     inflight_total: Arc<AtomicUsize>,
     peak_inflight: Arc<AtomicUsize>,
@@ -174,8 +177,17 @@ pub struct Engine {
 
 impl Engine {
     /// Start the engine: load (or synthesize) the manifest and spin up the
-    /// worker pool.
+    /// worker pool. The backend name resolves against
+    /// [`BackendRegistry::global`]; embedders with custom backends use
+    /// [`Engine::start_with`].
     pub fn start(config: EngineConfig) -> Result<Engine> {
+        Engine::start_with(config, BackendRegistry::global())
+    }
+
+    /// [`Engine::start`] against a caller-provided [`BackendRegistry`] —
+    /// the embedding point for custom backends (built with
+    /// [`BackendRegistry::empty`] + [`BackendRegistry::register`]).
+    pub fn start_with(config: EngineConfig, registry: &BackendRegistry) -> Result<Engine> {
         let manifest = match &config.artifacts_dir {
             Some(d) => Manifest::load(d)?,
             None => match Manifest::discover_path() {
@@ -184,6 +196,9 @@ impl Engine {
             },
         };
         let manifest = Arc::new(manifest);
+        // Resolve the backend selection against the registry up front —
+        // an unknown name fails here, not inside a worker thread.
+        let (backend_info, factory) = registry.resolve(&config.backend)?;
         let n = config.workers.max(1);
         let inflight_total = Arc::new(AtomicUsize::new(0));
         let peak_inflight = Arc::new(AtomicUsize::new(0));
@@ -196,27 +211,44 @@ impl Engine {
             let thread_manifest = Arc::clone(&manifest);
             let thread_inflight = Arc::clone(&inflight);
             let thread_total = Arc::clone(&inflight_total);
-            let backend_kind = config.backend;
+            let thread_factory = Arc::clone(&factory);
             let handle = std::thread::Builder::new()
                 .name(format!("ftgemm-engine-{i}"))
                 .spawn(move || {
                     // Backends may hold thread-confined (Rc-based) client
-                    // state, so construction happens here, in-thread.
-                    let mut worker = EngineWorker::new(
-                        thread_manifest,
-                        backend::create(backend_kind),
-                    );
+                    // state, so construction happens here, in-thread, from
+                    // the Send + Sync registry factory.
+                    let ctx = BackendCtx { workers: n };
+                    let mut worker =
+                        EngineWorker::new(thread_manifest, (*thread_factory)(&ctx));
                     let _ = ready_tx.send(Ok(()));
                     while let Ok(msg) = rx.recv() {
                         match msg {
                             Msg::Exec(req, reply) => {
-                                let out = worker.execute(req);
+                                // A panicking backend fails the one request
+                                // instead of killing the worker thread (and
+                                // silently shrinking the pool).
+                                let artifact = req.artifact.clone();
+                                let out =
+                                    catch_unwind(AssertUnwindSafe(|| worker.execute(req)))
+                                        .unwrap_or_else(|_| {
+                                            Err(anyhow!(
+                                                "backend panicked executing {artifact}"
+                                            ))
+                                        });
                                 thread_inflight.fetch_sub(1, Ordering::SeqCst);
                                 thread_total.fetch_sub(1, Ordering::SeqCst);
                                 let _ = reply.send(out);
                             }
                             Msg::Warm(name, reply) => {
-                                let _ = reply.send(worker.warm(&name));
+                                // same containment as Exec: a panicking
+                                // compile() must not kill the worker
+                                let out =
+                                    catch_unwind(AssertUnwindSafe(|| worker.warm(&name)))
+                                        .unwrap_or_else(|_| {
+                                            Err(anyhow!("backend panicked compiling {name}"))
+                                        });
+                                let _ = reply.send(out);
                             }
                             Msg::Stats(reply) => {
                                 let _ = reply.send(worker.stats);
@@ -238,7 +270,13 @@ impl Engine {
         }
 
         let engine = Engine {
-            shared: Arc::new(Shared { manifest, workers, inflight_total, peak_inflight }),
+            shared: Arc::new(Shared {
+                manifest,
+                backend: backend_info,
+                workers,
+                inflight_total,
+                peak_inflight,
+            }),
         };
         for name in &config.precompile {
             engine.warm(name)?;
@@ -248,6 +286,13 @@ impl Engine {
 
     pub fn manifest(&self) -> &Manifest {
         &self.shared.manifest
+    }
+
+    /// Metadata of the backend every worker in this pool runs (resolved
+    /// from the [`BackendRegistry`] at startup). The planner keys
+    /// capability decisions on this — see `coordinator::plan`.
+    pub fn backend(&self) -> BackendInfo {
+        self.shared.backend
     }
 
     /// Number of worker threads in the pool.
@@ -580,6 +625,69 @@ mod tests {
         };
         assert_eq!(out.outputs[0].shape, vec![64, 64]);
         assert_eq!(eng.inflight(), 0, "completed request left the load counter");
+    }
+
+    #[test]
+    fn backend_selection_resolves_through_the_registry() {
+        let eng = Engine::start(EngineConfig {
+            backend: "blocked".into(),
+            workers: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(eng.backend().name, "blocked");
+        assert!(eng.backend().fused_ft);
+        let a = crate::abft::Matrix::rand_uniform(64, 64, 7);
+        let b = crate::abft::Matrix::rand_uniform(64, 64, 8);
+        let out = eng
+            .execute(
+                "gemm_small",
+                vec![
+                    Tensor::new(vec![64, 64], a.data().to_vec()),
+                    Tensor::new(vec![64, 64], b.data().to_vec()),
+                ],
+            )
+            .unwrap();
+        let got = crate::abft::Matrix::from_vec(64, 64, out.outputs[0].data.clone());
+        assert!(got.max_abs_diff(&a.matmul(&b)) < 1e-3);
+        // default resolves to reference; unknown names fail at startup
+        assert_eq!(engine().backend().name, "reference");
+        let err = Engine::start(EngineConfig { backend: "pjrt".into(), ..Default::default() })
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown backend"), "{err}");
+    }
+
+    #[test]
+    fn custom_registry_serves_through_start_with() {
+        use super::super::backend::{BackendCtx, BackendInfo, BackendRegistry, ReferenceBackend};
+        let mut reg = BackendRegistry::empty();
+        reg.register(
+            BackendInfo { name: "mine", description: "embedder backend", fused_ft: true },
+            std::sync::Arc::new(|_ctx: &BackendCtx| {
+                Box::new(ReferenceBackend::new()) as Box<dyn super::Backend>
+            }),
+        );
+        let eng = Engine::start_with(
+            EngineConfig { backend: "mine".into(), ..Default::default() },
+            &reg,
+        )
+        .unwrap();
+        assert_eq!(eng.backend().name, "mine");
+        let a = crate::abft::Matrix::rand_uniform(64, 64, 9);
+        let b = crate::abft::Matrix::rand_uniform(64, 64, 10);
+        let out = eng
+            .execute(
+                "gemm_small",
+                vec![
+                    Tensor::new(vec![64, 64], a.data().to_vec()),
+                    Tensor::new(vec![64, 64], b.data().to_vec()),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.outputs[0].shape, vec![64, 64]);
+        // the custom registry is authoritative: builtins are absent
+        let err = Engine::start_with(EngineConfig::default(), &reg).unwrap_err();
+        assert!(err.to_string().contains("unknown backend"), "{err}");
     }
 
     #[test]

@@ -6,11 +6,15 @@
 //!   params, FT metadata) produced by `python/compile/aot.py`, or
 //!   synthesizes the same registry in-process ([`Manifest::builtin`]) when
 //!   artifacts are absent.
-//! * [`backend`] — pluggable kernel executors. Kernel clients (PJRT) are
-//!   `Rc`-based and thread-confined, so each engine worker constructs its
-//!   own backend instance in-thread. The always-available
-//!   [`backend::ReferenceBackend`] executes the artifact contract
-//!   semantically on the host (see DESIGN.md "Substitutions").
+//! * [`backend`] — pluggable kernel executors behind a named
+//!   [`BackendRegistry`]. Kernel clients (PJRT) are `Rc`-based and
+//!   thread-confined, so each engine worker constructs its own backend
+//!   instance in-thread from a `Send + Sync` registry factory. The
+//!   always-available [`backend::ReferenceBackend`] executes the artifact
+//!   contract semantically on the host (see DESIGN.md "Substitutions");
+//!   [`blocked::BlockedBackend`] is the high-performance engine —
+//!   cache-blocked, register-tiled, multithreaded, with checksum work
+//!   fused into its packing/compute loops.
 //! * [`engine`] — the execution engine: a configurable pool of worker
 //!   threads (the vLLM engine-loop pattern, generalized from one thread to
 //!   N), each owning one backend + compiled-executable cache, with
@@ -21,9 +25,11 @@
 //! engine only compiles/executes them.
 
 pub mod backend;
+pub mod blocked;
 pub mod engine;
 pub mod manifest;
 
-pub use backend::{Backend, BackendKind, ReferenceBackend};
+pub use backend::{Backend, BackendFactory, BackendInfo, BackendRegistry, ReferenceBackend};
+pub use blocked::BlockedBackend;
 pub use engine::{Engine, EngineConfig, ExecOutput, ExecRequest, Pending};
 pub use manifest::{Artifact, ArtifactKind, Manifest, TensorSpec};

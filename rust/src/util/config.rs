@@ -179,11 +179,20 @@ impl Config {
         Ok(cfg)
     }
 
-    /// `[engine]` section → [`EngineConfig`].
+    /// `[engine]` section → [`EngineConfig`]. The `backend` key is a
+    /// [`BackendRegistry`](crate::runtime::BackendRegistry) name
+    /// (`"reference"` | `"blocked"`, or a custom entry); it is carried
+    /// verbatim and resolved when the engine starts — against the global
+    /// registry for `Engine::start`, or the caller's for
+    /// `Engine::start_with` — so config files can name embedder-registered
+    /// backends too.
     pub fn engine(&self) -> Result<EngineConfig> {
         let mut cfg = EngineConfig::default();
         if let Some(dir) = self.str("engine.artifacts_dir")? {
             cfg.artifacts_dir = Some(dir.into());
+        }
+        if let Some(name) = self.str("engine.backend")? {
+            cfg.backend = name.to_string();
         }
         if let Some(list) = self.str("engine.precompile")? {
             cfg.precompile = list
@@ -260,6 +269,7 @@ mod tests {
 artifacts_dir = "artifacts"          # where make artifacts wrote
 precompile = "gemm_medium, ftgemm_tb_medium"
 workers = 4
+backend = "blocked"
 
 [coordinator]
 ft_level = "warp"
@@ -298,6 +308,7 @@ batch_window_us = 500
         let eng = c.engine().unwrap();
         assert_eq!(eng.precompile, vec!["gemm_medium", "ftgemm_tb_medium"]);
         assert_eq!(eng.workers, 4);
+        assert_eq!(eng.backend, "blocked");
         let b = c.batcher().unwrap();
         assert_eq!(b.max_batch, 32);
         assert_eq!(b.batch_window, std::time::Duration::from_micros(500));
@@ -357,6 +368,12 @@ batch_window_us = 500
         assert!(c.batcher().is_err());
         let c = Config::parse("[engine]\nworkers = 0").unwrap();
         assert!(c.engine().is_err());
+        // backend names are carried verbatim (resolution happens at
+        // Engine::start, against whichever registry serves the config)
+        let c = Config::parse("[engine]\nbackend = \"custom_embedder\"").unwrap();
+        assert_eq!(c.engine().unwrap().backend, "custom_embedder");
+        let c = Config::parse("[engine]\nbackend = \"reference\"").unwrap();
+        assert_eq!(c.engine().unwrap().backend, "reference");
     }
 
     #[test]

@@ -68,12 +68,27 @@ impl ThreadPool {
 
     /// Run a closure over each item, in parallel, and collect results in
     /// input order — the pool's fan-out/fan-in primitive.
+    ///
+    /// A job that panics still counts down the join latch (via a drop
+    /// guard), so `map` never deadlocks on a panicking closure; the panic
+    /// is re-raised on the calling thread once every job has settled.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
+        /// Counts the latch down even when the job unwinds, so the
+        /// waiting caller is never stranded (the pool worker's
+        /// `catch_unwind` would otherwise swallow the panic after the
+        /// count-down was skipped).
+        struct CountDown(Arc<Latch>);
+        impl Drop for CountDown {
+            fn drop(&mut self) {
+                self.0.count_down();
+            }
+        }
+
         let f = Arc::new(f);
         let n = items.len();
         let results = Arc::new(Mutex::new(Vec::from_iter((0..n).map(|_| None))));
@@ -83,18 +98,20 @@ impl ThreadPool {
             let results = Arc::clone(&results);
             let latch = Arc::clone(&latch);
             self.execute(move || {
+                let _armed = CountDown(latch);
                 let r = f(item);
                 results.lock().unwrap()[i] = Some(r);
-                latch.count_down();
             });
         }
         latch.wait();
-        Arc::try_unwrap(results)
-            .unwrap_or_else(|_| panic!("pool.map results still shared"))
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|r| r.expect("worker panicked before producing a result"))
+        // Take the slots through the mutex rather than unwrapping the Arc:
+        // the last job counts the latch down *before* its closure (and the
+        // `results` clone it captured) is destroyed, so unique ownership
+        // here would be a transient race.
+        let mut slots = results.lock().unwrap();
+        slots
+            .iter_mut()
+            .map(|r| r.take().expect("pool job panicked before producing a result"))
             .collect()
     }
 }
@@ -230,6 +247,18 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
         assert_eq!(pool.panic_count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool job panicked")]
+    fn map_panics_loudly_instead_of_deadlocking() {
+        let pool = ThreadPool::new(2);
+        // a panicking job must still count the latch down (drop guard) so
+        // map surfaces the failure instead of blocking forever
+        let _ = pool.map(vec![0usize, 1, 2], |x| {
+            assert!(x != 1, "boom");
+            x
+        });
     }
 
     #[test]

@@ -405,6 +405,7 @@ fn serve_config_roundtrip() {
     assert_eq!(coord.ft_level, FtLevel::Tb);
     let eng = cfg.engine().unwrap();
     assert!(eng.precompile.contains(&"gemm_medium".to_string()));
+    assert_eq!(eng.backend, "blocked", "sample config serves on the blocked backend");
     assert!(cfg.batcher().is_ok());
 }
 
@@ -871,4 +872,57 @@ fn ding_submission_rides_the_ticket_surface() {
     assert_eq!(resp.result.kernel_launches as usize, 1 + 2 * pipe.panels());
     assert!(resp.result.buckets.is_empty(), "ding plans have no block nodes");
     check_close(&resp.result.c, &a.matmul(&b), 2e-3, "ding via ticket");
+}
+
+// ---------------------------------------------------------------------
+// Blocked backend behind the registry
+// ---------------------------------------------------------------------
+
+fn blocked_coordinator(workers: usize) -> Coordinator {
+    let engine = Engine::start(EngineConfig {
+        workers,
+        backend: "blocked".into(),
+        ..Default::default()
+    })
+    .expect("blocked engine starts");
+    assert_eq!(engine.backend().name, "blocked");
+    Coordinator::new(engine, CoordinatorConfig::default())
+}
+
+#[test]
+fn blocked_backend_serves_every_policy() {
+    let coord = blocked_coordinator(2);
+    let a = Matrix::rand_uniform(200, 150, 901);
+    let b = Matrix::rand_uniform(150, 120, 902);
+    let want = a.matmul(&b);
+    for policy in [FtPolicy::None, FtPolicy::Online, FtPolicy::Offline] {
+        let out = coord.gemm(&a, &b, policy).unwrap();
+        check_close(&out.c, &want, 1e-2, policy.name());
+    }
+    let inj = InjectionPlan::single(10, 20, 0, 4096.0);
+    let out = coord.gemm_with_faults(&a, &b, FtPolicy::Online, &inj).unwrap();
+    assert!(out.errors_corrected >= 1, "blocked fused kernel must correct");
+    assert_eq!(out.recomputes, 0);
+    check_close(&out.c, &want, 1e-1, "blocked injected online");
+}
+
+#[test]
+fn blocked_backend_runs_the_ding_baseline() {
+    let pipe = DingPipeline::new(blocked_coordinator(1), "medium").unwrap();
+    let a = Matrix::rand_uniform(128, 128, 910);
+    let b = Matrix::rand_uniform(128, 128, 911);
+    let t = pipe.submit(a.clone(), b.clone(), InjectionPlan::single(3, 4, 0, 512.0)).unwrap();
+    let resp = t.wait().unwrap();
+    assert!(resp.result.errors_corrected >= 1);
+    check_close(&resp.result.c, &a.matmul(&b), 2e-2, "blocked ding");
+}
+
+#[test]
+fn blocked_split_gemm_spreads_over_the_pool() {
+    let coord = blocked_coordinator(4);
+    let a = Matrix::rand_uniform(600, 600, 920);
+    let b = Matrix::rand_uniform(600, 600, 921);
+    let out = coord.gemm(&a, &b, FtPolicy::Online).unwrap();
+    assert_eq!(out.kernel_launches, 8);
+    check_close(&out.c, &a.matmul(&b), 5e-2, "blocked split");
 }

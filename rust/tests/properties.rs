@@ -440,6 +440,160 @@ fn prop_saturated_dispatch_order_is_priority_then_fifo() {
 }
 
 // ---------------------------------------------------------------------
+// Backend parity: BlockedBackend vs ReferenceBackend
+// ---------------------------------------------------------------------
+
+/// Every GEMM-family artifact, clean and injected (SEU-constrained plans,
+/// so the fused levels can correct everything): the blocked backend's
+/// outputs — C, carried checksums, and the per-tile errcount grid — are
+/// element-wise equal to the reference backend's. Covers all three FT
+/// levels (tb/warp/thread artifacts), the detect-only kernel, and the
+/// verify-interval ablation variants.
+#[test]
+fn prop_blocked_backend_is_elementwise_equal_to_reference() {
+    use ftgemm::runtime::engine::Tensor;
+    use ftgemm::runtime::{ArtifactKind, Backend, BlockedBackend, Manifest, ReferenceBackend};
+
+    let man = Manifest::builtin();
+    let mut blocked = BlockedBackend::with_threads(4);
+    let mut reference = ReferenceBackend::new();
+    let mut rng = Pcg32::seeded(0xB10C);
+    let mut checked = 0usize;
+    for art in man.iter() {
+        let is_ft = match art.kind {
+            ArtifactKind::Gemm => false,
+            ArtifactKind::FtGemm | ArtifactKind::FtDetect => true,
+            _ => continue, // ding chain covered by the blocked unit tests
+        };
+        for round in 0..2usize {
+            if round == 1 && !is_ft {
+                continue;
+            }
+            let a = Matrix::rand_uniform(art.m, art.k, rng.next_u64());
+            let b = Matrix::rand_uniform(art.k, art.n, rng.next_u64());
+            let mut inputs =
+                vec![
+                    Tensor::new(vec![art.m, art.k], a.data().to_vec()),
+                    Tensor::new(vec![art.k, art.n], b.data().to_vec()),
+                ];
+            if is_ft {
+                let plan = if round == 0 {
+                    InjectionPlan::none()
+                } else {
+                    InjectionPlan::random_seu(
+                        art.m,
+                        art.n,
+                        art.k,
+                        art.verify_every,
+                        art.sub_m,
+                        art.sub_n,
+                        3,
+                        &mut rng,
+                    )
+                };
+                inputs.push(Tensor::new(vec![art.max_inj, 4], plan.to_tensor(art.max_inj)));
+            }
+            let got = blocked.execute(art, inputs.clone()).unwrap();
+            let want = reference.execute(art, inputs).unwrap();
+            assert_eq!(got.len(), want.len(), "{}", art.name);
+            for ((g, w), spec) in got.iter().zip(&want).zip(&art.outputs) {
+                if spec.role == "errcount" {
+                    assert_eq!(
+                        g.data, w.data,
+                        "{} round {round}: errcount grids diverged",
+                        art.name
+                    );
+                    continue;
+                }
+                let diff = g
+                    .data
+                    .iter()
+                    .zip(&w.data)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max);
+                // carried checksums are k-length sums of C elements, so
+                // give them k-amplified headroom; C itself is tight
+                let tol = if spec.role == "c" { 1e-3 } else { 0.1 };
+                assert!(
+                    diff < tol,
+                    "{} round {round}: output {:?} diverged by {diff}",
+                    art.name,
+                    spec.role
+                );
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 20, "expected to cover the artifact registry, got {checked}");
+}
+
+/// The serving-level parity witness: coordinators over a blocked-backend
+/// engine and a reference-backend engine agree (and agree with the host
+/// matmul) across randomized shapes including the irregular codegen
+/// example shapes — padded, tall, split, and injected requests included.
+#[test]
+fn prop_blocked_coordinator_matches_reference_on_irregular_shapes() {
+    use ftgemm::coordinator::{Coordinator, CoordinatorConfig, FtPolicy};
+    use ftgemm::runtime::{Engine, EngineConfig};
+
+    let reference = Coordinator::new(
+        Engine::start(EngineConfig::default()).unwrap(),
+        CoordinatorConfig::default(),
+    );
+    let blocked = Coordinator::new(
+        Engine::start(EngineConfig {
+            backend: "blocked".into(),
+            workers: 2,
+            ..Default::default()
+        })
+        .unwrap(),
+        CoordinatorConfig::default(),
+    );
+    // the irregular_shapes example sweep, then randomized shapes
+    let mut shapes = vec![
+        (31usize, 17usize, 53usize),
+        (64, 64, 64),
+        (100, 90, 70),
+        (97, 430, 211),
+        (257, 257, 257),
+        (640, 640, 640), // oversize -> split across blocks
+    ];
+    let mut rng = Pcg32::seeded(0xB10C2);
+    for _ in 0..5 {
+        shapes.push((
+            rand_dims(&mut rng, 1, 280),
+            rand_dims(&mut rng, 1, 280),
+            rand_dims(&mut rng, 1, 280),
+        ));
+    }
+    for (m, n, k) in shapes {
+        let a = Matrix::rand_uniform(m, k, rng.next_u64());
+        let b = Matrix::rand_uniform(k, n, rng.next_u64());
+        let want = a.matmul(&b);
+        let tol = 5e-3 * (k as f32).max(1.0) / 64.0 + 1e-3;
+        let r = reference.gemm(&a, &b, FtPolicy::Online).unwrap();
+        let g = blocked.gemm(&a, &b, FtPolicy::Online).unwrap();
+        assert_eq!(r.buckets, g.buckets, "({m},{n},{k}): routed differently");
+        let host_diff = g.c.max_abs_diff(&want);
+        assert!(host_diff < tol, "({m},{n},{k}): blocked vs host diff {host_diff}");
+        let cross = g.c.max_abs_diff(&r.c);
+        assert!(cross < tol, "({m},{n},{k}): blocked vs reference diff {cross}");
+        // injected request: both backends detect+correct identically
+        let inj = InjectionPlan::single(m / 2, n / 2, 0, 4096.0);
+        let ri = reference.gemm_with_faults(&a, &b, FtPolicy::Online, &inj).unwrap();
+        let gi = blocked.gemm_with_faults(&a, &b, FtPolicy::Online, &inj).unwrap();
+        assert_eq!(
+            (ri.errors_detected, ri.errors_corrected),
+            (gi.errors_detected, gi.errors_corrected),
+            "({m},{n},{k}): fault accounting diverged"
+        );
+        assert!(gi.errors_corrected >= 1, "({m},{n},{k}): injection went uncorrected");
+        let diff = gi.c.max_abs_diff(&want);
+        assert!(diff < tol + 0.3, "({m},{n},{k}): injected blocked diff {diff}");
+    }
+}
+
+// ---------------------------------------------------------------------
 // Stats sanity used by bench reporting
 // ---------------------------------------------------------------------
 
