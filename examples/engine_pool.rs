@@ -51,16 +51,19 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // --- backend axis: same request, reference vs blocked executor ------
+    // --- backend axis: same request, reference vs blocked executors
+    // (blocked-scalar pins the portable kernel, so the last row shows
+    // what runtime SIMD dispatch is worth on this host) ------------------
     println!("\nbackend shootout: same 1024^3 FT-GEMM, 1 engine worker:\n");
-    println!("{:>10} {:>10} {:>9}", "backend", "wall", "speedup");
+    println!("{:>14} {:>8} {:>10} {:>9}", "backend", "kernel", "wall", "speedup");
     let mut ref_wall = None;
-    for backend in ["reference", "blocked"] {
+    for backend in ["reference", "blocked-scalar", "blocked"] {
         let engine = Engine::start(EngineConfig {
             workers: 1,
             backend: backend.into(),
             ..Default::default()
         })?;
+        let kernel = engine.backend().kernel_isa;
         let coord = Coordinator::new(engine, CoordinatorConfig::default());
         coord.gemm(&a, &b, FtPolicy::Online)?; // warm the executable cache
         let t0 = Instant::now();
@@ -68,7 +71,10 @@ fn main() -> anyhow::Result<()> {
         let wall = t0.elapsed();
         assert!(out.c.max_abs_diff(&want) < 1e-2, "{backend} diverged");
         let base = *ref_wall.get_or_insert(wall.as_secs_f64());
-        println!("{backend:>10} {wall:>10.2?} {:>8.2}x", base / wall.as_secs_f64());
+        println!(
+            "{backend:>14} {kernel:>8} {wall:>10.2?} {:>8.2}x",
+            base / wall.as_secs_f64()
+        );
     }
 
     // --- cross-request concurrency: 8 distinct requests, one pool -------

@@ -4,6 +4,8 @@
 //! request's (m, n, k), pick the Table-1 parameter class (§3.2.2) and the
 //! fixed-shape artifact bucket the router pads into.
 
+use crate::runtime::simd::KernelIsa;
+
 use super::params::{KernelParams, ShapeClass};
 
 /// The paper's semi-empirical heuristic (mirrors
@@ -135,6 +137,36 @@ pub fn host_tiles(m: usize, n: usize, k: usize) -> HostTiles {
     t
 }
 
+/// ISA-aware micro-tile (mr, nr) rows layered over [`HOST_TILE_TABLE`]:
+/// the macro tiles (`mc`/`nc`, and thus fused-encode alignment) are
+/// class-driven and ISA-independent, but the register tile must match
+/// the vector width the dispatched micro-kernel was written for.
+///
+/// | ISA        | mr x nr | accumulator layout                |
+/// |------------|---------|-----------------------------------|
+/// | `scalar`   | table   | `[[f32; NR]; MR]` (autovectorized)|
+/// | `avx2`     | 8 x 8   | 8 x `__m256`                      |
+/// | `avx512`   | 8 x 16  | 8 x `__m512`                      |
+/// | `neon`     | 8 x 8   | 8 x 2 x `float32x4_t`             |
+///
+/// `mc`/`nc` stay powers of two >= 64, so the widened micro tiles keep
+/// every [`HostTiles::validate`] invariant.
+pub fn host_tiles_for(isa: KernelIsa, m: usize, n: usize, k: usize) -> HostTiles {
+    let mut t = host_tiles(m, n, k);
+    match isa {
+        KernelIsa::Scalar => {}
+        KernelIsa::Avx2Fma | KernelIsa::Neon => {
+            t.mr = 8;
+            t.nr = 8;
+        }
+        KernelIsa::Avx512 => {
+            t.mr = 8;
+            t.nr = 16;
+        }
+    }
+    t
+}
+
 /// Route a request shape to the artifact bucket that minimizes padding
 /// waste among the buckets that fit. `None` when the request exceeds every
 /// bucket (the coordinator then splits the GEMM — see
@@ -212,6 +244,25 @@ mod tests {
         // kc is the full reduction depth
         assert_eq!(host_tiles(512, 512, 77).kc, 77);
         assert_eq!(host_tiles(64, 1024, 256).nr, 8, "tall class");
+    }
+
+    #[test]
+    fn isa_rows_override_micro_tiles_and_stay_valid() {
+        // scalar row is the plain table
+        assert_eq!(host_tiles_for(KernelIsa::Scalar, 64, 64, 64), host_tiles(64, 64, 64));
+        for (m, n, k) in [(64, 64, 64), (128, 128, 128), (512, 512, 512), (64, 1024, 256)] {
+            for isa in [KernelIsa::Avx2Fma, KernelIsa::Neon] {
+                let t = host_tiles_for(isa, m, n, k);
+                assert_eq!((t.mr, t.nr), (8, 8), "{isa:?} ({m},{n},{k})");
+                t.validate().unwrap();
+                // macro tiles (fused-encode alignment) never change
+                let s = host_tiles(m, n, k);
+                assert_eq!((t.mc, t.nc, t.kc), (s.mc, s.nc, s.kc));
+            }
+            let t = host_tiles_for(KernelIsa::Avx512, m, n, k);
+            assert_eq!((t.mr, t.nr), (8, 16), "avx512 ({m},{n},{k})");
+            t.validate().unwrap();
+        }
     }
 
     #[test]

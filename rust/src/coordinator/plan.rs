@@ -432,7 +432,12 @@ mod tests {
     #[test]
     fn online_degrades_to_detect_recompute_without_fused_ft() {
         let (man, cfg) = planner_fixture();
-        let caps = BackendInfo { name: "nofuse", description: "test", fused_ft: false };
+        let caps = BackendInfo {
+            name: "nofuse",
+            description: "test",
+            fused_ft: false,
+            kernel_isa: "portable",
+        };
         let plan = Planner::new(&man, &cfg)
             .for_backend(caps)
             .plan_gemm(128, 128, 128, FtPolicy::Online, &InjectionPlan::none())
@@ -445,7 +450,12 @@ mod tests {
         }
         // a fully capable backend keeps the fused kernel
         let plan = Planner::new(&man, &cfg)
-            .for_backend(BackendInfo { name: "full", description: "test", fused_ft: true })
+            .for_backend(BackendInfo {
+                name: "full",
+                description: "test",
+                fused_ft: true,
+                kernel_isa: "portable",
+            })
             .plan_gemm(128, 128, 128, FtPolicy::Online, &InjectionPlan::none())
             .unwrap();
         assert!(matches!(

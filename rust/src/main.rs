@@ -62,7 +62,8 @@ fn print_usage() {
          COMMANDS:\n\
            info       artifact manifest + device model summary\n\
            gemm       run one GEMM (--m --n --k --policy none|online|offline --inject N\n\
-                      --workers W --backend reference|blocked --priority low|normal|high\n\
+                      --workers W --backend reference|blocked|blocked-scalar\n\
+                      --priority low|normal|high\n\
                       --deadline-ms D)\n\
            campaign   SEU injection campaign (--rounds --errors --policy --workers W\n\
                       --backend B)\n\
@@ -143,7 +144,10 @@ fn cmd_info(rest: &[String]) -> anyhow::Result<()> {
     println!("backends:");
     for name in reg.names() {
         let info = reg.info(name)?;
-        println!("  {:10} fused_ft={}  {}", info.name, info.fused_ft, info.description);
+        println!(
+            "  {:14} kernel={:8} fused_ft={}  {}",
+            info.name, info.kernel_isa, info.fused_ft, info.description
+        );
     }
     Ok(())
 }
@@ -157,7 +161,7 @@ fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
         .opt("inject", "number of SEUs to inject", Some("0"))
         .opt("level", "online FT granularity tb|warp|thread", Some("tb"))
         .opt("workers", "engine worker pool size", Some("1"))
-        .opt("backend", "execution backend reference|blocked", Some("reference"))
+        .opt("backend", "execution backend reference|blocked|blocked-scalar", Some("reference"))
         .opt("priority", "dispatch priority low|normal|high", Some("normal"))
         .opt("deadline-ms", "fail if still queued after this long; 0 = none", Some("0"))
         .opt("seed", "rng seed", Some("42"));
@@ -222,7 +226,7 @@ fn cmd_campaign(rest: &[String]) -> anyhow::Result<()> {
         .opt("errors", "SEUs per GEMM", Some("4"))
         .opt("policy", "online|offline", Some("online"))
         .opt("workers", "engine worker pool size", Some("1"))
-        .opt("backend", "execution backend reference|blocked", Some("reference"))
+        .opt("backend", "execution backend reference|blocked|blocked-scalar", Some("reference"))
         .opt("seed", "rng seed", Some("7"));
     let args = cmd.parse(rest)?;
     let coord = start_coordinator(
@@ -298,7 +302,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
 
     let cmd = Command::new("serve", "line-protocol GEMM server on stdin")
         .opt("config", "config file (TOML subset)", None)
-        .opt("backend", "override [engine].backend (reference|blocked)", None);
+        .opt("backend", "override [engine].backend (reference|blocked|blocked-scalar)", None);
     let args = cmd.parse(rest)?;
     let cfg = match args.get("config") {
         Some(path) => ftgemm::util::config::Config::load(path)?,

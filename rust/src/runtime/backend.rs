@@ -14,11 +14,14 @@
 //!   behavior as the lowered kernels — so the whole serving stack (router,
 //!   planner, scheduler, batcher, campaigns) runs in environments without
 //!   PJRT or artifacts.
-//! * [`BlockedBackend`](super::blocked::BlockedBackend) (`"blocked"`) —
-//!   the high-performance host engine: cache-blocked, register-tiled,
-//!   multithreaded GEMM with checksum encoding fused into operand packing
-//!   and per-tile verification fused into the block sweep (the paper's
-//!   kernel-fusion strategy at host level). See `runtime/blocked.rs`.
+//! * [`BlockedBackend`](super::blocked::BlockedBackend) (`"blocked"`,
+//!   plus `"blocked-scalar"` pinned to the portable micro-kernel) — the
+//!   high-performance host engine: cache-blocked, register-tiled,
+//!   multithreaded GEMM with SIMD micro-kernels dispatched once at
+//!   construction ([`KernelIsa`]), checksum encoding fused into operand
+//!   packing and per-tile verification fused into the block sweep (the
+//!   paper's kernel-fusion strategy at host level). See
+//!   `runtime/blocked.rs`.
 //! * a PJRT backend — parses the AOT HLO text and executes it on a real
 //!   `PjRtClient`. The `xla` bindings are not vendorable in this build
 //!   environment; the integration point is this trait plus one
@@ -39,6 +42,7 @@ use crate::abft::matrix::Matrix;
 
 use super::engine::Tensor;
 use super::manifest::{Artifact, ArtifactKind};
+use super::simd::{sum8, KernelIsa};
 
 /// One worker's kernel executor. `compile` is idempotent per artifact and
 /// returns whether work happened (the engine meters compile time/counts).
@@ -59,6 +63,11 @@ pub struct BackendInfo {
     /// routes `FtPolicy::Online` requests on backends without this
     /// capability to the detect-and-recompute strategy instead.
     pub fused_ft: bool,
+    /// The micro-kernel ISA this backend dispatches to
+    /// ([`KernelIsa::name`] for the blocked variants, `"portable"` for
+    /// backends without runtime kernel dispatch). Surfaced in
+    /// `ftgemm info`, bench JSON, and logs.
+    pub kernel_isa: &'static str,
 }
 
 /// What a backend factory gets told about the engine constructing it.
@@ -95,26 +104,51 @@ impl BackendRegistry {
         BackendRegistry { entries: BTreeMap::new() }
     }
 
-    /// The built-in catalog: `reference` and `blocked`.
+    /// The built-in catalog: `reference`, `blocked` (SIMD micro-kernels
+    /// picked once here via [`KernelIsa::detect`]) and `blocked-scalar`
+    /// (the same engine pinned to the portable scalar kernel — the SIMD
+    /// speedup baseline and a parity escape hatch).
     pub fn builtin() -> BackendRegistry {
+        let isa = KernelIsa::detect();
         let mut reg = BackendRegistry::empty();
         reg.register(
             BackendInfo {
                 name: "reference",
                 description: "semantic host executor (naive-blocked GEMM, oracle for parity)",
                 fused_ft: true,
+                kernel_isa: "portable",
             },
             Arc::new(|_ctx: &BackendCtx| Box::new(ReferenceBackend::new()) as Box<dyn Backend>),
         );
         reg.register(
             BackendInfo {
                 name: "blocked",
-                description: "cache-blocked register-tiled multithreaded GEMM with fused ABFT",
+                description: "cache-blocked register-tiled multithreaded GEMM with fused ABFT \
+                              (runtime-dispatched SIMD micro-kernels)",
                 fused_ft: true,
+                kernel_isa: isa.name(),
+            },
+            Arc::new(move |ctx: &BackendCtx| {
+                Box::new(super::blocked::BlockedBackend::for_engine_isa(ctx.workers, isa))
+                    as Box<dyn Backend>
+            }),
+        );
+        reg.register(
+            BackendInfo {
+                name: "blocked-scalar",
+                description: "blocked backend pinned to the portable scalar micro-kernel \
+                              (SIMD baseline / parity)",
+                fused_ft: true,
+                kernel_isa: "scalar",
             },
             Arc::new(|ctx: &BackendCtx| {
-                Box::new(super::blocked::BlockedBackend::for_engine(ctx.workers))
-                    as Box<dyn Backend>
+                Box::new(
+                    super::blocked::BlockedBackend::for_engine_isa(
+                        ctx.workers,
+                        KernelIsa::Scalar,
+                    )
+                    .with_name("blocked-scalar"),
+                ) as Box<dyn Backend>
             }),
         );
         reg
@@ -344,6 +378,55 @@ pub(crate) fn semantic_ft_gemm(
 
     check_injection_capacity(art, injections.len())?;
 
+    run_injection_sweeps(art, m, n, sub_m, sub_n, &mut c, injections, &mut errgrid, |jobs| {
+        jobs.into_iter()
+            .map(|(ti, tj, mut tile)| {
+                let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
+                let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
+                let carried = tile_carried_checksums(a, b, r0, r1, c0, c1);
+                let (corrections, detections) =
+                    verify_correct_loop(&mut tile, &carried, thresholds, correct);
+                (ti, tj, tile, corrections, detections)
+            })
+            .collect()
+    });
+
+    let cr = c.row_sums();
+    let cc = c.col_sums();
+    Ok((c, cr, cc, errgrid))
+}
+
+/// One verified protection-tile snapshot handed to a sweep's verifier:
+/// `(tile_row, tile_col, tile values with this interval's faults applied)`.
+pub(crate) type TileJob = (usize, usize, Matrix);
+/// A verifier's outcome per tile: the (possibly corrected) tile plus its
+/// `(corrections, detections)` counts.
+pub(crate) type TileVerdict = (usize, usize, Matrix, u64, u64);
+
+/// The per-interval injection sweep both FT-GEMM implementations share:
+/// group faults by verification interval ([`group_by_interval`] — the
+/// kernel corrects each interval's damage before the next accumulates),
+/// apply them to C, snapshot every touched protection sub-tile, hand the
+/// batch to `verify_tiles` (sequential checksum recompute for the
+/// reference backend; a pool fan-out over packed operand sums for the
+/// blocked backend), then fold corrected tiles and the errcount grid
+/// back in. Tiles within one interval are disjoint protection domains,
+/// so the verifier may process them in any order or in parallel.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_injection_sweeps<F>(
+    art: &Artifact,
+    m: usize,
+    n: usize,
+    sub_m: usize,
+    sub_n: usize,
+    c: &mut Matrix,
+    injections: &[Injection],
+    errgrid: &mut [f32],
+    mut verify_tiles: F,
+) where
+    F: FnMut(Vec<TileJob>) -> Vec<TileVerdict>,
+{
+    let gn = n.div_ceil(sub_n);
     for injs in group_by_interval(art, injections).values() {
         let mut touched: HashSet<(usize, usize)> = HashSet::new();
         for inj in injs {
@@ -352,16 +435,23 @@ pub(crate) fn semantic_ft_gemm(
                 touched.insert((inj.row / sub_m, inj.col / sub_n));
             }
         }
-        for (ti, tj) in touched {
-            let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
-            let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
-            let carried = tile_carried_checksums(a, b, r0, r1, c0, c1);
-            let mut tile = Matrix::from_fn(r1 - r0, c1 - c0, |i, j| c.at(r0 + i, c0 + j));
-            let (corrections, detections) =
-                verify_correct_loop(&mut tile, &carried, thresholds, correct);
+        if touched.is_empty() {
+            continue;
+        }
+        let jobs: Vec<TileJob> = touched
+            .into_iter()
+            .map(|(ti, tj)| {
+                let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
+                let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
+                let tile = Matrix::from_fn(r1 - r0, c1 - c0, |i, j| c.at(r0 + i, c0 + j));
+                (ti, tj, tile)
+            })
+            .collect();
+        for (ti, tj, tile, corrections, detections) in verify_tiles(jobs) {
             if corrections > 0 {
-                for i in 0..(r1 - r0) {
-                    for j in 0..(c1 - c0) {
+                let (r0, c0) = (ti * sub_m, tj * sub_n);
+                for i in 0..tile.rows() {
+                    for j in 0..tile.cols() {
                         c.set(r0 + i, c0 + j, tile.at(i, j));
                     }
                 }
@@ -369,10 +459,6 @@ pub(crate) fn semantic_ft_gemm(
             errgrid[ti * gn + tj] += (corrections + detections) as f32;
         }
     }
-
-    let cr = c.row_sums();
-    let cc = c.col_sums();
-    Ok((c, cr, cc, errgrid))
 }
 
 /// Enforce the kernel's injection-slot capacity.
@@ -411,6 +497,12 @@ pub(crate) fn protection_tile(art: &Artifact, m: usize, n: usize) -> Result<(usi
 
 /// Carried (true-product) checksums of one output sub-tile, derived from
 /// the operands: `cr = A_rows · (B · e_cols)`, `cc = (eᵀ A_rows) · B_cols`.
+///
+/// Fold orders are the crate-wide canon (see `runtime::simd`): the B
+/// column-range sums use the lane-split [`sum8`] order so the blocked
+/// backend's vectorized packing encode reproduces them bit-exactly; the
+/// A row-range sums fold in ascending `i` (SIMD lanes run along `k`
+/// there, preserving the order).
 pub(crate) fn tile_carried_checksums(
     a: &Matrix,
     b: &Matrix,
@@ -422,7 +514,7 @@ pub(crate) fn tile_carried_checksums(
     let k = a.cols();
     let mut be = vec![0.0f32; k];
     for (kk, s) in be.iter_mut().enumerate() {
-        *s = b.row(kk)[c0..c1].iter().sum();
+        *s = sum8(&b.row(kk)[c0..c1]);
     }
     let mut ea = vec![0.0f32; k];
     for i in r0..r1 {
@@ -434,10 +526,11 @@ pub(crate) fn tile_carried_checksums(
 }
 
 /// Finish the carried checksums from precomputed operand sums: `be[k]` is
-/// the column-range sum of B over `[c0, c1)` and `ea[k]` the row-range sum
-/// of A over `[r0, r1)` (both in ascending index fold order). The blocked
-/// backend computes these during operand packing — fused encoding — and
-/// lands here so both backends produce bit-identical checksums.
+/// the column-range sum of B over `[c0, c1)` (canonical [`sum8`] lane
+/// order) and `ea[k]` the row-range sum of A over `[r0, r1)` (ascending
+/// index fold order). The blocked backend computes these during operand
+/// packing — fused encoding — and lands here so both backends produce
+/// bit-identical checksums.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn carried_from_sums(
     a: &Matrix,
@@ -579,17 +672,23 @@ mod tests {
     #[test]
     fn registry_lists_builtins_and_resolves_default() {
         let reg = BackendRegistry::global();
-        assert_eq!(reg.names(), vec!["blocked", "reference"]);
+        assert_eq!(reg.names(), vec!["blocked", "blocked-scalar", "reference"]);
         let ctx = BackendCtx { workers: 2 };
         let (info, factory) = reg.resolve("").unwrap();
         assert_eq!(info.name, "reference");
+        assert_eq!(info.kernel_isa, "portable");
         assert_eq!((*factory)(&ctx).name(), "reference");
         let (info, factory) = reg.resolve("blocked").unwrap();
         assert!(info.fused_ft);
+        assert!(!info.kernel_isa.is_empty());
         assert_eq!((*factory)(&ctx).name(), "blocked");
+        let (info, factory) = reg.resolve("blocked-scalar").unwrap();
+        assert!(info.fused_ft);
+        assert_eq!(info.kernel_isa, "scalar");
+        assert_eq!((*factory)(&ctx).name(), "blocked-scalar");
         let err = reg.resolve("pjrt").unwrap_err();
         assert!(err.to_string().contains("unknown backend"), "{err}");
-        assert!(err.to_string().contains("blocked|reference"), "{err}");
+        assert!(err.to_string().contains("blocked|blocked-scalar|reference"), "{err}");
     }
 
     #[test]
@@ -597,7 +696,12 @@ mod tests {
         let mut reg = BackendRegistry::empty();
         assert!(reg.resolve("").is_err(), "empty registry has no default");
         reg.register(
-            BackendInfo { name: "custom", description: "test", fused_ft: false },
+            BackendInfo {
+                name: "custom",
+                description: "test",
+                fused_ft: false,
+                kernel_isa: "portable",
+            },
             Arc::new(|_ctx: &BackendCtx| Box::new(ReferenceBackend::new()) as Box<dyn Backend>),
         );
         assert!(!reg.info("custom").unwrap().fused_ft);

@@ -662,7 +662,12 @@ mod tests {
         use super::super::backend::{BackendCtx, BackendInfo, BackendRegistry, ReferenceBackend};
         let mut reg = BackendRegistry::empty();
         reg.register(
-            BackendInfo { name: "mine", description: "embedder backend", fused_ft: true },
+            BackendInfo {
+                name: "mine",
+                description: "embedder backend",
+                fused_ft: true,
+                kernel_isa: "portable",
+            },
             std::sync::Arc::new(|_ctx: &BackendCtx| {
                 Box::new(ReferenceBackend::new()) as Box<dyn super::Backend>
             }),

@@ -14,7 +14,8 @@
 //!   contract semantically on the host (see DESIGN.md "Substitutions");
 //!   [`blocked::BlockedBackend`] is the high-performance engine —
 //!   cache-blocked, register-tiled, multithreaded, with checksum work
-//!   fused into its packing/compute loops.
+//!   fused into its packing/compute loops and SIMD micro-kernels
+//!   dispatched at construction time from [`simd::KernelIsa`].
 //! * [`engine`] — the execution engine: a configurable pool of worker
 //!   threads (the vLLM engine-loop pattern, generalized from one thread to
 //!   N), each owning one backend + compiled-executable cache, with
@@ -28,8 +29,10 @@ pub mod backend;
 pub mod blocked;
 pub mod engine;
 pub mod manifest;
+pub mod simd;
 
 pub use backend::{Backend, BackendFactory, BackendInfo, BackendRegistry, ReferenceBackend};
 pub use blocked::BlockedBackend;
+pub use simd::KernelIsa;
 pub use engine::{Engine, EngineConfig, ExecOutput, ExecRequest, Pending};
 pub use manifest::{Artifact, ArtifactKind, Manifest, TensorSpec};

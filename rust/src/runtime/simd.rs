@@ -1,0 +1,485 @@
+//! Runtime-dispatched SIMD micro-kernels and checksum folds for
+//! [`BlockedBackend`](super::blocked::BlockedBackend).
+//!
+//! The paper's fused-ABFT kernels keep both the C accumulators and the
+//! checksum accumulators in vector registers (§4); this module is the
+//! host-level analogue, in the FT-BLAS / FT-GEMM-on-x86 style:
+//!
+//! * **[`KernelIsa`]** — the ISA a backend instance dispatches to,
+//!   detected once at construction via `is_x86_feature_detected!` /
+//!   aarch64 NEON availability, overridable with `FTGEMM_FORCE_SCALAR`.
+//! * **Micro-kernels** — AVX2+FMA 8x8, AVX-512F 8x16 (behind the
+//!   `avx512` cargo feature: its intrinsics postdate the crate MSRV),
+//!   and NEON 8x8. Each carries the full MRxNR accumulator tile in
+//!   vector registers across the whole `k` reduction — the same single
+//!   ascending-`k` fold per element as the scalar `micro_into`, so the
+//!   only numerical divergence is FMA's fused rounding (one rounding
+//!   per multiply-add instead of two). See DESIGN.md "Kernel dispatch".
+//! * **Canonical checksum folds** — [`fold8`]/[`sum8`] define ONE
+//!   lane-split summation order for the B-side operand sums (`B·e`),
+//!   used identically by the scalar path, the SIMD packing fast paths,
+//!   and the reference backend's `tile_carried_checksums`, so carried
+//!   checksums stay **bit-identical** across backends and ISAs and the
+//!   parity suite's exact errcount-grid equality survives
+//!   vectorization. A-side sums (`eᵀ·A`) keep the ascending-`i` order:
+//!   SIMD lanes run along `k` there, which preserves the scalar
+//!   per-lane fold exactly.
+
+/// Lane width of the canonical checksum fold (f32 lanes in a 256-bit
+/// vector). Fixed regardless of the ISA actually executing — AVX-512
+/// and NEON paths reduce to the same 8-lane shape.
+pub const LANES: usize = 8;
+
+/// Which micro-kernel family a `BlockedBackend` instance dispatches to.
+///
+/// Detected once per instance ([`KernelIsa::detect`]); every variant is
+/// defined on every architecture so the type is portable, but `detect`
+/// only ever returns a variant the running host supports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelIsa {
+    /// Portable scalar `micro_into::<MR, NR>` fallback.
+    Scalar,
+    /// x86-64 AVX2 + FMA, 8x8 accumulator tile.
+    Avx2Fma,
+    /// x86-64 AVX-512F, 8x16 accumulator tile (requires the `avx512`
+    /// cargo feature; the intrinsics were stabilized after our MSRV).
+    Avx512,
+    /// aarch64 NEON, 8x8 accumulator tile in 4-lane register pairs.
+    Neon,
+}
+
+impl KernelIsa {
+    /// Short stable identifier, used in `BackendInfo`, bench JSON and
+    /// log lines.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2Fma => "avx2",
+            KernelIsa::Avx512 => "avx512",
+            KernelIsa::Neon => "neon",
+        }
+    }
+
+    /// True when the `FTGEMM_FORCE_SCALAR` override is active (set to
+    /// anything other than empty or `0`).
+    pub fn force_scalar_requested() -> bool {
+        std::env::var("FTGEMM_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    }
+
+    /// Pick the widest ISA the host supports, honoring
+    /// `FTGEMM_FORCE_SCALAR`. Called once per backend construction, not
+    /// per kernel invocation.
+    pub fn detect() -> Self {
+        if Self::force_scalar_requested() {
+            return KernelIsa::Scalar;
+        }
+        Self::widest_supported()
+    }
+
+    /// The widest host-supported ISA, ignoring the env override.
+    fn widest_supported() -> Self {
+        *Self::supported().last().unwrap_or(&KernelIsa::Scalar)
+    }
+
+    /// Every ISA the running host can execute, narrowest first (always
+    /// includes `Scalar`), independent of the env override — the parity
+    /// property suite iterates this to hold each variant equal to the
+    /// reference backend, and backend construction refuses to pin an
+    /// ISA outside this list (the `unsafe` kernel calls lean on that).
+    ///
+    /// `Avx512` additionally requires AVX2+FMA (true of every AVX-512F
+    /// part): its packing fast paths reuse the AVX2 encode kernels.
+    pub fn supported() -> Vec<Self> {
+        let mut isas = vec![KernelIsa::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            let avx2 = std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma");
+            if avx2 {
+                isas.push(KernelIsa::Avx2Fma);
+            }
+            #[cfg(feature = "avx512")]
+            if avx2 && std::arch::is_x86_feature_detected!("avx512f") {
+                isas.push(KernelIsa::Avx512);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                isas.push(KernelIsa::Neon);
+            }
+        }
+        isas
+    }
+
+    /// Whether this variant uses vector packing fast paths.
+    pub fn is_simd(self) -> bool {
+        self != KernelIsa::Scalar
+    }
+}
+
+// ---------------------------------------------------------------------
+// Canonical checksum fold
+// ---------------------------------------------------------------------
+
+/// Reduce 8 lane partials with the fixed binary tree every backend and
+/// ISA shares:
+///
+/// ```text
+/// ((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))
+/// ```
+///
+/// This is the classic lo+hi / movehl / shuffle horizontal-add shape, so
+/// vector reductions can produce bit-identical results to the scalar
+/// path by storing their accumulator lanes and calling this.
+#[inline]
+pub fn fold8(l: [f32; LANES]) -> f32 {
+    ((l[0] + l[4]) + (l[2] + l[6])) + ((l[1] + l[5]) + (l[3] + l[7]))
+}
+
+/// Canonical sum of a slice: element `t` goes to lane `t % 8`, lanes
+/// accumulate in ascending order, then [`fold8`]. Slices shorter than 8
+/// leave the tail lanes at exactly `0.0`, which is additive identity, so
+/// short tiles reduce to plain left-to-right sums of their permuted
+/// terms. This is THE summation order for B-side operand sums (`B·e`)
+/// everywhere: reference backend, scalar blocked path, SIMD packing.
+#[inline]
+pub fn sum8(xs: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    for (t, &v) in xs.iter().enumerate() {
+        lanes[t % LANES] += v;
+    }
+    fold8(lanes)
+}
+
+/// Clamped writeback shared by the SIMD micro-kernels: copy the full
+/// MRxNR accumulator buffer into the macro-tile output, trimming edge
+/// panels exactly like `micro_into`'s tail handling.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn write_clamped(
+    buf: &[f32],
+    mr: usize,
+    nr: usize,
+    out: &mut [f32],
+    r0: usize,
+    c0: usize,
+    mb: usize,
+    nb: usize,
+) {
+    let rows = mr.min(mb - r0);
+    let cols = nr.min(nb - c0);
+    for r in 0..rows {
+        let dst = &mut out[(r0 + r) * nb + c0..(r0 + r) * nb + c0 + cols];
+        dst.copy_from_slice(&buf[r * nr..r * nr + cols]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86-64: AVX2+FMA (and feature-gated AVX-512F)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use super::{fold8, LANES};
+    use crate::abft::matrix::Matrix;
+    use core::arch::x86_64::*;
+
+    /// 8x8 AVX2+FMA micro-kernel: eight 8-lane C accumulators live in
+    /// registers across the full `k` reduction (single ascending-`k`
+    /// fold per element, FMA rounding), then spill row-major.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` and `fma` at backend
+    /// construction, and `pap`/`pbp` must hold at least `k * 8` packed
+    /// elements each.
+    #[target_feature(enable = "avx2,fma")]
+    pub(crate) unsafe fn micro_8x8(k: usize, pap: &[f32], pbp: &[f32]) -> [f32; 64] {
+        debug_assert!(pap.len() >= k * 8 && pbp.len() >= k * 8);
+        let mut acc = [_mm256_setzero_ps(); 8];
+        for kk in 0..k {
+            let bv = _mm256_loadu_ps(pbp.as_ptr().add(kk * 8));
+            let af = pap.as_ptr().add(kk * 8);
+            for (r, a) in acc.iter_mut().enumerate() {
+                let av = _mm256_broadcast_ss(&*af.add(r));
+                *a = _mm256_fmadd_ps(av, bv, *a);
+            }
+        }
+        let mut buf = [0.0f32; 64];
+        for (r, a) in acc.iter().enumerate() {
+            _mm256_storeu_ps(buf.as_mut_ptr().add(r * 8), *a);
+        }
+        buf
+    }
+
+    /// 8x16 AVX-512F micro-kernel: eight 16-lane C accumulators.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx512f`; `pap` holds `k * 8` and
+    /// `pbp` holds `k * 16` packed elements.
+    #[cfg(feature = "avx512")]
+    #[target_feature(enable = "avx512f")]
+    pub(crate) unsafe fn micro_8x16(k: usize, pap: &[f32], pbp: &[f32]) -> [f32; 128] {
+        debug_assert!(pap.len() >= k * 8 && pbp.len() >= k * 16);
+        let mut acc = [_mm512_setzero_ps(); 8];
+        for kk in 0..k {
+            let bv = _mm512_loadu_ps(pbp.as_ptr().add(kk * 16));
+            let af = pap.as_ptr().add(kk * 8);
+            for (r, a) in acc.iter_mut().enumerate() {
+                let av = _mm512_set1_ps(*af.add(r));
+                *a = _mm512_fmadd_ps(av, bv, *a);
+            }
+        }
+        let mut buf = [0.0f32; 128];
+        for (r, a) in acc.iter().enumerate() {
+            _mm512_storeu_ps(buf.as_mut_ptr().add(r * 16), *a);
+        }
+        buf
+    }
+
+    /// Fused B-panel store + column-sum for one protection-tile row
+    /// segment: streams 8-wide chunks of `seg` into the packed panel
+    /// buffer while a vector accumulator stays register-resident across
+    /// the whole segment, then reduces it through the canonical
+    /// [`fold8`] tree. Bit-identical to the portable lane-cycling path
+    /// by construction (lane `t % 8` accumulates element `t`).
+    ///
+    /// `off0` is the segment's offset inside the pack block; caller
+    /// guarantees `off0 % 8 == 0` and `nr % 8 == 0` so every 8-chunk is
+    /// contiguous in the panel layout.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` at backend construction.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn pack_colsum(
+        seg: &[f32],
+        out: &mut [f32],
+        off0: usize,
+        nr: usize,
+        k: usize,
+        kk: usize,
+    ) -> f32 {
+        debug_assert!(off0 % LANES == 0 && nr % LANES == 0);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + LANES <= seg.len() {
+            let v = _mm256_loadu_ps(seg.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, v);
+            let off = off0 + i;
+            let idx = (off / nr) * k * nr + kk * nr + (off % nr);
+            _mm256_storeu_ps(out.as_mut_ptr().add(idx), v);
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        // Tail (< 8 wide) continues the lane cycle from lane 0 — `i` is
+        // a multiple of LANES here, matching the portable path exactly.
+        for (t, &v) in seg[i..].iter().enumerate() {
+            let off = off0 + i + t;
+            out[(off / nr) * k * nr + kk * nr + (off % nr)] = v;
+            lanes[t] += v;
+        }
+        fold8(lanes)
+    }
+
+    /// Vector-resident A-side encode for one tile-bounded row run:
+    /// `ea_row[kk] += a[i][kk]` for `i` in `[r0, r1)`, with the 8-lane
+    /// accumulator (lanes = adjacent `kk`) held in a register across
+    /// the whole run. Per `kk` lane the adds land in ascending `i` —
+    /// the scalar sink's fold order, bit-exactly.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` at backend construction.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn encode_rows(a: &Matrix, r0: usize, r1: usize, ea_row: &mut [f32]) {
+        let k = ea_row.len();
+        let mut kk = 0;
+        while kk + LANES <= k {
+            let mut acc = _mm256_loadu_ps(ea_row.as_ptr().add(kk));
+            for i in r0..r1 {
+                acc = _mm256_add_ps(acc, _mm256_loadu_ps(a.row(i).as_ptr().add(kk)));
+            }
+            _mm256_storeu_ps(ea_row.as_mut_ptr().add(kk), acc);
+            kk += LANES;
+        }
+        for kk in kk..k {
+            for i in r0..r1 {
+                ea_row[kk] += a.row(i)[kk];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64: NEON
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use super::{fold8, LANES};
+    use crate::abft::matrix::Matrix;
+    use core::arch::aarch64::*;
+
+    /// 8x8 NEON micro-kernel: eight rows of two 4-lane C accumulators
+    /// held in registers across the full `k` reduction (FMA rounding,
+    /// single ascending-`k` fold per element).
+    ///
+    /// # Safety
+    /// NEON availability verified at backend construction; `pap`/`pbp`
+    /// hold at least `k * 8` packed elements each.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn micro_8x8(k: usize, pap: &[f32], pbp: &[f32]) -> [f32; 64] {
+        debug_assert!(pap.len() >= k * 8 && pbp.len() >= k * 8);
+        let zero = vdupq_n_f32(0.0);
+        let mut acc = [[zero; 2]; 8];
+        for kk in 0..k {
+            let b0 = vld1q_f32(pbp.as_ptr().add(kk * 8));
+            let b1 = vld1q_f32(pbp.as_ptr().add(kk * 8 + 4));
+            let af = pap.as_ptr().add(kk * 8);
+            for (r, a) in acc.iter_mut().enumerate() {
+                let av = vdupq_n_f32(*af.add(r));
+                a[0] = vfmaq_f32(a[0], b0, av);
+                a[1] = vfmaq_f32(a[1], b1, av);
+            }
+        }
+        let mut buf = [0.0f32; 64];
+        for (r, a) in acc.iter().enumerate() {
+            vst1q_f32(buf.as_mut_ptr().add(r * 8), a[0]);
+            vst1q_f32(buf.as_mut_ptr().add(r * 8 + 4), a[1]);
+        }
+        buf
+    }
+
+    /// NEON twin of the AVX2 `pack_colsum`: two 4-lane accumulators
+    /// stand in for the 8-lane AVX register; lane `t % 8` still
+    /// accumulates element `t`, reduced through [`fold8`].
+    ///
+    /// # Safety
+    /// NEON availability verified at backend construction; caller
+    /// guarantees `off0 % 8 == 0` and `nr % 8 == 0`.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn pack_colsum(
+        seg: &[f32],
+        out: &mut [f32],
+        off0: usize,
+        nr: usize,
+        k: usize,
+        kk: usize,
+    ) -> f32 {
+        debug_assert!(off0 % LANES == 0 && nr % LANES == 0);
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + LANES <= seg.len() {
+            let v0 = vld1q_f32(seg.as_ptr().add(i));
+            let v1 = vld1q_f32(seg.as_ptr().add(i + 4));
+            acc0 = vaddq_f32(acc0, v0);
+            acc1 = vaddq_f32(acc1, v1);
+            let off = off0 + i;
+            let idx = (off / nr) * k * nr + kk * nr + (off % nr);
+            vst1q_f32(out.as_mut_ptr().add(idx), v0);
+            vst1q_f32(out.as_mut_ptr().add(idx + 4), v1);
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for (t, &v) in seg[i..].iter().enumerate() {
+            let off = off0 + i + t;
+            out[(off / nr) * k * nr + kk * nr + (off % nr)] = v;
+            lanes[t] += v;
+        }
+        fold8(lanes)
+    }
+
+    /// NEON twin of the AVX2 `encode_rows`: vector-resident A-side
+    /// row-run encode, ascending `i` per `kk` lane.
+    ///
+    /// # Safety
+    /// NEON availability verified at backend construction.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn encode_rows(a: &Matrix, r0: usize, r1: usize, ea_row: &mut [f32]) {
+        let k = ea_row.len();
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let mut acc = vld1q_f32(ea_row.as_ptr().add(kk));
+            for i in r0..r1 {
+                acc = vaddq_f32(acc, vld1q_f32(a.row(i).as_ptr().add(kk)));
+            }
+            vst1q_f32(ea_row.as_mut_ptr().add(kk), acc);
+            kk += 4;
+        }
+        for kk in kk..k {
+            for i in r0..r1 {
+                ea_row[kk] += a.row(i)[kk];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold8_matches_documented_tree() {
+        let l = [1.0f32, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        let want = ((1.0f32 + 16.0) + (4.0 + 64.0)) + ((2.0 + 32.0) + (8.0 + 128.0));
+        assert_eq!(fold8(l), want);
+    }
+
+    #[test]
+    fn sum8_handles_short_and_unaligned_lengths() {
+        for len in [0usize, 1, 2, 3, 7, 8, 9, 15, 16, 17, 31, 64] {
+            let xs: Vec<f32> = (0..len).map(|i| (i as f32) - 0.5).collect();
+            let got = sum8(&xs);
+            // exact reference: replay the lane cycle in plain code
+            let mut lanes = [0.0f32; LANES];
+            for (t, &v) in xs.iter().enumerate() {
+                lanes[t % LANES] += v;
+            }
+            assert_eq!(got, fold8(lanes), "len {len}");
+        }
+    }
+
+    #[test]
+    fn detect_returns_a_supported_isa() {
+        // Env-override behavior is pinned by the blocked backend's
+        // `force_scalar_env_pins_the_scalar_kernel` test — the only
+        // test that touches FTGEMM_FORCE_SCALAR, to keep the parallel
+        // test harness race-free.
+        assert!(KernelIsa::supported().contains(&KernelIsa::detect()));
+    }
+
+    #[test]
+    fn supported_always_includes_scalar_first() {
+        let isas = KernelIsa::supported();
+        assert_eq!(isas[0], KernelIsa::Scalar);
+        for isa in isas {
+            assert!(!isa.name().is_empty());
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernels_are_bit_identical_to_canonical_folds() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return;
+        }
+        // pack_colsum must agree with sum8 exactly, stores included.
+        let k = 3usize;
+        let nr = 8usize;
+        for len in [4usize, 8, 11, 16, 24, 29] {
+            let seg: Vec<f32> = (0..len).map(|i| (i as f32) * 0.25 - 1.0).collect();
+            let mut out = vec![0.0f32; len.div_ceil(nr) * k * nr];
+            let kk = 1;
+            let got = unsafe { x86::pack_colsum(&seg, &mut out, 0, nr, k, kk) };
+            assert_eq!(got, sum8(&seg), "len {len}");
+            for (t, &v) in seg.iter().enumerate() {
+                let idx = (t / nr) * k * nr + kk * nr + (t % nr);
+                assert_eq!(out[idx], v, "len {len} store {t}");
+            }
+        }
+    }
+}

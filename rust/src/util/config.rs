@@ -181,7 +181,8 @@ impl Config {
 
     /// `[engine]` section → [`EngineConfig`]. The `backend` key is a
     /// [`BackendRegistry`](crate::runtime::BackendRegistry) name
-    /// (`"reference"` | `"blocked"`, or a custom entry); it is carried
+    /// (`"reference"` | `"blocked"` | `"blocked-scalar"`, or a custom
+    /// entry); it is carried
     /// verbatim and resolved when the engine starts — against the global
     /// registry for `Engine::start`, or the caller's for
     /// `Engine::start_with` — so config files can name embedder-registered

@@ -444,87 +444,105 @@ fn prop_saturated_dispatch_order_is_priority_then_fifo() {
 // ---------------------------------------------------------------------
 
 /// Every GEMM-family artifact, clean and injected (SEU-constrained plans,
-/// so the fused levels can correct everything): the blocked backend's
-/// outputs — C, carried checksums, and the per-tile errcount grid — are
-/// element-wise equal to the reference backend's. Covers all three FT
-/// levels (tb/warp/thread artifacts), the detect-only kernel, and the
+/// so the fused levels can correct everything), on EVERY kernel variant
+/// the host supports (scalar always; AVX2 / AVX-512 / NEON where
+/// detected): the blocked backend's outputs — C, carried checksums, and
+/// the per-tile errcount grid — are element-wise equal to the reference
+/// backend's, with the errcount grid exactly equal (carried checksums
+/// are bit-identical across ISAs by the canonical-fold contract, so
+/// detection decisions cannot diverge). Covers all three FT levels
+/// (tb/warp/thread artifacts), the detect-only kernel, and the
 /// verify-interval ablation variants.
 #[test]
 fn prop_blocked_backend_is_elementwise_equal_to_reference() {
     use ftgemm::runtime::engine::Tensor;
-    use ftgemm::runtime::{ArtifactKind, Backend, BlockedBackend, Manifest, ReferenceBackend};
+    use ftgemm::runtime::{
+        ArtifactKind, Backend, BlockedBackend, KernelIsa, Manifest, ReferenceBackend,
+    };
 
     let man = Manifest::builtin();
-    let mut blocked = BlockedBackend::with_threads(4);
     let mut reference = ReferenceBackend::new();
-    let mut rng = Pcg32::seeded(0xB10C);
-    let mut checked = 0usize;
-    for art in man.iter() {
-        let is_ft = match art.kind {
-            ArtifactKind::Gemm => false,
-            ArtifactKind::FtGemm | ArtifactKind::FtDetect => true,
-            _ => continue, // ding chain covered by the blocked unit tests
-        };
-        for round in 0..2usize {
-            if round == 1 && !is_ft {
-                continue;
-            }
-            let a = Matrix::rand_uniform(art.m, art.k, rng.next_u64());
-            let b = Matrix::rand_uniform(art.k, art.n, rng.next_u64());
-            let mut inputs =
-                vec![
+    for isa in KernelIsa::supported() {
+        let mut blocked = BlockedBackend::with_threads_isa(4, isa);
+        assert_eq!(blocked.kernel_isa(), isa, "host-supported ISA must pin");
+        let mut rng = Pcg32::seeded(0xB10C);
+        let mut checked = 0usize;
+        for art in man.iter() {
+            let is_ft = match art.kind {
+                ArtifactKind::Gemm => false,
+                ArtifactKind::FtGemm | ArtifactKind::FtDetect => true,
+                _ => continue, // ding chain covered by the blocked unit tests
+            };
+            for round in 0..2usize {
+                if round == 1 && !is_ft {
+                    continue;
+                }
+                let a = Matrix::rand_uniform(art.m, art.k, rng.next_u64());
+                let b = Matrix::rand_uniform(art.k, art.n, rng.next_u64());
+                let mut inputs = vec![
                     Tensor::new(vec![art.m, art.k], a.data().to_vec()),
                     Tensor::new(vec![art.k, art.n], b.data().to_vec()),
                 ];
-            if is_ft {
-                let plan = if round == 0 {
-                    InjectionPlan::none()
-                } else {
-                    InjectionPlan::random_seu(
-                        art.m,
-                        art.n,
-                        art.k,
-                        art.verify_every,
-                        art.sub_m,
-                        art.sub_n,
-                        3,
-                        &mut rng,
-                    )
-                };
-                inputs.push(Tensor::new(vec![art.max_inj, 4], plan.to_tensor(art.max_inj)));
-            }
-            let got = blocked.execute(art, inputs.clone()).unwrap();
-            let want = reference.execute(art, inputs).unwrap();
-            assert_eq!(got.len(), want.len(), "{}", art.name);
-            for ((g, w), spec) in got.iter().zip(&want).zip(&art.outputs) {
-                if spec.role == "errcount" {
-                    assert_eq!(
-                        g.data, w.data,
-                        "{} round {round}: errcount grids diverged",
-                        art.name
-                    );
-                    continue;
+                if is_ft {
+                    let plan = if round == 0 {
+                        InjectionPlan::none()
+                    } else {
+                        InjectionPlan::random_seu(
+                            art.m,
+                            art.n,
+                            art.k,
+                            art.verify_every,
+                            art.sub_m,
+                            art.sub_n,
+                            3,
+                            &mut rng,
+                        )
+                    };
+                    inputs
+                        .push(Tensor::new(vec![art.max_inj, 4], plan.to_tensor(art.max_inj)));
                 }
-                let diff = g
-                    .data
-                    .iter()
-                    .zip(&w.data)
-                    .map(|(x, y)| (x - y).abs())
-                    .fold(0.0f32, f32::max);
-                // carried checksums are k-length sums of C elements, so
-                // give them k-amplified headroom; C itself is tight
-                let tol = if spec.role == "c" { 1e-3 } else { 0.1 };
-                assert!(
-                    diff < tol,
-                    "{} round {round}: output {:?} diverged by {diff}",
-                    art.name,
-                    spec.role
-                );
+                let got = blocked.execute(art, inputs.clone()).unwrap();
+                let want = reference.execute(art, inputs).unwrap();
+                assert_eq!(got.len(), want.len(), "{}", art.name);
+                for ((g, w), spec) in got.iter().zip(&want).zip(&art.outputs) {
+                    if spec.role == "errcount" {
+                        assert_eq!(
+                            g.data, w.data,
+                            "{} [{}] round {round}: errcount grids diverged",
+                            art.name,
+                            isa.name()
+                        );
+                        continue;
+                    }
+                    let diff = g
+                        .data
+                        .iter()
+                        .zip(&w.data)
+                        .map(|(x, y)| (x - y).abs())
+                        .fold(0.0f32, f32::max);
+                    // C is tight: same fold order, the only slack is the
+                    // FMA kernels' fused rounding, growing with k.
+                    // Carried checksums are k-length sums of C elements,
+                    // so they get k-amplified headroom.
+                    let tol =
+                        if spec.role == "c" { 1e-3 + 4e-6 * art.k as f32 } else { 0.1 };
+                    assert!(
+                        diff < tol,
+                        "{} [{}] round {round}: output {:?} diverged by {diff}",
+                        art.name,
+                        isa.name(),
+                        spec.role
+                    );
+                }
+                checked += 1;
             }
-            checked += 1;
         }
+        assert!(
+            checked >= 20,
+            "expected to cover the artifact registry on {}, got {checked}",
+            isa.name()
+        );
     }
-    assert!(checked >= 20, "expected to cover the artifact registry, got {checked}");
 }
 
 /// The serving-level parity witness: coordinators over a blocked-backend
