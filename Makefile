@@ -10,7 +10,7 @@
 
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: artifacts build test bench lint clean
+.PHONY: artifacts build test bench lint clean serve loadgen
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS_DIR)
@@ -32,3 +32,12 @@ lint:
 
 clean:
 	rm -rf target figures_out
+
+# TCP gateway on the sample config's [serve] address (127.0.0.1:7421).
+serve:
+	cargo run --release -- serve --config ftgemm.toml
+
+# Closed-loop load harness against a running `make serve` gateway.
+loadgen:
+	cargo run --release --bin loadgen -- --addr 127.0.0.1:7421 \
+	    --clients 8 --requests 200 --sweep-clients 1,2,4,8

@@ -133,6 +133,8 @@ fn main() {
 /// tracked per kernel ISA.
 fn bench_worker_pipeline() {
     const SHAPE: (usize, usize, usize) = (1024, 1024, 1024); // 2x2x2 huge blocks
+    // worker axis for the analytic (gpusim) scaling curves
+    const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
     // blocked-scalar only pins the workers=1 gate/overhead points; the
     // worker axis is covered by the dispatched backends.
     const SWEEP: [(&str, &[usize]); 3] =
@@ -220,7 +222,7 @@ fn bench_worker_pipeline() {
     }
 
     let mut root = Json::obj();
-    root.set("schema", Json::Str("ftgemm-bench-pipeline/3".into()));
+    root.set("schema", Json::Str("ftgemm-bench-pipeline/4".into()));
     root.set(
         "shape",
         Json::Arr(vec![
@@ -267,6 +269,10 @@ fn bench_worker_pipeline() {
     model.set("ideal_wave_scaling", ideal);
     model.set("gpusim_t4", modeled);
     root.set("model", model);
+    // The network-serving series is measured by a separate closed-loop
+    // harness (`loadgen --bench-out`), which replaces this placeholder
+    // with throughput/latency entries; CI runs it right after this bench.
+    root.set("serving", Json::Null);
     root.set(
         "note",
         Json::Str(
@@ -274,7 +280,9 @@ fn bench_worker_pipeline() {
              count and backend; `gate` is the workers=1 comparison the CI bench-check binary \
              enforces (blocked vs reference, and blocked vs its pinned-scalar kernel); \
              `ft_overhead` = clean (policy=none) vs fused-FT (policy=online) wall time per \
-             blocked variant at that point; regenerate with `cargo bench --bench hotpath`"
+             blocked variant at that point; `serving` = gateway throughput/latency measured \
+             over TCP by `loadgen --bench-out` (null until it runs); regenerate with \
+             `cargo bench --bench hotpath` then the loadgen smoke"
                 .into(),
         ),
     );

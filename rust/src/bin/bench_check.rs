@@ -6,16 +6,22 @@
 //! CI runs this right after `cargo bench --bench hotpath`, replacing the
 //! old silent upload-whatever-was-written flow with an enforced gate:
 //!
-//! * the file must parse and match schema `ftgemm-bench-pipeline/3` —
+//! * the file must parse and match schema `ftgemm-bench-pipeline/4` —
 //!   1024^3 shape, a non-empty `live` series with positive wall times,
-//!   all three backends measured at the workers=1 gate point, and a
-//!   per-kernel-ISA `ft_overhead` (clean vs fused-FT) series;
+//!   all three backends measured at the workers=1 gate point, a
+//!   per-kernel-ISA `ft_overhead` (clean vs fused-FT) series, and a
+//!   `serving` series (gateway throughput/latency, written by the
+//!   `loadgen` harness; `null` until it runs, which is only accepted
+//!   without `--require-serving`);
 //! * the blocked backend must be at least `--min-speedup` (default 2.0)
 //!   times faster than the reference backend at that point, FT enabled;
 //! * the dispatched blocked kernel must be at least `--min-simd-speedup`
 //!   (default 1.0) times faster than the pinned-scalar blocked variant
 //!   (skipped, with a note, when dispatch resolved to the scalar kernel
-//!   — there is no SIMD to compare on such a host).
+//!   — there is no SIMD to compare on such a host);
+//! * every `serving[]` entry must have consistent counters, ordered
+//!   finite latency percentiles, positive throughput, and **zero
+//!   protocol errors**.
 //!
 //! Failures are classified, not lumped: a **committed placeholder**
 //! (null `live`/`gate`, benches never ran) and a **stale schema** are
@@ -28,7 +34,7 @@ use std::process::ExitCode;
 use ftgemm::util::cli::Command;
 use ftgemm::util::json::Json;
 
-const SCHEMA: &str = "ftgemm-bench-pipeline/3";
+const SCHEMA: &str = "ftgemm-bench-pipeline/4";
 
 /// What a passing file measured, for the success printout.
 struct Report {
@@ -38,6 +44,9 @@ struct Report {
     kernel_isa: String,
     /// (backend, kernel_isa, fractional overhead) per ft_overhead entry.
     overheads: Vec<(String, String, f64)>,
+    /// (mode, clients, ok, p99_ms, rps) per serving entry; `None` when
+    /// the series is the null placeholder (loadgen has not run).
+    serving: Option<Vec<(String, usize, u64, f64, f64)>>,
 }
 
 fn main() -> ExitCode {
@@ -48,7 +57,8 @@ fn main() -> ExitCode {
             "min-simd-speedup",
             "required blocked-vs-blocked-scalar speedup at 1024^3",
             Some("1.0"),
-        );
+        )
+        .flag("require-serving", "fail if the serving series is still the null placeholder");
     let args = match cmd.parse(&argv) {
         Ok(args) => args,
         Err(e) => {
@@ -59,7 +69,8 @@ fn main() -> ExitCode {
     let path = args.positional.first().map(String::as_str).unwrap_or("BENCH_pipeline.json");
     let min_speedup = args.f64_or("min-speedup", 2.0);
     let min_simd = args.f64_or("min-simd-speedup", 1.0);
-    match check(path, min_speedup, min_simd) {
+    let require_serving = args.flag("require-serving");
+    match check(path, min_speedup, min_simd, require_serving) {
         Ok(report) => {
             println!(
                 "bench-check OK: {path} valid, blocked[{}] {:.2}x reference (gate \
@@ -78,6 +89,19 @@ fn main() -> ExitCode {
             for (backend, isa, overhead) in &report.overheads {
                 println!("  ft overhead: {backend}[{isa}] fused-FT +{:.1}%", overhead * 100.0);
             }
+            match &report.serving {
+                None => println!(
+                    "  serving: null placeholder — gateway loadgen has not run against this file"
+                ),
+                Some(entries) => {
+                    for (mode, clients, ok, p99, rps) in entries {
+                        println!(
+                            "  serving: {mode} loop x{clients} clients — {ok} ok, \
+                             p99 {p99:.2}ms, {rps:.1} req/s, 0 protocol errors"
+                        );
+                    }
+                }
+            }
             ExitCode::SUCCESS
         }
         Err(e) => {
@@ -88,7 +112,12 @@ fn main() -> ExitCode {
 }
 
 /// Validate the file; returns the measured gate numbers for printing.
-fn check(path: &str, min_speedup: f64, min_simd: f64) -> anyhow::Result<Report> {
+fn check(
+    path: &str,
+    min_speedup: f64,
+    min_simd: f64,
+    require_serving: bool,
+) -> anyhow::Result<Report> {
     use anyhow::{anyhow, bail, Context};
 
     let text = std::fs::read_to_string(path)
@@ -184,6 +213,7 @@ fn check(path: &str, min_speedup: f64, min_simd: f64) -> anyhow::Result<Report> 
         gate_blocked.ok_or_else(|| anyhow!("no blocked-backend workers=1 measurement"))?;
 
     let overheads = check_ft_overhead(&root)?;
+    let serving = check_serving(&root, require_serving)?;
 
     let blocked_speedup = reference / blocked;
     if blocked_speedup < min_speedup {
@@ -208,7 +238,81 @@ fn check(path: &str, min_speedup: f64, min_simd: f64) -> anyhow::Result<Report> 
         }
         Some(s)
     };
-    Ok(Report { blocked_speedup, simd_speedup, kernel_isa, overheads })
+    Ok(Report { blocked_speedup, simd_speedup, kernel_isa, overheads, serving })
+}
+
+/// Validate the `serving` series (schema /4): the gateway loadgen's
+/// closed-loop runs. `null` means loadgen has not run — accepted (the
+/// plain bench can't measure it) unless `--require-serving`.
+fn check_serving(
+    root: &Json,
+    require_serving: bool,
+) -> anyhow::Result<Option<Vec<(String, usize, u64, f64, f64)>>> {
+    use anyhow::{anyhow, bail};
+
+    let series = match root.path("serving") {
+        None => bail!("missing serving field (schema /4 requires it; null = not yet measured)"),
+        Some(Json::Null) => {
+            if require_serving {
+                bail!(
+                    "serving is the null placeholder but --require-serving is set — run \
+                     `loadgen --bench-out` against a live gateway first"
+                );
+            }
+            return Ok(None);
+        }
+        Some(v) => v.as_arr().ok_or_else(|| anyhow!("serving is neither null nor an array"))?,
+    };
+    if series.is_empty() {
+        bail!("serving[] series is empty — loadgen wrote no completed runs");
+    }
+    let mut out = Vec::new();
+    for (i, entry) in series.iter().enumerate() {
+        let mode = entry
+            .path("mode")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("serving[{i}]: missing mode"))?;
+        if mode != "closed" && mode != "open" {
+            bail!("serving[{i}]: mode must be closed|open, got {mode:?}");
+        }
+        let num = |key: &str| {
+            entry
+                .path(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("serving[{i}]: missing {key}"))
+        };
+        let clients = num("clients")? as usize;
+        let requests = num("requests")? as u64;
+        let ok = num("ok")? as u64;
+        let protocol_errors = num("protocol_errors")? as u64;
+        let (p50, p95, p99) = (num("p50_ms")?, num("p95_ms")?, num("p99_ms")?);
+        let rps = num("rps")?;
+        if clients == 0 {
+            bail!("serving[{i}]: clients must be >= 1");
+        }
+        if requests == 0 || ok == 0 {
+            bail!("serving[{i}]: no completed requests (requests {requests}, ok {ok})");
+        }
+        if ok > requests {
+            bail!("serving[{i}]: ok {ok} exceeds requests {requests}");
+        }
+        if protocol_errors != 0 {
+            bail!("serving[{i}]: {protocol_errors} protocol errors (the gate demands 0)");
+        }
+        for (name, v) in [("p50_ms", p50), ("p95_ms", p95), ("p99_ms", p99)] {
+            if !(v.is_finite() && v > 0.0) {
+                bail!("serving[{i}]: {name} {v} is not a positive finite latency");
+            }
+        }
+        if p50 > p95 || p95 > p99 {
+            bail!("serving[{i}]: percentiles out of order (p50 {p50}, p95 {p95}, p99 {p99})");
+        }
+        if !(rps.is_finite() && rps > 0.0) {
+            bail!("serving[{i}]: rps {rps} is not a positive finite throughput");
+        }
+        out.push((mode.to_string(), clients, ok, p99, rps));
+    }
+    Ok(Some(out))
 }
 
 /// Validate the clean-vs-FT `ft_overhead` series: both blocked variants

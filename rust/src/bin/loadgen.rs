@@ -1,0 +1,704 @@
+//! `loadgen` — closed-loop (and open-loop) load harness for the TCP
+//! serving gateway.
+//!
+//!     cargo run --release --bin loadgen -- --addr 127.0.0.1:7421 \
+//!         --clients 8 --requests 200 [--mode closed|open] [--rate R] \
+//!         [--mix small,medium] [--policies online,none] \
+//!         [--priorities normal,high] [--deadline-ms D] [--inject N] \
+//!         [--sweep-clients 1,2,4,8] [--duration-cap 60s] \
+//!         [--max-p99-ms P] [--bench-out BENCH_pipeline.json]
+//!
+//! Each client opens one connection and drives the newline-delimited JSON
+//! protocol of `ftgemm::serve`:
+//!
+//! * **closed** loop (default): send one GEMM, wait for its response,
+//!   repeat — concurrency equals `--clients`, latency is send-to-response.
+//! * **open** loop: each client issues at a fixed schedule (`--rate`
+//!   requests/s total across clients) without waiting, a reader thread
+//!   settles responses; latency is *scheduled*-send-to-response, so queue
+//!   buildup shows up as latency, not as reduced throughput.
+//!
+//! The workload cycles deterministically through shape classes
+//! (`small`=64, `medium`=128, `large`=256, `huge`=512, cube GEMMs) ×
+//! `--policies` × `--priorities`; `--inject N` plants N correctable SEUs
+//! per request server-side. Per run it reports ok/expired/rejected/
+//! canceled/failed/protocol-error counts, p50/p95/p99 latency, and
+//! throughput; `--sweep-clients` repeats the run per client count to
+//! trace the throughput-vs-inflight curve.
+//!
+//! `--bench-out FILE` merges a `serving` series into an existing
+//! schema-/4 `BENCH_pipeline.json` (written by `cargo bench --bench
+//! hotpath`), which CI's `bench-check --require-serving` then validates.
+//!
+//! Exit is nonzero when any run saw a protocol error, produced zero OK
+//! responses, or missed `--max-p99-ms`.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::ExitCode;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+use ftgemm::coordinator::{FtPolicy, Priority};
+use ftgemm::serve::proto::GemmSpec;
+use ftgemm::util::cli::Command;
+use ftgemm::util::json::Json;
+use ftgemm::util::stats::Quantiles;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Closed,
+    Open,
+}
+
+impl Mode {
+    fn as_str(self) -> &'static str {
+        match self {
+            Mode::Closed => "closed",
+            Mode::Open => "open",
+        }
+    }
+}
+
+/// The parsed workload: everything a run needs except the client count.
+struct Workload {
+    addr: String,
+    mode: Mode,
+    requests: usize,
+    /// Open-loop total request rate across all clients (requests/s).
+    rate: f64,
+    /// Cube GEMM sizes, one per shape class in the `--mix`.
+    shapes: Vec<usize>,
+    policies: Vec<FtPolicy>,
+    priorities: Vec<Priority>,
+    deadline_ms: u64,
+    inject: usize,
+    seed: u64,
+    duration_cap: Duration,
+}
+
+impl Workload {
+    /// The deterministic request stream: global sequence number -> spec.
+    fn spec_for(&self, id: u64, seq: u64) -> GemmSpec {
+        let s = seq as usize;
+        let size = self.shapes[s % self.shapes.len()];
+        let mut spec = GemmSpec::new(size, size, size);
+        spec.id = id;
+        spec.policy = self.policies[(s / self.shapes.len()) % self.policies.len()];
+        let cycle = self.shapes.len() * self.policies.len();
+        spec.priority = self.priorities[(s / cycle) % self.priorities.len()];
+        spec.seed = self.seed.wrapping_add(seq);
+        spec.inject = self.inject;
+        if self.deadline_ms > 0 {
+            spec.deadline_ms = Some(self.deadline_ms);
+        }
+        spec
+    }
+}
+
+/// Per-run outcome counters + retained latency sample.
+#[derive(Default)]
+struct Tally {
+    ok: u64,
+    expired: u64,
+    rejected: u64,
+    canceled: u64,
+    failed: u64,
+    protocol_errors: u64,
+    sent: u64,
+    lat_ms: Vec<f64>,
+}
+
+impl Tally {
+    fn absorb(&mut self, other: Tally) {
+        self.ok += other.ok;
+        self.expired += other.expired;
+        self.rejected += other.rejected;
+        self.canceled += other.canceled;
+        self.failed += other.failed;
+        self.protocol_errors += other.protocol_errors;
+        self.sent += other.sent;
+        self.lat_ms.extend(other.lat_ms);
+    }
+
+    /// Sort one response line into the error taxonomy (DESIGN.md
+    /// "Serving gateway"); `lat_ms` is recorded only for OK responses.
+    fn classify(&mut self, line: &str, lat_ms: Option<f64>) {
+        let Ok(v) = Json::parse(line.trim()) else {
+            self.protocol_errors += 1;
+            return;
+        };
+        if v.get("ok").and_then(Json::as_bool) == Some(true) {
+            self.ok += 1;
+            if let Some(ms) = lat_ms {
+                self.lat_ms.push(ms);
+            }
+            return;
+        }
+        match v.get("error").and_then(Json::as_str) {
+            Some("deadline-expired") => self.expired += 1,
+            Some("admission-reject") => self.rejected += 1,
+            Some("canceled") => self.canceled += 1,
+            Some("parse") | Some("validation") => self.protocol_errors += 1,
+            _ => self.failed += 1,
+        }
+    }
+}
+
+/// One completed run (one point on the throughput-vs-inflight curve).
+struct RunResult {
+    mode: Mode,
+    clients: usize,
+    tally: Tally,
+    wall_s: f64,
+}
+
+impl RunResult {
+    fn percentiles(&self) -> Option<(f64, f64, f64, f64)> {
+        if self.tally.lat_ms.is_empty() {
+            return None;
+        }
+        let mut q = Quantiles::default();
+        let mut sum = 0.0;
+        for &ms in &self.tally.lat_ms {
+            q.push(ms);
+            sum += ms;
+        }
+        let mean = sum / q.len() as f64;
+        Some((q.quantile(0.50), q.quantile(0.95), q.quantile(0.99), mean))
+    }
+
+    fn rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tally.ok as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// One `serving[]` entry of the BENCH_pipeline.json /4 schema.
+    fn to_json(&self) -> Option<Json> {
+        let (p50, p95, p99, mean) = self.percentiles()?;
+        let t = &self.tally;
+        let mut e = Json::obj();
+        e.set("mode", Json::from(self.mode.as_str()));
+        e.set("clients", Json::Num(self.clients as f64));
+        e.set("inflight", Json::Num(self.clients as f64));
+        e.set("requests", Json::Num(t.sent as f64));
+        e.set("ok", Json::Num(t.ok as f64));
+        e.set("expired", Json::Num(t.expired as f64));
+        e.set("rejected", Json::Num(t.rejected as f64));
+        e.set("canceled", Json::Num(t.canceled as f64));
+        e.set("failed", Json::Num(t.failed as f64));
+        e.set("protocol_errors", Json::Num(t.protocol_errors as f64));
+        e.set("p50_ms", Json::Num(p50));
+        e.set("p95_ms", Json::Num(p95));
+        e.set("p99_ms", Json::Num(p99));
+        e.set("mean_ms", Json::Num(mean));
+        e.set("rps", Json::Num(self.rps()));
+        Some(e)
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("loadgen", "closed-loop load harness for the TCP serving gateway")
+        .opt("addr", "gateway address", Some("127.0.0.1:7421"))
+        .opt("clients", "concurrent client connections", Some("8"))
+        .opt("requests", "total requests per run (split across clients)", Some("200"))
+        .opt("mode", "closed (send-wait-repeat) or open (fixed schedule)", Some("closed"))
+        .opt("rate", "open-loop total requests/s across clients", Some("50"))
+        .opt("mix", "shape classes to cycle (small|medium|large|huge)", Some("small,medium"))
+        .opt("policies", "FT policies to cycle (none|online|offline)", Some("online"))
+        .opt("priorities", "priorities to cycle (low|normal|high)", Some("normal"))
+        .opt("deadline-ms", "per-request queue deadline (0 = none)", Some("0"))
+        .opt("inject", "SEUs injected per request server-side", Some("0"))
+        .opt("seed", "base operand seed (seq is added per request)", Some("42"))
+        .opt("duration-cap", "stop issuing after this long, e.g. 60s", Some("60s"))
+        .opt("sweep-clients", "comma list: one run per client count", None)
+        .opt("bench-out", "merge a `serving` series into this schema-/4 file", None)
+        .opt("max-p99-ms", "fail the run if p99 exceeds this (0 = off)", Some("0"));
+    let args = match cmd.parse(&argv) {
+        Ok(args) => args,
+        Err(e) => {
+            eprintln!("loadgen: {e}\n\n{}", cmd.help());
+            return ExitCode::FAILURE;
+        }
+    };
+    match run(&args) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("loadgen FAILED: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &ftgemm::util::cli::Args) -> Result<bool> {
+    let workload = parse_workload(args)?;
+    let sweep = match args.get("sweep-clients") {
+        Some(list) => parse_list(list, "sweep-clients", |s| {
+            s.parse::<usize>().map_err(|_| anyhow!("bad client count {s:?}"))
+        })?,
+        None => vec![args.usize_or("clients", 8)],
+    };
+    let max_p99_ms = args.f64_or("max-p99-ms", 0.0);
+
+    let mut entries = Json::Arr(Vec::new());
+    let mut all_ok = true;
+    for &clients in &sweep {
+        if clients == 0 {
+            bail!("--sweep-clients/--clients entries must be >= 1");
+        }
+        let result = run_once(&workload, clients)?;
+        all_ok &= report(&result, max_p99_ms);
+        if let Some(entry) = result.to_json() {
+            entries.push(entry);
+        }
+    }
+
+    if let Some(path) = args.get("bench-out") {
+        merge_serving(path, entries)?;
+        println!("merged serving series into {path}");
+    }
+    Ok(all_ok)
+}
+
+/// Print the run summary and apply the pass/fail gates.
+fn report(r: &RunResult, max_p99_ms: f64) -> bool {
+    let t = &r.tally;
+    println!(
+        "{} loop, {} clients: {} sent in {:.2}s — ok {} expired {} rejected {} canceled {} \
+         failed {} protocol-errors {}",
+        r.mode.as_str(),
+        r.clients,
+        t.sent,
+        r.wall_s,
+        t.ok,
+        t.expired,
+        t.rejected,
+        t.canceled,
+        t.failed,
+        t.protocol_errors,
+    );
+    let mut ok = true;
+    match r.percentiles() {
+        Some((p50, p95, p99, mean)) => {
+            println!(
+                "  latency ms: p50 {p50:.2} p95 {p95:.2} p99 {p99:.2} mean {mean:.2}; \
+                 throughput {:.1} ok/s",
+                r.rps()
+            );
+            if max_p99_ms > 0.0 && p99 > max_p99_ms {
+                eprintln!("  GATE FAILED: p99 {p99:.2}ms > --max-p99-ms {max_p99_ms:.2}ms");
+                ok = false;
+            }
+        }
+        None => {
+            eprintln!("  GATE FAILED: no OK responses — nothing to measure");
+            ok = false;
+        }
+    }
+    if t.protocol_errors > 0 {
+        eprintln!("  GATE FAILED: {} protocol errors (want 0)", t.protocol_errors);
+        ok = false;
+    }
+    ok
+}
+
+fn parse_workload(args: &ftgemm::util::cli::Args) -> Result<Workload> {
+    let mode = match args.str_or("mode", "closed") {
+        "closed" => Mode::Closed,
+        "open" => Mode::Open,
+        other => bail!("--mode must be closed|open, got {other:?}"),
+    };
+    let shapes = parse_list(args.str_or("mix", "small,medium"), "mix", |s| match s {
+        "small" => Ok(64),
+        "medium" => Ok(128),
+        "large" => Ok(256),
+        "huge" => Ok(512),
+        other => Err(anyhow!("unknown shape class {other:?} (small|medium|large|huge)")),
+    })?;
+    let policies = parse_list(args.str_or("policies", "online"), "policies", str::parse)?;
+    let priorities = parse_list(args.str_or("priorities", "normal"), "priorities", str::parse)?;
+    let rate = args.f64_or("rate", 50.0);
+    if mode == Mode::Open && !(rate.is_finite() && rate > 0.0) {
+        bail!("--rate must be a positive rate in open mode, got {rate}");
+    }
+    Ok(Workload {
+        addr: args.str_or("addr", "127.0.0.1:7421").to_string(),
+        mode,
+        requests: args.usize_or("requests", 200),
+        rate,
+        shapes,
+        policies,
+        priorities,
+        deadline_ms: args.usize_or("deadline-ms", 0) as u64,
+        inject: args.usize_or("inject", 0),
+        seed: args.usize_or("seed", 42) as u64,
+        duration_cap: parse_duration(args.str_or("duration-cap", "60s"))?,
+    })
+}
+
+fn parse_list<T>(csv: &str, opt: &str, parse: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
+    let out = csv
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(parse)
+        .collect::<Result<Vec<T>>>()
+        .with_context(|| format!("--{opt} {csv:?}"))?;
+    if out.is_empty() {
+        bail!("--{opt} must name at least one entry, got {csv:?}");
+    }
+    Ok(out)
+}
+
+/// `"60s"`, `"500ms"`, or a bare number of seconds.
+fn parse_duration(s: &str) -> Result<Duration> {
+    let (digits, scale_ms) = match s.strip_suffix("ms") {
+        Some(d) => (d, 1u64),
+        None => (s.strip_suffix('s').unwrap_or(s), 1000u64),
+    };
+    let n: u64 = digits.parse().map_err(|_| anyhow!("bad duration {s:?} (e.g. 60s, 500ms)"))?;
+    Ok(Duration::from_millis(n * scale_ms))
+}
+
+/// Execute one run at `clients` connections and aggregate the tallies.
+fn run_once(w: &Workload, clients: usize) -> Result<RunResult> {
+    let shared = Arc::new(Mutex::new(Tally::default()));
+    let start = Instant::now();
+    let cap = start + w.duration_cap;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            // split `requests` across clients; early clients take the
+            // remainder so every request is issued exactly once
+            let n = w.requests / clients + usize::from(c < w.requests % clients);
+            let shared = Arc::clone(&shared);
+            let client = ClientCfg {
+                addr: w.addr.clone(),
+                index: c,
+                stride: clients,
+                count: n,
+                cap,
+            };
+            std::thread::Builder::new()
+                .name(format!("loadgen-{c}"))
+                .spawn({
+                    let w = clone_workload(w);
+                    move || {
+                        let tally = match w.mode {
+                            Mode::Closed => client_closed(&w, &client),
+                            Mode::Open => client_open(&w, &client),
+                        };
+                        match tally {
+                            Ok(t) => shared.lock().unwrap().absorb(t),
+                            Err(e) => {
+                                eprintln!("loadgen client {c}: {e:#}");
+                                shared.lock().unwrap().protocol_errors += 1;
+                            }
+                        }
+                    }
+                })
+                .context("spawn client thread")
+        })
+        .collect::<Result<Vec<_>>>()?;
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let tally = Arc::try_unwrap(shared)
+        .map_err(|_| anyhow!("client thread leaked its tally handle"))?
+        .into_inner()
+        .unwrap();
+    Ok(RunResult { mode: w.mode, clients, tally, wall_s })
+}
+
+// Workload is only read by the clients; a manual clone keeps the struct
+// free of a Clone bound on every future field.
+fn clone_workload(w: &Workload) -> Workload {
+    Workload {
+        addr: w.addr.clone(),
+        shapes: w.shapes.clone(),
+        policies: w.policies.clone(),
+        priorities: w.priorities.clone(),
+        ..*w
+    }
+}
+
+struct ClientCfg {
+    addr: String,
+    /// This client's index — interleaves the global request sequence.
+    index: usize,
+    /// Total client count (the sequence stride).
+    stride: usize,
+    /// Requests this client issues.
+    count: usize,
+    /// Hard wall-clock stop for issuing and for reads.
+    cap: Instant,
+}
+
+/// Connect with retry: CI starts the server concurrently, so the first
+/// connects may race the bind.
+fn connect(addr: &str, cap: Instant) -> Result<TcpStream> {
+    let window = Duration::from_secs(10);
+    let start = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                let _ = stream.set_nodelay(true);
+                return Ok(stream);
+            }
+            Err(e) => {
+                if start.elapsed() >= window || Instant::now() >= cap {
+                    return Err(e).with_context(|| format!("connect {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")
+}
+
+/// Closed loop: send one request, block on its response, repeat.
+fn client_closed(w: &Workload, c: &ClientCfg) -> Result<Tally> {
+    let mut stream = connect(&c.addr, c.cap)?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut tally = Tally::default();
+    let mut line = String::new();
+    for i in 0..c.count {
+        if Instant::now() >= c.cap {
+            break;
+        }
+        let seq = (i * c.stride + c.index) as u64;
+        let spec = w.spec_for(seq, seq);
+        let sent_at = Instant::now();
+        if send_line(&mut stream, &spec.to_wire_json()).is_err() {
+            tally.protocol_errors += 1;
+            break;
+        }
+        tally.sent += 1;
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => {
+                // server hung up (or read timed out) mid-conversation
+                tally.protocol_errors += 1;
+                break;
+            }
+            Ok(_) => {
+                let ms = sent_at.elapsed().as_secs_f64() * 1e3;
+                tally.classify(&line, Some(ms));
+            }
+        }
+    }
+    let _ = send_line(&mut stream, r#"{"op": "quit"}"#);
+    line.clear();
+    let _ = reader.read_line(&mut line); // best-effort goodbye
+    Ok(tally)
+}
+
+/// Open loop: issue on a fixed schedule without waiting; a reader thread
+/// settles responses. Latency counts from the *scheduled* send instant,
+/// so queue buildup shows up as latency (the closed loop would instead
+/// slow its own arrival rate).
+fn client_open(w: &Workload, c: &ClientCfg) -> Result<Tally> {
+    let mut stream = connect(&c.addr, c.cap)?;
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let read_half = stream.try_clone().context("clone stream")?;
+
+    let pending: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+    let reader = {
+        let pending = Arc::clone(&pending);
+        let cap = c.cap;
+        std::thread::Builder::new()
+            .name("loadgen-read".to_string())
+            .spawn(move || open_reader(read_half, &pending, cap))
+            .context("spawn reader")?
+    };
+
+    // per-client interval so the aggregate arrival rate is `--rate`;
+    // stagger the start so clients do not send in lockstep
+    let interval = Duration::from_secs_f64(c.stride as f64 / w.rate);
+    let start = Instant::now() + interval.mul_f64(c.index as f64 / c.stride as f64);
+    let mut sent = 0u64;
+    for i in 0..c.count {
+        let due = start + interval.mul_f64(i as f64);
+        if due >= c.cap {
+            break;
+        }
+        if let Some(wait) = due.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        let seq = (i * c.stride + c.index) as u64;
+        let spec = w.spec_for(seq, seq);
+        pending.lock().unwrap().insert(seq, due);
+        if send_line(&mut stream, &spec.to_wire_json()).is_err() {
+            pending.lock().unwrap().remove(&seq);
+            break;
+        }
+        sent += 1;
+    }
+    let _ = send_line(&mut stream, r#"{"op": "quit"}"#);
+    let mut tally = reader.join().unwrap_or_default();
+    tally.sent += sent;
+    // whatever never came back before the cap is a protocol error: the
+    // server claims it answers every frame
+    tally.protocol_errors += pending.lock().unwrap().len() as u64;
+    Ok(tally)
+}
+
+/// Reader half of the open loop: settle responses against the pending
+/// map until the quit acknowledgement, EOF, or the wall-clock cap.
+fn open_reader(stream: TcpStream, pending: &Mutex<HashMap<u64, Instant>>, cap: Instant) -> Tally {
+    let mut tally = Tally::default();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if Instant::now() >= cap {
+            return tally;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return tally,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // read timed out mid-line: `line` keeps the partial data,
+                // the next read_line appends the rest — framing holds
+                continue;
+            }
+            Err(_) => return tally,
+            Ok(_) => {}
+        }
+        let parsed = Json::parse(line.trim()).ok();
+        if parsed.as_ref().and_then(|v| v.get("op")).and_then(Json::as_str) == Some("quit") {
+            return tally;
+        }
+        let ms = parsed
+            .as_ref()
+            .and_then(|v| v.get("id"))
+            .and_then(Json::as_usize)
+            .and_then(|id| pending.lock().unwrap().remove(&(id as u64)))
+            .map(|due| due.elapsed().as_secs_f64() * 1e3);
+        tally.classify(&line, ms);
+        line.clear();
+    }
+}
+
+/// Merge the `serving` series into an existing schema-/4 pipeline bench
+/// file (refusing to touch anything older — regenerate the benches first).
+fn merge_serving(path: &str, entries: Json) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path} (run `cargo bench --bench hotpath` first)"))?;
+    let mut root = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    let schema = root.path("schema").and_then(Json::as_str).unwrap_or("");
+    if schema != "ftgemm-bench-pipeline/4" {
+        bail!(
+            "{path} has schema {schema:?}; loadgen only merges into \
+             ftgemm-bench-pipeline/4 — regenerate with `cargo bench --bench hotpath`"
+        );
+    }
+    root.set("serving", entries);
+    std::fs::write(path, root.to_string_pretty()).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations_parse() {
+        assert_eq!(parse_duration("60s").unwrap(), Duration::from_secs(60));
+        assert_eq!(parse_duration("500ms").unwrap(), Duration::from_millis(500));
+        assert_eq!(parse_duration("7").unwrap(), Duration::from_secs(7));
+        assert!(parse_duration("abc").is_err());
+        assert!(parse_duration("10m").is_err());
+    }
+
+    #[test]
+    fn workload_cycles_the_mix() {
+        let w = Workload {
+            addr: String::new(),
+            mode: Mode::Closed,
+            requests: 0,
+            rate: 1.0,
+            shapes: vec![64, 128],
+            policies: vec![FtPolicy::Online, FtPolicy::None],
+            priorities: vec![Priority::Normal, Priority::High],
+            deadline_ms: 250,
+            inject: 2,
+            seed: 9,
+            duration_cap: Duration::from_secs(1),
+        };
+        let s0 = w.spec_for(0, 0);
+        assert_eq!((s0.m, s0.policy, s0.priority), (64, FtPolicy::Online, Priority::Normal));
+        let s1 = w.spec_for(1, 1);
+        assert_eq!((s1.m, s1.policy), (128, FtPolicy::Online));
+        let s2 = w.spec_for(2, 2);
+        assert_eq!((s2.m, s2.policy), (64, FtPolicy::None));
+        let s4 = w.spec_for(4, 4);
+        assert_eq!((s4.policy, s4.priority), (FtPolicy::Online, Priority::High));
+        assert_eq!(s4.seed, 9 + 4);
+        assert_eq!(s4.inject, 2);
+        assert_eq!(s4.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn tally_classifies_the_taxonomy() {
+        let mut t = Tally::default();
+        t.classify(r#"{"ok": true, "op": "gemm", "id": 1}"#, Some(3.0));
+        t.classify(r#"{"ok": false, "op": "gemm", "error": "deadline-expired"}"#, None);
+        t.classify(r#"{"ok": false, "op": "gemm", "error": "admission-reject"}"#, None);
+        t.classify(r#"{"ok": false, "op": "gemm", "error": "canceled"}"#, None);
+        t.classify(r#"{"ok": false, "op": "request", "error": "validation"}"#, None);
+        t.classify(r#"{"ok": false, "op": "gemm", "error": "failed"}"#, None);
+        t.classify("not json at all", None);
+        assert_eq!(
+            (t.ok, t.expired, t.rejected, t.canceled, t.failed, t.protocol_errors),
+            (1, 1, 1, 1, 1, 2)
+        );
+        assert_eq!(t.lat_ms, vec![3.0]);
+    }
+
+    #[test]
+    fn run_result_serializes_a_serving_entry() {
+        let tally = Tally {
+            ok: 3,
+            sent: 4,
+            expired: 1,
+            lat_ms: vec![1.0, 2.0, 10.0],
+            ..Default::default()
+        };
+        let r = RunResult { mode: Mode::Closed, clients: 2, tally, wall_s: 2.0 };
+        let e = r.to_json().unwrap();
+        assert_eq!(e.get("mode").unwrap().as_str(), Some("closed"));
+        assert_eq!(e.get("clients").unwrap().as_usize(), Some(2));
+        assert_eq!(e.get("ok").unwrap().as_usize(), Some(3));
+        let p50 = e.get("p50_ms").unwrap().as_f64().unwrap();
+        let p99 = e.get("p99_ms").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99);
+        assert!((e.get("rps").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_latency_sample_yields_no_entry() {
+        let r = RunResult {
+            mode: Mode::Open,
+            clients: 1,
+            tally: Tally::default(),
+            wall_s: 1.0,
+        };
+        assert!(r.to_json().is_none());
+    }
+}

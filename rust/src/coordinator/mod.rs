@@ -51,7 +51,8 @@ use anyhow::{bail, Result};
 use crate::abft::checksum::{self, ChecksumPair, Thresholds};
 use crate::abft::injection::InjectionPlan;
 use crate::abft::matrix::Matrix;
-use crate::metrics::recorder::{Counters, LatencyRecorder};
+use crate::metrics::recorder::{CounterSnapshot, Counters, LatencyRecorder, LatencySummary};
+use crate::runtime::backend::BackendInfo;
 use crate::runtime::engine::Engine;
 use crate::runtime::manifest::ArtifactKind;
 
@@ -83,6 +84,19 @@ impl FtPolicy {
             FtPolicy::None => "none",
             FtPolicy::Online => "online",
             FtPolicy::Offline => "offline",
+        }
+    }
+}
+
+impl std::str::FromStr for FtPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<FtPolicy> {
+        match s {
+            "none" => Ok(FtPolicy::None),
+            "online" => Ok(FtPolicy::Online),
+            "offline" => Ok(FtPolicy::Offline),
+            other => Err(anyhow::anyhow!("unknown policy {other:?} (none|online|offline)")),
         }
     }
 }
@@ -164,6 +178,71 @@ pub struct GemmResult {
     /// Which buckets served the request (one entry per block; empty for
     /// Ding-baseline requests).
     pub buckets: Vec<&'static str>,
+}
+
+/// One coherent snapshot of the coordinator's observable state: queue,
+/// admission bounds, engine pool, counters, and latency — everything the
+/// `metrics` wire verb and `ftgemm info` report, gathered in one place
+/// instead of callers poking individual getters.
+#[derive(Debug, Clone)]
+pub struct CoordinatorStats {
+    /// Live requests queued awaiting dispatch.
+    pub queue_depth: usize,
+    /// Admission-control bound (dispatcher-thread count).
+    pub max_inflight: usize,
+    /// Plan nodes currently executing on the engine worker pool.
+    pub engine_inflight: usize,
+    /// Engine worker-pool size.
+    pub workers: usize,
+    /// The execution backend serving this coordinator.
+    pub backend: BackendInfo,
+    pub counters: CounterSnapshot,
+    /// Execution-latency summary (seconds; excludes queue wait).
+    pub latency: LatencySummary,
+}
+
+impl CoordinatorStats {
+    /// Serialize for the gateway's `metrics` verb (stable keys; one
+    /// nesting level per component).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("queue_depth", Json::from(self.queue_depth));
+        o.set("max_inflight", Json::from(self.max_inflight));
+        o.set("engine_inflight", Json::from(self.engine_inflight));
+        o.set("workers", Json::from(self.workers));
+        let mut b = Json::obj();
+        b.set("name", Json::from(self.backend.name));
+        b.set("kernel_isa", Json::from(self.backend.kernel_isa));
+        b.set("fused_ft", Json::from(self.backend.fused_ft));
+        o.set("backend", b);
+        let c = &self.counters;
+        let mut co = Json::obj();
+        for (key, v) in [
+            ("requests", c.requests),
+            ("executions", c.executions),
+            ("errors_detected", c.errors_detected),
+            ("errors_corrected", c.errors_corrected),
+            ("recomputes", c.recomputes),
+            ("padded_requests", c.padded_requests),
+            ("batched_groups", c.batched_groups),
+            ("canceled", c.canceled),
+            ("expired", c.expired),
+        ] {
+            co.set(key, Json::Num(v as f64));
+        }
+        o.set("counters", co);
+        let l = &self.latency;
+        let mut lo = Json::obj();
+        lo.set("count", Json::Num(l.count as f64));
+        lo.set("mean_s", Json::Num(l.mean));
+        lo.set("min_s", Json::Num(l.min));
+        lo.set("max_s", Json::Num(l.max));
+        lo.set("p50_s", Json::Num(l.p50));
+        lo.set("p99_s", Json::Num(l.p99));
+        o.set("latency", lo);
+        o
+    }
 }
 
 /// Shared execution state: everything a dispatcher needs to run one
@@ -291,6 +370,20 @@ impl Coordinator {
     /// Requests queued but not yet dispatched.
     pub fn queue_depth(&self) -> usize {
         self.submission.queue_depth()
+    }
+
+    /// One coherent snapshot of queue/engine/counter/latency state — the
+    /// single source for the gateway's `metrics` verb and `ftgemm info`.
+    pub fn stats(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            queue_depth: self.queue_depth(),
+            max_inflight: self.max_inflight(),
+            engine_inflight: self.core.engine.inflight(),
+            workers: self.core.engine.worker_count(),
+            backend: self.core.engine.backend(),
+            counters: self.core.counters.snapshot(),
+            latency: self.core.latency.summary(),
+        }
     }
 
     /// Compile a request into its execution plan without running it

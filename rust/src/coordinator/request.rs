@@ -381,11 +381,19 @@ impl Ticket {
     /// request past its deadline settles as Expired right here — waiting
     /// never outlives the deadline just because every dispatcher is busy.
     pub fn wait(self) -> Result<GemmResponse> {
+        self.wait_outcome().1
+    }
+
+    /// [`Ticket::wait`], but paired with the terminal [`TicketStatus`] —
+    /// for callers (the serving gateway) that must distinguish *why* a
+    /// request failed (expired vs canceled vs failed) without string-
+    /// matching the error.
+    pub fn wait_outcome(self) -> (TicketStatus, Result<GemmResponse>) {
         let mut slot = self.shared.slot.lock().unwrap();
         loop {
             self.shared.expire_due(&mut slot);
             if let Some(outcome) = slot.outcome.take() {
-                return outcome;
+                return (slot.status, outcome);
             }
             let queue_deadline =
                 if slot.status == TicketStatus::Queued { slot.deadline } else { None };
@@ -659,6 +667,22 @@ mod tests {
         c.abort(TicketStatus::Expired, anyhow!("deadline exceeded"));
         assert_eq!(t.poll(), TicketStatus::Expired);
         assert!(t.wait().unwrap_err().to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn wait_outcome_pairs_status_with_result() {
+        let (t, c) = ticket(11);
+        c.abort(TicketStatus::Expired, anyhow!("deadline exceeded"));
+        let (status, outcome) = t.wait_outcome();
+        assert_eq!(status, TicketStatus::Expired);
+        assert!(outcome.unwrap_err().to_string().contains("deadline"));
+
+        let (t, c) = ticket(12);
+        assert!(t.cancel());
+        drop(c);
+        let (status, outcome) = t.wait_outcome();
+        assert_eq!(status, TicketStatus::Canceled);
+        assert!(outcome.is_err());
     }
 
     #[test]

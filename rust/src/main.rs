@@ -68,19 +68,18 @@ fn print_usage() {
            campaign   SEU injection campaign (--rounds --errors --policy --workers W\n\
                       --backend B)\n\
            figures    regenerate paper figures (--fig 9..22|table1 | --all) --out DIR\n\
-           serve      line-protocol GEMM server on stdin (--config FILE --backend B)\n\
+           serve      GEMM serving gateway: TCP with a JSON wire protocol\n\
+                      (--listen addr:port --threads N --max-frame-bytes B), or the\n\
+                      legacy stdin line protocol when no listen address is given\n\
+                      (--config FILE --backend B)\n\
            table1     print Table 1 kernel parameters\n\
            help       this text"
     );
 }
 
+/// The CLI boundary of [`FtPolicy`]: same `FromStr` the wire protocol uses.
 fn parse_policy(s: &str) -> anyhow::Result<FtPolicy> {
-    Ok(match s {
-        "none" => FtPolicy::None,
-        "online" => FtPolicy::Online,
-        "offline" => FtPolicy::Offline,
-        other => anyhow::bail!("unknown policy {other:?} (none|online|offline)"),
-    })
+    s.parse::<FtPolicy>()
 }
 
 /// The CLI boundary of the typed [`FtLevel`]: parse or die with the
@@ -149,6 +148,21 @@ fn cmd_info(rest: &[String]) -> anyhow::Result<()> {
             info.name, info.kernel_isa, info.fused_ft, info.description
         );
     }
+    // one CoordinatorStats snapshot — the same struct the gateway's
+    // `metrics` verb reports
+    let engine = Engine::start(EngineConfig::default())?;
+    let coord = Coordinator::new(engine, CoordinatorConfig::default());
+    let s = coord.stats();
+    println!(
+        "coordinator (default engine): backend={} isa={} workers={} max_inflight={} \
+         queue_depth={} engine_inflight={}",
+        s.backend.name,
+        s.backend.kernel_isa,
+        s.workers,
+        s.max_inflight,
+        s.queue_depth,
+        s.engine_inflight
+    );
     Ok(())
 }
 
@@ -285,24 +299,36 @@ fn cmd_table1() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The launcher: a line-protocol server over stdin/stdout driving the
-/// batcher (itself a grouping stage over `Coordinator::submit`). Protocol
-/// (one request per line):
+/// The launcher for both serving front-ends:
 ///
-///     GEMM <m> <n> <k> <policy> [seed] [inject] [priority]
-///     STATS
-///     QUIT
+/// * **TCP gateway** (`--listen addr:port`, or a `[serve]` config
+///   section): the newline-delimited JSON protocol of `ftgemm::serve`
+///   dispatched straight onto `Coordinator::submit` — see DESIGN.md
+///   "Serving gateway" for the wire grammar and error taxonomy.
+/// * **stdin line protocol** (no listen address): the original
+///   single-process harness driving the batcher. Protocol (one request
+///   per line):
 ///
-/// Responses are single lines: `OK ...` / `ERR <msg>`. Config comes from
-/// `--config <file>` ([engine]/[coordinator]/[batcher] sections — see
-/// `util::config`).
+///       GEMM <m> <n> <k> <policy> [seed] [inject] [priority]
+///       STATS
+///       QUIT
+///
+///   Responses are single lines: `OK ...` / `ERR <msg>`.
+///
+/// Config comes from `--config <file>`
+/// ([engine]/[coordinator]/[batcher]/[serve] sections — see
+/// `util::config`); `--listen/--threads/--max-frame-bytes` override the
+/// `[serve]` keys.
 fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     use ftgemm::coordinator::batcher::Batcher;
     use std::io::BufRead;
 
-    let cmd = Command::new("serve", "line-protocol GEMM server on stdin")
+    let cmd = Command::new("serve", "TCP GEMM serving gateway (or stdin line protocol)")
         .opt("config", "config file (TOML subset)", None)
-        .opt("backend", "override [engine].backend (reference|blocked|blocked-scalar)", None);
+        .opt("backend", "override [engine].backend (reference|blocked|blocked-scalar)", None)
+        .opt("listen", "bind addr:port and serve the TCP wire protocol", None)
+        .opt("threads", "connection-thread pool size (TCP mode)", None)
+        .opt("max-frame-bytes", "per-frame byte bound (TCP mode)", None);
     let args = cmd.parse(rest)?;
     let cfg = match args.get("config") {
         Some(path) => ftgemm::util::config::Config::load(path)?,
@@ -314,6 +340,30 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     }
     let engine = Engine::start(engine_cfg)?;
     let coord = Coordinator::new(engine, cfg.coordinator()?);
+
+    if args.get("listen").is_some() || cfg.has_serve_section() {
+        let mut serve_cfg = cfg.serve()?;
+        if let Some(listen) = args.get("listen") {
+            serve_cfg.listen = listen.to_string();
+        }
+        if let Some(threads) = args.get("threads") {
+            serve_cfg.threads = threads
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--threads: bad integer {threads:?}"))?;
+        }
+        if let Some(bytes) = args.get("max-frame-bytes") {
+            serve_cfg.max_frame_bytes = bytes
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--max-frame-bytes: bad integer {bytes:?}"))?;
+        }
+        let gateway = ftgemm::serve::Gateway::start(coord, serve_cfg)?;
+        // stdout so harnesses can wait for readiness by reading one line
+        println!("ftgemm serve: listening on {}", gateway.local_addr());
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
     let batcher = Batcher::start(coord.clone(), cfg.batcher()?);
 
     eprintln!("ftgemm serve: ready (GEMM m n k policy [seed] [inject] [priority] | STATS | QUIT)");

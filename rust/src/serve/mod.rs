@@ -1,0 +1,584 @@
+//! The network serving gateway: a dependency-free TCP front door for the
+//! coordinator's `submit() -> Ticket` surface.
+//!
+//! Structure:
+//! * [`wire`] — newline framing ([`wire::FrameReader`]) and the iterative,
+//!   depth-bounded, zero-allocation JSON pull parser ([`wire::PullParser`]).
+//! * [`proto`] — the request protocol: one JSON object per line, every
+//!   [`RequestOptions`](crate::coordinator::RequestOptions) field
+//!   expressible on the wire, strict structured errors.
+//! * [`Gateway`] (here) — the server: one non-blocking acceptor thread
+//!   feeding accepted connections to a fixed pool of connection threads
+//!   (`[serve] threads`), each running one connection at a time.
+//!
+//! ## Threading and ordering
+//!
+//! Per connection, a **reader** (the pool thread) decodes frames and
+//! submits GEMMs without waiting for them, and a dedicated **writer**
+//! thread settles tickets and streams responses back — so a client can
+//! pipeline many requests over one connection and the submit queue's
+//! priority/deadline machinery, not the socket, decides execution order.
+//! Responses on one connection are delivered in request order (the writer
+//! settles tickets FIFO); clients that want out-of-order completion open
+//! more connections, and correlate via the echoed `id` either way.
+//!
+//! ## Backpressure contract
+//!
+//! The gateway adds **no** queueing of its own: every decoded GEMM goes
+//! straight to [`Coordinator::submit`], so `max_inflight` (dispatcher
+//! pool) and `max_queue` (admission bound) govern network traffic exactly
+//! like in-process traffic. When admission control rejects, the client
+//! gets a structured `admission-reject` error for that request — the
+//! connection stays healthy. Frame size (`max_frame_bytes`) and JSON
+//! depth ([`wire::DEFAULT_MAX_DEPTH`]) bound per-connection memory; a
+//! frame over the size bound kills the connection (framing is lost), a
+//! depth bomb or garbage frame only kills that request.
+//!
+//! ## Error taxonomy (`"error"` field of a `"ok": false` response)
+//!
+//! | kind               | meaning                                         |
+//! |--------------------|-------------------------------------------------|
+//! | `parse`            | malformed JSON / framing; bad frame discarded   |
+//! | `validation`       | well-formed JSON violating the protocol         |
+//! | `admission-reject` | `max_queue` admission control refused the GEMM  |
+//! | `deadline-expired` | queue deadline passed before dispatch           |
+//! | `canceled`         | request canceled before dispatch                |
+//! | `failed`           | execution failed (or server shutting down)      |
+
+pub mod proto;
+pub mod wire;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, GemmResponse, Ticket, TicketStatus};
+use crate::util::json::Json;
+
+use proto::{ProtoError, WireRequest};
+use wire::{FrameReader, DEFAULT_MAX_DEPTH};
+
+/// `[serve]` configuration: where to listen and how much to accept.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// `addr:port` to bind (port 0 = ephemeral, for tests).
+    pub listen: String,
+    /// Connection-thread pool size — concurrent connections served.
+    pub threads: usize,
+    /// Per-frame (and per-partial-frame) byte bound.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            listen: "127.0.0.1:7421".to_string(),
+            threads: 4,
+            max_frame_bytes: 1 << 20,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Validate at the config/CLI boundary — fail fast with field names,
+    /// not deep inside `bind()`.
+    pub fn validate(&self) -> Result<()> {
+        if self.listen.is_empty() || !self.listen.contains(':') {
+            anyhow::bail!("[serve] listen must be addr:port, got {:?}", self.listen);
+        }
+        if self.threads == 0 {
+            anyhow::bail!("[serve] threads must be >= 1");
+        }
+        if self.max_frame_bytes < 256 {
+            anyhow::bail!(
+                "[serve] max_frame_bytes must be >= 256, got {}",
+                self.max_frame_bytes
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Gateway-level counters (the per-connection ones the `metrics` verb
+/// adds on top of [`CoordinatorStats`](crate::coordinator::CoordinatorStats)).
+#[derive(Debug, Default)]
+struct GatewayCounters {
+    /// Connections accepted over the gateway's lifetime.
+    connections: AtomicU64,
+    /// Connections currently being served.
+    open: AtomicU64,
+    /// Complete frames decoded (all verbs).
+    frames: AtomicU64,
+    /// GEMM requests submitted to the coordinator.
+    gemms: AtomicU64,
+    /// Response lines written back.
+    responses: AtomicU64,
+    /// Parse/validation errors returned to clients.
+    protocol_errors: AtomicU64,
+}
+
+/// Point-in-time copy of the gateway counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GatewaySnapshot {
+    pub connections: u64,
+    pub open: u64,
+    pub frames: u64,
+    pub gemms: u64,
+    pub responses: u64,
+    pub protocol_errors: u64,
+}
+
+impl GatewayCounters {
+    fn snapshot(&self) -> GatewaySnapshot {
+        GatewaySnapshot {
+            connections: self.connections.load(Ordering::Relaxed),
+            open: self.open.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
+            gemms: self.gemms.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+struct Shared {
+    coord: Coordinator,
+    counters: GatewayCounters,
+    shutdown: AtomicBool,
+    max_frame: usize,
+}
+
+/// The running TCP gateway. Dropping it stops accepting, lets in-flight
+/// connections notice shutdown, and joins every thread.
+pub struct Gateway {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind `cfg.listen` and start serving `coord` on `cfg.threads`
+    /// connection threads.
+    pub fn start(coord: Coordinator, cfg: ServeConfig) -> Result<Gateway> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("bind {:?}", cfg.listen))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+
+        let shared = Arc::new(Shared {
+            coord,
+            counters: GatewayCounters::default(),
+            shutdown: AtomicBool::new(false),
+            max_frame: cfg.max_frame_bytes,
+        });
+
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("ftgemm-accept".to_string())
+                .spawn(move || acceptor_loop(&listener, &shared, &tx))
+                .context("spawn acceptor")?
+        };
+        let workers = (0..cfg.threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("ftgemm-conn-{i}"))
+                    .spawn(move || worker_loop(&shared, &rx))
+                    .context("spawn connection worker")
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Gateway { shared, addr, acceptor: Some(acceptor), workers })
+    }
+
+    /// The bound address (resolves port 0 for tests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn snapshot(&self) -> GatewaySnapshot {
+        self.shared.counters.snapshot()
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn acceptor_loop(listener: &TcpListener, shared: &Shared, tx: &mpsc::Sender<TcpStream>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return; // tx drops; idle workers see Disconnected and exit
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                shared.counters.connections.fetch_add(1, Ordering::Relaxed);
+                if tx.send(stream).is_err() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>, rx: &Arc<Mutex<mpsc::Receiver<TcpStream>>>) {
+    loop {
+        // Take the lock only to wait for the next connection; it is
+        // released before serving, so other workers keep accepting.
+        let next = rx.lock().unwrap().recv_timeout(Duration::from_millis(100));
+        match next {
+            Ok(stream) => {
+                shared.counters.open.fetch_add(1, Ordering::Relaxed);
+                serve_connection(shared, stream);
+                shared.counters.open.fetch_sub(1, Ordering::Relaxed);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// What the reader hands the per-connection writer thread, in response
+/// order: immediate lines (errors, ping, metrics) and tickets still being
+/// served.
+enum WriteItem {
+    Line(String),
+    Pending { id: u64, ticket: Ticket },
+}
+
+fn serve_connection(shared: &Arc<Shared>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // Finite read timeout: the reader must keep noticing shutdown (and a
+    // dead writer) even when the client goes quiet.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let Ok(write_half) = stream.try_clone() else { return };
+
+    let closed = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<WriteItem>();
+    let writer = {
+        let shared = Arc::clone(shared);
+        let closed = Arc::clone(&closed);
+        std::thread::Builder::new()
+            .name("ftgemm-conn-writer".to_string())
+            .spawn(move || writer_loop(&shared, &closed, write_half, &rx))
+    };
+    let Ok(writer) = writer else { return };
+
+    reader_loop(shared, &closed, stream, &tx);
+
+    drop(tx); // writer drains queued responses, then exits
+    let _ = writer.join();
+}
+
+fn writer_loop(
+    shared: &Arc<Shared>,
+    closed: &AtomicBool,
+    stream: TcpStream,
+    rx: &mpsc::Receiver<WriteItem>,
+) {
+    let mut out = std::io::BufWriter::new(stream);
+    // plain iteration: blocks until the reader hangs up, then drains
+    for item in rx.iter() {
+        let line = match item {
+            WriteItem::Line(line) => line,
+            WriteItem::Pending { id, ticket } => {
+                let (status, outcome) = ticket.wait_outcome();
+                match outcome {
+                    Ok(resp) => gemm_ok_line(id, &resp),
+                    Err(e) => {
+                        let kind = match status {
+                            TicketStatus::Expired => "deadline-expired",
+                            TicketStatus::Canceled => "canceled",
+                            _ => "failed",
+                        };
+                        error_line("gemm", Some(id), kind, &format!("{e:#}"))
+                    }
+                }
+            }
+        };
+        if out.write_all(line.as_bytes()).is_err()
+            || out.write_all(b"\n").is_err()
+            || out.flush().is_err()
+        {
+            // Client is gone: tell the reader and stop. Remaining tickets
+            // are dropped — their requests finish detached.
+            closed.store(true, Ordering::SeqCst);
+            return;
+        }
+        shared.counters.responses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Per-connection counters reported by the `metrics` verb.
+#[derive(Default)]
+struct ConnStats {
+    frames: u64,
+    gemms: u64,
+    errors: u64,
+}
+
+fn reader_loop(
+    shared: &Arc<Shared>,
+    closed: &AtomicBool,
+    mut stream: TcpStream,
+    tx: &mpsc::Sender<WriteItem>,
+) {
+    let mut fr = FrameReader::new(shared.max_frame);
+    let mut conn = ConnStats::default();
+    let mut buf = [0u8; 8192];
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) || closed.load(Ordering::SeqCst) {
+            return;
+        }
+        let n = match stream.read(&mut buf) {
+            Ok(0) => return, // client closed
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        };
+        if let Err(e) = fr.feed(&buf[..n]) {
+            // Oversized frame: framing is lost, so the connection dies —
+            // but with a structured goodbye first.
+            shared.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(WriteItem::Line(error_line(
+                "frame",
+                None,
+                "parse",
+                &e.to_string(),
+            )));
+            return;
+        }
+        while let Some(frame) = fr.next_frame() {
+            shared.counters.frames.fetch_add(1, Ordering::Relaxed);
+            conn.frames += 1;
+            if !handle_frame(shared, &frame, &mut conn, tx) {
+                return;
+            }
+        }
+    }
+}
+
+/// Dispatch one decoded frame; returns `false` when the connection should
+/// close (quit verb, or the writer is unreachable).
+fn handle_frame(
+    shared: &Arc<Shared>,
+    frame: &[u8],
+    conn: &mut ConnStats,
+    tx: &mpsc::Sender<WriteItem>,
+) -> bool {
+    let item = match proto::decode(frame, DEFAULT_MAX_DEPTH) {
+        Err(e) => {
+            shared.counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            conn.errors += 1;
+            WriteItem::Line(proto_error_line(&e))
+        }
+        Ok(WireRequest::Ping) => WriteItem::Line(r#"{"ok": true, "op": "ping"}"#.to_string()),
+        Ok(WireRequest::Quit) => {
+            let _ = tx.send(WriteItem::Line(r#"{"ok": true, "op": "quit"}"#.to_string()));
+            return false;
+        }
+        Ok(WireRequest::Metrics) => WriteItem::Line(metrics_line(shared, conn)),
+        Ok(WireRequest::Gemm(spec)) => {
+            let id = spec.id;
+            shared.counters.gemms.fetch_add(1, Ordering::Relaxed);
+            conn.gemms += 1;
+            match shared.coord.submit(spec.into_request()) {
+                Ok(ticket) => WriteItem::Pending { id, ticket },
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let kind = if msg.contains("admission control") {
+                        "admission-reject"
+                    } else {
+                        "failed"
+                    };
+                    WriteItem::Line(error_line("gemm", Some(id), kind, &msg))
+                }
+            }
+        }
+    };
+    tx.send(item).is_ok()
+}
+
+fn proto_error_line(e: &ProtoError) -> String {
+    error_line("request", None, e.kind, &e.msg)
+}
+
+fn error_line(op: &str, id: Option<u64>, kind: &str, msg: &str) -> String {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(false));
+    o.set("op", Json::from(op));
+    if let Some(id) = id {
+        o.set("id", Json::Num(id as f64));
+    }
+    o.set("error", Json::from(kind));
+    o.set("msg", Json::from(msg));
+    o.to_string()
+}
+
+fn gemm_ok_line(id: u64, resp: &GemmResponse) -> String {
+    let (out, meta) = (&resp.result, &resp.meta);
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("op", Json::from("gemm"));
+    o.set("id", Json::Num(id as f64));
+    o.set("req", Json::Num(meta.id as f64));
+    o.set("priority", Json::from(meta.priority.as_str()));
+    o.set("queued_us", Json::Num(meta.queued.as_micros() as f64));
+    o.set("exec_us", Json::Num(out.exec_time.as_micros() as f64));
+    o.set("detected", Json::Num(out.errors_detected as f64));
+    o.set("corrected", Json::Num(out.errors_corrected as f64));
+    o.set("recomputes", Json::Num(out.recomputes as f64));
+    o.set("launches", Json::Num(out.kernel_launches as f64));
+    o.set("buckets", Json::from(out.buckets.clone()));
+    // content witness: seeded operands make this deterministic per spec
+    let checksum: f64 = out.c.data().iter().map(|&x| x as f64).sum();
+    o.set("checksum", Json::Num(checksum));
+    o.to_string()
+}
+
+fn metrics_line(shared: &Shared, conn: &ConnStats) -> String {
+    let mut o = Json::obj();
+    o.set("ok", Json::Bool(true));
+    o.set("op", Json::from("metrics"));
+    o.set("coordinator", shared.coord.stats().to_json());
+    let g = shared.counters.snapshot();
+    let mut go = Json::obj();
+    go.set("connections", Json::Num(g.connections as f64));
+    go.set("open", Json::Num(g.open as f64));
+    go.set("frames", Json::Num(g.frames as f64));
+    go.set("gemms", Json::Num(g.gemms as f64));
+    go.set("responses", Json::Num(g.responses as f64));
+    go.set("protocol_errors", Json::Num(g.protocol_errors as f64));
+    o.set("gateway", go);
+    let mut co = Json::obj();
+    co.set("frames", Json::Num(conn.frames as f64));
+    co.set("gemms", Json::Num(conn.gemms as f64));
+    co.set("errors", Json::Num(conn.errors as f64));
+    o.set("connection", co);
+    o.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+
+    #[test]
+    fn config_defaults_are_valid() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.max_frame_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn config_validation_names_the_field() {
+        let bad = ServeConfig { listen: "nocolon".into(), ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("listen"));
+        let bad = ServeConfig { threads: 0, ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("threads"));
+        let bad = ServeConfig { max_frame_bytes: 10, ..Default::default() };
+        assert!(bad.validate().unwrap_err().to_string().contains("max_frame_bytes"));
+    }
+
+    #[test]
+    fn error_lines_are_valid_json() {
+        let line = error_line("gemm", Some(7), "deadline-expired", "too late");
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("id").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("deadline-expired"));
+    }
+
+    /// Loopback smoke: ping, a bad frame (connection survives), metrics,
+    /// one gemm, quit. The 16-client concurrency test lives in
+    /// `tests/integration.rs`.
+    #[test]
+    fn gateway_serves_one_connection_end_to_end() {
+        use crate::coordinator::{Coordinator, CoordinatorConfig};
+        use crate::runtime::{Engine, EngineConfig};
+
+        let engine = Engine::start(EngineConfig::default()).unwrap();
+        let coord = Coordinator::new(engine, CoordinatorConfig::default());
+        let gw = Gateway::start(
+            coord,
+            ServeConfig { listen: "127.0.0.1:0".into(), threads: 2, ..Default::default() },
+        )
+        .unwrap();
+
+        let stream = TcpStream::connect(gw.local_addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let send = |line: &str| {
+            (&stream).write_all(line.as_bytes()).unwrap();
+            (&stream).write_all(b"\n").unwrap();
+        };
+        let mut recv = || {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            Json::parse(line.trim()).unwrap()
+        };
+
+        send(r#"{"op": "ping"}"#);
+        assert_eq!(recv().get("ok").unwrap().as_bool(), Some(true));
+
+        send("this is not json");
+        let v = recv();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("parse"));
+
+        send(r#"{"op": "gemm", "m": 32, "n": 32, "k": 32, "seed": 9}"#);
+        let v = recv();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{v}");
+        assert!(v.get("checksum").unwrap().as_f64().is_some());
+
+        send(r#"{"op": "metrics"}"#);
+        let v = recv();
+        assert_eq!(v.path("gateway.protocol_errors").unwrap().as_usize(), Some(1));
+        assert_eq!(v.path("connection.gemms").unwrap().as_usize(), Some(1));
+        assert!(v.path("coordinator.backend.name").unwrap().as_str().is_some());
+
+        send(r#"{"op": "quit"}"#);
+        assert_eq!(recv().get("op").unwrap().as_str(), Some("quit"));
+
+        let snap = gw.snapshot();
+        assert_eq!(snap.connections, 1);
+        assert_eq!(snap.protocol_errors, 1);
+        assert!(snap.frames >= 5);
+    }
+}

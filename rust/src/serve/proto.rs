@@ -1,0 +1,681 @@
+//! The gateway's request protocol: one JSON object per line.
+//!
+//! ```text
+//! {"op": "gemm", "id": 1, "m": 128, "n": 128, "k": 128,
+//!  "policy": "online", "seed": 7, "inject": 2,
+//!  "injections": [{"row": 3, "col": 5, "step": 0, "magnitude": 4096.0}],
+//!  "ft_level": "warp", "host_verify": "clean_only",
+//!  "threshold_rel": 1e-4, "threshold_abs": 1e-3,
+//!  "max_recomputes": 4, "priority": "high", "deadline_ms": 250}
+//! {"op": "metrics"}
+//! {"op": "ping"}
+//! {"op": "quit"}
+//! ```
+//!
+//! Every [`RequestOptions`] knob is expressible on the wire; only `op`
+//! (and, for `gemm`, the shape) is required — everything else takes the
+//! same defaults the in-process builder does. Operands travel as a `seed`
+//! (the server materializes `rand_uniform` matrices), keeping frames tiny
+//! and workloads reproducible; faults are either an explicit `injections`
+//! list (exact §5.3 coordinates) or a `inject` count expanded through the
+//! same [`SeuModel`] path the CLI uses. Decoding is **strict**: unknown
+//! keys, wrong types, out-of-range shapes, and fields that don't belong
+//! to the op are all structured `validation` errors, never silent drops —
+//! a fault-tolerance service should not guess at what a client meant.
+//!
+//! [`SeuModel`]: crate::faults::SeuModel
+
+use anyhow::Result;
+
+use crate::abft::checksum::Thresholds;
+use crate::abft::injection::{Injection, InjectionPlan};
+use crate::abft::matrix::Matrix;
+use crate::coordinator::{FtLevel, FtPolicy, GemmRequest, HostVerify, Priority, RequestOptions};
+use crate::faults::model::KernelGeom;
+use crate::faults::SeuModel;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+use super::wire::{Event, PullParser, WireError};
+
+/// Largest accepted value for each of m/n/k.
+pub const MAX_DIM: usize = 1 << 16;
+/// Largest accepted element count per operand/output matrix (64 Mi f32 =
+/// 256 MiB — far above any benched shape, far below an allocation bomb).
+pub const MAX_ELEMS: usize = 1 << 26;
+/// Largest accepted explicit injection list / generated injection count.
+pub const MAX_INJECTIONS: usize = 4096;
+
+/// A structured protocol failure, classified for the wire error taxonomy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError {
+    /// `"parse"` (malformed JSON / framing) or `"validation"` (well-formed
+    /// JSON that violates the protocol).
+    pub kind: &'static str,
+    pub msg: String,
+}
+
+impl ProtoError {
+    fn validation(msg: String) -> ProtoError {
+        ProtoError { kind: "validation", msg }
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind, self.msg)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<WireError> for ProtoError {
+    fn from(e: WireError) -> ProtoError {
+        ProtoError { kind: "parse", msg: e.to_string() }
+    }
+}
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireRequest {
+    Gemm(Box<GemmSpec>),
+    Metrics,
+    Ping,
+    Quit,
+}
+
+/// The wire form of a GEMM request: everything a [`GemmRequest`] carries,
+/// in serializable clothes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GemmSpec {
+    /// Client-chosen correlation id, echoed verbatim in the response.
+    pub id: u64,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub policy: FtPolicy,
+    /// Operand seed: the server materializes `A = rand_uniform(m, k, seed)`
+    /// and `B = rand_uniform(k, n, seed + 1)`, same as the CLI.
+    pub seed: u64,
+    /// Generated-injection count (ignored when `injections` is non-empty).
+    pub inject: usize,
+    /// Explicit §5.3 injection coordinates; wins over `inject`.
+    pub injections: Vec<Injection>,
+    pub ft_level: Option<FtLevel>,
+    pub host_verify: Option<HostVerify>,
+    pub threshold_rel: Option<f32>,
+    pub threshold_abs: Option<f32>,
+    pub max_recomputes: Option<usize>,
+    pub priority: Priority,
+    /// Queue deadline in milliseconds; absent/0 = none.
+    pub deadline_ms: Option<u64>,
+}
+
+impl GemmSpec {
+    pub fn new(m: usize, n: usize, k: usize) -> GemmSpec {
+        GemmSpec {
+            id: 0,
+            m,
+            n,
+            k,
+            policy: FtPolicy::Online,
+            seed: 1,
+            inject: 0,
+            injections: Vec::new(),
+            ft_level: None,
+            host_verify: None,
+            threshold_rel: None,
+            threshold_abs: None,
+            max_recomputes: None,
+            priority: Priority::Normal,
+            deadline_ms: None,
+        }
+    }
+
+    /// Encode as one single-line JSON frame (no trailing newline). Fields
+    /// at their defaults are omitted — the decoder fills them back in, so
+    /// `decode(spec.to_wire_json() + "\n") == spec`.
+    pub fn to_wire_json(&self) -> String {
+        let mut o = Json::obj();
+        o.set("op", Json::from("gemm"));
+        if self.id != 0 {
+            o.set("id", Json::Num(self.id as f64));
+        }
+        o.set("m", Json::from(self.m));
+        o.set("n", Json::from(self.n));
+        o.set("k", Json::from(self.k));
+        o.set("policy", Json::from(self.policy.name()));
+        if self.seed != 1 {
+            o.set("seed", Json::Num(self.seed as f64));
+        }
+        if self.inject != 0 {
+            o.set("inject", Json::from(self.inject));
+        }
+        if !self.injections.is_empty() {
+            let mut arr = Json::Arr(Vec::new());
+            for inj in &self.injections {
+                let mut io = Json::obj();
+                io.set("row", Json::from(inj.row));
+                io.set("col", Json::from(inj.col));
+                io.set("step", Json::from(inj.step));
+                io.set("magnitude", Json::Num(inj.magnitude as f64));
+                arr.push(io);
+            }
+            o.set("injections", arr);
+        }
+        if let Some(level) = self.ft_level {
+            o.set("ft_level", Json::from(level.as_str()));
+        }
+        if let Some(hv) = self.host_verify {
+            o.set("host_verify", Json::from(hv.as_str()));
+        }
+        if let Some(rel) = self.threshold_rel {
+            o.set("threshold_rel", Json::Num(rel as f64));
+        }
+        if let Some(abs) = self.threshold_abs {
+            o.set("threshold_abs", Json::Num(abs as f64));
+        }
+        if let Some(nr) = self.max_recomputes {
+            o.set("max_recomputes", Json::from(nr));
+        }
+        if self.priority != Priority::Normal {
+            o.set("priority", Json::from(self.priority.as_str()));
+        }
+        if let Some(ms) = self.deadline_ms {
+            o.set("deadline_ms", Json::Num(ms as f64));
+        }
+        o.to_string()
+    }
+
+    /// The injection plan this spec asks for (explicit list wins; a bare
+    /// `inject` count expands through the same [`SeuModel`] path as the
+    /// CLI, so a given `(seed, inject)` reproduces exactly).
+    pub fn injection_plan(&self) -> InjectionPlan {
+        if !self.injections.is_empty() {
+            return InjectionPlan { injections: self.injections.clone() };
+        }
+        if self.inject == 0 {
+            return InjectionPlan::none();
+        }
+        let geom = KernelGeom::for_shape(self.m, self.n, self.k);
+        let mut rng = Pcg32::seeded(self.seed);
+        SeuModel::PerGemm { count: self.inject }.plan(&geom, 0.0, &mut rng)
+    }
+
+    /// Materialize the server-side [`GemmRequest`]: seed-derived operands
+    /// plus every option the frame carried.
+    pub fn into_request(self) -> GemmRequest {
+        let a = Matrix::rand_uniform(self.m, self.k, self.seed);
+        let b = Matrix::rand_uniform(self.k, self.n, self.seed + 1);
+        let thresholds = match (self.threshold_rel, self.threshold_abs) {
+            (None, None) => None,
+            (rel, abs) => {
+                let d = Thresholds::default();
+                Some(Thresholds { rel: rel.unwrap_or(d.rel), abs: abs.unwrap_or(d.abs) })
+            }
+        };
+        let opts = RequestOptions {
+            ft_level: self.ft_level,
+            thresholds,
+            host_verify: self.host_verify,
+            max_recomputes: self.max_recomputes,
+            priority: self.priority,
+            deadline: self.deadline_ms.map(std::time::Duration::from_millis),
+        };
+        let plan = self.injection_plan();
+        GemmRequest::new(a, b).policy(self.policy).inject(plan).options(opts)
+    }
+}
+
+/// Decoder scratch: which fields the frame carried, op-agnostic until the
+/// end so key order never matters.
+#[derive(Default)]
+struct Fields {
+    op: Option<String>,
+    spec: GemmSpec,
+    /// First gemm-only key seen — a `metrics`/`ping`/`quit` frame carrying
+    /// one is rejected instead of silently ignored.
+    gemm_field: Option<&'static str>,
+    saw_shape: (bool, bool, bool),
+}
+
+impl Default for GemmSpec {
+    fn default() -> GemmSpec {
+        GemmSpec::new(0, 0, 0)
+    }
+}
+
+/// Decode one complete frame into a [`WireRequest`], streaming straight
+/// off the pull parser (no intermediate tree).
+pub fn decode(frame: &[u8], max_depth: usize) -> Result<WireRequest, ProtoError> {
+    let mut p = PullParser::new(frame, max_depth);
+    match p.next()? {
+        Some(Event::ObjBegin) => {}
+        _ => return Err(ProtoError::validation("frame must be a JSON object".into())),
+    }
+    let mut f = Fields::default();
+    loop {
+        match p.next()? {
+            Some(Event::ObjEnd) => break,
+            Some(Event::Key(key)) => decode_field(&mut p, &key.decode(), &mut f)?,
+            // the parser only yields Key/ObjEnd at object level
+            other => {
+                return Err(ProtoError::validation(format!("unexpected event {other:?}")));
+            }
+        }
+    }
+    // drain: surfaces trailing-garbage errors after the closing brace
+    if p.next()?.is_some() {
+        return Err(ProtoError::validation("more than one value in frame".into()));
+    }
+    finish(f)
+}
+
+fn decode_field(p: &mut PullParser<'_>, key: &str, f: &mut Fields) -> Result<(), ProtoError> {
+    if key != "op" && key != "injections" {
+        f.gemm_field.get_or_insert(match key {
+            "id" => "id",
+            "m" => "m",
+            "n" => "n",
+            "k" => "k",
+            "policy" => "policy",
+            "seed" => "seed",
+            "inject" => "inject",
+            "ft_level" => "ft_level",
+            "host_verify" => "host_verify",
+            "threshold_rel" => "threshold_rel",
+            "threshold_abs" => "threshold_abs",
+            "max_recomputes" => "max_recomputes",
+            "priority" => "priority",
+            "deadline_ms" => "deadline_ms",
+            other => return Err(ProtoError::validation(format!("unknown key {other:?}"))),
+        });
+    }
+    match key {
+        "op" => f.op = Some(take_str(p, key)?),
+        "id" => f.spec.id = take_u64(p, key)?,
+        "m" => {
+            f.spec.m = take_dim(p, key)?;
+            f.saw_shape.0 = true;
+        }
+        "n" => {
+            f.spec.n = take_dim(p, key)?;
+            f.saw_shape.1 = true;
+        }
+        "k" => {
+            f.spec.k = take_dim(p, key)?;
+            f.saw_shape.2 = true;
+        }
+        "policy" => f.spec.policy = parse_enum(&take_str(p, key)?, key)?,
+        "seed" => f.spec.seed = take_u64(p, key)?,
+        "inject" => {
+            let n = take_usize(p, key, MAX_INJECTIONS)?;
+            f.spec.inject = n;
+        }
+        "injections" => {
+            f.gemm_field.get_or_insert("injections");
+            f.spec.injections = take_injections(p)?;
+        }
+        "ft_level" => f.spec.ft_level = Some(parse_enum(&take_str(p, key)?, key)?),
+        "host_verify" => f.spec.host_verify = Some(parse_enum(&take_str(p, key)?, key)?),
+        "threshold_rel" => f.spec.threshold_rel = Some(take_f32(p, key)?),
+        "threshold_abs" => f.spec.threshold_abs = Some(take_f32(p, key)?),
+        "max_recomputes" => f.spec.max_recomputes = Some(take_usize(p, key, 1 << 20)?),
+        "priority" => f.spec.priority = parse_enum(&take_str(p, key)?, key)?,
+        "deadline_ms" => {
+            let ms = take_u64(p, key)?;
+            f.spec.deadline_ms = if ms == 0 { None } else { Some(ms) };
+        }
+        _ => unreachable!("unknown keys rejected above"),
+    }
+    Ok(())
+}
+
+fn finish(f: Fields) -> Result<WireRequest, ProtoError> {
+    let op = f.op.ok_or_else(|| ProtoError::validation("missing \"op\"".into()))?;
+    if op != "gemm" {
+        if let Some(field) = f.gemm_field {
+            return Err(ProtoError::validation(format!(
+                "key {field:?} is not valid for op {op:?}"
+            )));
+        }
+    }
+    match op.as_str() {
+        "metrics" => Ok(WireRequest::Metrics),
+        "ping" => Ok(WireRequest::Ping),
+        "quit" => Ok(WireRequest::Quit),
+        "gemm" => {
+            let spec = f.spec;
+            match f.saw_shape {
+                (true, true, true) => {}
+                _ => {
+                    return Err(ProtoError::validation(
+                        "gemm requires \"m\", \"n\", and \"k\"".into(),
+                    ))
+                }
+            }
+            for (what, elems) in [
+                ("A", spec.m * spec.k),
+                ("B", spec.k * spec.n),
+                ("C", spec.m * spec.n),
+            ] {
+                if elems > MAX_ELEMS {
+                    return Err(ProtoError::validation(format!(
+                        "operand {what} would have {elems} elements (max {MAX_ELEMS})"
+                    )));
+                }
+            }
+            for inj in &spec.injections {
+                if inj.row >= spec.m || inj.col >= spec.n {
+                    return Err(ProtoError::validation(format!(
+                        "injection ({}, {}) outside the {}x{} output",
+                        inj.row, inj.col, spec.m, spec.n
+                    )));
+                }
+            }
+            Ok(WireRequest::Gemm(Box::new(spec)))
+        }
+        other => Err(ProtoError::validation(format!(
+            "unknown op {other:?} (gemm|metrics|ping|quit)"
+        ))),
+    }
+}
+
+fn parse_enum<T>(s: &str, key: &str) -> Result<T, ProtoError>
+where
+    T: std::str::FromStr,
+    T::Err: std::fmt::Display,
+{
+    s.parse::<T>().map_err(|e| ProtoError::validation(format!("{key}: {e}")))
+}
+
+fn take_str(p: &mut PullParser<'_>, key: &str) -> Result<String, ProtoError> {
+    match p.next()? {
+        Some(Event::Str(t)) => Ok(t.decode().into_owned()),
+        _ => Err(ProtoError::validation(format!("{key} must be a string"))),
+    }
+}
+
+fn take_num(p: &mut PullParser<'_>, key: &str) -> Result<f64, ProtoError> {
+    match p.next()? {
+        Some(Event::Num(x)) => Ok(x),
+        _ => Err(ProtoError::validation(format!("{key} must be a number"))),
+    }
+}
+
+fn take_f32(p: &mut PullParser<'_>, key: &str) -> Result<f32, ProtoError> {
+    let x = take_num(p, key)?;
+    let y = x as f32;
+    if !y.is_finite() {
+        return Err(ProtoError::validation(format!("{key} out of f32 range")));
+    }
+    Ok(y)
+}
+
+fn take_u64(p: &mut PullParser<'_>, key: &str) -> Result<u64, ProtoError> {
+    let x = take_num(p, key)?;
+    // 2^53: the last f64 where every integer is exact
+    if x < 0.0 || x.fract() != 0.0 || x > 9.007_199_254_740_992e15 {
+        return Err(ProtoError::validation(format!("{key} must be a non-negative integer")));
+    }
+    Ok(x as u64)
+}
+
+fn take_usize(p: &mut PullParser<'_>, key: &str, max: usize) -> Result<usize, ProtoError> {
+    let x = take_u64(p, key)?;
+    if x > max as u64 {
+        return Err(ProtoError::validation(format!("{key} too large (max {max})")));
+    }
+    Ok(x as usize)
+}
+
+fn take_dim(p: &mut PullParser<'_>, key: &str) -> Result<usize, ProtoError> {
+    let x = take_usize(p, key, MAX_DIM)?;
+    if x == 0 {
+        return Err(ProtoError::validation(format!("{key} must be positive")));
+    }
+    Ok(x)
+}
+
+fn take_injections(p: &mut PullParser<'_>) -> Result<Vec<Injection>, ProtoError> {
+    match p.next()? {
+        Some(Event::ArrBegin) => {}
+        _ => return Err(ProtoError::validation("injections must be an array".into())),
+    }
+    let mut out = Vec::new();
+    loop {
+        match p.next()? {
+            Some(Event::ArrEnd) => return Ok(out),
+            Some(Event::ObjBegin) => {
+                if out.len() >= MAX_INJECTIONS {
+                    return Err(ProtoError::validation(format!(
+                        "too many injections (max {MAX_INJECTIONS})"
+                    )));
+                }
+                out.push(take_injection(p)?);
+            }
+            _ => {
+                return Err(ProtoError::validation(
+                    "each injection must be an object".into(),
+                ))
+            }
+        }
+    }
+}
+
+fn take_injection(p: &mut PullParser<'_>) -> Result<Injection, ProtoError> {
+    let (mut row, mut col, mut step, mut magnitude) = (None, None, None, None);
+    loop {
+        match p.next()? {
+            Some(Event::ObjEnd) => break,
+            Some(Event::Key(key)) => {
+                if key.is("row") {
+                    row = Some(take_usize(p, "row", MAX_DIM)?);
+                } else if key.is("col") {
+                    col = Some(take_usize(p, "col", MAX_DIM)?);
+                } else if key.is("step") {
+                    step = Some(take_usize(p, "step", MAX_DIM)?);
+                } else if key.is("magnitude") {
+                    let x = take_f32(p, "magnitude")?;
+                    magnitude = Some(x);
+                } else {
+                    return Err(ProtoError::validation(format!(
+                        "unknown injection key {:?}",
+                        key.decode()
+                    )));
+                }
+            }
+            other => {
+                return Err(ProtoError::validation(format!("unexpected event {other:?}")));
+            }
+        }
+    }
+    match (row, col, step, magnitude) {
+        (Some(row), Some(col), Some(step), Some(magnitude)) => {
+            Ok(Injection { row, col, step, magnitude })
+        }
+        _ => Err(ProtoError::validation(
+            "injection requires row, col, step, and magnitude".into(),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::wire::DEFAULT_MAX_DEPTH;
+
+    fn dec(frame: &str) -> Result<WireRequest, ProtoError> {
+        decode(frame.as_bytes(), DEFAULT_MAX_DEPTH)
+    }
+
+    #[test]
+    fn decodes_a_minimal_gemm() {
+        let req = dec(r#"{"op": "gemm", "m": 64, "n": 32, "k": 16}"#).unwrap();
+        match req {
+            WireRequest::Gemm(spec) => {
+                assert_eq!((spec.m, spec.n, spec.k), (64, 32, 16));
+                assert_eq!(spec.policy, FtPolicy::Online);
+                assert_eq!(spec.priority, Priority::Normal);
+                assert_eq!(spec.seed, 1);
+                assert!(spec.deadline_ms.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn decodes_every_option_field() {
+        let req = dec(concat!(
+            r#"{"op": "gemm", "id": 9, "m": 8, "n": 8, "k": 8, "policy": "offline","#,
+            r#" "seed": 3, "ft_level": "warp", "host_verify": "always","#,
+            r#" "threshold_rel": 0.5, "threshold_abs": 0.25, "max_recomputes": 2,"#,
+            r#" "priority": "high", "deadline_ms": 250,"#,
+            r#" "injections": [{"row": 1, "col": 2, "step": 0, "magnitude": -64.0}]}"#
+        ))
+        .unwrap();
+        let spec = match req {
+            WireRequest::Gemm(spec) => spec,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(spec.id, 9);
+        assert_eq!(spec.policy, FtPolicy::Offline);
+        assert_eq!(spec.ft_level, Some(FtLevel::Warp));
+        assert_eq!(spec.host_verify, Some(HostVerify::Always));
+        assert_eq!(spec.threshold_rel, Some(0.5));
+        assert_eq!(spec.threshold_abs, Some(0.25));
+        assert_eq!(spec.max_recomputes, Some(2));
+        assert_eq!(spec.priority, Priority::High);
+        assert_eq!(spec.deadline_ms, Some(250));
+        assert_eq!(spec.injections.len(), 1);
+        assert_eq!(spec.injections[0].magnitude, -64.0);
+    }
+
+    #[test]
+    fn control_verbs_decode() {
+        assert_eq!(dec(r#"{"op": "metrics"}"#).unwrap(), WireRequest::Metrics);
+        assert_eq!(dec(r#"{"op": "ping"}"#).unwrap(), WireRequest::Ping);
+        assert_eq!(dec(r#"{"op": "quit"}"#).unwrap(), WireRequest::Quit);
+    }
+
+    #[test]
+    fn key_order_does_not_matter() {
+        let req = dec(r#"{"k": 16, "m": 64, "op": "gemm", "n": 32}"#).unwrap();
+        assert!(matches!(req, WireRequest::Gemm(s) if (s.m, s.n, s.k) == (64, 32, 16)));
+    }
+
+    #[test]
+    fn malformed_corpus_yields_structured_errors() {
+        // (frame, expected kind)
+        let corpus: &[(&str, &str)] = &[
+            // parse errors: broken JSON, truncation, depth bombs
+            (r#"{"op": "gemm""#, "parse"),
+            (r#"{"op": gemm}"#, "parse"),
+            ("", "parse"),
+            (r#"{"op": "ping"} extra"#, "parse"),
+            (&format!("{}1{}", "[".repeat(300), "]".repeat(300)), "parse"),
+            // validation errors: well-formed JSON, wrong protocol
+            ("[1, 2, 3]", "validation"),
+            (r#"{"verb": "gemm"}"#, "validation"),
+            (r#"{"op": "nope"}"#, "validation"),
+            (r#"{"op": "gemm", "m": 64, "n": 32}"#, "validation"),
+            (r#"{"op": "gemm", "m": -1, "n": 1, "k": 1}"#, "validation"),
+            (r#"{"op": "gemm", "m": 0, "n": 1, "k": 1}"#, "validation"),
+            (r#"{"op": "gemm", "m": 1.5, "n": 1, "k": 1}"#, "validation"),
+            (r#"{"op": "gemm", "m": "64", "n": 32, "k": 16}"#, "validation"),
+            (r#"{"op": "gemm", "m": 99999999, "n": 1, "k": 1}"#, "validation"),
+            (r#"{"op": "gemm", "m": 65536, "n": 65536, "k": 1}"#, "validation"),
+            (r#"{"op": "gemm", "m": 8, "n": 8, "k": 8, "policy": "best"}"#, "validation"),
+            (r#"{"op": "gemm", "m": 8, "n": 8, "k": 8, "priority": "urgent"}"#, "validation"),
+            (r#"{"op": "gemm", "m": 8, "n": 8, "k": 8, "turbo": true}"#, "validation"),
+            (r#"{"op": "ping", "m": 8}"#, "validation"),
+            (r#"{"op": "gemm", "m": 8, "n": 8, "k": 8, "injections": [1]}"#, "validation"),
+            (
+                r#"{"op": "gemm", "m": 8, "n": 8, "k": 8, "injections": [{"row": 1}]}"#,
+                "validation",
+            ),
+            (
+                r#"{"op": "gemm", "m": 8, "n": 8, "k": 8,
+                   "injections": [{"row": 9, "col": 0, "step": 0, "magnitude": 1.0}]}"#,
+                "validation",
+            ),
+        ];
+        for (frame, kind) in corpus {
+            let err = dec(frame).expect_err(frame);
+            assert_eq!(err.kind, *kind, "{frame}: {err}");
+        }
+    }
+
+    #[test]
+    fn bad_utf8_is_a_parse_error_not_a_panic() {
+        let mut frame = br#"{"op": ""#.to_vec();
+        frame.extend_from_slice(&[0xFF, 0xFE]);
+        frame.extend_from_slice(br#""}"#);
+        let err = decode(&frame, DEFAULT_MAX_DEPTH).unwrap_err();
+        assert_eq!(err.kind, "parse");
+    }
+
+    #[test]
+    fn wire_json_roundtrips_defaults_and_full_specs() {
+        let minimal = GemmSpec::new(64, 32, 16);
+        let frame = minimal.to_wire_json();
+        assert_eq!(dec(&frame).unwrap(), WireRequest::Gemm(Box::new(minimal)));
+
+        let full = GemmSpec {
+            id: 77,
+            seed: 5,
+            policy: FtPolicy::Offline,
+            injections: vec![Injection { row: 3, col: 5, step: 1, magnitude: 4096.0 }],
+            ft_level: Some(FtLevel::Thread),
+            host_verify: Some(HostVerify::CleanOnly),
+            threshold_rel: Some(1e-4),
+            threshold_abs: Some(2e-3),
+            max_recomputes: Some(6),
+            priority: Priority::Low,
+            deadline_ms: Some(1500),
+            ..GemmSpec::new(128, 96, 64)
+        };
+        let frame = full.to_wire_json();
+        assert_eq!(dec(&frame).unwrap(), WireRequest::Gemm(Box::new(full)));
+    }
+
+    #[test]
+    fn spec_materializes_a_request_with_all_options() {
+        let spec = GemmSpec {
+            inject: 2,
+            ft_level: Some(FtLevel::Warp),
+            priority: Priority::High,
+            deadline_ms: Some(100),
+            ..GemmSpec::new(32, 32, 32)
+        };
+        let plan = spec.injection_plan();
+        assert_eq!(plan.len(), 2, "inject count expands through SeuModel");
+        let req = spec.into_request();
+        assert_eq!(req.shape(), (32, 32, 32));
+        assert_eq!(req.get_options().priority, Priority::High);
+        assert_eq!(req.get_options().ft_level, Some(FtLevel::Warp));
+        assert_eq!(
+            req.get_options().deadline,
+            Some(std::time::Duration::from_millis(100))
+        );
+        assert_eq!(req.injections().len(), 2);
+    }
+
+    #[test]
+    fn explicit_injections_win_over_inject_count() {
+        let spec = GemmSpec {
+            inject: 5,
+            injections: vec![Injection { row: 0, col: 0, step: 0, magnitude: 99.0 }],
+            ..GemmSpec::new(16, 16, 16)
+        };
+        let plan = spec.injection_plan();
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.injections[0].magnitude, 99.0);
+    }
+
+    #[test]
+    fn zero_deadline_means_none() {
+        let req = dec(r#"{"op": "gemm", "m": 8, "n": 8, "k": 8, "deadline_ms": 0}"#).unwrap();
+        assert!(matches!(req, WireRequest::Gemm(s) if s.deadline_ms.is_none()));
+    }
+}

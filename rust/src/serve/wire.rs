@@ -1,0 +1,706 @@
+//! Streaming wire-format plumbing for the gateway: newline-delimited
+//! frames and a zero-allocation JSON **pull parser**.
+//!
+//! The tree parser in [`util::json`](crate::util::json) is the right tool
+//! for trusted files (manifests, bench output); a network front door has
+//! different obligations:
+//!
+//! * **No recursion.** [`PullParser`] is iterative with an explicit
+//!   container stack whose depth is bounded at construction
+//!   ([`DEFAULT_MAX_DEPTH`]); a depth bomb returns
+//!   [`WireErrorKind::TooDeep`] instead of overflowing the thread stack.
+//!   The stack is pre-allocated to that bound, so parser memory is fixed
+//!   regardless of input.
+//! * **No allocation per event.** `next()` yields [`Event`]s that borrow
+//!   spans of the input frame; strings are validated (UTF-8 + escape
+//!   structure) during the scan but decoded lazily — [`Text::decode`]
+//!   borrows unless the string actually contains escapes, which protocol
+//!   identifiers never do.
+//! * **Incremental feed.** [`FrameReader`] accumulates socket reads and
+//!   splits complete `\n`-terminated frames off them, rejecting any frame
+//!   — complete or still in flight — larger than its bound, so a slow or
+//!   malicious client can neither hold a growing buffer hostage nor make
+//!   the server parse an unbounded line.
+
+use std::borrow::Cow;
+use std::collections::VecDeque;
+use std::fmt;
+
+/// Default nesting bound for wire frames (matches `util::json`'s).
+pub const DEFAULT_MAX_DEPTH: usize = 64;
+
+/// A structured wire-level failure, positioned within the frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// Byte offset within the frame (0 for framing errors).
+    pub pos: usize,
+    pub kind: WireErrorKind,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireErrorKind {
+    /// Malformed JSON at `pos`; the message names the expectation.
+    Syntax(&'static str),
+    /// Containers nested deeper than the configured bound.
+    TooDeep(usize),
+    /// A frame (or an unterminated partial frame) exceeded the byte bound.
+    FrameTooLong(usize),
+    /// A string carried bytes that are not valid UTF-8.
+    BadUtf8,
+    /// A `\x` or `\uXXXX` escape was malformed (including lone
+    /// surrogates).
+    BadEscape,
+    /// A number token failed to parse as a finite f64.
+    BadNumber,
+    /// The frame ended in the middle of a value.
+    UnexpectedEnd,
+    /// Bytes after the top-level value.
+    TrailingGarbage,
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.kind {
+            WireErrorKind::Syntax(what) => {
+                write!(f, "byte {}: expected {what}", self.pos)
+            }
+            WireErrorKind::TooDeep(max) => {
+                write!(f, "byte {}: nesting exceeds the depth bound ({max})", self.pos)
+            }
+            WireErrorKind::FrameTooLong(max) => {
+                write!(f, "frame exceeds the size bound ({max} bytes)")
+            }
+            WireErrorKind::BadUtf8 => write!(f, "byte {}: invalid UTF-8 in string", self.pos),
+            WireErrorKind::BadEscape => write!(f, "byte {}: bad string escape", self.pos),
+            WireErrorKind::BadNumber => write!(f, "byte {}: bad number", self.pos),
+            WireErrorKind::UnexpectedEnd => write!(f, "byte {}: unexpected end of frame", self.pos),
+            WireErrorKind::TrailingGarbage => {
+                write!(f, "byte {}: trailing bytes after the value", self.pos)
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// A validated string span of the frame, escapes still intact.
+/// Guaranteed valid UTF-8 with structurally sound escapes (the scanner
+/// checked both), so decoding cannot fail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Text<'a> {
+    raw: &'a [u8],
+    escaped: bool,
+}
+
+impl<'a> Text<'a> {
+    /// Allocation-free comparison against a literal (protocol keys and
+    /// enum values never carry escapes, so this is the hot path).
+    pub fn is(&self, s: &str) -> bool {
+        !self.escaped && self.raw == s.as_bytes()
+    }
+
+    /// Decode to a `&str`, borrowing unless the string contains escapes.
+    pub fn decode(&self) -> Cow<'a, str> {
+        if !self.escaped {
+            // Scanner validated the UTF-8; lossy never actually replaces.
+            return String::from_utf8_lossy(self.raw);
+        }
+        let mut out = Vec::with_capacity(self.raw.len());
+        let mut i = 0;
+        while i < self.raw.len() {
+            let c = self.raw[i];
+            if c != b'\\' {
+                out.push(c);
+                i += 1;
+                continue;
+            }
+            i += 1;
+            match self.raw[i] {
+                b'"' => out.push(b'"'),
+                b'\\' => out.push(b'\\'),
+                b'/' => out.push(b'/'),
+                b'b' => out.push(0x08),
+                b'f' => out.push(0x0C),
+                b'n' => out.push(b'\n'),
+                b'r' => out.push(b'\r'),
+                b't' => out.push(b'\t'),
+                b'u' => {
+                    let hi = hex4(&self.raw[i + 1..i + 5]);
+                    i += 4;
+                    let code = if (0xD800..0xDC00).contains(&hi) {
+                        // validated surrogate pair: \uHHHH\uLLLL
+                        let lo = hex4(&self.raw[i + 3..i + 7]);
+                        i += 6;
+                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                    } else {
+                        hi
+                    };
+                    let ch = char::from_u32(code).unwrap_or(char::REPLACEMENT_CHARACTER);
+                    let mut buf = [0u8; 4];
+                    out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                }
+                _ => unreachable!("scanner validated escapes"),
+            }
+            i += 1;
+        }
+        Cow::Owned(String::from_utf8_lossy(&out).into_owned())
+    }
+}
+
+fn hex4(b: &[u8]) -> u32 {
+    b.iter().fold(0u32, |acc, &c| acc * 16 + (c as char).to_digit(16).unwrap_or(0))
+}
+
+/// One parse event. String events borrow the frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    /// An object key (the following event(s) are its value).
+    Key(Text<'a>),
+    Str(Text<'a>),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Frame {
+    Obj,
+    Arr,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Expecting a value (top level, after `[`+comma, or after a colon).
+    Value,
+    /// Just opened an object: `}` or the first key.
+    ObjFirst,
+    /// Just opened an array: `]` or the first value.
+    ArrFirst,
+    /// A value just completed; expecting `,`, a closer, or frame end.
+    AfterValue,
+    /// Top-level value complete.
+    Done,
+}
+
+/// Iterative, depth-bounded JSON pull parser over one complete frame.
+///
+/// ```
+/// use ftgemm::serve::wire::{Event, PullParser};
+///
+/// let mut p = PullParser::new(br#"{"op": "ping"}"#, 64);
+/// assert_eq!(p.next().unwrap(), Some(Event::ObjBegin));
+/// match p.next().unwrap() {
+///     Some(Event::Key(k)) => assert!(k.is("op")),
+///     other => panic!("{other:?}"),
+/// }
+/// ```
+pub struct PullParser<'a> {
+    b: &'a [u8],
+    pos: usize,
+    stack: Vec<Frame>,
+    max_depth: usize,
+    phase: Phase,
+}
+
+impl<'a> PullParser<'a> {
+    pub fn new(frame: &'a [u8], max_depth: usize) -> PullParser<'a> {
+        let max_depth = max_depth.max(1);
+        PullParser {
+            b: frame,
+            pos: 0,
+            // pre-allocated to the bound: parser memory is fixed
+            stack: Vec::with_capacity(max_depth),
+            max_depth,
+            phase: Phase::Value,
+        }
+    }
+
+    /// Current nesting depth (open containers).
+    pub fn depth(&self) -> usize {
+        self.stack.len()
+    }
+
+    fn err(&self, kind: WireErrorKind) -> WireError {
+        WireError { pos: self.pos, kind }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        Some(c)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn push_frame(&mut self, f: Frame) -> Result<(), WireError> {
+        if self.stack.len() >= self.max_depth {
+            return Err(self.err(WireErrorKind::TooDeep(self.max_depth)));
+        }
+        self.stack.push(f);
+        Ok(())
+    }
+
+    /// Pull the next event; `Ok(None)` exactly once the single top-level
+    /// value has been consumed and the frame is exhausted.
+    #[allow(clippy::should_implement_trait)] // fallible, not an Iterator
+    pub fn next(&mut self) -> Result<Option<Event<'a>>, WireError> {
+        loop {
+            self.skip_ws();
+            match self.phase {
+                Phase::Done => {
+                    if self.pos != self.b.len() {
+                        return Err(self.err(WireErrorKind::TrailingGarbage));
+                    }
+                    return Ok(None);
+                }
+                Phase::AfterValue => match self.stack.last() {
+                    None => {
+                        self.phase = Phase::Done;
+                    }
+                    Some(Frame::Arr) => match self.bump() {
+                        Some(b',') => self.phase = Phase::Value,
+                        Some(b']') => {
+                            self.stack.pop();
+                            return Ok(Some(Event::ArrEnd));
+                        }
+                        _ => {
+                            self.pos = self.pos.saturating_sub(1);
+                            return Err(self.err(WireErrorKind::Syntax("',' or ']'")));
+                        }
+                    },
+                    Some(Frame::Obj) => match self.bump() {
+                        Some(b',') => {
+                            self.skip_ws();
+                            let key = self.scan_string()?;
+                            self.skip_ws();
+                            if self.bump() != Some(b':') {
+                                self.pos = self.pos.saturating_sub(1);
+                                return Err(self.err(WireErrorKind::Syntax("':'")));
+                            }
+                            self.phase = Phase::Value;
+                            return Ok(Some(Event::Key(key)));
+                        }
+                        Some(b'}') => {
+                            self.stack.pop();
+                            return Ok(Some(Event::ObjEnd));
+                        }
+                        _ => {
+                            self.pos = self.pos.saturating_sub(1);
+                            return Err(self.err(WireErrorKind::Syntax("',' or '}'")));
+                        }
+                    },
+                },
+                Phase::ObjFirst => {
+                    if self.peek() == Some(b'}') {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.phase = Phase::AfterValue;
+                        return Ok(Some(Event::ObjEnd));
+                    }
+                    let key = self.scan_string()?;
+                    self.skip_ws();
+                    if self.bump() != Some(b':') {
+                        self.pos = self.pos.saturating_sub(1);
+                        return Err(self.err(WireErrorKind::Syntax("':'")));
+                    }
+                    self.phase = Phase::Value;
+                    return Ok(Some(Event::Key(key)));
+                }
+                Phase::ArrFirst => {
+                    if self.peek() == Some(b']') {
+                        self.pos += 1;
+                        self.stack.pop();
+                        self.phase = Phase::AfterValue;
+                        return Ok(Some(Event::ArrEnd));
+                    }
+                    self.phase = Phase::Value;
+                }
+                Phase::Value => match self.peek() {
+                    Some(b'{') => {
+                        self.push_frame(Frame::Obj)?;
+                        self.pos += 1;
+                        self.phase = Phase::ObjFirst;
+                        return Ok(Some(Event::ObjBegin));
+                    }
+                    Some(b'[') => {
+                        self.push_frame(Frame::Arr)?;
+                        self.pos += 1;
+                        self.phase = Phase::ArrFirst;
+                        return Ok(Some(Event::ArrBegin));
+                    }
+                    Some(b'"') => {
+                        let t = self.scan_string()?;
+                        self.phase = Phase::AfterValue;
+                        return Ok(Some(Event::Str(t)));
+                    }
+                    Some(b't') => {
+                        self.literal(b"true")?;
+                        self.phase = Phase::AfterValue;
+                        return Ok(Some(Event::Bool(true)));
+                    }
+                    Some(b'f') => {
+                        self.literal(b"false")?;
+                        self.phase = Phase::AfterValue;
+                        return Ok(Some(Event::Bool(false)));
+                    }
+                    Some(b'n') => {
+                        self.literal(b"null")?;
+                        self.phase = Phase::AfterValue;
+                        return Ok(Some(Event::Null));
+                    }
+                    Some(c) if c == b'-' || c.is_ascii_digit() => {
+                        let x = self.scan_number()?;
+                        self.phase = Phase::AfterValue;
+                        return Ok(Some(Event::Num(x)));
+                    }
+                    Some(_) => return Err(self.err(WireErrorKind::Syntax("a JSON value"))),
+                    None => return Err(self.err(WireErrorKind::UnexpectedEnd)),
+                },
+            }
+        }
+    }
+
+    fn literal(&mut self, word: &[u8]) -> Result<(), WireError> {
+        if self.b[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.err(WireErrorKind::Syntax("a JSON literal")))
+        }
+    }
+
+    /// Scan (and fully validate) one string; the returned [`Text`] spans
+    /// the bytes between the quotes with escapes intact.
+    fn scan_string(&mut self) -> Result<Text<'a>, WireError> {
+        if self.bump() != Some(b'"') {
+            self.pos = self.pos.saturating_sub(1);
+            return Err(self.err(WireErrorKind::Syntax("'\"'")));
+        }
+        let start = self.pos;
+        let mut escaped = false;
+        loop {
+            match self.bump() {
+                None => return Err(self.err(WireErrorKind::UnexpectedEnd)),
+                Some(b'"') => {
+                    let raw = &self.b[start..self.pos - 1];
+                    if std::str::from_utf8(raw).is_err() {
+                        return Err(self.err(WireErrorKind::BadUtf8));
+                    }
+                    return Ok(Text { raw, escaped });
+                }
+                Some(b'\\') => {
+                    escaped = true;
+                    self.scan_escape()?;
+                }
+                Some(c) if c < 0x20 => {
+                    return Err(self.err(WireErrorKind::Syntax("no control chars in strings")));
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// Validate one escape after the backslash. Full surrogate-pair
+    /// checking here is what makes [`Text::decode`] infallible.
+    fn scan_escape(&mut self) -> Result<(), WireError> {
+        match self.bump() {
+            Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => Ok(()),
+            Some(b'u') => {
+                let hi = self.scan_hex4()?;
+                if (0xD800..0xDC00).contains(&hi) {
+                    if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                        return Err(self.err(WireErrorKind::BadEscape));
+                    }
+                    let lo = self.scan_hex4()?;
+                    if !(0xDC00..0xE000).contains(&lo) {
+                        return Err(self.err(WireErrorKind::BadEscape));
+                    }
+                } else if (0xDC00..0xE000).contains(&hi) {
+                    return Err(self.err(WireErrorKind::BadEscape));
+                }
+                Ok(())
+            }
+            _ => Err(self.err(WireErrorKind::BadEscape)),
+        }
+    }
+
+    fn scan_hex4(&mut self) -> Result<u32, WireError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let d = self
+                .bump()
+                .and_then(|c| (c as char).to_digit(16))
+                .ok_or_else(|| self.err(WireErrorKind::BadEscape))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn scan_number(&mut self) -> Result<f64, WireError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err(WireErrorKind::BadNumber))?;
+        match text.parse::<f64>() {
+            Ok(x) if x.is_finite() => Ok(x),
+            _ => Err(self.err(WireErrorKind::BadNumber)),
+        }
+    }
+}
+
+/// Incremental newline-delimited framing with a hard per-frame byte
+/// bound, applied to partial frames too: a client drip-feeding bytes
+/// without ever sending `\n` is cut off at the same limit.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    ready: VecDeque<Vec<u8>>,
+    max_frame: usize,
+}
+
+impl FrameReader {
+    pub fn new(max_frame: usize) -> FrameReader {
+        FrameReader { buf: Vec::new(), ready: VecDeque::new(), max_frame: max_frame.max(1) }
+    }
+
+    /// Feed one chunk of socket bytes; returns how many complete frames
+    /// became ready. Blank frames (keep-alive newlines) are dropped.
+    pub fn feed(&mut self, chunk: &[u8]) -> Result<usize, WireError> {
+        self.buf.extend_from_slice(chunk);
+        let mut n = 0;
+        while let Some(i) = self.buf.iter().position(|&b| b == b'\n') {
+            let mut frame: Vec<u8> = self.buf.drain(..=i).collect();
+            frame.pop(); // the newline
+            if frame.last() == Some(&b'\r') {
+                frame.pop();
+            }
+            if frame.len() > self.max_frame {
+                return Err(WireError { pos: 0, kind: WireErrorKind::FrameTooLong(self.max_frame) });
+            }
+            if frame.iter().all(|b| b.is_ascii_whitespace()) {
+                continue;
+            }
+            self.ready.push_back(frame);
+            n += 1;
+        }
+        if self.buf.len() > self.max_frame {
+            return Err(WireError { pos: 0, kind: WireErrorKind::FrameTooLong(self.max_frame) });
+        }
+        Ok(n)
+    }
+
+    /// Next complete frame, FIFO.
+    pub fn next_frame(&mut self) -> Option<Vec<u8>> {
+        self.ready.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain a frame into events, for assertions.
+    fn events(frame: &[u8]) -> Result<Vec<String>, WireError> {
+        let mut p = PullParser::new(frame, DEFAULT_MAX_DEPTH);
+        let mut out = Vec::new();
+        while let Some(e) = p.next()? {
+            out.push(match e {
+                Event::ObjBegin => "{".into(),
+                Event::ObjEnd => "}".into(),
+                Event::ArrBegin => "[".into(),
+                Event::ArrEnd => "]".into(),
+                Event::Key(t) => format!("key:{}", t.decode()),
+                Event::Str(t) => format!("str:{}", t.decode()),
+                Event::Num(x) => format!("num:{x}"),
+                Event::Bool(b) => format!("bool:{b}"),
+                Event::Null => "null".into(),
+            });
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn pulls_nested_structure_in_order() {
+        let got = events(br#"{"a": [1, true, null], "b": {"c": "x"}}"#).unwrap();
+        assert_eq!(
+            got,
+            vec![
+                "{", "key:a", "[", "num:1", "bool:true", "null", "]", "key:b", "{", "key:c",
+                "str:x", "}", "}"
+            ]
+        );
+    }
+
+    #[test]
+    fn scalar_top_level_values_parse() {
+        assert_eq!(events(b"42").unwrap(), vec!["num:42"]);
+        assert_eq!(events(b"\"hi\"").unwrap(), vec!["str:hi"]);
+        assert_eq!(events(b"false").unwrap(), vec!["bool:false"]);
+        assert_eq!(events(b"[]").unwrap(), vec!["[", "]"]);
+        assert_eq!(events(b"{}").unwrap(), vec!["{", "}"]);
+    }
+
+    #[test]
+    fn depth_bomb_returns_too_deep_not_overflow() {
+        let mut bomb = Vec::new();
+        for _ in 0..1000 {
+            bomb.push(b'[');
+        }
+        bomb.push(b'1');
+        for _ in 0..1000 {
+            bomb.push(b']');
+        }
+        let mut p = PullParser::new(&bomb, DEFAULT_MAX_DEPTH);
+        let err = loop {
+            match p.next() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("depth bomb accepted"),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.kind, WireErrorKind::TooDeep(DEFAULT_MAX_DEPTH));
+        // mixed object/array nesting trips the same bound
+        let bomb: Vec<u8> = br#"{"a":"#
+            .iter()
+            .copied()
+            .cycle()
+            .take(5 * 200)
+            .chain(*b"1")
+            .collect();
+        let mut p = PullParser::new(&bomb, 64);
+        let err = loop {
+            match p.next() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("depth bomb accepted"),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.kind, WireErrorKind::TooDeep(64));
+    }
+
+    #[test]
+    fn depth_within_bound_is_fine() {
+        let mut deep = Vec::new();
+        for _ in 0..DEFAULT_MAX_DEPTH {
+            deep.push(b'[');
+        }
+        for _ in 0..DEFAULT_MAX_DEPTH {
+            deep.push(b']');
+        }
+        assert!(events(&deep).is_ok());
+    }
+
+    #[test]
+    fn malformed_frames_return_structured_errors() {
+        for bad in [
+            &b"{"[..],
+            b"[1,",
+            b"\"unterminated",
+            b"{\"a\" 1}",
+            b"[1] junk",
+            b"{,}",
+            b"[1,,2]",
+            b"nul",
+            b"+1",
+            b"1e999",
+            b"{\"a\": \"\\q\"}",
+            b"\"\\ud800\"",
+            b"\"\\ud800\\u0020\"",
+        ] {
+            let mut p = PullParser::new(bad, DEFAULT_MAX_DEPTH);
+            let r = loop {
+                match p.next() {
+                    Ok(Some(_)) => continue,
+                    other => break other,
+                }
+            };
+            assert!(r.is_err(), "{:?} should fail", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn bad_utf8_in_strings_is_rejected() {
+        let frame = [b'"', 0xFF, 0xFE, b'"'];
+        let mut p = PullParser::new(&frame, DEFAULT_MAX_DEPTH);
+        assert_eq!(p.next().unwrap_err().kind, WireErrorKind::BadUtf8);
+    }
+
+    #[test]
+    fn text_decodes_escapes_and_borrows_plain_strings() {
+        let mut p = PullParser::new(br#""plain""#, 8);
+        match p.next().unwrap() {
+            Some(Event::Str(t)) => {
+                assert!(matches!(t.decode(), Cow::Borrowed("plain")));
+                assert!(t.is("plain"));
+            }
+            other => panic!("{other:?}"),
+        }
+        let mut p = PullParser::new(br#""a\"b\nc \u00e9 \ud83d\ude00""#, 8);
+        match p.next().unwrap() {
+            Some(Event::Str(t)) => {
+                assert_eq!(t.decode(), "a\"b\nc \u{e9} \u{1F600}");
+                assert!(!t.is("a\"b"), "escaped text never fast-path matches");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_reader_splits_and_buffers_partials() {
+        let mut fr = FrameReader::new(1024);
+        assert_eq!(fr.feed(b"{\"op\":\"ping\"}\n{\"op\":").unwrap(), 1);
+        assert_eq!(fr.next_frame().unwrap(), b"{\"op\":\"ping\"}");
+        assert!(fr.next_frame().is_none());
+        assert_eq!(fr.feed(b"\"quit\"}\r\n\n").unwrap(), 1, "blank keep-alive line dropped");
+        assert_eq!(fr.next_frame().unwrap(), b"{\"op\":\"quit\"}");
+    }
+
+    #[test]
+    fn frame_reader_bounds_complete_and_partial_frames() {
+        let mut fr = FrameReader::new(8);
+        let err = fr.feed(b"0123456789\n").unwrap_err();
+        assert_eq!(err.kind, WireErrorKind::FrameTooLong(8));
+        // a drip-fed frame with no newline trips the same bound
+        let mut fr = FrameReader::new(8);
+        assert_eq!(fr.feed(b"0123").unwrap(), 0);
+        let err = fr.feed(b"456789").unwrap_err();
+        assert_eq!(err.kind, WireErrorKind::FrameTooLong(8));
+    }
+
+    #[test]
+    fn numbers_parse_with_signs_and_exponents() {
+        assert_eq!(events(b"[-3.5e2, 0.25, 1e3]").unwrap()[1], "num:-350");
+        assert_eq!(events(b"[-3.5e2, 0.25, 1e3]").unwrap()[2], "num:0.25");
+    }
+}

@@ -158,7 +158,7 @@ mod tests {
     use super::*;
 
     fn cmd() -> Command {
-        Command::new("serve", "run the coordinator")
+        Command::new("serve", "TCP GEMM serving gateway")
             .opt("size", "matrix size", Some("128"))
             .opt("policy", "ft policy", Some("online"))
             .flag("verbose", "log more")

@@ -15,6 +15,7 @@ use crate::abft::checksum::Thresholds;
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::{CoordinatorConfig, FtLevel, HostVerify};
 use crate::runtime::EngineConfig;
+use crate::serve::ServeConfig;
 
 /// Parsed config: `section.key -> raw value`.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -211,6 +212,31 @@ impl Config {
         Ok(cfg)
     }
 
+    /// `[serve]` section → [`ServeConfig`]: the gateway's listen address,
+    /// connection-thread count, and frame-size bound. Validated here (the
+    /// config/CLI boundary) so a bad deployment file fails with field
+    /// names before any socket is bound.
+    pub fn serve(&self) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        if let Some(listen) = self.str("serve.listen")? {
+            cfg.listen = listen.to_string();
+        }
+        if let Some(n) = self.usize("serve.threads")? {
+            cfg.threads = n;
+        }
+        if let Some(n) = self.usize("serve.max_frame_bytes")? {
+            cfg.max_frame_bytes = n;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Whether the config carries a `[serve]` section at all (the CLI uses
+    /// this to decide between TCP and stdin mode when `--listen` is absent).
+    pub fn has_serve_section(&self) -> bool {
+        self.keys().any(|k| k.starts_with("serve."))
+    }
+
     /// `[batcher]` section → [`BatcherConfig`].
     pub fn batcher(&self) -> Result<BatcherConfig> {
         let mut cfg = BatcherConfig::default();
@@ -284,6 +310,11 @@ max_queue = 256
 [batcher]
 max_batch = 32
 batch_window_us = 500
+
+[serve]
+listen = "127.0.0.1:7500"
+threads = 8
+max_frame_bytes = 65536
 "#;
 
     #[test]
@@ -313,6 +344,33 @@ batch_window_us = 500
         let b = c.batcher().unwrap();
         assert_eq!(b.max_batch, 32);
         assert_eq!(b.batch_window, std::time::Duration::from_micros(500));
+        let s = c.serve().unwrap();
+        assert_eq!(s.listen, "127.0.0.1:7500");
+        assert_eq!(s.threads, 8);
+        assert_eq!(s.max_frame_bytes, 65536);
+        assert!(c.has_serve_section());
+    }
+
+    #[test]
+    fn serve_section_defaults_and_validation() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.serve().unwrap(), ServeConfig::default());
+        assert!(!c.has_serve_section());
+        // partial sections keep the other defaults
+        let c = Config::parse("[serve]\nthreads = 2").unwrap();
+        let s = c.serve().unwrap();
+        assert_eq!(s.threads, 2);
+        assert_eq!(s.listen, ServeConfig::default().listen);
+        assert!(c.has_serve_section());
+        // validation fires at the config boundary with field names
+        let c = Config::parse("[serve]\nthreads = 0").unwrap();
+        assert!(c.serve().unwrap_err().to_string().contains("threads"));
+        let c = Config::parse("[serve]\nlisten = \"no-port\"").unwrap();
+        assert!(c.serve().unwrap_err().to_string().contains("listen"));
+        let c = Config::parse("[serve]\nmax_frame_bytes = 64").unwrap();
+        assert!(c.serve().unwrap_err().to_string().contains("max_frame_bytes"));
+        let c = Config::parse("[serve]\nlisten = 7421").unwrap();
+        assert!(c.serve().is_err(), "listen must be a string");
     }
 
     #[test]

@@ -103,8 +103,20 @@ impl Json {
     }
 
     // ---- parsing ---------------------------------------------------------
+
+    /// Parse with the default nesting bound ([`Json::DEFAULT_MAX_DEPTH`]).
     pub fn parse(text: &str) -> Result<Json, ParseError> {
-        let mut p = Parser { b: text.as_bytes(), pos: 0 };
+        Json::parse_with_max_depth(text, Json::DEFAULT_MAX_DEPTH)
+    }
+
+    /// Containers nested deeper than this return a [`ParseError`] instead
+    /// of recursing — `value()` is recursive descent, so unbounded input
+    /// depth would otherwise overflow the thread stack.
+    pub const DEFAULT_MAX_DEPTH: usize = 64;
+
+    /// [`Json::parse`] with an explicit nesting bound (min 1).
+    pub fn parse_with_max_depth(text: &str, max_depth: usize) -> Result<Json, ParseError> {
+        let mut p = Parser { b: text.as_bytes(), pos: 0, depth: 0, max_depth: max_depth.max(1) };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -242,6 +254,10 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    /// Open containers around the current position.
+    depth: usize,
+    /// Bound on `depth` (stack-overflow guard for hostile input).
+    max_depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -296,12 +312,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), ParseError> {
+        if self.depth >= self.max_depth {
+            return Err(self.err(&format!("nesting deeper than {}", self.max_depth)));
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, ParseError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -315,7 +341,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(m)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(m));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
@@ -323,10 +352,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, ParseError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -335,7 +366,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(v)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(v));
+                }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
@@ -505,5 +539,31 @@ mod tests {
     fn integer_formatting_has_no_decimal_point() {
         assert_eq!(Json::Num(128.0).to_string(), "128");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn depth_1000_input_errors_instead_of_overflowing() {
+        for bomb in [
+            format!("{}1{}", "[".repeat(1000), "]".repeat(1000)),
+            format!("{}1{}", "{\"a\":".repeat(1000), "}".repeat(1000)),
+            // unclosed: must die at the bound, not at the missing closers
+            "[".repeat(1000),
+        ] {
+            let err = Json::parse(&bomb).expect_err("depth bomb accepted");
+            assert!(err.msg.contains("nesting deeper than 64"), "{err}");
+        }
+    }
+
+    #[test]
+    fn max_depth_is_configurable_and_inclusive() {
+        let nested = |d: usize| format!("{}1{}", "[".repeat(d), "]".repeat(d));
+        // depth == bound parses; depth == bound + 1 fails
+        assert!(Json::parse_with_max_depth(&nested(64), 64).is_ok());
+        assert!(Json::parse_with_max_depth(&nested(65), 64).is_err());
+        assert!(Json::parse_with_max_depth(&nested(3), 2).is_err());
+        assert!(Json::parse_with_max_depth(&nested(1000), 1000).is_ok());
+        // default entrypoint uses DEFAULT_MAX_DEPTH
+        assert!(Json::parse(&nested(Json::DEFAULT_MAX_DEPTH)).is_ok());
+        assert!(Json::parse(&nested(Json::DEFAULT_MAX_DEPTH + 1)).is_err());
     }
 }

@@ -926,3 +926,158 @@ fn blocked_split_gemm_spreads_over_the_pool() {
     assert_eq!(out.kernel_launches, 8);
     check_close(&out.c, &a.matmul(&b), 5e-2, "blocked split");
 }
+
+// ---------------------------------------------------------------------
+// TCP serving gateway over loopback (single-connection smoke lives in
+// serve::tests; this exercises real concurrency + fault injection)
+// ---------------------------------------------------------------------
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use ftgemm::serve::proto::GemmSpec;
+use ftgemm::serve::{Gateway, ServeConfig};
+use ftgemm::util::json::Json;
+
+fn wire_client(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).expect("connect gateway");
+    stream.set_nodelay(true).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn wire_send(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+}
+
+fn wire_recv(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(!line.is_empty(), "server closed the connection unexpectedly");
+    Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad response {line:?}: {e}"))
+}
+
+/// 16 concurrent clients pipeline mixed-policy/priority GEMMs (the online
+/// ones with an injected SEU), plus a depth-bomb frame that must poison
+/// only its own slot, against the blocked backend. Every client also runs
+/// one canonical spec — identical across clients — whose checksum must be
+/// identical everywhere (seeded operands make results content-addressed).
+#[test]
+fn gateway_serves_sixteen_concurrent_clients_with_faults() {
+    const CLIENTS: usize = 16;
+    const PER_CLIENT: usize = 3;
+    let policies = [FtPolicy::Online, FtPolicy::None, FtPolicy::Offline];
+    let priorities = [Priority::Low, Priority::Normal, Priority::High];
+
+    let gw = Gateway::start(
+        blocked_coordinator(4),
+        ServeConfig { listen: "127.0.0.1:0".into(), threads: 8, ..Default::default() },
+    )
+    .unwrap();
+    let addr = gw.local_addr();
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let (mut stream, mut reader) = wire_client(addr);
+                // pipeline everything first, then settle in order
+                for i in 0..PER_CLIENT {
+                    let seq = c * PER_CLIENT + i;
+                    let mut spec = GemmSpec::new(96, 96, 96);
+                    spec.id = 1000 + seq as u64;
+                    spec.policy = policies[seq % policies.len()];
+                    spec.priority = priorities[seq % priorities.len()];
+                    spec.seed = seq as u64 + 1;
+                    if spec.policy == FtPolicy::Online {
+                        spec.inject = 1;
+                    }
+                    wire_send(&mut stream, &spec.to_wire_json());
+                }
+                let bomb = format!("{}1{}", "[".repeat(900), "]".repeat(900));
+                wire_send(&mut stream, &bomb);
+                let mut canon = GemmSpec::new(64, 64, 64);
+                canon.id = 7;
+                canon.seed = 123;
+                wire_send(&mut stream, &canon.to_wire_json());
+                wire_send(&mut stream, r#"{"op": "ping"}"#);
+
+                for i in 0..PER_CLIENT {
+                    let seq = c * PER_CLIENT + i;
+                    let v = wire_recv(&mut reader);
+                    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{v}");
+                    assert_eq!(v.get("id").and_then(Json::as_usize), Some(1000 + seq));
+                    if policies[seq % policies.len()] == FtPolicy::Online {
+                        let detected = v.get("detected").and_then(Json::as_usize).unwrap();
+                        assert!(detected >= 1, "injected SEU went undetected: {v}");
+                    }
+                }
+                let v = wire_recv(&mut reader);
+                assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false), "{v}");
+                let kind = v.get("error").and_then(Json::as_str);
+                assert!(
+                    kind == Some("parse") || kind == Some("validation"),
+                    "depth bomb must yield a structured protocol error: {v}"
+                );
+                let v = wire_recv(&mut reader);
+                assert_eq!(v.get("id").and_then(Json::as_usize), Some(7), "{v}");
+                let checksum = v.get("checksum").and_then(Json::as_f64).unwrap();
+                assert!(checksum.is_finite());
+                let v = wire_recv(&mut reader);
+                assert_eq!(v.get("op").and_then(Json::as_str), Some("ping"), "{v}");
+                wire_send(&mut stream, r#"{"op": "quit"}"#);
+                checksum
+            })
+        })
+        .collect();
+
+    let checksums: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(
+        checksums.windows(2).all(|w| w[0] == w[1]),
+        "canonical spec produced diverging checksums: {checksums:?}"
+    );
+
+    let snap = gw.snapshot();
+    assert_eq!(snap.connections as usize, CLIENTS);
+    assert_eq!(snap.protocol_errors as usize, CLIENTS, "one depth bomb per client");
+    assert_eq!(snap.gemms as usize, CLIENTS * (PER_CLIENT + 1));
+}
+
+/// A queue deadline that passes before dispatch must come back as the
+/// structured `deadline-expired` error, not a generic failure: a High
+/// priority slow request occupies the only dispatch slot, so the doomed
+/// Normal request's 1ms deadline expires while it waits.
+#[test]
+fn gateway_reports_queue_deadline_expiry_as_such() {
+    let coord = Coordinator::new(
+        pool_engine(1),
+        CoordinatorConfig { max_inflight: 1, ..Default::default() },
+    );
+    let gw = Gateway::start(
+        coord,
+        ServeConfig { listen: "127.0.0.1:0".into(), threads: 1, ..Default::default() },
+    )
+    .unwrap();
+    let (mut stream, mut reader) = wire_client(gw.local_addr());
+
+    let mut slow = GemmSpec::new(512, 512, 512);
+    slow.id = 1;
+    slow.priority = Priority::High; // priority trumps deadline ordering
+    let mut doomed = GemmSpec::new(64, 64, 64);
+    doomed.id = 2;
+    doomed.deadline_ms = Some(1);
+    wire_send(&mut stream, &slow.to_wire_json());
+    wire_send(&mut stream, &doomed.to_wire_json());
+
+    let first = wire_recv(&mut reader);
+    assert_eq!(first.get("id").and_then(Json::as_usize), Some(1), "{first}");
+    assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true), "{first}");
+    let second = wire_recv(&mut reader);
+    assert_eq!(second.get("id").and_then(Json::as_usize), Some(2), "{second}");
+    assert_eq!(second.get("ok").and_then(Json::as_bool), Some(false), "{second}");
+    assert_eq!(
+        second.get("error").and_then(Json::as_str),
+        Some("deadline-expired"),
+        "{second}"
+    );
+}

@@ -625,3 +625,69 @@ fn prop_geomean_between_min_and_max() {
         assert!(g >= mn - 1e-9 && g <= mx + 1e-9);
     });
 }
+
+// ---------------------------------------------------------------------
+// Serving wire protocol
+// ---------------------------------------------------------------------
+
+/// Any representable GemmSpec must survive encode -> decode verbatim:
+/// `to_wire_json` omits default-valued fields, so this also proves the
+/// decoder's defaults match the encoder's.
+#[test]
+fn prop_wire_roundtrip() {
+    use ftgemm::abft::injection::Injection;
+    use ftgemm::abft::FtLevel;
+    use ftgemm::coordinator::{FtPolicy, HostVerify, Priority};
+    use ftgemm::serve::proto::{self, GemmSpec, WireRequest};
+    use ftgemm::serve::wire::DEFAULT_MAX_DEPTH;
+
+    forall("wire-roundtrip", |rng| {
+        let mut spec = GemmSpec::new(
+            rand_dims(rng, 1, 300),
+            rand_dims(rng, 1, 300),
+            rand_dims(rng, 1, 300),
+        );
+        spec.id = rng.usize_below(1 << 20) as u64;
+        spec.policy = [FtPolicy::None, FtPolicy::Online, FtPolicy::Offline][rng.usize_below(3)];
+        spec.seed = rng.usize_below(10_000) as u64;
+        if rng.below(2) == 0 {
+            spec.inject = rng.usize_below(4);
+        } else {
+            for _ in 0..rng.usize_below(4) {
+                spec.injections.push(Injection {
+                    row: rng.usize_below(spec.m),
+                    col: rng.usize_below(spec.n),
+                    step: rng.usize_below(64),
+                    magnitude: rng.range_f32(-4096.0, 4096.0),
+                });
+            }
+        }
+        if rng.below(2) == 0 {
+            spec.ft_level = Some(FtLevel::ALL[rng.usize_below(3)]);
+        }
+        if rng.below(2) == 0 {
+            let modes = [HostVerify::Off, HostVerify::CleanOnly, HostVerify::Always];
+            spec.host_verify = Some(modes[rng.usize_below(3)]);
+        }
+        if rng.below(2) == 0 {
+            spec.threshold_rel = Some(rng.range_f32(1e-6, 1e-2));
+        }
+        if rng.below(2) == 0 {
+            spec.threshold_abs = Some(rng.range_f32(1e-4, 10.0));
+        }
+        if rng.below(2) == 0 {
+            spec.max_recomputes = Some(rng.usize_below(8));
+        }
+        spec.priority =
+            [Priority::Low, Priority::Normal, Priority::High][rng.usize_below(3)];
+        if rng.below(2) == 0 {
+            // 0 decodes as "no deadline", so the wire value is always >= 1
+            spec.deadline_ms = Some(1 + rng.usize_below(60_000) as u64);
+        }
+
+        let frame = spec.to_wire_json();
+        let decoded = proto::decode(frame.as_bytes(), DEFAULT_MAX_DEPTH)
+            .unwrap_or_else(|e| panic!("roundtrip decode of {frame}: {e:?}"));
+        assert_eq!(decoded, WireRequest::Gemm(Box::new(spec)), "frame {frame}");
+    });
+}
