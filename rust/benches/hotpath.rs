@@ -135,10 +135,16 @@ fn bench_worker_pipeline() {
     const SHAPE: (usize, usize, usize) = (1024, 1024, 1024); // 2x2x2 huge blocks
     // worker axis for the analytic (gpusim) scaling curves
     const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
-    // blocked-scalar only pins the workers=1 gate/overhead points; the
-    // worker axis is covered by the dispatched backends.
-    const SWEEP: [(&str, &[usize]); 3] =
-        [("reference", &[1, 2, 4]), ("blocked-scalar", &[1]), ("blocked", &[1, 2, 4])];
+    // (workers-per-pool, pools) sweep points. blocked-scalar only pins the
+    // workers=1 gate/overhead points; the worker axis is covered by the
+    // dispatched backends, and blocked additionally traces the
+    // engine-sharding axis (workers=1, pools 2/4) that the serving
+    // scaling gate exercises end to end.
+    const SWEEP: [(&str, &[(usize, usize)]); 3] = [
+        ("reference", &[(1, 1), (2, 1), (4, 1)]),
+        ("blocked-scalar", &[(1, 1)]),
+        ("blocked", &[(1, 1), (2, 1), (4, 1), (1, 2), (1, 4)]),
+    ];
 
     let a = Matrix::rand_uniform(SHAPE.0, SHAPE.2, 10);
     let b = Matrix::rand_uniform(SHAPE.2, SHAPE.1, 11);
@@ -150,11 +156,12 @@ fn bench_worker_pipeline() {
     let mut blocks = 0u64;
     // (backend, mean wall time, kernel ISA) at the workers=1 gate point
     let mut gate_means: Vec<(&str, f64, &'static str)> = Vec::new();
-    for &(backend, worker_counts) in &SWEEP {
+    for &(backend, sweep_points) in &SWEEP {
         let mut base_mean: Option<f64> = None;
-        for &workers in worker_counts {
+        for &(workers, pools) in sweep_points {
             let engine = Engine::start(EngineConfig {
                 workers,
+                pools,
                 backend: backend.to_string(),
                 ..Default::default()
             })
@@ -167,12 +174,17 @@ fn bench_worker_pipeline() {
             // warm every worker's executable cache before timing
             let first = coord.gemm(&a, &b, FtPolicy::Online).expect("warmup gemm");
             blocks = first.buckets.len() as u64;
-            let r = hq.bench(&format!("pipeline/split1024/{backend}/workers{workers}"), || {
+            let label = if pools == 1 {
+                format!("pipeline/split1024/{backend}/workers{workers}")
+            } else {
+                format!("pipeline/split1024/{backend}/pools{pools}")
+            };
+            let r = hq.bench(&label, || {
                 black_box(coord.gemm(&a, &b, FtPolicy::Online).unwrap());
             });
             let mean_s = r.mean.as_secs_f64();
             let base = *base_mean.get_or_insert(mean_s);
-            if workers == 1 {
+            if workers == 1 && pools == 1 {
                 gate_means.push((backend, mean_s, kernel_isa));
                 if backend != "reference" {
                     // clean-vs-FT overhead at the gate point (paper's
@@ -195,6 +207,7 @@ fn bench_worker_pipeline() {
             entry.set("backend", Json::Str(backend.into()));
             entry.set("kernel_isa", Json::Str(kernel_isa.into()));
             entry.set("workers", Json::Num(workers as f64));
+            entry.set("pools", Json::Num(pools as f64));
             entry.set("mean_s", Json::Num(mean_s));
             entry.set("speedup_vs_1worker", Json::Num(base / mean_s));
             entry.set("peak_inflight", Json::Num(engine.peak_inflight() as f64));
@@ -272,7 +285,11 @@ fn bench_worker_pipeline() {
     // The network-serving series is measured by a separate closed-loop
     // harness (`loadgen --bench-out`), which replaces this placeholder
     // with throughput/latency entries; CI runs it right after this bench.
+    // `pool_scaling` is derived by the same merge once the series spans
+    // two shard counts (a pools=1 run plus an --append-serving multi-pool
+    // run) and is what `bench-check --require-scaling` gates on.
     root.set("serving", Json::Null);
+    root.set("pool_scaling", Json::Null);
     root.set(
         "note",
         Json::Str(
@@ -281,8 +298,9 @@ fn bench_worker_pipeline() {
              enforces (blocked vs reference, and blocked vs its pinned-scalar kernel); \
              `ft_overhead` = clean (policy=none) vs fused-FT (policy=online) wall time per \
              blocked variant at that point; `serving` = gateway throughput/latency measured \
-             over TCP by `loadgen --bench-out` (null until it runs); regenerate with \
-             `cargo bench --bench hotpath` then the loadgen smoke"
+             over TCP by `loadgen --bench-out` (null until it runs) and `pool_scaling` = the \
+             multi-pool throughput ratio loadgen derives from it (null until a two-shard-count \
+             series exists); regenerate with `cargo bench --bench hotpath` then the loadgen smoke"
                 .into(),
         ),
     );

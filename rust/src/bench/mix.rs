@@ -1,0 +1,113 @@
+//! Named workload-mix presets shared by the `loadgen` harness and the CI
+//! pipelines.
+//!
+//! The gateway smoke job and the scheduled full-bench workflow used to
+//! spell the same client mix twice as raw flag strings in two YAML files;
+//! a typo in one silently made the gate measure a different workload than
+//! the one the committed baseline was recorded against. This table is the
+//! single source of truth: CI passes `loadgen --preset <name>` and the
+//! flag strings live here, next to a test that pins them.
+//!
+//! Presets only *default* the mix knobs — an explicit `--mix`/`--policies`/
+//! `--priorities`/`--inject` flag still wins, so ad-hoc experiments can
+//! start from a preset and override one axis.
+
+/// One named workload mix. Fields mirror the `loadgen` flags of the same
+/// name and use the same comma-separated wire syntax so the preset can be
+/// echoed verbatim into logs and reproduced by hand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MixPreset {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// Shape classes to cycle (`small|medium|large|huge`), comma-separated.
+    pub shapes: &'static str,
+    /// FT policies to cycle (`none|online|offline`), comma-separated.
+    pub policies: &'static str,
+    /// Priorities to cycle (`low|normal|high`), comma-separated.
+    pub priorities: &'static str,
+    /// Correctable SEUs injected per request server-side.
+    pub inject: usize,
+}
+
+/// The preset registry. Order is the display order of `--preset help`.
+pub const PRESETS: &[MixPreset] = &[
+    MixPreset {
+        name: "ci-smoke",
+        description: "gateway-smoke gate mix: small/medium, online+none, two priorities, 1 SEU",
+        shapes: "small,medium",
+        policies: "online,none",
+        priorities: "normal,high",
+        inject: 1,
+    },
+    MixPreset {
+        name: "latency",
+        description: "single-class latency floor: small, no FT, one priority, clean",
+        shapes: "small",
+        policies: "none",
+        priorities: "normal",
+        inject: 0,
+    },
+    MixPreset {
+        name: "stress",
+        description: "wide mix for soak runs: all four classes, every policy and priority, 1 SEU",
+        shapes: "small,medium,large,huge",
+        policies: "none,online,offline",
+        priorities: "low,normal,high",
+        inject: 1,
+    },
+];
+
+/// Look up a preset by name.
+pub fn preset(name: &str) -> Option<&'static MixPreset> {
+    PRESETS.iter().find(|p| p.name == name)
+}
+
+/// One line per preset, for `--preset help` / error messages.
+pub fn describe_presets() -> String {
+    let mut s = String::new();
+    for p in PRESETS {
+        s.push_str(&format!(
+            "  {:<9} {} (--mix {} --policies {} --priorities {} --inject {})\n",
+            p.name, p.description, p.shapes, p.policies, p.priorities, p.inject
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_finds_every_preset_and_rejects_unknowns() {
+        for p in PRESETS {
+            assert_eq!(preset(p.name), Some(p));
+        }
+        assert!(preset("nope").is_none());
+        assert!(preset("").is_none());
+    }
+
+    /// The gate mix is what the committed serving baselines were recorded
+    /// against; changing it silently invalidates them. Change this test
+    /// only together with a baseline regeneration.
+    #[test]
+    fn ci_smoke_mix_is_pinned() {
+        let p = preset("ci-smoke").expect("ci-smoke preset must exist");
+        assert_eq!(p.shapes, "small,medium");
+        assert_eq!(p.policies, "online,none");
+        assert_eq!(p.priorities, "normal,high");
+        assert_eq!(p.inject, 1);
+    }
+
+    #[test]
+    fn preset_names_are_unique_and_described() {
+        let mut names: Vec<&str> = PRESETS.iter().map(|p| p.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), PRESETS.len(), "duplicate preset name");
+        let listing = describe_presets();
+        for p in PRESETS {
+            assert!(listing.contains(p.name));
+        }
+    }
+}

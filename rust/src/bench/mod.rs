@@ -2,6 +2,8 @@
 //! criterion). Warmup + timed iterations + robust statistics, and a
 //! markdown summary compatible with EXPERIMENTS.md.
 
+pub mod mix;
+
 use std::time::{Duration, Instant};
 
 use crate::util::stats::{Quantiles, Running};

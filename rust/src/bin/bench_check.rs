@@ -1,7 +1,8 @@
 //! `bench-check` — schema + perf-gate validator for `BENCH_pipeline.json`.
 //!
 //!     cargo run --release --bin bench-check -- [FILE] \
-//!         [--min-speedup X] [--min-simd-speedup Y]
+//!         [--min-speedup X] [--min-simd-speedup Y] [--require-serving] \
+//!         [--require-scaling] [--min-pool-speedup Z]
 //!
 //! CI runs this right after `cargo bench --bench hotpath`, replacing the
 //! old silent upload-whatever-was-written flow with an enforced gate:
@@ -21,7 +22,13 @@
 //!   — there is no SIMD to compare on such a host);
 //! * every `serving[]` entry must have consistent counters, ordered
 //!   finite latency percentiles, positive throughput, and **zero
-//!   protocol errors**.
+//!   protocol errors**;
+//! * with `--require-scaling`, the file must carry the `pool_scaling`
+//!   block loadgen derives when the serving series spans at least two
+//!   shard counts: the sweep curve of every shard group must be monotone
+//!   up to its knee (within a 0.95 noise tolerance), and the
+//!   baseline-to-top throughput ratio at the shared gate point must be
+//!   at least `--min-pool-speedup` (default 1.6).
 //!
 //! Failures are classified, not lumped: a **committed placeholder**
 //! (null `live`/`gate`, benches never ran) and a **stale schema** are
@@ -36,6 +43,11 @@ use ftgemm::util::json::Json;
 
 const SCHEMA: &str = "ftgemm-bench-pipeline/4";
 
+/// A sweep point must reach this fraction of the previous point's rps to
+/// count as "still climbing" — absorbs run-to-run noise on the way to the
+/// knee without letting a real scalability cliff through.
+const KNEE_TOLERANCE: f64 = 0.95;
+
 /// What a passing file measured, for the success printout.
 struct Report {
     blocked_speedup: f64,
@@ -44,9 +56,19 @@ struct Report {
     kernel_isa: String,
     /// (backend, kernel_isa, fractional overhead) per ft_overhead entry.
     overheads: Vec<(String, String, f64)>,
-    /// (mode, clients, ok, p99_ms, rps) per serving entry; `None` when
-    /// the series is the null placeholder (loadgen has not run).
-    serving: Option<Vec<(String, usize, u64, f64, f64)>>,
+    /// (mode, pools, clients, ok, p99_ms, rps) per serving entry; `None`
+    /// when the series is the null placeholder (loadgen has not run).
+    serving: Option<Vec<(String, usize, usize, u64, f64, f64)>>,
+    /// The validated pool_scaling block; `None` when absent/null.
+    scaling: Option<Scaling>,
+}
+
+/// The validated `pool_scaling` summary (written by `loadgen` at merge).
+struct Scaling {
+    baseline_pools: usize,
+    top_pools: usize,
+    gate_clients: usize,
+    ratio: f64,
 }
 
 fn main() -> ExitCode {
@@ -58,7 +80,13 @@ fn main() -> ExitCode {
             "required blocked-vs-blocked-scalar speedup at 1024^3",
             Some("1.0"),
         )
-        .flag("require-serving", "fail if the serving series is still the null placeholder");
+        .flag("require-serving", "fail if the serving series is still the null placeholder")
+        .flag("require-scaling", "fail if the pool_scaling block is absent (multi-pool loadgen)")
+        .opt(
+            "min-pool-speedup",
+            "required baseline-to-top-pools rps ratio at the scaling gate point",
+            Some("1.6"),
+        );
     let args = match cmd.parse(&argv) {
         Ok(args) => args,
         Err(e) => {
@@ -70,7 +98,9 @@ fn main() -> ExitCode {
     let min_speedup = args.f64_or("min-speedup", 2.0);
     let min_simd = args.f64_or("min-simd-speedup", 1.0);
     let require_serving = args.flag("require-serving");
-    match check(path, min_speedup, min_simd, require_serving) {
+    let require_scaling = args.flag("require-scaling");
+    let min_pool_speedup = args.f64_or("min-pool-speedup", 1.6);
+    match check(path, min_speedup, min_simd, require_serving, require_scaling, min_pool_speedup) {
         Ok(report) => {
             println!(
                 "bench-check OK: {path} valid, blocked[{}] {:.2}x reference (gate \
@@ -94,13 +124,22 @@ fn main() -> ExitCode {
                     "  serving: null placeholder — gateway loadgen has not run against this file"
                 ),
                 Some(entries) => {
-                    for (mode, clients, ok, p99, rps) in entries {
+                    for (mode, pools, clients, ok, p99, rps) in entries {
                         println!(
-                            "  serving: {mode} loop x{clients} clients — {ok} ok, \
-                             p99 {p99:.2}ms, {rps:.1} req/s, 0 protocol errors"
+                            "  serving: {mode} loop x{clients} clients, {pools} pool(s) — \
+                             {ok} ok, p99 {p99:.2}ms, {rps:.1} req/s, 0 protocol errors"
                         );
                     }
                 }
+            }
+            match &report.scaling {
+                None => println!(
+                    "  scaling: pool_scaling absent — serving series spans one shard count"
+                ),
+                Some(s) => println!(
+                    "  scaling gate: {}→{} pools at {} clients — {:.2}x rps (gate {:.2}x)",
+                    s.baseline_pools, s.top_pools, s.gate_clients, s.ratio, min_pool_speedup
+                ),
             }
             ExitCode::SUCCESS
         }
@@ -117,6 +156,8 @@ fn check(
     min_speedup: f64,
     min_simd: f64,
     require_serving: bool,
+    require_scaling: bool,
+    min_pool_speedup: f64,
 ) -> anyhow::Result<Report> {
     use anyhow::{anyhow, bail, Context};
 
@@ -196,7 +237,13 @@ fn check(
         if !(mean_s.is_finite() && mean_s > 0.0) {
             bail!("live[{i}]: mean_s {mean_s} is not a positive finite wall time");
         }
-        if workers == 1 {
+        // pool-scaling points carry pools > 1; the single-shard perf gate
+        // below must only match the pools=1 (or legacy pool-less) entries
+        let pools = entry.path("pools").and_then(Json::as_usize).unwrap_or(1);
+        if pools == 0 {
+            bail!("live[{i}]: pools must be >= 1");
+        }
+        if workers == 1 && pools == 1 {
             match backend {
                 "reference" => gate_reference = Some((mean_s, isa.to_string())),
                 "blocked-scalar" => gate_scalar = Some((mean_s, isa.to_string())),
@@ -214,6 +261,7 @@ fn check(
 
     let overheads = check_ft_overhead(&root)?;
     let serving = check_serving(&root, require_serving)?;
+    let scaling = check_scaling(&root, require_scaling, min_pool_speedup)?;
 
     let blocked_speedup = reference / blocked;
     if blocked_speedup < min_speedup {
@@ -238,7 +286,7 @@ fn check(
         }
         Some(s)
     };
-    Ok(Report { blocked_speedup, simd_speedup, kernel_isa, overheads, serving })
+    Ok(Report { blocked_speedup, simd_speedup, kernel_isa, overheads, serving, scaling })
 }
 
 /// Validate the `serving` series (schema /4): the gateway loadgen's
@@ -247,7 +295,7 @@ fn check(
 fn check_serving(
     root: &Json,
     require_serving: bool,
-) -> anyhow::Result<Option<Vec<(String, usize, u64, f64, f64)>>> {
+) -> anyhow::Result<Option<Vec<(String, usize, usize, u64, f64, f64)>>> {
     use anyhow::{anyhow, bail};
 
     let series = match root.path("serving") {
@@ -282,6 +330,11 @@ fn check_serving(
                 .ok_or_else(|| anyhow!("serving[{i}]: missing {key}"))
         };
         let clients = num("clients")? as usize;
+        // optional for pre-sharding files; loadgen now always writes it
+        let pools = entry.path("pools").and_then(Json::as_usize).unwrap_or(1);
+        if pools == 0 {
+            bail!("serving[{i}]: pools must be >= 1");
+        }
         let requests = num("requests")? as u64;
         let ok = num("ok")? as u64;
         let protocol_errors = num("protocol_errors")? as u64;
@@ -310,9 +363,124 @@ fn check_serving(
         if !(rps.is_finite() && rps > 0.0) {
             bail!("serving[{i}]: rps {rps} is not a positive finite throughput");
         }
-        out.push((mode.to_string(), clients, ok, p99, rps));
+        out.push((mode.to_string(), pools, clients, ok, p99, rps));
     }
     Ok(Some(out))
+}
+
+/// Validate the `pool_scaling` block and the shape of the serving sweep
+/// curves behind it. Absent/null means the serving series spans a single
+/// shard count — accepted unless `--require-scaling`.
+fn check_scaling(
+    root: &Json,
+    require_scaling: bool,
+    min_pool_speedup: f64,
+) -> anyhow::Result<Option<Scaling>> {
+    use anyhow::{anyhow, bail};
+
+    let block = match root.path("pool_scaling") {
+        None | Some(Json::Null) => {
+            if require_scaling {
+                bail!(
+                    "pool_scaling is absent but --require-scaling is set — run loadgen \
+                     --bench-out against a --pools 1 gateway, then again with \
+                     --append-serving against a multi-pool gateway"
+                );
+            }
+            return Ok(None);
+        }
+        Some(v) => v,
+    };
+    let num = |key: &str| {
+        block
+            .path(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("pool_scaling: missing {key}"))
+    };
+    let baseline_pools = num("baseline_pools")? as usize;
+    let top_pools = num("top_pools")? as usize;
+    let gate_clients = num("gate_clients")? as usize;
+    let baseline_rps = num("baseline_rps")?;
+    let top_rps = num("top_rps")?;
+    let ratio = num("ratio")?;
+    if baseline_pools == 0 || top_pools <= baseline_pools {
+        bail!(
+            "pool_scaling: shard counts out of order (baseline {baseline_pools}, \
+             top {top_pools})"
+        );
+    }
+    for (name, v) in [("baseline_rps", baseline_rps), ("top_rps", top_rps), ("ratio", ratio)] {
+        if !(v.is_finite() && v > 0.0) {
+            bail!("pool_scaling: {name} {v} is not positive and finite");
+        }
+    }
+    if (ratio - top_rps / baseline_rps).abs() > 1e-6 {
+        bail!(
+            "pool_scaling: ratio {ratio} inconsistent with top/baseline rps \
+             ({top_rps:.2} / {baseline_rps:.2})"
+        );
+    }
+
+    // The gate ratio is only meaningful on a sane sweep: within each shard
+    // group the throughput-vs-clients curve must climb monotonically (to
+    // KNEE_TOLERANCE) until its knee, and the gate point must really have
+    // been measured in both the baseline and the top group.
+    // pools -> clients -> rps; a re-run at the same point supersedes the
+    // earlier measurement, matching how loadgen derived the block
+    let mut curves: std::collections::BTreeMap<usize, std::collections::BTreeMap<usize, f64>> =
+        std::collections::BTreeMap::new();
+    if let Some(series) = root.path("serving").and_then(Json::as_arr) {
+        for e in series {
+            let pools = e.path("pools").and_then(Json::as_usize).unwrap_or(1);
+            let (Some(clients), Some(rps)) = (
+                e.path("clients").and_then(Json::as_usize),
+                e.path("rps").and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            curves.entry(pools).or_default().insert(clients, rps);
+        }
+    }
+    for (pools, points) in &curves {
+        let curve: Vec<(usize, f64)> = points.iter().map(|(&c, &r)| (c, r)).collect();
+        let knee = curve
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        for w in curve[..=knee].windows(2) {
+            let ((c0, r0), (c1, r1)) = (w[0], w[1]);
+            if r1 < KNEE_TOLERANCE * r0 {
+                bail!(
+                    "scaling gate FAILED: pools={pools} sweep is not monotone up to its \
+                     knee — rps drops {r0:.2} -> {r1:.2} between {c0} and {c1} clients \
+                     (tolerance {KNEE_TOLERANCE})"
+                );
+            }
+        }
+    }
+    for (name, pools) in [("baseline", baseline_pools), ("top", top_pools)] {
+        let measured = curves
+            .get(&pools)
+            .map(|c| c.contains_key(&gate_clients))
+            .unwrap_or(false);
+        if !measured {
+            bail!(
+                "pool_scaling: gate point ({gate_clients} clients) was never measured in \
+                 the {name} (pools={pools}) serving group"
+            );
+        }
+    }
+
+    if ratio < min_pool_speedup {
+        bail!(
+            "scaling gate FAILED: {baseline_pools}->{top_pools} pools at {gate_clients} \
+             clients is only {ratio:.2}x the single-shard throughput \
+             ({baseline_rps:.2} -> {top_rps:.2} req/s; need >= {min_pool_speedup:.2}x)"
+        );
+    }
+    Ok(Some(Scaling { baseline_pools, top_pools, gate_clients, ratio }))
 }
 
 /// Validate the clean-vs-FT `ft_overhead` series: both blocked variants

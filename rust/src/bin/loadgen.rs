@@ -3,10 +3,11 @@
 //!
 //!     cargo run --release --bin loadgen -- --addr 127.0.0.1:7421 \
 //!         --clients 8 --requests 200 [--mode closed|open] [--rate R] \
-//!         [--mix small,medium] [--policies online,none] \
+//!         [--preset ci-smoke] [--mix small,medium] [--policies online,none] \
 //!         [--priorities normal,high] [--deadline-ms D] [--inject N] \
-//!         [--sweep-clients 1,2,4,8] [--duration-cap 60s] \
-//!         [--max-p99-ms P] [--bench-out BENCH_pipeline.json]
+//!         [--sweep-clients 1,2,4,8] [--duration-cap 60s] [--pools P] \
+//!         [--max-p99-ms P] [--bench-out BENCH_pipeline.json] \
+//!         [--append-serving]
 //!
 //! Each client opens one connection and drives the newline-delimited JSON
 //! protocol of `ftgemm::serve`:
@@ -21,14 +22,22 @@
 //! The workload cycles deterministically through shape classes
 //! (`small`=64, `medium`=128, `large`=256, `huge`=512, cube GEMMs) ×
 //! `--policies` × `--priorities`; `--inject N` plants N correctable SEUs
-//! per request server-side. Per run it reports ok/expired/rejected/
-//! canceled/failed/protocol-error counts, p50/p95/p99 latency, and
-//! throughput; `--sweep-clients` repeats the run per client count to
-//! trace the throughput-vs-inflight curve.
+//! per request server-side. `--preset NAME` defaults the mix knobs from
+//! the shared table in `ftgemm::bench::mix` (explicit flags still win) so
+//! CI and by-hand runs measure the same workload. Per run it reports
+//! ok/expired/rejected/canceled/failed/protocol-error counts, p50/p95/p99
+//! latency, and throughput; `--sweep-clients` repeats the run per client
+//! count to trace the throughput-vs-inflight curve.
 //!
 //! `--bench-out FILE` merges a `serving` series into an existing
 //! schema-/4 `BENCH_pipeline.json` (written by `cargo bench --bench
 //! hotpath`), which CI's `bench-check --require-serving` then validates.
+//! `--pools P` labels every entry with the server's shard count, and
+//! `--append-serving` appends to the existing series instead of replacing
+//! it — run once against a `--pools 1` server and again (appending)
+//! against a multi-pool server, and the merge derives a `pool_scaling`
+//! block (baseline vs top rps at the widest common client count) that
+//! `bench-check --require-scaling` gates on.
 //!
 //! Exit is nonzero when any run saw a protocol error, produced zero OK
 //! responses, or missed `--max-p99-ms`.
@@ -41,6 +50,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
+use ftgemm::bench::mix;
 use ftgemm::coordinator::{FtPolicy, Priority};
 use ftgemm::serve::proto::GemmSpec;
 use ftgemm::util::cli::Command;
@@ -151,6 +161,8 @@ impl Tally {
 struct RunResult {
     mode: Mode,
     clients: usize,
+    /// Server shard count this run measured (`--pools` label).
+    pools: usize,
     tally: Tally,
     wall_s: f64,
 }
@@ -185,6 +197,7 @@ impl RunResult {
         let mut e = Json::obj();
         e.set("mode", Json::from(self.mode.as_str()));
         e.set("clients", Json::Num(self.clients as f64));
+        e.set("pools", Json::Num(self.pools as f64));
         e.set("inflight", Json::Num(self.clients as f64));
         e.set("requests", Json::Num(t.sent as f64));
         e.set("ok", Json::Num(t.ok as f64));
@@ -210,15 +223,18 @@ fn main() -> ExitCode {
         .opt("requests", "total requests per run (split across clients)", Some("200"))
         .opt("mode", "closed (send-wait-repeat) or open (fixed schedule)", Some("closed"))
         .opt("rate", "open-loop total requests/s across clients", Some("50"))
-        .opt("mix", "shape classes to cycle (small|medium|large|huge)", Some("small,medium"))
-        .opt("policies", "FT policies to cycle (none|online|offline)", Some("online"))
-        .opt("priorities", "priorities to cycle (low|normal|high)", Some("normal"))
+        .opt("preset", "named mix preset (see ftgemm::bench::mix); flags below override", None)
+        .opt("mix", "shape classes to cycle (small|medium|large|huge) [default: small,medium]", None)
+        .opt("policies", "FT policies to cycle (none|online|offline) [default: online]", None)
+        .opt("priorities", "priorities to cycle (low|normal|high) [default: normal]", None)
         .opt("deadline-ms", "per-request queue deadline (0 = none)", Some("0"))
-        .opt("inject", "SEUs injected per request server-side", Some("0"))
+        .opt("inject", "SEUs injected per request server-side [default: 0]", None)
         .opt("seed", "base operand seed (seq is added per request)", Some("42"))
         .opt("duration-cap", "stop issuing after this long, e.g. 60s", Some("60s"))
         .opt("sweep-clients", "comma list: one run per client count", None)
+        .opt("pools", "server [engine].pools label recorded in serving entries", Some("1"))
         .opt("bench-out", "merge a `serving` series into this schema-/4 file", None)
+        .flag("append-serving", "append to the file's serving series instead of replacing it")
         .opt("max-p99-ms", "fail the run if p99 exceeds this (0 = off)", Some("0"));
     let args = match cmd.parse(&argv) {
         Ok(args) => args,
@@ -246,6 +262,10 @@ fn run(args: &ftgemm::util::cli::Args) -> Result<bool> {
         None => vec![args.usize_or("clients", 8)],
     };
     let max_p99_ms = args.f64_or("max-p99-ms", 0.0);
+    let pools = args.usize_or("pools", 1);
+    if pools == 0 {
+        bail!("--pools must be >= 1");
+    }
 
     let mut entries = Json::Arr(Vec::new());
     let mut all_ok = true;
@@ -253,7 +273,7 @@ fn run(args: &ftgemm::util::cli::Args) -> Result<bool> {
         if clients == 0 {
             bail!("--sweep-clients/--clients entries must be >= 1");
         }
-        let result = run_once(&workload, clients)?;
+        let result = run_once(&workload, clients, pools)?;
         all_ok &= report(&result, max_p99_ms);
         if let Some(entry) = result.to_json() {
             entries.push(entry);
@@ -261,7 +281,7 @@ fn run(args: &ftgemm::util::cli::Args) -> Result<bool> {
     }
 
     if let Some(path) = args.get("bench-out") {
-        merge_serving(path, entries)?;
+        merge_serving(path, entries, args.flag("append-serving"))?;
         println!("merged serving series into {path}");
     }
     Ok(all_ok)
@@ -315,15 +335,29 @@ fn parse_workload(args: &ftgemm::util::cli::Args) -> Result<Workload> {
         "open" => Mode::Open,
         other => bail!("--mode must be closed|open, got {other:?}"),
     };
-    let shapes = parse_list(args.str_or("mix", "small,medium"), "mix", |s| match s {
+    // resolution order for the mix knobs: explicit flag > preset > built-in
+    let preset = match args.get("preset") {
+        Some(name) => Some(mix::preset(name).ok_or_else(|| {
+            anyhow!("unknown --preset {name:?}; known presets:\n{}", mix::describe_presets())
+        })?),
+        None => None,
+    };
+    let mix_csv = args.get("mix").or(preset.map(|p| p.shapes)).unwrap_or("small,medium");
+    let shapes = parse_list(mix_csv, "mix", |s| match s {
         "small" => Ok(64),
         "medium" => Ok(128),
         "large" => Ok(256),
         "huge" => Ok(512),
         other => Err(anyhow!("unknown shape class {other:?} (small|medium|large|huge)")),
     })?;
-    let policies = parse_list(args.str_or("policies", "online"), "policies", str::parse)?;
-    let priorities = parse_list(args.str_or("priorities", "normal"), "priorities", str::parse)?;
+    let policies_csv = args.get("policies").or(preset.map(|p| p.policies)).unwrap_or("online");
+    let policies = parse_list(policies_csv, "policies", str::parse)?;
+    let prio_csv = args.get("priorities").or(preset.map(|p| p.priorities)).unwrap_or("normal");
+    let priorities = parse_list(prio_csv, "priorities", str::parse)?;
+    let inject = match args.get("inject") {
+        Some(v) => v.parse().map_err(|_| anyhow!("--inject: bad integer {v:?}"))?,
+        None => preset.map(|p| p.inject).unwrap_or(0),
+    };
     let rate = args.f64_or("rate", 50.0);
     if mode == Mode::Open && !(rate.is_finite() && rate > 0.0) {
         bail!("--rate must be a positive rate in open mode, got {rate}");
@@ -337,7 +371,7 @@ fn parse_workload(args: &ftgemm::util::cli::Args) -> Result<Workload> {
         policies,
         priorities,
         deadline_ms: args.usize_or("deadline-ms", 0) as u64,
-        inject: args.usize_or("inject", 0),
+        inject,
         seed: args.usize_or("seed", 42) as u64,
         duration_cap: parse_duration(args.str_or("duration-cap", "60s"))?,
     })
@@ -368,7 +402,7 @@ fn parse_duration(s: &str) -> Result<Duration> {
 }
 
 /// Execute one run at `clients` connections and aggregate the tallies.
-fn run_once(w: &Workload, clients: usize) -> Result<RunResult> {
+fn run_once(w: &Workload, clients: usize, pools: usize) -> Result<RunResult> {
     let shared = Arc::new(Mutex::new(Tally::default()));
     let start = Instant::now();
     let cap = start + w.duration_cap;
@@ -414,7 +448,7 @@ fn run_once(w: &Workload, clients: usize) -> Result<RunResult> {
         .map_err(|_| anyhow!("client thread leaked its tally handle"))?
         .into_inner()
         .unwrap();
-    Ok(RunResult { mode: w.mode, clients, tally, wall_s })
+    Ok(RunResult { mode: w.mode, clients, pools, tally, wall_s })
 }
 
 // Workload is only read by the clients; a manual clone keeps the struct
@@ -597,7 +631,12 @@ fn open_reader(stream: TcpStream, pending: &Mutex<HashMap<u64, Instant>>, cap: I
 
 /// Merge the `serving` series into an existing schema-/4 pipeline bench
 /// file (refusing to touch anything older — regenerate the benches first).
-fn merge_serving(path: &str, entries: Json) -> Result<()> {
+/// With `append`, new entries extend the file's existing series — that is
+/// how the pools=1 and pools=N runs of the scaling gate end up in one
+/// file. Either way the `pool_scaling` block is re-derived from the final
+/// series (and nulled out when only one shard count is present, so a
+/// stale block can never outlive the data it summarized).
+fn merge_serving(path: &str, entries: Json, append: bool) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {path} (run `cargo bench --bench hotpath` first)"))?;
     let mut root = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
@@ -608,9 +647,58 @@ fn merge_serving(path: &str, entries: Json) -> Result<()> {
              ftgemm-bench-pipeline/4 — regenerate with `cargo bench --bench hotpath`"
         );
     }
-    root.set("serving", entries);
+    let mut serving = match (append, root.get("serving")) {
+        (true, Some(Json::Arr(existing))) => existing.clone(),
+        _ => Vec::new(),
+    };
+    if let Json::Arr(new) = entries {
+        serving.extend(new);
+    }
+    let scaling = pool_scaling(&serving);
+    root.set("serving", Json::Arr(serving));
+    root.set("pool_scaling", scaling.unwrap_or(Json::Null));
     std::fs::write(path, root.to_string_pretty()).with_context(|| format!("writing {path}"))?;
     Ok(())
+}
+
+/// Derive the `pool_scaling` summary from a merged serving series: pick
+/// the widest client count measured at both the smallest (baseline) and
+/// largest shard count, and report the throughput ratio between them.
+/// `None` (serialized as null) when the series covers fewer than two
+/// distinct shard counts or shares no client count between them.
+fn pool_scaling(serving: &[Json]) -> Option<Json> {
+    // (pools, clients) -> rps; later entries win so re-runs supersede
+    let mut rps: HashMap<(usize, usize), f64> = HashMap::new();
+    for e in serving {
+        let Some(pools) = e.get("pools").and_then(Json::as_usize) else { continue };
+        let Some(clients) = e.get("clients").and_then(Json::as_usize) else { continue };
+        let Some(r) = e.get("rps").and_then(Json::as_f64) else { continue };
+        rps.insert((pools, clients), r);
+    }
+    let baseline_pools = rps.keys().map(|&(p, _)| p).min()?;
+    let top_pools = rps.keys().map(|&(p, _)| p).max()?;
+    if baseline_pools == top_pools {
+        return None;
+    }
+    let gate_clients = rps
+        .keys()
+        .filter(|&&(p, _)| p == baseline_pools)
+        .map(|&(_, c)| c)
+        .filter(|&c| rps.contains_key(&(top_pools, c)))
+        .max()?;
+    let baseline_rps = rps[&(baseline_pools, gate_clients)];
+    let top_rps = rps[&(top_pools, gate_clients)];
+    if baseline_rps <= 0.0 {
+        return None;
+    }
+    let mut out = Json::obj();
+    out.set("baseline_pools", Json::Num(baseline_pools as f64));
+    out.set("top_pools", Json::Num(top_pools as f64));
+    out.set("gate_clients", Json::Num(gate_clients as f64));
+    out.set("baseline_rps", Json::Num(baseline_rps));
+    out.set("top_rps", Json::Num(top_rps));
+    out.set("ratio", Json::Num(top_rps / baseline_rps));
+    Some(out)
 }
 
 #[cfg(test)]
@@ -680,10 +768,11 @@ mod tests {
             lat_ms: vec![1.0, 2.0, 10.0],
             ..Default::default()
         };
-        let r = RunResult { mode: Mode::Closed, clients: 2, tally, wall_s: 2.0 };
+        let r = RunResult { mode: Mode::Closed, clients: 2, pools: 4, tally, wall_s: 2.0 };
         let e = r.to_json().unwrap();
         assert_eq!(e.get("mode").unwrap().as_str(), Some("closed"));
         assert_eq!(e.get("clients").unwrap().as_usize(), Some(2));
+        assert_eq!(e.get("pools").unwrap().as_usize(), Some(4));
         assert_eq!(e.get("ok").unwrap().as_usize(), Some(3));
         let p50 = e.get("p50_ms").unwrap().as_f64().unwrap();
         let p99 = e.get("p99_ms").unwrap().as_f64().unwrap();
@@ -696,9 +785,92 @@ mod tests {
         let r = RunResult {
             mode: Mode::Open,
             clients: 1,
+            pools: 1,
             tally: Tally::default(),
             wall_s: 1.0,
         };
         assert!(r.to_json().is_none());
+    }
+
+    fn serving_entry(pools: usize, clients: usize, rps: f64) -> Json {
+        let mut e = Json::obj();
+        e.set("pools", Json::Num(pools as f64));
+        e.set("clients", Json::Num(clients as f64));
+        e.set("rps", Json::Num(rps));
+        e
+    }
+
+    #[test]
+    fn pool_scaling_picks_widest_common_client_count() {
+        let serving = vec![
+            serving_entry(1, 2, 10.0),
+            serving_entry(1, 4, 20.0),
+            serving_entry(1, 8, 25.0),
+            serving_entry(4, 2, 18.0),
+            serving_entry(4, 4, 36.0),
+            // no pools=4 run at 8 clients: the gate point must be 4
+        ];
+        let ps = pool_scaling(&serving).expect("two shard counts present");
+        assert_eq!(ps.get("baseline_pools").unwrap().as_usize(), Some(1));
+        assert_eq!(ps.get("top_pools").unwrap().as_usize(), Some(4));
+        assert_eq!(ps.get("gate_clients").unwrap().as_usize(), Some(4));
+        assert!((ps.get("ratio").unwrap().as_f64().unwrap() - 1.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_scaling_needs_two_shard_counts_and_a_shared_point() {
+        assert!(pool_scaling(&[]).is_none());
+        assert!(pool_scaling(&[serving_entry(1, 2, 10.0), serving_entry(1, 4, 20.0)]).is_none());
+        // two shard counts but disjoint client counts
+        assert!(pool_scaling(&[serving_entry(1, 2, 10.0), serving_entry(4, 8, 40.0)]).is_none());
+        // a later re-run supersedes the earlier measurement at the same point
+        let ps = pool_scaling(&[
+            serving_entry(1, 2, 5.0),
+            serving_entry(1, 2, 10.0),
+            serving_entry(2, 2, 30.0),
+        ])
+        .unwrap();
+        assert!((ps.get("ratio").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn presets_default_the_mix_but_flags_override() {
+        let cmd = Command::new("loadgen", "test")
+            .opt("preset", "", None)
+            .opt("mix", "", None)
+            .opt("policies", "", None)
+            .opt("priorities", "", None)
+            .opt("inject", "", None)
+            .opt("mode", "", Some("closed"))
+            .opt("addr", "", Some("x"))
+            .opt("requests", "", Some("1"))
+            .opt("rate", "", Some("50"))
+            .opt("deadline-ms", "", Some("0"))
+            .opt("seed", "", Some("42"))
+            .opt("duration-cap", "", Some("60s"));
+        let sv = |a: &[&str]| a.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+
+        let w = parse_workload(&cmd.parse(&sv(&["--preset", "ci-smoke"])).unwrap()).unwrap();
+        assert_eq!(w.shapes, vec![64, 128]);
+        assert_eq!(w.policies, vec![FtPolicy::Online, FtPolicy::None]);
+        assert_eq!(w.priorities, vec![Priority::Normal, Priority::High]);
+        assert_eq!(w.inject, 1);
+
+        // an explicit flag wins over the preset value on that axis only
+        let w = parse_workload(
+            &cmd.parse(&sv(&["--preset", "ci-smoke", "--mix", "huge", "--inject", "0"])).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(w.shapes, vec![512]);
+        assert_eq!(w.policies, vec![FtPolicy::Online, FtPolicy::None]);
+        assert_eq!(w.inject, 0);
+
+        // no preset: the built-in defaults hold
+        let w = parse_workload(&cmd.parse(&sv(&[])).unwrap()).unwrap();
+        assert_eq!(w.shapes, vec![64, 128]);
+        assert_eq!(w.policies, vec![FtPolicy::Online]);
+        assert_eq!(w.inject, 0);
+
+        assert!(parse_workload(&cmd.parse(&sv(&["--preset", "nope"])).unwrap()).is_err());
     }
 }

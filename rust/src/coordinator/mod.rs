@@ -124,9 +124,15 @@ pub struct CoordinatorConfig {
     /// worker count (min 2).
     pub max_inflight: usize,
     /// Reject submissions once this many requests are queued awaiting
-    /// dispatch (fail fast instead of accumulating unbounded latency).
+    /// dispatch on one engine pool (fail fast instead of accumulating
+    /// unbounded latency). Bounds each pool's run queue independently.
     /// 0 = unbounded.
     pub max_queue: usize,
+    /// Backlog skew (in live queued requests) past which a pool-less
+    /// dispatcher steals from the deepest pool's queue — and past which
+    /// the shard router re-pins a shape class away from its overloaded
+    /// affinity pool. Irrelevant with one pool. 0 is treated as 1.
+    pub steal_threshold: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -139,6 +145,7 @@ impl Default for CoordinatorConfig {
             scheduler_threads: 0,
             max_inflight: 0,
             max_queue: 0,
+            steal_threshold: 4,
         }
     }
 }
@@ -199,6 +206,24 @@ pub struct CoordinatorStats {
     pub counters: CounterSnapshot,
     /// Execution-latency summary (seconds; excludes queue wait).
     pub latency: LatencySummary,
+    /// Per-pool (shard) state, pool order. One entry even with a single
+    /// pool, so consumers can iterate unconditionally.
+    pub pools: Vec<PoolStats>,
+}
+
+/// One engine pool's observable state inside [`CoordinatorStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Live requests queued on this pool awaiting dispatch.
+    pub queue_depth: usize,
+    /// Plan nodes currently queued/executing on this pool's workers.
+    pub engine_inflight: usize,
+    /// Cumulative requests the shard router placed on this pool.
+    pub routed: u64,
+    /// Cumulative requests that started executing on this pool.
+    pub dispatched: u64,
+    /// Of `dispatched`, how many were stolen from another pool's queue.
+    pub steals: u64,
 }
 
 impl CoordinatorStats {
@@ -241,6 +266,17 @@ impl CoordinatorStats {
         lo.set("p50_s", Json::Num(l.p50));
         lo.set("p99_s", Json::Num(l.p99));
         o.set("latency", lo);
+        let mut pools = Json::Arr(Vec::new());
+        for p in &self.pools {
+            let mut po = Json::obj();
+            po.set("queue_depth", Json::from(p.queue_depth));
+            po.set("engine_inflight", Json::from(p.engine_inflight));
+            po.set("routed", Json::Num(p.routed as f64));
+            po.set("dispatched", Json::Num(p.dispatched as f64));
+            po.set("steals", Json::Num(p.steals as f64));
+            pools.push(po);
+        }
+        o.set("pools", pools);
         o
     }
 }
@@ -257,8 +293,10 @@ pub(crate) struct Core {
 
 impl Core {
     /// Plan, schedule, and (optionally) host-verify one request. Runs on a
-    /// dispatcher thread.
-    pub(crate) fn execute(&self, req: &GemmRequest) -> Result<GemmResult> {
+    /// dispatcher thread. `pool` pins single-node plans to that engine
+    /// shard (the dispatcher's home pool); multi-node plans span every
+    /// pool regardless.
+    pub(crate) fn execute(&self, req: &GemmRequest, pool: Option<usize>) -> Result<GemmResult> {
         let t0 = Instant::now();
         let cfg = self.config.effective(&req.opts);
         let plan = match &req.route {
@@ -274,7 +312,8 @@ impl Core {
             Counters::bump(&self.counters.padded_requests);
         }
 
-        let out = self.scheduler.run_shared(&plan, Arc::clone(&req.a), Arc::clone(&req.b))?;
+        let out =
+            self.scheduler.run_shared_on(&plan, Arc::clone(&req.a), Arc::clone(&req.b), pool)?;
 
         let reverify = match cfg.host_verify {
             HostVerify::Off => false,
@@ -330,6 +369,7 @@ impl Coordinator {
             n => n,
         };
         let max_queue = config.max_queue;
+        let steal_threshold = config.steal_threshold;
         let core = Arc::new(Core {
             engine,
             config,
@@ -337,7 +377,12 @@ impl Coordinator {
             counters: Counters::new(),
             latency: LatencyRecorder::new(),
         });
-        let submission = Arc::new(Submission::start(Arc::clone(&core), dispatchers, max_queue));
+        let submission = Arc::new(Submission::start(
+            Arc::clone(&core),
+            dispatchers,
+            max_queue,
+            steal_threshold,
+        ));
         Coordinator { core, submission }
     }
 
@@ -375,6 +420,20 @@ impl Coordinator {
     /// One coherent snapshot of queue/engine/counter/latency state — the
     /// single source for the gateway's `metrics` verb and `ftgemm info`.
     pub fn stats(&self) -> CoordinatorStats {
+        let engine_per_pool = self.core.engine.inflight_per_pool();
+        let pools = self
+            .submission
+            .pool_snapshots()
+            .into_iter()
+            .enumerate()
+            .map(|(p, s)| PoolStats {
+                queue_depth: s.queue_depth,
+                engine_inflight: engine_per_pool.get(p).copied().unwrap_or(0),
+                routed: s.routed,
+                dispatched: s.dispatched,
+                steals: s.steals,
+            })
+            .collect();
         CoordinatorStats {
             queue_depth: self.queue_depth(),
             max_inflight: self.max_inflight(),
@@ -383,6 +442,7 @@ impl Coordinator {
             backend: self.core.engine.backend(),
             counters: self.core.counters.snapshot(),
             latency: self.core.latency.summary(),
+            pools,
         }
     }
 
@@ -530,6 +590,7 @@ mod tests {
         assert_eq!(cfg.host_verify, HostVerify::Off);
         assert_eq!(cfg.max_inflight, 0);
         assert_eq!(cfg.max_queue, 0);
+        assert_eq!(cfg.steal_threshold, 4);
     }
 
     #[test]

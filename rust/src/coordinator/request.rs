@@ -279,6 +279,9 @@ pub struct RequestMeta {
     /// iff `X.dispatch_seq < Y.dispatch_seq` (the priority-ordering
     /// witness the tests read).
     pub dispatch_seq: u64,
+    /// Engine pool (shard) the request executed on — the routed pool, or
+    /// the thief's pool when the request was stolen.
+    pub pool: usize,
 }
 
 /// A fulfilled request: the computation result plus its [`RequestMeta`].
@@ -644,6 +647,7 @@ mod tests {
             priority: Priority::Normal,
             queued: Duration::ZERO,
             dispatch_seq: 0,
+            pool: 0,
         };
         let result = GemmResult {
             c: Matrix::zeros(1, 1),

@@ -89,7 +89,7 @@ impl Scheduler {
             bail!("empty execution plan");
         }
         if is_single_node(plan) {
-            return self.run_single(plan, a, b);
+            return self.run_single(plan, a, b, None);
         }
         self.run_pooled(plan, Arc::new(a.clone()), Arc::new(b.clone()))
     }
@@ -102,21 +102,44 @@ impl Scheduler {
         a: Arc<Matrix>,
         b: Arc<Matrix>,
     ) -> Result<RunOutcome> {
+        self.run_shared_on(plan, a, b, None)
+    }
+
+    /// [`Scheduler::run_shared`] with an engine-pool hint. Single-node
+    /// plans execute pinned to `pool` (keeping a shape class's executable
+    /// warm on its affinity shard); multi-node plans ignore the hint —
+    /// their blocks deliberately span every pool through global
+    /// warm-affine dispatch, and partial accumulation still lands exactly
+    /// once in this run's private output.
+    pub fn run_shared_on(
+        &self,
+        plan: &ExecutionPlan,
+        a: Arc<Matrix>,
+        b: Arc<Matrix>,
+        pool: Option<usize>,
+    ) -> Result<RunOutcome> {
         if plan.nodes.is_empty() {
             bail!("empty execution plan");
         }
         if is_single_node(plan) {
-            return self.run_single(plan, &a, &b);
+            return self.run_single(plan, &a, &b, pool);
         }
         self.run_pooled(plan, a, b)
     }
 
     /// Single-node fast path: no concurrency to buy, so skip the pool and
     /// any owned operand copies and run on the caller's thread.
-    fn run_single(&self, plan: &ExecutionPlan, a: &Matrix, b: &Matrix) -> Result<RunOutcome> {
+    fn run_single(
+        &self,
+        plan: &ExecutionPlan,
+        a: &Matrix,
+        b: &Matrix,
+        pool: Option<usize>,
+    ) -> Result<RunOutcome> {
         let values = Mutex::new(HashMap::new());
         let ctx = Ctx {
             engine: &self.engine,
+            pool,
             a,
             b,
             thresholds: plan.thresholds,
@@ -258,6 +281,8 @@ impl OwnedCtx {
     fn view(&self) -> Ctx<'_> {
         Ctx {
             engine: &self.engine,
+            // pooled (multi-node) runs span every engine shard on purpose
+            pool: None,
             a: &self.a,
             b: &self.b,
             thresholds: self.thresholds,
@@ -271,6 +296,8 @@ impl OwnedCtx {
 /// (no operand copies).
 struct Ctx<'a> {
     engine: &'a Engine,
+    /// Engine-pool pin for kernel launches (`None` = global warm-affine).
+    pool: Option<usize>,
     a: &'a Matrix,
     b: &'a Matrix,
     thresholds: Thresholds,
@@ -410,7 +437,8 @@ fn exec_block(
 
 fn exec_gemm(ctx: &Ctx<'_>, artifact: &str, a: Matrix, b: Matrix) -> Result<Matrix> {
     let (ar, ac, br, bc) = (a.rows(), a.cols(), b.rows(), b.cols());
-    let out = ctx.engine.execute(
+    let out = ctx.engine.execute_on(
+        ctx.pool,
         artifact,
         vec![
             // moves, not copies: the padded operand blocks are owned
@@ -434,7 +462,8 @@ fn exec_ft(
         bail!("{artifact}: {} injections exceed kernel capacity {max_inj}", inj.len());
     }
     let (ar, ac, br, bc) = (a.rows(), a.cols(), b.rows(), b.cols());
-    let out = ctx.engine.execute(
+    let out = ctx.engine.execute_on(
+        ctx.pool,
         artifact,
         vec![
             Tensor::new(vec![ar, ac], a.into_data()),
@@ -453,7 +482,8 @@ fn exec_ft(
 
 fn exec_ding_encode(ctx: &Ctx<'_>, artifact: &str) -> Result<NodeDone> {
     let (a, b) = (ctx.a, ctx.b);
-    let out = ctx.engine.execute(
+    let out = ctx.engine.execute_on(
+        ctx.pool,
         artifact,
         vec![
             Tensor::new(vec![a.rows(), a.cols()], a.data().to_vec()),
@@ -505,7 +535,8 @@ fn exec_ding_panel(
 
     let ac_panel = panel_cols(&ac, s0, ks);
     let br_panel = panel_rows(&br, s0, ks);
-    let out = ctx.engine.execute(
+    let out = ctx.engine.execute_on(
+        ctx.pool,
         step_artifact,
         vec![
             Tensor::new(vec![m + 1, n + 1], cf.into_data()),
@@ -521,7 +552,8 @@ fn exec_ding_panel(
         cf.add_at(e.row, e.col, e.magnitude);
     }
 
-    let out = ctx.engine.execute(
+    let out = ctx.engine.execute_on(
+        ctx.pool,
         verify_artifact,
         vec![Tensor::new(vec![m + 1, n + 1], cf.into_data())],
     )?;

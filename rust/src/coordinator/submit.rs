@@ -22,10 +22,29 @@
 //! dropping) fails everything still queued and joins the dispatchers —
 //! in-flight requests drain, never detach.
 //!
+//! **Sharded dispatch.** With a multi-pool engine the queue shards into
+//! one priority heap per engine pool (all under a single lock — the
+//! per-pool contention win comes from sharding the engine's warm caches
+//! and worker sets, not from splitting this short critical section). The
+//! router places each request by **shape class + cache affinity**: the
+//! first request of a shape class pins the class to the least-loaded
+//! pool, and later requests follow that pin — so a class's executables
+//! stay warm on one shard — unless the pinned pool's live backlog
+//! exceeds the least-loaded pool's by `steal_threshold`, in which case
+//! the pin moves (affinity invalidation under skew). Each dispatcher
+//! thread has a *home* pool (round-robin) and drains that heap first;
+//! when home is empty it **steals** from the deepest other heap, but
+//! only once that backlog reaches `steal_threshold` — light skew stays
+//! put and keeps caches warm, heavy skew is rebalanced. A stolen
+//! request executes on the thief's pool. Multi-block (split-GEMM) plans
+//! ignore the pin downstream and span every pool via the DAG scheduler;
+//! accumulation still lands exactly once per request. `max_queue`
+//! bounds each pool's heap independently.
+//!
 //! [`Coordinator::submit`]: super::Coordinator::submit
 
 use std::cmp::Ordering as CmpOrdering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -34,6 +53,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::codegen::select::select_class;
 use crate::metrics::recorder::Counters;
 
 use super::request::{ticket, Completion, GemmRequest, Priority, RequestMeta, Ticket, TicketStatus};
@@ -82,8 +102,43 @@ impl Ord for Entry {
 }
 
 struct QueueInner {
-    heap: BinaryHeap<Entry>,
+    /// One priority heap per engine pool (shard), all under this lock.
+    heaps: Vec<BinaryHeap<Entry>>,
     shutdown: bool,
+}
+
+impl QueueInner {
+    /// Live (still-`Queued`) entries in one shard's heap — the load
+    /// signal the router and the stealer compare. Corpses (canceled /
+    /// self-expired tickets awaiting lazy deletion) don't count.
+    fn live_depth(&self, pool: usize) -> usize {
+        self.heaps[pool]
+            .iter()
+            .filter(|e| e.completion.status() == TicketStatus::Queued)
+            .count()
+    }
+}
+
+/// Cumulative per-pool routing counters (monotonic; survive for the
+/// coordinator's lifetime so they reconcile with `Counters` totals).
+#[derive(Default)]
+pub(crate) struct PoolQueueStats {
+    /// Requests the router placed on this pool at admission.
+    routed: AtomicU64,
+    /// Requests that started executing on this pool (home or stolen).
+    dispatched: AtomicU64,
+    /// Dispatched requests this pool's dispatchers stole from another
+    /// pool's heap.
+    steals: AtomicU64,
+}
+
+/// Point-in-time view of one pool's queue, for `Coordinator::stats()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct PoolQueueSnapshot {
+    pub queue_depth: usize,
+    pub routed: u64,
+    pub dispatched: u64,
+    pub steals: u64,
 }
 
 struct SubmitState {
@@ -95,8 +150,17 @@ struct SubmitState {
     next_id: AtomicU64,
     /// Monotonic dequeue stamp (`RequestMeta::dispatch_seq`).
     dispatch_seq: AtomicU64,
-    /// Reject submissions once this many requests are queued; 0 = no cap.
+    /// Reject submissions once this many requests sit in the routed
+    /// pool's heap; 0 = no cap. Bounds each shard independently.
     max_queue: usize,
+    /// Backlog skew (in live requests) that triggers both work stealing
+    /// and affinity re-pinning. Clamped to >= 1.
+    steal_threshold: usize,
+    /// Shape-class -> pool cache-affinity pins (`ShapeClass::name()`
+    /// keys; the class's executables are warm on that shard).
+    affinity: Mutex<HashMap<&'static str, usize>>,
+    /// Per-pool routing/steal counters, pool order.
+    pool_stats: Vec<PoolQueueStats>,
 }
 
 /// The coordinator's submission machinery: queue + dispatcher pool.
@@ -108,26 +172,42 @@ pub(crate) struct Submission {
 }
 
 impl Submission {
-    pub(crate) fn start(core: Arc<Core>, dispatchers: usize, max_queue: usize) -> Submission {
+    pub(crate) fn start(
+        core: Arc<Core>,
+        dispatchers: usize,
+        max_queue: usize,
+        steal_threshold: usize,
+    ) -> Submission {
+        let pools = core.engine.pool_count().max(1);
+        // every pool needs at least one home dispatcher, or a backlog
+        // below the steal threshold could sit unserved forever
+        let dispatchers = dispatchers.max(1).max(pools);
         let state = Arc::new(SubmitState {
-            queue: Mutex::new(QueueInner { heap: BinaryHeap::new(), shutdown: false }),
+            queue: Mutex::new(QueueInner {
+                heaps: (0..pools).map(|_| BinaryHeap::new()).collect(),
+                shutdown: false,
+            }),
             cv: Condvar::new(),
             seq: AtomicU64::new(0),
             next_id: AtomicU64::new(0),
             dispatch_seq: AtomicU64::new(0),
             max_queue,
+            steal_threshold: steal_threshold.max(1),
+            affinity: Mutex::new(HashMap::new()),
+            pool_stats: (0..pools).map(|_| PoolQueueStats::default()).collect(),
         });
-        let workers = (0..dispatchers.max(1))
+        let workers = (0..dispatchers)
             .map(|i| {
                 let state = Arc::clone(&state);
                 let core = Arc::clone(&core);
+                let home = i % pools;
                 std::thread::Builder::new()
                     .name(format!("ftgemm-dispatch-{i}"))
-                    .spawn(move || dispatcher_loop(&core, &state))
+                    .spawn(move || dispatcher_loop(&core, &state, home))
                     .expect("spawn dispatcher")
             })
             .collect();
-        Submission { state, core, dispatchers: dispatchers.max(1), workers }
+        Submission { state, core, dispatchers, workers }
     }
 
     /// The in-flight bound (dispatcher-thread count).
@@ -135,19 +215,29 @@ impl Submission {
         self.dispatchers
     }
 
-    /// Live requests queued but not yet dispatched. Canceled and
-    /// self-expired tickets settle immediately but their entries are
-    /// deleted lazily (at dequeue or at admission-pressure compaction),
-    /// so count them out.
+    /// Live requests queued but not yet dispatched, across every pool.
+    /// Canceled and self-expired tickets settle immediately but their
+    /// entries are deleted lazily (at dequeue or at admission-pressure
+    /// compaction), so count them out.
     pub(crate) fn queue_depth(&self) -> usize {
+        let q = self.state.queue.lock().unwrap();
+        (0..q.heaps.len()).map(|p| q.live_depth(p)).sum()
+    }
+
+    /// Per-pool queue depth + cumulative routing counters, pool order.
+    pub(crate) fn pool_snapshots(&self) -> Vec<PoolQueueSnapshot> {
+        let q = self.state.queue.lock().unwrap();
         self.state
-            .queue
-            .lock()
-            .unwrap()
-            .heap
+            .pool_stats
             .iter()
-            .filter(|e| e.completion.status() == TicketStatus::Queued)
-            .count()
+            .enumerate()
+            .map(|(p, s)| PoolQueueSnapshot {
+                queue_depth: q.live_depth(p),
+                routed: s.routed.load(Ordering::SeqCst),
+                dispatched: s.dispatched.load(Ordering::SeqCst),
+                steals: s.steals.load(Ordering::SeqCst),
+            })
+            .collect()
     }
 
     /// Mint a fresh (ticket, completion) pair with a coordinator-unique
@@ -171,47 +261,56 @@ impl Submission {
     ) -> Result<()> {
         let priority = req.opts.priority;
         let deadline = req.opts.deadline.map(|d| submitted + d);
+        let (m, n, k) = req.shape();
+        let class = select_class(m, n, k).name();
         let mut q = self.state.queue.lock().unwrap();
         if q.shutdown {
             drop(q);
             completion.abort(TicketStatus::Failed, anyhow!("coordinator is shut down"));
             bail!("coordinator is shut down");
         }
-        if self.state.max_queue > 0 && q.heap.len() >= self.state.max_queue {
+        let pool = self.route(&q, class);
+        if self.state.max_queue > 0 && q.heaps[pool].len() >= self.state.max_queue {
             // Settled entries (canceled tickets, or deadline self-expiry
             // via poll/wait) are deleted lazily; don't let corpses hold
             // admission quota against live traffic. Compacted entries get
             // their counter bump here instead of at dequeue.
-            q.heap.retain(|e| match e.completion.status() {
+            let canceled = &self.core.counters.canceled;
+            let expired = &self.core.counters.expired;
+            q.heaps[pool].retain(|e| match e.completion.status() {
                 TicketStatus::Queued => true,
                 TicketStatus::Canceled => {
-                    Counters::bump(&self.core.counters.canceled);
+                    Counters::bump(canceled);
                     false
                 }
                 TicketStatus::Expired => {
-                    Counters::bump(&self.core.counters.expired);
+                    Counters::bump(expired);
                     false
                 }
                 _ => false,
             });
         }
-        if self.state.max_queue > 0 && q.heap.len() >= self.state.max_queue {
-            let depth = q.heap.len();
+        if self.state.max_queue > 0 && q.heaps[pool].len() >= self.state.max_queue {
+            let depth = q.heaps[pool].len();
             drop(q);
             completion.abort(
                 TicketStatus::Failed,
                 anyhow!("admission control: {depth} requests queued (max_queue)"),
             );
-            bail!("admission control: {depth} requests already queued (max_queue = {})",
-                self.state.max_queue);
+            bail!(
+                "admission control: {depth} requests already queued on pool {pool} \
+                 (max_queue = {})",
+                self.state.max_queue
+            );
         }
         Counters::bump(&self.core.counters.requests);
+        Counters::bump(&self.state.pool_stats[pool].routed);
         if let Some(d) = deadline {
             // admitted: the ticket side can now expire itself (poll/wait)
             // even if no dispatcher ever reaches the entry
             completion.set_deadline(d);
         }
-        q.heap.push(Entry {
+        q.heaps[pool].push(Entry {
             priority,
             deadline,
             seq: self.state.seq.fetch_add(1, Ordering::Relaxed),
@@ -220,8 +319,40 @@ impl Submission {
             completion,
         });
         drop(q);
-        self.state.cv.notify_one();
+        // notify_all, not notify_one: the woken dispatcher might not be
+        // the new entry's home dispatcher, and a non-home dispatcher can
+        // only take it past the steal threshold — a single wakeup could
+        // strand the request until the next push.
+        self.state.cv.notify_all();
         Ok(())
+    }
+
+    /// Shape-class + cache-affinity routing. First sighting of a class
+    /// pins it to the least-loaded pool; later requests follow the pin so
+    /// the class's executables stay warm on one shard — unless the
+    /// pinned pool's live backlog exceeds the least-loaded pool's by the
+    /// steal threshold, in which case the pin moves (affinity
+    /// invalidation under skew). Ties pick the lowest pool index.
+    fn route(&self, q: &QueueInner, class: &'static str) -> usize {
+        let pools = q.heaps.len();
+        if pools == 1 {
+            return 0;
+        }
+        let depths: Vec<usize> = (0..pools).map(|p| q.live_depth(p)).collect();
+        let least = depths
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, d)| **d)
+            .map(|(p, _)| p)
+            .unwrap_or(0);
+        let mut affinity = self.state.affinity.lock().unwrap();
+        match affinity.get(class).copied() {
+            Some(p) if depths[p] < depths[least].saturating_add(self.state.steal_threshold) => p,
+            _ => {
+                affinity.insert(class, least);
+                least
+            }
+        }
     }
 
     /// Mint a ticket and enqueue in one step (the `Coordinator::submit`
@@ -239,7 +370,9 @@ impl Drop for Submission {
             let mut q = self.state.queue.lock().unwrap();
             q.shutdown = true;
             self.state.cv.notify_all();
-            q.heap.drain().collect()
+            // drain in place: the heaps Vec stays indexable for any
+            // dispatcher still inside its pop loop
+            q.heaps.iter_mut().flat_map(|h| h.drain()).collect()
         };
         for e in drained {
             e.completion.abort(
@@ -253,15 +386,28 @@ impl Drop for Submission {
     }
 }
 
-fn dispatcher_loop(core: &Arc<Core>, state: &Arc<SubmitState>) {
+fn dispatcher_loop(core: &Arc<Core>, state: &Arc<SubmitState>, home: usize) {
     loop {
         // dispatch_seq is taken under the queue lock so the stamps agree
         // with dequeue order even with several dispatchers popping.
-        let (entry, dispatch_seq) = {
+        // Home heap first; when it's empty, steal from the deepest other
+        // heap — but only once its live backlog reaches the threshold.
+        let (entry, dispatch_seq, stolen) = {
             let mut q = state.queue.lock().unwrap();
             loop {
-                if let Some(e) = q.heap.pop() {
-                    break (e, state.dispatch_seq.fetch_add(1, Ordering::SeqCst));
+                if let Some(e) = q.heaps[home].pop() {
+                    break (e, state.dispatch_seq.fetch_add(1, Ordering::SeqCst), false);
+                }
+                let victim = (0..q.heaps.len())
+                    .filter(|&p| p != home)
+                    .map(|p| (q.live_depth(p), p))
+                    .max_by_key(|&(d, p)| (d, std::cmp::Reverse(p)));
+                if let Some((depth, v)) = victim {
+                    if depth >= state.steal_threshold {
+                        if let Some(e) = q.heaps[v].pop() {
+                            break (e, state.dispatch_seq.fetch_add(1, Ordering::SeqCst), true);
+                        }
+                    }
                 }
                 if q.shutdown {
                     return;
@@ -286,22 +432,32 @@ fn dispatcher_loop(core: &Arc<Core>, state: &Arc<SubmitState>) {
             );
             continue;
         }
+        // A stolen request executes on the thief's shard — the victim's
+        // backlog is the problem being solved; paying one cold compile
+        // here beats queueing behind it.
         let meta = RequestMeta {
             id: completion.id(),
             policy: req.policy,
             priority,
             queued: submitted.elapsed(),
             dispatch_seq,
+            pool: home,
         };
         if !completion.start() {
             // canceled in the window between the checks above
             Counters::bump(&core.counters.canceled);
             continue;
         }
+        // dispatched/steals bump only after start() succeeds, so the
+        // per-pool counters reconcile with executed-request totals.
+        Counters::bump(&state.pool_stats[home].dispatched);
+        if stolen {
+            Counters::bump(&state.pool_stats[home].steals);
+        }
         // A panicking request must not kill the dispatcher (that would
         // silently shrink the admission bound) nor strand its waiter.
         let id = completion.id();
-        let result = catch_unwind(AssertUnwindSafe(|| core.execute(&req)))
+        let result = catch_unwind(AssertUnwindSafe(|| core.execute(&req, Some(home))))
             .unwrap_or_else(|_| Err(anyhow!("request {id} panicked during execution")));
         completion.finish(meta, result);
     }

@@ -62,7 +62,7 @@ fn print_usage() {
          COMMANDS:\n\
            info       artifact manifest + device model summary\n\
            gemm       run one GEMM (--m --n --k --policy none|online|offline --inject N\n\
-                      --workers W --backend reference|blocked|blocked-scalar\n\
+                      --workers W --pools P --backend reference|blocked|blocked-scalar\n\
                       --priority low|normal|high\n\
                       --deadline-ms D)\n\
            campaign   SEU injection campaign (--rounds --errors --policy --workers W\n\
@@ -71,7 +71,7 @@ fn print_usage() {
            serve      GEMM serving gateway: TCP with a JSON wire protocol\n\
                       (--listen addr:port --threads N --max-frame-bytes B), or the\n\
                       legacy stdin line protocol when no listen address is given\n\
-                      (--config FILE --backend B)\n\
+                      (--config FILE --backend B --workers W --pools P)\n\
            table1     print Table 1 kernel parameters\n\
            help       this text"
     );
@@ -95,10 +95,12 @@ fn parse_priority(s: &str) -> anyhow::Result<Priority> {
 fn start_coordinator(
     ft_level: FtLevel,
     workers: usize,
+    pools: usize,
     backend: &str,
 ) -> anyhow::Result<Coordinator> {
     let engine = Engine::start(EngineConfig {
         workers,
+        pools,
         backend: backend.to_string(),
         ..Default::default()
     })?;
@@ -163,6 +165,12 @@ fn cmd_info(rest: &[String]) -> anyhow::Result<()> {
         s.queue_depth,
         s.engine_inflight
     );
+    for (p, ps) in s.pools.iter().enumerate() {
+        println!(
+            "  pool {p}: queue_depth={} engine_inflight={} routed={} dispatched={} steals={}",
+            ps.queue_depth, ps.engine_inflight, ps.routed, ps.dispatched, ps.steals
+        );
+    }
     Ok(())
 }
 
@@ -174,7 +182,8 @@ fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
         .opt("policy", "none|online|offline", Some("online"))
         .opt("inject", "number of SEUs to inject", Some("0"))
         .opt("level", "online FT granularity tb|warp|thread", Some("tb"))
-        .opt("workers", "engine worker pool size", Some("1"))
+        .opt("workers", "engine workers per pool", Some("1"))
+        .opt("pools", "engine pools (shards)", Some("1"))
         .opt("backend", "execution backend reference|blocked|blocked-scalar", Some("reference"))
         .opt("priority", "dispatch priority low|normal|high", Some("normal"))
         .opt("deadline-ms", "fail if still queued after this long; 0 = none", Some("0"))
@@ -191,6 +200,7 @@ fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
     let coord = start_coordinator(
         level,
         args.usize_or("workers", 1),
+        args.usize_or("pools", 1),
         args.str_or("backend", "reference"),
     )?;
     let a = Matrix::rand_uniform(m, k, seed);
@@ -246,6 +256,7 @@ fn cmd_campaign(rest: &[String]) -> anyhow::Result<()> {
     let coord = start_coordinator(
         FtLevel::Tb,
         args.usize_or("workers", 1),
+        1,
         args.str_or("backend", "reference"),
     )?;
     let campaign = FaultCampaign::new(
@@ -326,6 +337,8 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let cmd = Command::new("serve", "TCP GEMM serving gateway (or stdin line protocol)")
         .opt("config", "config file (TOML subset)", None)
         .opt("backend", "override [engine].backend (reference|blocked|blocked-scalar)", None)
+        .opt("workers", "override [engine].workers (workers per pool)", None)
+        .opt("pools", "override [engine].pools (shard count)", None)
         .opt("listen", "bind addr:port and serve the TCP wire protocol", None)
         .opt("threads", "connection-thread pool size (TCP mode)", None)
         .opt("max-frame-bytes", "per-frame byte bound (TCP mode)", None);
@@ -337,6 +350,17 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let mut engine_cfg = cfg.engine()?;
     if let Some(backend) = args.get("backend") {
         engine_cfg.backend = backend.to_string();
+    }
+    if let Some(workers) = args.get("workers") {
+        engine_cfg.workers = workers
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--workers: bad integer {workers:?}"))?;
+    }
+    if let Some(pools) = args.get("pools") {
+        engine_cfg.pools = pools
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--pools: bad integer {pools:?}"))?;
+        anyhow::ensure!(engine_cfg.pools >= 1, "--pools must be >= 1");
     }
     let engine = Engine::start(engine_cfg)?;
     let coord = Coordinator::new(engine, cfg.coordinator()?);

@@ -73,10 +73,23 @@ pub struct BackendInfo {
 /// What a backend factory gets told about the engine constructing it.
 #[derive(Debug, Clone, Copy)]
 pub struct BackendCtx {
-    /// Engine worker threads in the pool — each gets its own backend
-    /// instance, so a backend with internal parallelism should divide the
-    /// machine by this (the blocked backend does).
+    /// Engine worker threads **per pool** — each gets its own backend
+    /// instance.
     pub workers: usize,
+    /// Engine pools (shards). Core division is per-pool-aware: a backend
+    /// with internal parallelism should divide the machine by
+    /// [`BackendCtx::total_workers`], not `workers`, or an N-pool engine
+    /// oversubscribes cores by N× (the blocked backend does this).
+    pub pools: usize,
+}
+
+impl BackendCtx {
+    /// Backend instances alive across the whole engine
+    /// (`workers × pools`, both clamped to at least 1) — the denominator
+    /// for machine-core division.
+    pub fn total_workers(&self) -> usize {
+        self.workers.max(1) * self.pools.max(1)
+    }
 }
 
 /// Constructs one backend instance per engine worker. Factories are
@@ -129,8 +142,10 @@ impl BackendRegistry {
                 kernel_isa: isa.name(),
             },
             Arc::new(move |ctx: &BackendCtx| {
-                Box::new(super::blocked::BlockedBackend::for_engine_isa(ctx.workers, isa))
-                    as Box<dyn Backend>
+                Box::new(super::blocked::BlockedBackend::for_engine_isa(
+                    ctx.total_workers(),
+                    isa,
+                )) as Box<dyn Backend>
             }),
         );
         reg.register(
@@ -144,7 +159,7 @@ impl BackendRegistry {
             Arc::new(|ctx: &BackendCtx| {
                 Box::new(
                     super::blocked::BlockedBackend::for_engine_isa(
-                        ctx.workers,
+                        ctx.total_workers(),
                         KernelIsa::Scalar,
                     )
                     .with_name("blocked-scalar"),
@@ -673,7 +688,7 @@ mod tests {
     fn registry_lists_builtins_and_resolves_default() {
         let reg = BackendRegistry::global();
         assert_eq!(reg.names(), vec!["blocked", "blocked-scalar", "reference"]);
-        let ctx = BackendCtx { workers: 2 };
+        let ctx = BackendCtx { workers: 2, pools: 1 };
         let (info, factory) = reg.resolve("").unwrap();
         assert_eq!(info.name, "reference");
         assert_eq!(info.kernel_isa, "portable");
@@ -689,6 +704,14 @@ mod tests {
         let err = reg.resolve("pjrt").unwrap_err();
         assert!(err.to_string().contains("unknown backend"), "{err}");
         assert!(err.to_string().contains("blocked|blocked-scalar|reference"), "{err}");
+    }
+
+    #[test]
+    fn backend_ctx_divides_cores_per_pool() {
+        assert_eq!(BackendCtx { workers: 2, pools: 3 }.total_workers(), 6);
+        assert_eq!(BackendCtx { workers: 4, pools: 1 }.total_workers(), 4);
+        // zero fields clamp instead of zeroing the division denominator
+        assert_eq!(BackendCtx { workers: 0, pools: 0 }.total_workers(), 1);
     }
 
     #[test]

@@ -15,6 +15,17 @@
 //! pays one compile and is warm from then on, so a burst of same-bucket
 //! blocks floods the whole pool. Compilation happens once per (artifact,
 //! worker) and is cached thereafter.
+//!
+//! **The engine is sharded into pools** (`EngineConfig::pools`): each pool
+//! owns a disjoint worker set — and therefore a disjoint warm-executable
+//! cache — with its own inflight counter. [`Engine::submit_on`] pins a
+//! request to one pool (the coordinator's shard router uses this to keep a
+//! shape class's executables warm on one pool), while plain
+//! [`Engine::submit`] picks warm-affine across *all* pools, which is how
+//! the blocks of one huge split GEMM span every shard. Backend factories
+//! see the full `workers × pools` geometry via
+//! [`BackendCtx`](super::backend::BackendCtx) so per-instance core
+//! division stays oversubscription-free.
 
 use std::collections::HashSet;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -90,12 +101,16 @@ pub struct EngineConfig {
     /// Artifact names to compile eagerly at startup on every worker
     /// (empty = lazy).
     pub precompile: Vec<String>,
-    /// Worker threads, each with its own backend + executable cache.
-    /// 0 is treated as 1.
+    /// Worker threads **per pool**, each with its own backend + executable
+    /// cache. 0 is treated as 1.
     pub workers: usize,
     /// Which kernel backend the workers run, by [`BackendRegistry`] name
     /// (`"reference"` | `"blocked"`); empty = the registry default.
     pub backend: String,
+    /// Engine pools (shards), each with its own worker set, warm-affine
+    /// executable cache, and inflight counter. 0 is treated as 1. Total
+    /// worker threads = `workers * pools`.
+    pub pools: usize,
 }
 
 /// Cumulative engine-side statistics (per worker; [`Engine::stats`]
@@ -148,20 +163,38 @@ struct Worker {
     handle: Mutex<Option<JoinHandle<()>>>,
 }
 
+/// One engine shard: a disjoint worker set with its own warm caches and
+/// load counter.
+struct Pool {
+    workers: Vec<Worker>,
+    /// Queued + running requests on this pool (shard-level load signal).
+    inflight: Arc<AtomicUsize>,
+}
+
 struct Shared {
     manifest: Arc<Manifest>,
     backend: BackendInfo,
-    workers: Vec<Worker>,
+    pools: Vec<Pool>,
     inflight_total: Arc<AtomicUsize>,
     peak_inflight: Arc<AtomicUsize>,
 }
 
+impl Shared {
+    fn all_workers(&self) -> impl Iterator<Item = &Worker> {
+        self.pools.iter().flat_map(|p| p.workers.iter())
+    }
+
+    fn worker_count(&self) -> usize {
+        self.pools.iter().map(|p| p.workers.len()).sum()
+    }
+}
+
 impl Drop for Shared {
     fn drop(&mut self) {
-        for w in &self.workers {
+        for w in self.pools.iter().flat_map(|p| p.workers.iter()) {
             let _ = w.tx.send(Msg::Shutdown);
         }
-        for w in &self.workers {
+        for w in self.pools.iter().flat_map(|p| p.workers.iter()) {
             if let Some(h) = w.handle.lock().unwrap().take() {
                 let _ = h.join();
             }
@@ -200,80 +233,90 @@ impl Engine {
         // an unknown name fails here, not inside a worker thread.
         let (backend_info, factory) = registry.resolve(&config.backend)?;
         let n = config.workers.max(1);
+        let pools_n = config.pools.max(1);
         let inflight_total = Arc::new(AtomicUsize::new(0));
         let peak_inflight = Arc::new(AtomicUsize::new(0));
 
-        let mut workers = Vec::with_capacity(n);
-        for i in 0..n {
-            let (tx, rx) = channel::<Msg>();
-            let inflight = Arc::new(AtomicUsize::new(0));
-            let (ready_tx, ready_rx) = oneshot::channel::<Result<()>>();
-            let thread_manifest = Arc::clone(&manifest);
-            let thread_inflight = Arc::clone(&inflight);
-            let thread_total = Arc::clone(&inflight_total);
-            let thread_factory = Arc::clone(&factory);
-            let handle = std::thread::Builder::new()
-                .name(format!("ftgemm-engine-{i}"))
-                .spawn(move || {
-                    // Backends may hold thread-confined (Rc-based) client
-                    // state, so construction happens here, in-thread, from
-                    // the Send + Sync registry factory.
-                    let ctx = BackendCtx { workers: n };
-                    let mut worker =
-                        EngineWorker::new(thread_manifest, (*thread_factory)(&ctx));
-                    let _ = ready_tx.send(Ok(()));
-                    while let Ok(msg) = rx.recv() {
-                        match msg {
-                            Msg::Exec(req, reply) => {
-                                // A panicking backend fails the one request
-                                // instead of killing the worker thread (and
-                                // silently shrinking the pool).
-                                let artifact = req.artifact.clone();
-                                let out =
-                                    catch_unwind(AssertUnwindSafe(|| worker.execute(req)))
-                                        .unwrap_or_else(|_| {
-                                            Err(anyhow!(
-                                                "backend panicked executing {artifact}"
-                                            ))
-                                        });
-                                thread_inflight.fetch_sub(1, Ordering::SeqCst);
-                                thread_total.fetch_sub(1, Ordering::SeqCst);
-                                let _ = reply.send(out);
+        let mut pools = Vec::with_capacity(pools_n);
+        for p in 0..pools_n {
+            let pool_inflight = Arc::new(AtomicUsize::new(0));
+            let mut workers = Vec::with_capacity(n);
+            for i in 0..n {
+                let (tx, rx) = channel::<Msg>();
+                let inflight = Arc::new(AtomicUsize::new(0));
+                let (ready_tx, ready_rx) = oneshot::channel::<Result<()>>();
+                let thread_manifest = Arc::clone(&manifest);
+                let thread_inflight = Arc::clone(&inflight);
+                let thread_pool = Arc::clone(&pool_inflight);
+                let thread_total = Arc::clone(&inflight_total);
+                let thread_factory = Arc::clone(&factory);
+                let handle = std::thread::Builder::new()
+                    .name(format!("ftgemm-eng-{p}.{i}"))
+                    .spawn(move || {
+                        // Backends may hold thread-confined (Rc-based) client
+                        // state, so construction happens here, in-thread, from
+                        // the Send + Sync registry factory.
+                        let ctx = BackendCtx { workers: n, pools: pools_n };
+                        let mut worker =
+                            EngineWorker::new(thread_manifest, (*thread_factory)(&ctx));
+                        let _ = ready_tx.send(Ok(()));
+                        while let Ok(msg) = rx.recv() {
+                            match msg {
+                                Msg::Exec(req, reply) => {
+                                    // A panicking backend fails the one request
+                                    // instead of killing the worker thread (and
+                                    // silently shrinking the pool).
+                                    let artifact = req.artifact.clone();
+                                    let out =
+                                        catch_unwind(AssertUnwindSafe(|| worker.execute(req)))
+                                            .unwrap_or_else(|_| {
+                                                Err(anyhow!(
+                                                    "backend panicked executing {artifact}"
+                                                ))
+                                            });
+                                    thread_inflight.fetch_sub(1, Ordering::SeqCst);
+                                    thread_pool.fetch_sub(1, Ordering::SeqCst);
+                                    thread_total.fetch_sub(1, Ordering::SeqCst);
+                                    let _ = reply.send(out);
+                                }
+                                Msg::Warm(name, reply) => {
+                                    // same containment as Exec: a panicking
+                                    // compile() must not kill the worker
+                                    let out =
+                                        catch_unwind(AssertUnwindSafe(|| worker.warm(&name)))
+                                            .unwrap_or_else(|_| {
+                                                Err(anyhow!(
+                                                    "backend panicked compiling {name}"
+                                                ))
+                                            });
+                                    let _ = reply.send(out);
+                                }
+                                Msg::Stats(reply) => {
+                                    let _ = reply.send(worker.stats);
+                                }
+                                Msg::Shutdown => break,
                             }
-                            Msg::Warm(name, reply) => {
-                                // same containment as Exec: a panicking
-                                // compile() must not kill the worker
-                                let out =
-                                    catch_unwind(AssertUnwindSafe(|| worker.warm(&name)))
-                                        .unwrap_or_else(|_| {
-                                            Err(anyhow!("backend panicked compiling {name}"))
-                                        });
-                                let _ = reply.send(out);
-                            }
-                            Msg::Stats(reply) => {
-                                let _ = reply.send(worker.stats);
-                            }
-                            Msg::Shutdown => break,
                         }
-                    }
-                })
-                .context("spawn engine worker thread")?;
-            ready_rx
-                .recv()
-                .map_err(|_| anyhow!("engine worker {i} died during startup"))??;
-            workers.push(Worker {
-                tx,
-                inflight,
-                warmed: Mutex::new(HashSet::new()),
-                handle: Mutex::new(Some(handle)),
-            });
+                    })
+                    .context("spawn engine worker thread")?;
+                ready_rx
+                    .recv()
+                    .map_err(|_| anyhow!("engine worker {p}.{i} died during startup"))??;
+                workers.push(Worker {
+                    tx,
+                    inflight,
+                    warmed: Mutex::new(HashSet::new()),
+                    handle: Mutex::new(Some(handle)),
+                });
+            }
+            pools.push(Pool { workers, inflight: pool_inflight });
         }
 
         let engine = Engine {
             shared: Arc::new(Shared {
                 manifest,
                 backend: backend_info,
-                workers,
+                pools,
                 inflight_total,
                 peak_inflight,
             }),
@@ -295,9 +338,34 @@ impl Engine {
         self.shared.backend
     }
 
-    /// Number of worker threads in the pool.
+    /// Total number of worker threads across all pools.
     pub fn worker_count(&self) -> usize {
-        self.shared.workers.len()
+        self.shared.worker_count()
+    }
+
+    /// Number of engine pools (shards).
+    pub fn pool_count(&self) -> usize {
+        self.shared.pools.len()
+    }
+
+    /// Worker threads per pool (every pool has the same width).
+    pub fn workers_per_pool(&self) -> usize {
+        self.shared.pools.first().map(|p| p.workers.len()).unwrap_or(0)
+    }
+
+    /// Requests currently queued or running on one pool (shard-level load
+    /// signal; the coordinator's router and stealer read it).
+    pub fn pool_inflight(&self, pool: usize) -> usize {
+        self.shared.pools[pool].inflight.load(Ordering::SeqCst)
+    }
+
+    /// Per-pool inflight snapshot, pool order.
+    pub fn inflight_per_pool(&self) -> Vec<usize> {
+        self.shared
+            .pools
+            .iter()
+            .map(|p| p.inflight.load(Ordering::SeqCst))
+            .collect()
     }
 
     /// Highest number of simultaneously queued/running requests observed —
@@ -312,25 +380,54 @@ impl Engine {
         self.shared.inflight_total.load(Ordering::SeqCst)
     }
 
-    /// Execute an artifact; blocks until the result is back.
+    /// Execute an artifact; blocks until the result is back. Picks a worker
+    /// warm-affine across all pools.
     pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<ExecOutput> {
         self.submit(artifact, inputs)?.wait()
     }
 
-    /// Queue an execution on the affinity-chosen worker; returns
-    /// immediately with a [`Pending`] handle.
+    /// [`Engine::execute`] pinned to one pool when `pool` is `Some`
+    /// (modulo-wrapped, so a stale shard index degrades instead of
+    /// panicking); `None` spans every pool.
+    pub fn execute_on(
+        &self,
+        pool: Option<usize>,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+    ) -> Result<ExecOutput> {
+        self.submit_on(pool, artifact, inputs)?.wait()
+    }
+
+    /// Queue an execution on the affinity-chosen worker across all pools;
+    /// returns immediately with a [`Pending`] handle.
     pub fn submit(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Pending> {
+        self.submit_on(None, artifact, inputs)
+    }
+
+    /// Queue an execution, optionally pinned to one pool's worker set.
+    /// `Some(p)` keeps the request (and its warm executable) on shard
+    /// `p % pool_count`; `None` picks warm-affine across every pool — the
+    /// path split-GEMM blocks use to span shards.
+    pub fn submit_on(
+        &self,
+        pool: Option<usize>,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+    ) -> Result<Pending> {
         let (otx, orx) = oneshot::channel();
-        let w = &self.shared.workers[self.pick_worker(artifact)];
+        let (p, i) = self.pick_worker(pool, artifact);
+        let pool_ref = &self.shared.pools[p];
+        let w = &pool_ref.workers[i];
         // Affinity bookkeeping only matters with siblings to choose from;
         // skip the lock (and the allocation when already marked) otherwise.
-        if self.shared.workers.len() > 1 {
+        if self.worker_count() > 1 {
             let mut warmed = w.warmed.lock().unwrap();
             if !warmed.contains(artifact) {
                 warmed.insert(artifact.to_string());
             }
         }
         w.inflight.fetch_add(1, Ordering::SeqCst);
+        pool_ref.inflight.fetch_add(1, Ordering::SeqCst);
         let now = self.shared.inflight_total.fetch_add(1, Ordering::SeqCst) + 1;
         self.shared.peak_inflight.fetch_max(now, Ordering::SeqCst);
         let send = w
@@ -338,6 +435,7 @@ impl Engine {
             .send(Msg::Exec(ExecRequest { artifact: artifact.into(), inputs }, otx));
         if send.is_err() {
             w.inflight.fetch_sub(1, Ordering::SeqCst);
+            pool_ref.inflight.fetch_sub(1, Ordering::SeqCst);
             self.shared.inflight_total.fetch_sub(1, Ordering::SeqCst);
             bail!("engine worker thread gone");
         }
@@ -345,41 +443,56 @@ impl Engine {
     }
 
     /// Warm-affine worker choice: idle warm > idle cold > least-loaded
-    /// warm > least-loaded overall.
-    fn pick_worker(&self, artifact: &str) -> usize {
-        let workers = &self.shared.workers;
-        if workers.len() == 1 {
-            return 0;
+    /// warm > least-loaded overall. The candidate set is one pool's
+    /// workers when pinned, or every pool's when not. Returns
+    /// `(pool, worker)` indices.
+    fn pick_worker(&self, pool: Option<usize>, artifact: &str) -> (usize, usize) {
+        let pools = &self.shared.pools;
+        let candidates: Vec<(usize, usize)> = match pool {
+            Some(p) => {
+                let p = p % pools.len();
+                (0..pools[p].workers.len()).map(|i| (p, i)).collect()
+            }
+            None => pools
+                .iter()
+                .enumerate()
+                .flat_map(|(p, pl)| (0..pl.workers.len()).map(move |i| (p, i)))
+                .collect(),
+        };
+        if candidates.len() == 1 {
+            return candidates[0];
         }
-        let mut best_any = 0usize;
+        let mut best_any = candidates[0];
         let mut best_any_load = usize::MAX;
-        let mut best_warm: Option<usize> = None;
+        let mut best_warm: Option<(usize, usize)> = None;
         let mut best_warm_load = usize::MAX;
-        for (i, w) in workers.iter().enumerate() {
+        for &(p, i) in &candidates {
+            let w = &pools[p].workers[i];
             let load = w.inflight.load(Ordering::SeqCst);
             let warm = w.warmed.lock().unwrap().contains(artifact);
             if warm && load < best_warm_load {
-                best_warm = Some(i);
+                best_warm = Some((p, i));
                 best_warm_load = load;
             }
             if load < best_any_load {
-                best_any = i;
+                best_any = (p, i);
                 best_any_load = load;
             }
         }
         match best_warm {
-            Some(i) if best_warm_load == 0 => i,
+            Some(pi) if best_warm_load == 0 => pi,
             _ if best_any_load == 0 => best_any,
-            Some(i) => i,
+            Some(pi) => pi,
             None => best_any,
         }
     }
 
-    /// Compile an artifact ahead of time on EVERY worker; returns the total
-    /// compile time (zero when already cached everywhere).
+    /// Compile an artifact ahead of time on EVERY worker in every pool;
+    /// returns the total compile time (zero when already cached
+    /// everywhere).
     pub fn warm(&self, artifact: &str) -> Result<Duration> {
         let mut total = Duration::ZERO;
-        for w in &self.shared.workers {
+        for w in self.shared.all_workers() {
             let (otx, orx) = oneshot::channel();
             w.tx
                 .send(Msg::Warm(artifact.into(), otx))
@@ -393,7 +506,7 @@ impl Engine {
         Ok(total)
     }
 
-    /// Aggregate statistics over the pool.
+    /// Aggregate statistics over every pool.
     pub fn stats(&self) -> Result<EngineStats> {
         let mut agg = EngineStats::default();
         for s in self.stats_per_worker()? {
@@ -402,11 +515,10 @@ impl Engine {
         Ok(agg)
     }
 
-    /// Per-worker statistics, pool order.
+    /// Per-worker statistics, flattened in (pool, worker) order.
     pub fn stats_per_worker(&self) -> Result<Vec<EngineStats>> {
         self.shared
-            .workers
-            .iter()
+            .all_workers()
             .map(|w| {
                 let (otx, orx) = oneshot::channel();
                 w.tx
@@ -415,6 +527,22 @@ impl Engine {
                 orx.recv().map_err(|_| anyhow!("engine dropped request"))
             })
             .collect()
+    }
+
+    /// Per-pool aggregate statistics, pool order.
+    pub fn stats_per_pool(&self) -> Result<Vec<EngineStats>> {
+        let per_worker = self.stats_per_worker()?;
+        let width = self.workers_per_pool().max(1);
+        Ok(per_worker
+            .chunks(width)
+            .map(|chunk| {
+                let mut agg = EngineStats::default();
+                for s in chunk {
+                    agg.merge(s);
+                }
+                agg
+            })
+            .collect())
     }
 }
 
@@ -596,6 +724,66 @@ mod tests {
             .count();
         assert!(busy >= 2, "burst stayed on {busy} worker(s)");
         assert!(eng.peak_inflight() >= 2);
+    }
+
+    #[test]
+    fn pools_partition_workers_and_pin_submissions() {
+        let eng = Engine::start(EngineConfig { workers: 2, pools: 2, ..Default::default() })
+            .expect("reference engine always starts");
+        assert_eq!(eng.pool_count(), 2);
+        assert_eq!(eng.workers_per_pool(), 2);
+        assert_eq!(eng.worker_count(), 4);
+        eng.warm("gemm_small").unwrap();
+        assert_eq!(eng.stats_per_worker().unwrap().len(), 4);
+
+        let a = crate::abft::Matrix::rand_uniform(64, 64, 11);
+        let b = crate::abft::Matrix::rand_uniform(64, 64, 12);
+        let mk = || {
+            vec![
+                Tensor::new(vec![64, 64], a.data().to_vec()),
+                Tensor::new(vec![64, 64], b.data().to_vec()),
+            ]
+        };
+        // pinned submissions stay on their shard; index 3 wraps to pool 1
+        for _ in 0..4 {
+            eng.execute_on(Some(1), "gemm_small", mk()).unwrap();
+        }
+        eng.execute_on(Some(3), "gemm_small", mk()).unwrap();
+        let per_pool = eng.stats_per_pool().unwrap();
+        assert_eq!(per_pool.len(), 2);
+        assert_eq!(per_pool[0].executions, 0, "pinned work leaked to pool 0");
+        assert_eq!(per_pool[1].executions, 5);
+        assert_eq!(eng.pool_inflight(0), 0);
+        assert_eq!(eng.pool_inflight(1), 0);
+        assert_eq!(eng.inflight_per_pool(), vec![0, 0]);
+    }
+
+    #[test]
+    fn unpinned_burst_spans_pools() {
+        let eng = Engine::start(EngineConfig { workers: 1, pools: 2, ..Default::default() })
+            .expect("reference engine always starts");
+        let a = crate::abft::Matrix::rand_uniform(64, 64, 13);
+        let b = crate::abft::Matrix::rand_uniform(64, 64, 14);
+        let mk = || {
+            vec![
+                Tensor::new(vec![64, 64], a.data().to_vec()),
+                Tensor::new(vec![64, 64], b.data().to_vec()),
+            ]
+        };
+        // global submit must spill across shards once pool 0 is busy —
+        // this is the path split-GEMM blocks take
+        let pending: Vec<Pending> =
+            (0..8).map(|_| eng.submit("gemm_small", mk()).unwrap()).collect();
+        for p in pending {
+            p.wait().unwrap();
+        }
+        let busy_pools = eng
+            .stats_per_pool()
+            .unwrap()
+            .iter()
+            .filter(|s| s.executions > 0)
+            .count();
+        assert_eq!(busy_pools, 2, "burst stayed on one shard");
     }
 
     #[test]

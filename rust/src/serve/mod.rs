@@ -459,6 +459,7 @@ fn gemm_ok_line(id: u64, resp: &GemmResponse) -> String {
     o.set("id", Json::Num(id as f64));
     o.set("req", Json::Num(meta.id as f64));
     o.set("priority", Json::from(meta.priority.as_str()));
+    o.set("pool", Json::Num(meta.pool as f64));
     o.set("queued_us", Json::Num(meta.queued.as_micros() as f64));
     o.set("exec_us", Json::Num(out.exec_time.as_micros() as f64));
     o.set("detected", Json::Num(out.errors_detected as f64));
@@ -566,12 +567,21 @@ mod tests {
         let v = recv();
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{v}");
         assert!(v.get("checksum").unwrap().as_f64().is_some());
+        assert_eq!(v.get("pool").unwrap().as_usize(), Some(0), "single-pool engine");
 
         send(r#"{"op": "metrics"}"#);
         let v = recv();
         assert_eq!(v.path("gateway.protocol_errors").unwrap().as_usize(), Some(1));
         assert_eq!(v.path("connection.gemms").unwrap().as_usize(), Some(1));
         assert!(v.path("coordinator.backend.name").unwrap().as_str().is_some());
+        // per-pool shard stats ride along (one entry per engine pool)
+        let pools = match v.path("coordinator.pools") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("metrics missing coordinator.pools array: {other:?}"),
+        };
+        assert_eq!(pools.len(), 1);
+        assert_eq!(pools[0].get("dispatched").unwrap().as_usize(), Some(1));
+        assert_eq!(pools[0].get("steals").unwrap().as_usize(), Some(0));
 
         send(r#"{"op": "quit"}"#);
         assert_eq!(recv().get("op").unwrap().as_str(), Some("quit"));

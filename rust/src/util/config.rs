@@ -169,6 +169,9 @@ impl Config {
         if let Some(n) = self.usize("coordinator.max_queue")? {
             cfg.max_queue = n;
         }
+        if let Some(n) = self.usize("coordinator.steal_threshold")? {
+            cfg.steal_threshold = n;
+        }
         let mut th = Thresholds::default();
         if let Some(x) = self.num("coordinator.threshold_rel")? {
             th.rel = x as f32;
@@ -208,6 +211,12 @@ impl Config {
                 bail!("engine.workers must be >= 1");
             }
             cfg.workers = n;
+        }
+        if let Some(n) = self.usize("engine.pools")? {
+            if n == 0 {
+                bail!("engine.pools must be >= 1");
+            }
+            cfg.pools = n;
         }
         Ok(cfg)
     }
@@ -296,6 +305,7 @@ mod tests {
 artifacts_dir = "artifacts"          # where make artifacts wrote
 precompile = "gemm_medium, ftgemm_tb_medium"
 workers = 4
+pools = 2
 backend = "blocked"
 
 [coordinator]
@@ -306,6 +316,7 @@ threshold_rel = 2e-4
 scheduler_threads = 6
 max_inflight = 8
 max_queue = 256
+steal_threshold = 3
 
 [batcher]
 max_batch = 32
@@ -336,10 +347,12 @@ max_frame_bytes = 65536
         assert_eq!(coord.scheduler_threads, 6);
         assert_eq!(coord.max_inflight, 8);
         assert_eq!(coord.max_queue, 256);
+        assert_eq!(coord.steal_threshold, 3);
         assert!((coord.thresholds.rel - 2e-4).abs() < 1e-9);
         let eng = c.engine().unwrap();
         assert_eq!(eng.precompile, vec!["gemm_medium", "ftgemm_tb_medium"]);
         assert_eq!(eng.workers, 4);
+        assert_eq!(eng.pools, 2);
         assert_eq!(eng.backend, "blocked");
         let b = c.batcher().unwrap();
         assert_eq!(b.max_batch, 32);
@@ -381,6 +394,7 @@ max_frame_bytes = 65536
         assert_eq!(coord.host_verify, HostVerify::Off);
         assert_eq!(coord.max_inflight, 0, "0 = autosize to the engine pool");
         assert_eq!(coord.max_queue, 0, "0 = unbounded");
+        assert_eq!(coord.steal_threshold, 4);
     }
 
     #[test]
@@ -427,6 +441,10 @@ max_frame_bytes = 65536
         assert!(c.batcher().is_err());
         let c = Config::parse("[engine]\nworkers = 0").unwrap();
         assert!(c.engine().is_err());
+        let c = Config::parse("[engine]\npools = 0").unwrap();
+        assert!(c.engine().is_err());
+        let c = Config::parse("[engine]\npools = 4").unwrap();
+        assert_eq!(c.engine().unwrap().pools, 4);
         // backend names are carried verbatim (resolution happens at
         // Engine::start, against whichever registry serves the config)
         let c = Config::parse("[engine]\nbackend = \"custom_embedder\"").unwrap();

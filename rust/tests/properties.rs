@@ -440,6 +440,177 @@ fn prop_saturated_dispatch_order_is_priority_then_fifo() {
 }
 
 // ---------------------------------------------------------------------
+// Sharded dispatch: affinity routing + work stealing
+// ---------------------------------------------------------------------
+
+/// Randomized skewed loads across 2–4 engine pools: every submitted
+/// request settles exactly once (unique dispatch_seq, one response per
+/// ticket), lands on a real pool, and the per-pool routed/dispatched/
+/// steal counters reconcile with the coordinator-wide totals.
+#[test]
+fn prop_sharded_dispatch_executes_exactly_once_and_counters_reconcile() {
+    use ftgemm::coordinator::{Coordinator, CoordinatorConfig, FtPolicy, GemmRequest};
+    use ftgemm::runtime::{Engine, EngineConfig};
+
+    for case in 0..3u64 {
+        let seed = 0x5EA1 + case * 7919;
+        let mut rng = Pcg32::seeded(seed);
+        let pools = 2 + case as usize; // 2, 3, 4
+        let engine =
+            Engine::start(EngineConfig { workers: 1, pools, ..Default::default() }).unwrap();
+        let coord = Coordinator::new(
+            engine,
+            CoordinatorConfig {
+                max_inflight: pools, // one home dispatcher per pool
+                steal_threshold: 1 + rng.usize_below(3),
+                ..Default::default()
+            },
+        );
+        // skewed load: mostly one shape class, so the affinity router
+        // funnels a burst at one pool and balancing has to spread it
+        let n_req = 24usize;
+        let tickets: Vec<_> = (0..n_req)
+            .map(|i| {
+                let size = if rng.below(4) == 0 { 128 } else { 64 };
+                let a = Matrix::rand_uniform(size, size, seed + 2 * i as u64);
+                let b = Matrix::rand_uniform(size, size, seed + 2 * i as u64 + 1);
+                coord.submit(GemmRequest::new(a, b).policy(FtPolicy::None)).unwrap()
+            })
+            .collect();
+        let metas: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap().meta).collect();
+
+        // exactly once: one settled response per ticket, no shared
+        // dispatch slot (dispatch_seq is bumped once per dequeue)
+        assert_eq!(metas.len(), n_req);
+        let mut seqs: Vec<u64> = metas.iter().map(|m| m.dispatch_seq).collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        assert_eq!(seqs.len(), n_req, "seed {seed:#x}: a dispatch slot was reused");
+
+        let s = coord.stats();
+        assert_eq!(s.pools.len(), pools);
+        let routed: u64 = s.pools.iter().map(|p| p.routed).sum();
+        let dispatched: u64 = s.pools.iter().map(|p| p.dispatched).sum();
+        let steals: u64 = s.pools.iter().map(|p| p.steals).sum();
+        assert_eq!(routed, n_req as u64, "seed {seed:#x}: routed total");
+        assert_eq!(routed, s.counters.requests, "seed {seed:#x}: routed vs requests");
+        assert_eq!(dispatched, n_req as u64, "seed {seed:#x}: dispatched total");
+        assert_eq!(s.counters.canceled + s.counters.expired, 0);
+        assert!(steals <= dispatched);
+        for (p, stat) in s.pools.iter().enumerate() {
+            assert!(stat.steals <= stat.dispatched, "pool {p} steals exceed dispatched");
+        }
+        // the pool recorded in each response matches the per-pool
+        // dispatched counters (stolen work counts for the thief's pool)
+        let mut per_pool = vec![0u64; pools];
+        for m in &metas {
+            assert!(m.pool < pools, "seed {seed:#x}: meta.pool {} out of range", m.pool);
+            per_pool[m.pool] += 1;
+        }
+        for (p, stat) in s.pools.iter().enumerate() {
+            assert_eq!(
+                stat.dispatched, per_pool[p],
+                "seed {seed:#x}: pool {p} dispatched vs settled metas"
+            );
+        }
+    }
+}
+
+/// With the skew threshold effectively infinite, the router never re-pins
+/// and idle dispatchers never steal: every request of one shape class
+/// runs on its affinity pool and the other pool stays untouched.
+#[test]
+fn prop_no_steals_below_threshold() {
+    use ftgemm::coordinator::{Coordinator, CoordinatorConfig, FtPolicy, GemmRequest};
+    use ftgemm::runtime::{Engine, EngineConfig};
+
+    let engine =
+        Engine::start(EngineConfig { workers: 1, pools: 2, ..Default::default() }).unwrap();
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorConfig {
+            max_inflight: 2,
+            steal_threshold: usize::MAX,
+            ..Default::default()
+        },
+    );
+    let tickets: Vec<_> = (0..16u64)
+        .map(|i| {
+            let a = Matrix::rand_uniform(64, 64, 0xA0 + 2 * i);
+            let b = Matrix::rand_uniform(64, 64, 0xA1 + 2 * i);
+            coord.submit(GemmRequest::new(a, b).policy(FtPolicy::None)).unwrap()
+        })
+        .collect();
+    let metas: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap().meta).collect();
+    let s = coord.stats();
+    let steals: u64 = s.pools.iter().map(|p| p.steals).sum();
+    assert_eq!(steals, 0, "nothing may be stolen below the skew threshold");
+    // one shape class, one affinity pool: the whole burst stays put
+    let home = metas[0].pool;
+    assert!(metas.iter().all(|m| m.pool == home), "affinity pool changed mid-burst");
+    assert_eq!(s.pools[home].routed, 16);
+    assert_eq!(s.pools[home].dispatched, 16);
+    assert_eq!(s.pools[1 - home].routed, 0);
+    assert_eq!(s.pools[1 - home].dispatched, 0);
+}
+
+/// Stealing must actually happen once the skew threshold is crossed: one
+/// dispatcher is held by a huge blocker while smalls pile onto its pool's
+/// queue; the other dispatcher's home queue eventually runs dry while
+/// live work remains, so it must steal (or it stole the blocker itself —
+/// either way the steal counters move).
+#[test]
+fn prop_steals_occur_past_threshold_under_skew() {
+    use ftgemm::coordinator::{
+        Coordinator, CoordinatorConfig, FtPolicy, GemmRequest, TicketStatus,
+    };
+    use ftgemm::runtime::{Engine, EngineConfig};
+
+    let engine =
+        Engine::start(EngineConfig { workers: 1, pools: 2, ..Default::default() }).unwrap();
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorConfig { max_inflight: 2, steal_threshold: 1, ..Default::default() },
+    );
+    // occupy one dispatcher + one pool's engine worker with a huge block
+    let blocker = coord
+        .submit(
+            GemmRequest::new(
+                Matrix::rand_uniform(512, 512, 0xB0),
+                Matrix::rand_uniform(512, 512, 0xB1),
+            )
+            .policy(FtPolicy::None),
+        )
+        .unwrap();
+    // wait until it is actually running so the burst below routes against
+    // empty queues (first small pins its class to one pool)
+    while blocker.poll() == TicketStatus::Queued {
+        std::thread::yield_now();
+    }
+    let tickets: Vec<_> = (0..10u64)
+        .map(|i| {
+            let a = Matrix::rand_uniform(64, 64, 0xC0 + 2 * i);
+            let b = Matrix::rand_uniform(64, 64, 0xC1 + 2 * i);
+            coord.submit(GemmRequest::new(a, b).policy(FtPolicy::None)).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    blocker.wait().unwrap();
+    let s = coord.stats();
+    let steals: u64 = s.pools.iter().map(|p| p.steals).sum();
+    let dispatched: u64 = s.pools.iter().map(|p| p.dispatched).sum();
+    assert_eq!(dispatched, 11);
+    assert!(
+        steals >= 1,
+        "a saturated pool with an idle neighbor past the skew threshold must steal \
+         (pools: {:?})",
+        s.pools
+    );
+}
+
+// ---------------------------------------------------------------------
 // Backend parity: BlockedBackend vs ReferenceBackend
 // ---------------------------------------------------------------------
 
