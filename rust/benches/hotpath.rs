@@ -5,17 +5,21 @@
 //! GEMM (the offline recompute path), JSON manifest parsing, live engine
 //! execution + the full coordinator round trip per policy, and the
 //! **worker-count axis**: 1-worker vs N-worker wall time on an oversize
-//! (split) shape served through the plan → schedule → execute pipeline.
-//! The worker sweep writes `BENCH_pipeline.json` next to the manifest it
-//! ran from.
+//! (split) shape served through the plan → schedule → execute pipeline,
+//! plus the **repeat-operand axis**: the same Arc-shared operands
+//! resubmitted with the packed-operand cache on vs off (the
+//! `--min-cache-speedup` gate point). The worker sweep writes
+//! `BENCH_pipeline.json` next to the manifest it ran from.
 
 use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
 
 use ftgemm::abft::checksum::{verify, ChecksumPair, Thresholds};
 use ftgemm::abft::injection::InjectionPlan;
 use ftgemm::abft::matrix::Matrix;
 use ftgemm::bench::Harness;
-use ftgemm::coordinator::{router, Coordinator, CoordinatorConfig, FtPolicy};
+use ftgemm::coordinator::{router, Coordinator, CoordinatorConfig, FtPolicy, GemmRequest};
 use ftgemm::gpusim::{self, device::T4};
 use ftgemm::runtime::{Engine, EngineConfig};
 use ftgemm::util::json::Json;
@@ -216,6 +220,8 @@ fn bench_worker_pipeline() {
     }
     println!("\n== pipeline worker/backend sweep ==\n{}", hq.summary());
 
+    let repeat_cache = bench_repeat_cache(&a, &b, &mut hq);
+
     let mut ideal = Json::Arr(Vec::new());
     let mut modeled = Json::Arr(Vec::new());
     for &workers in &WORKER_COUNTS {
@@ -235,7 +241,7 @@ fn bench_worker_pipeline() {
     }
 
     let mut root = Json::obj();
-    root.set("schema", Json::Str("ftgemm-bench-pipeline/4".into()));
+    root.set("schema", Json::Str("ftgemm-bench-pipeline/5".into()));
     root.set(
         "shape",
         Json::Arr(vec![
@@ -253,6 +259,7 @@ fn bench_worker_pipeline() {
     root.set("blocks", Json::Num(blocks as f64));
     root.set("live", live);
     root.set("ft_overhead", ft_overhead);
+    root.set("repeat_cache", repeat_cache);
     let gate_of = |name: &str| {
         gate_means
             .iter()
@@ -300,7 +307,10 @@ fn bench_worker_pipeline() {
              blocked variant at that point; `serving` = gateway throughput/latency measured \
              over TCP by `loadgen --bench-out` (null until it runs) and `pool_scaling` = the \
              multi-pool throughput ratio loadgen derives from it (null until a two-shard-count \
-             series exists); regenerate with `cargo bench --bench hotpath` then the loadgen smoke"
+             series exists); `repeat_cache` = the same Arc-shared operands resubmitted with the \
+             packed-operand cache on vs off (first/cold vs steady-state wall time, and the \
+             steady-state speedup `bench-check --min-cache-speedup` gates on); regenerate with \
+             `cargo bench --bench hotpath` then the loadgen smoke"
                 .into(),
         ),
     );
@@ -308,4 +318,58 @@ fn bench_worker_pipeline() {
         Ok(()) => println!("wrote BENCH_pipeline.json"),
         Err(e) => eprintln!("could not write BENCH_pipeline.json: {e}"),
     }
+}
+
+/// The repeat-operand series behind `bench-check --min-cache-speedup`:
+/// the same `Arc`-shared operands resubmitted through the blocked
+/// backend with the packed-operand cache at its default budget vs
+/// disabled (`pack_cache_mb = 0`). The first submission is timed
+/// separately — that is the cold pack + checksum-encode both
+/// configurations pay — and the harness then times the steady state,
+/// where every packing lookup is a cache hit when the cache is on. The
+/// steady-state ratio (off / on) isolates exactly the packing work the
+/// cache removes from the request path.
+fn bench_repeat_cache(a: &Matrix, b: &Matrix, hq: &mut Harness) -> Json {
+    let mut out = Json::obj();
+    let mut steady: Vec<(&str, f64)> = Vec::new();
+    for &(label, mb) in &[("on", None), ("off", Some(0usize))] {
+        let engine = Engine::start(EngineConfig {
+            workers: 4,
+            pools: 1,
+            backend: "blocked".to_string(),
+            pack_cache_mb: mb,
+            ..Default::default()
+        })
+        .expect("engine starts (builtin manifest fallback)");
+        let coord = Coordinator::new(engine.clone(), CoordinatorConfig::default());
+        let (aa, ab) = (Arc::new(a.clone()), Arc::new(b.clone()));
+        let run = || {
+            let req = GemmRequest::new(Arc::clone(&aa), Arc::clone(&ab)).policy(FtPolicy::Online);
+            coord.submit(req).expect("submit").wait().expect("gemm")
+        };
+        let t0 = Instant::now();
+        black_box(run());
+        let first_s = t0.elapsed().as_secs_f64();
+        let r = hq.bench(&format!("pipeline/repeat1024/cache_{label}"), || {
+            black_box(run());
+        });
+        let steady_s = r.mean.as_secs_f64();
+        steady.push((label, steady_s));
+        let stats = engine.pack_cache_stats();
+        let mut e = Json::obj();
+        e.set("first_s", Json::Num(first_s));
+        e.set("steady_mean_s", Json::Num(steady_s));
+        e.set("hits", Json::Num(stats.map_or(0, |s| s.hits) as f64));
+        e.set("misses", Json::Num(stats.map_or(0, |s| s.misses) as f64));
+        e.set("bytes", Json::Num(stats.map_or(0, |s| s.bytes) as f64));
+        out.set(&format!("cache_{label}"), e);
+    }
+    let on = steady.iter().find(|(l, _)| *l == "on").map(|&(_, s)| s).unwrap_or(f64::NAN);
+    let off = steady.iter().find(|(l, _)| *l == "off").map(|&(_, s)| s).unwrap_or(f64::NAN);
+    out.set("steady_speedup", Json::Num(off / on));
+    println!(
+        "repeat-operand cache: steady {on:.4}s (on) vs {off:.4}s (off) — {:.3}x at 1024^3, FT on",
+        off / on
+    );
+    out
 }

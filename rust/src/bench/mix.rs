@@ -27,6 +27,11 @@ pub struct MixPreset {
     pub priorities: &'static str,
     /// Correctable SEUs injected per request server-side.
     pub inject: usize,
+    /// Percentage (0–100) of requests that reuse the workload's base
+    /// seed instead of a per-request one. Repeated seeds are pack-cache
+    /// hits server-side: the operands and their packed panels/checksums
+    /// are shared across those requests.
+    pub seed_reuse_pct: usize,
 }
 
 /// The preset registry. Order is the display order of `--preset help`.
@@ -38,6 +43,7 @@ pub const PRESETS: &[MixPreset] = &[
         policies: "online,none",
         priorities: "normal,high",
         inject: 1,
+        seed_reuse_pct: 50,
     },
     MixPreset {
         name: "latency",
@@ -46,6 +52,7 @@ pub const PRESETS: &[MixPreset] = &[
         policies: "none",
         priorities: "normal",
         inject: 0,
+        seed_reuse_pct: 0,
     },
     MixPreset {
         name: "stress",
@@ -54,6 +61,7 @@ pub const PRESETS: &[MixPreset] = &[
         policies: "none,online,offline",
         priorities: "low,normal,high",
         inject: 1,
+        seed_reuse_pct: 25,
     },
 ];
 
@@ -67,8 +75,8 @@ pub fn describe_presets() -> String {
     let mut s = String::new();
     for p in PRESETS {
         s.push_str(&format!(
-            "  {:<9} {} (--mix {} --policies {} --priorities {} --inject {})\n",
-            p.name, p.description, p.shapes, p.policies, p.priorities, p.inject
+            "  {:<9} {} (--mix {} --policies {} --priorities {} --inject {} --seed-reuse {})\n",
+            p.name, p.description, p.shapes, p.policies, p.priorities, p.inject, p.seed_reuse_pct
         ));
     }
     s
@@ -97,6 +105,14 @@ mod tests {
         assert_eq!(p.policies, "online,none");
         assert_eq!(p.priorities, "normal,high");
         assert_eq!(p.inject, 1);
+        assert_eq!(p.seed_reuse_pct, 50, "half the smoke mix exercises the pack cache");
+    }
+
+    #[test]
+    fn seed_reuse_is_a_percentage() {
+        for p in PRESETS {
+            assert!(p.seed_reuse_pct <= 100, "{}: bad seed_reuse_pct", p.name);
+        }
     }
 
     #[test]

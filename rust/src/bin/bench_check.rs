@@ -2,18 +2,19 @@
 //!
 //!     cargo run --release --bin bench-check -- [FILE] \
 //!         [--min-speedup X] [--min-simd-speedup Y] [--require-serving] \
-//!         [--require-scaling] [--min-pool-speedup Z]
+//!         [--require-scaling] [--min-pool-speedup Z] [--min-cache-speedup C]
 //!
 //! CI runs this right after `cargo bench --bench hotpath`, replacing the
 //! old silent upload-whatever-was-written flow with an enforced gate:
 //!
-//! * the file must parse and match schema `ftgemm-bench-pipeline/4` —
+//! * the file must parse and match schema `ftgemm-bench-pipeline/5` —
 //!   1024^3 shape, a non-empty `live` series with positive wall times,
 //!   all three backends measured at the workers=1 gate point, a
-//!   per-kernel-ISA `ft_overhead` (clean vs fused-FT) series, and a
-//!   `serving` series (gateway throughput/latency, written by the
-//!   `loadgen` harness; `null` until it runs, which is only accepted
-//!   without `--require-serving`);
+//!   per-kernel-ISA `ft_overhead` (clean vs fused-FT) series, a
+//!   `repeat_cache` block (same Arc-shared operands, packed-operand
+//!   cache on vs off), and a `serving` series (gateway
+//!   throughput/latency, written by the `loadgen` harness; `null` until
+//!   it runs, which is only accepted without `--require-serving`);
 //! * the blocked backend must be at least `--min-speedup` (default 2.0)
 //!   times faster than the reference backend at that point, FT enabled;
 //! * the dispatched blocked kernel must be at least `--min-simd-speedup`
@@ -28,7 +29,13 @@
 //!   shard counts: the sweep curve of every shard group must be monotone
 //!   up to its knee (within a 0.95 noise tolerance), and the
 //!   baseline-to-top throughput ratio at the shared gate point must be
-//!   at least `--min-pool-speedup` (default 1.6).
+//!   at least `--min-pool-speedup` (default 1.6);
+//! * when the `repeat_cache` block is measured (it is `null` in the
+//!   committed placeholder — accepted with a notice), the cache-off
+//!   steady-state must be at least `--min-cache-speedup` (default 1.02)
+//!   times the cache-on steady-state, and the cache-on run must show
+//!   actual hits — a repeat-operand request path that re-packs on every
+//!   iteration fails the gate.
 //!
 //! Failures are classified, not lumped: a **committed placeholder**
 //! (null `live`/`gate`, benches never ran) and a **stale schema** are
@@ -41,7 +48,7 @@ use std::process::ExitCode;
 use ftgemm::util::cli::Command;
 use ftgemm::util::json::Json;
 
-const SCHEMA: &str = "ftgemm-bench-pipeline/4";
+const SCHEMA: &str = "ftgemm-bench-pipeline/5";
 
 /// A sweep point must reach this fraction of the previous point's rps to
 /// count as "still climbing" — absorbs run-to-run noise on the way to the
@@ -61,6 +68,18 @@ struct Report {
     serving: Option<Vec<(String, usize, usize, u64, f64, f64)>>,
     /// The validated pool_scaling block; `None` when absent/null.
     scaling: Option<Scaling>,
+    /// The validated repeat_cache block; `None` when still the null
+    /// placeholder (the repeat-operand bench has not run).
+    cache: Option<CacheGate>,
+}
+
+/// The validated `repeat_cache` summary (packed-operand cache on vs off
+/// at the 1024^3 repeat-operand point).
+struct CacheGate {
+    on_steady_s: f64,
+    off_steady_s: f64,
+    speedup: f64,
+    hits: u64,
 }
 
 /// The validated `pool_scaling` summary (written by `loadgen` at merge).
@@ -69,6 +88,16 @@ struct Scaling {
     top_pools: usize,
     gate_clients: usize,
     ratio: f64,
+}
+
+/// Every gate threshold/flag the CLI resolves, in one bundle.
+struct Gates {
+    min_speedup: f64,
+    min_simd: f64,
+    require_serving: bool,
+    require_scaling: bool,
+    min_pool_speedup: f64,
+    min_cache_speedup: f64,
 }
 
 fn main() -> ExitCode {
@@ -86,6 +115,11 @@ fn main() -> ExitCode {
             "min-pool-speedup",
             "required baseline-to-top-pools rps ratio at the scaling gate point",
             Some("1.6"),
+        )
+        .opt(
+            "min-cache-speedup",
+            "required cache-off/cache-on steady-state ratio at the repeat-operand point",
+            Some("1.02"),
         );
     let args = match cmd.parse(&argv) {
         Ok(args) => args,
@@ -100,17 +134,25 @@ fn main() -> ExitCode {
     let require_serving = args.flag("require-serving");
     let require_scaling = args.flag("require-scaling");
     let min_pool_speedup = args.f64_or("min-pool-speedup", 1.6);
-    match check(path, min_speedup, min_simd, require_serving, require_scaling, min_pool_speedup) {
+    let min_cache_speedup = args.f64_or("min-cache-speedup", 1.02);
+    let gates = Gates {
+        min_speedup,
+        min_simd,
+        require_serving,
+        require_scaling,
+        min_pool_speedup,
+        min_cache_speedup,
+    };
+    match check(path, &gates) {
         Ok(report) => {
             println!(
-                "bench-check OK: {path} valid, blocked[{}] {:.2}x reference (gate \
-                 {min_speedup:.2}x)",
-                report.kernel_isa, report.blocked_speedup
+                "bench-check OK: {path} valid, blocked[{}] {:.2}x reference (gate {:.2}x)",
+                report.kernel_isa, report.blocked_speedup, gates.min_speedup
             );
             match report.simd_speedup {
                 Some(s) => println!(
-                    "  simd gate: blocked[{}] {s:.2}x blocked-scalar (gate {min_simd:.2}x)",
-                    report.kernel_isa
+                    "  simd gate: blocked[{}] {s:.2}x blocked-scalar (gate {:.2}x)",
+                    report.kernel_isa, gates.min_simd
                 ),
                 None => println!(
                     "  simd gate: skipped — dispatch resolved to the scalar kernel on this host"
@@ -138,7 +180,18 @@ fn main() -> ExitCode {
                 ),
                 Some(s) => println!(
                     "  scaling gate: {}→{} pools at {} clients — {:.2}x rps (gate {:.2}x)",
-                    s.baseline_pools, s.top_pools, s.gate_clients, s.ratio, min_pool_speedup
+                    s.baseline_pools, s.top_pools, s.gate_clients, s.ratio, gates.min_pool_speedup
+                ),
+            }
+            match &report.cache {
+                None => println!(
+                    "  cache gate: repeat_cache is the null placeholder — the repeat-operand \
+                     bench has not run against this file"
+                ),
+                Some(c) => println!(
+                    "  cache gate: packed-operand cache {:.3}x at steady state ({:.4}s off vs \
+                     {:.4}s on, {} hits; gate {:.2}x)",
+                    c.speedup, c.off_steady_s, c.on_steady_s, c.hits, gates.min_cache_speedup
                 ),
             }
             ExitCode::SUCCESS
@@ -151,14 +204,7 @@ fn main() -> ExitCode {
 }
 
 /// Validate the file; returns the measured gate numbers for printing.
-fn check(
-    path: &str,
-    min_speedup: f64,
-    min_simd: f64,
-    require_serving: bool,
-    require_scaling: bool,
-    min_pool_speedup: f64,
-) -> anyhow::Result<Report> {
+fn check(path: &str, gates: &Gates) -> anyhow::Result<Report> {
     use anyhow::{anyhow, bail, Context};
 
     let text = std::fs::read_to_string(path)
@@ -260,15 +306,17 @@ fn check(
         gate_blocked.ok_or_else(|| anyhow!("no blocked-backend workers=1 measurement"))?;
 
     let overheads = check_ft_overhead(&root)?;
-    let serving = check_serving(&root, require_serving)?;
-    let scaling = check_scaling(&root, require_scaling, min_pool_speedup)?;
+    let serving = check_serving(&root, gates.require_serving)?;
+    let scaling = check_scaling(&root, gates.require_scaling, gates.min_pool_speedup)?;
+    let cache = check_repeat_cache(&root, gates.min_cache_speedup)?;
 
     let blocked_speedup = reference / blocked;
-    if blocked_speedup < min_speedup {
+    if blocked_speedup < gates.min_speedup {
         bail!(
             "perf gate FAILED at point blocked-vs-reference (1024^3, workers=1, FT on): \
              blocked[{kernel_isa}] is only {blocked_speedup:.2}x reference \
-             (reference {reference:.4}s, blocked {blocked:.4}s; need >= {min_speedup:.2}x)"
+             (reference {reference:.4}s, blocked {blocked:.4}s; need >= {:.2}x)",
+            gates.min_speedup
         );
     }
     let simd_speedup = if kernel_isa == "scalar" {
@@ -277,19 +325,77 @@ fn check(
         None
     } else {
         let s = scalar / blocked;
-        if s < min_simd {
+        if s < gates.min_simd {
             bail!(
                 "perf gate FAILED at point blocked-vs-blocked-scalar (1024^3, workers=1, \
                  FT on): blocked[{kernel_isa}] is only {s:.2}x its pinned-scalar kernel \
-                 (blocked-scalar {scalar:.4}s, blocked {blocked:.4}s; need >= {min_simd:.2}x)"
+                 (blocked-scalar {scalar:.4}s, blocked {blocked:.4}s; need >= {:.2}x)",
+                gates.min_simd
             );
         }
         Some(s)
     };
-    Ok(Report { blocked_speedup, simd_speedup, kernel_isa, overheads, serving, scaling })
+    Ok(Report { blocked_speedup, simd_speedup, kernel_isa, overheads, serving, scaling, cache })
 }
 
-/// Validate the `serving` series (schema /4): the gateway loadgen's
+/// Validate the `repeat_cache` block (schema /5): the same Arc-shared
+/// operands resubmitted with the packed-operand cache on vs off. `null`
+/// means the repeat-operand bench has not run (the committed-placeholder
+/// state) — accepted with a notice; measured data must clear the
+/// `--min-cache-speedup` steady-state ratio and show real cache hits.
+fn check_repeat_cache(root: &Json, min_cache_speedup: f64) -> anyhow::Result<Option<CacheGate>> {
+    use anyhow::{anyhow, bail};
+
+    let block = match root.path("repeat_cache") {
+        None => bail!("missing repeat_cache field (schema /5 requires it; null = not measured)"),
+        Some(Json::Null) => return Ok(None),
+        Some(v) => v,
+    };
+    let num = |key: &str| {
+        block
+            .path(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("repeat_cache: missing {key}"))
+    };
+    let on_first = num("cache_on.first_s")?;
+    let on_steady = num("cache_on.steady_mean_s")?;
+    let off_first = num("cache_off.first_s")?;
+    let off_steady = num("cache_off.steady_mean_s")?;
+    let speedup = num("steady_speedup")?;
+    let hits = num("cache_on.hits")? as u64;
+    for (name, v) in [
+        ("cache_on.first_s", on_first),
+        ("cache_on.steady_mean_s", on_steady),
+        ("cache_off.first_s", off_first),
+        ("cache_off.steady_mean_s", off_steady),
+    ] {
+        if !(v.is_finite() && v > 0.0) {
+            bail!("repeat_cache: {name} {v} is not a positive finite wall time");
+        }
+    }
+    if !speedup.is_finite() || (speedup - off_steady / on_steady).abs() > 1e-6 {
+        bail!(
+            "repeat_cache: steady_speedup {speedup} inconsistent with off/on steady means \
+             ({off_steady:.4}s / {on_steady:.4}s)"
+        );
+    }
+    if hits == 0 {
+        bail!(
+            "cache gate FAILED: the cache-on run recorded zero pack-cache hits — repeat \
+             submissions of the same Arc operands re-packed every iteration"
+        );
+    }
+    if speedup < min_cache_speedup {
+        bail!(
+            "cache gate FAILED at point repeat-operand (1024^3, FT on): cached steady state \
+             is only {speedup:.3}x the uncached one (off {off_steady:.4}s, on {on_steady:.4}s; \
+             need >= {min_cache_speedup:.2}x)"
+        );
+    }
+    Ok(Some(CacheGate { on_steady_s: on_steady, off_steady_s: off_steady, speedup, hits }))
+}
+
+/// Validate the `serving` series (schema /5): the gateway loadgen's
 /// closed-loop runs. `null` means loadgen has not run — accepted (the
 /// plain bench can't measure it) unless `--require-serving`.
 fn check_serving(
@@ -299,7 +405,7 @@ fn check_serving(
     use anyhow::{anyhow, bail};
 
     let series = match root.path("serving") {
-        None => bail!("missing serving field (schema /4 requires it; null = not yet measured)"),
+        None => bail!("missing serving field (schema /5 requires it; null = not yet measured)"),
         Some(Json::Null) => {
             if require_serving {
                 bail!(

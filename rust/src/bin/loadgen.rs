@@ -5,7 +5,7 @@
 //!         --clients 8 --requests 200 [--mode closed|open] [--rate R] \
 //!         [--preset ci-smoke] [--mix small,medium] [--policies online,none] \
 //!         [--priorities normal,high] [--deadline-ms D] [--inject N] \
-//!         [--sweep-clients 1,2,4,8] [--duration-cap 60s] [--pools P] \
+//!         [--seed-reuse PCT] [--sweep-clients 1,2,4,8] [--duration-cap 60s] [--pools P] \
 //!         [--max-p99-ms P] [--bench-out BENCH_pipeline.json] \
 //!         [--append-serving]
 //!
@@ -22,7 +22,10 @@
 //! The workload cycles deterministically through shape classes
 //! (`small`=64, `medium`=128, `large`=256, `huge`=512, cube GEMMs) ×
 //! `--policies` × `--priorities`; `--inject N` plants N correctable SEUs
-//! per request server-side. `--preset NAME` defaults the mix knobs from
+//! per request server-side; `--seed-reuse PCT` makes that percentage of
+//! requests reuse the base `--seed` instead of a per-request one, so the
+//! server's packed-operand cache sees repeat operands like a production
+//! mix would. `--preset NAME` defaults the mix knobs from
 //! the shared table in `ftgemm::bench::mix` (explicit flags still win) so
 //! CI and by-hand runs measure the same workload. Per run it reports
 //! ok/expired/rejected/canceled/failed/protocol-error counts, p50/p95/p99
@@ -30,7 +33,7 @@
 //! count to trace the throughput-vs-inflight curve.
 //!
 //! `--bench-out FILE` merges a `serving` series into an existing
-//! schema-/4 `BENCH_pipeline.json` (written by `cargo bench --bench
+//! schema-/5 `BENCH_pipeline.json` (written by `cargo bench --bench
 //! hotpath`), which CI's `bench-check --require-serving` then validates.
 //! `--pools P` labels every entry with the server's shard count, and
 //! `--append-serving` appends to the existing series instead of replacing
@@ -86,6 +89,9 @@ struct Workload {
     deadline_ms: u64,
     inject: usize,
     seed: u64,
+    /// Percentage (0–100) of requests that reuse `seed` verbatim instead
+    /// of `seed + seq` — repeat operands for the server's pack cache.
+    seed_reuse_pct: usize,
     duration_cap: Duration,
 }
 
@@ -99,7 +105,15 @@ impl Workload {
         spec.policy = self.policies[(s / self.shapes.len()) % self.policies.len()];
         let cycle = self.shapes.len() * self.policies.len();
         spec.priority = self.priorities[(s / cycle) % self.priorities.len()];
-        spec.seed = self.seed.wrapping_add(seq);
+        // Deterministic reuse pattern: seq·61 mod 100 visits every
+        // residue (gcd(61, 100) = 1), so a PCT threshold selects exactly
+        // PCT% of any 100 consecutive requests, spread evenly rather
+        // than front-loaded.
+        spec.seed = if (seq.wrapping_mul(61) % 100) < self.seed_reuse_pct as u64 {
+            self.seed
+        } else {
+            self.seed.wrapping_add(seq)
+        };
         spec.inject = self.inject;
         if self.deadline_ms > 0 {
             spec.deadline_ms = Some(self.deadline_ms);
@@ -230,10 +244,11 @@ fn main() -> ExitCode {
         .opt("deadline-ms", "per-request queue deadline (0 = none)", Some("0"))
         .opt("inject", "SEUs injected per request server-side [default: 0]", None)
         .opt("seed", "base operand seed (seq is added per request)", Some("42"))
+        .opt("seed-reuse", "percent of requests reusing the base seed verbatim [default: 0]", None)
         .opt("duration-cap", "stop issuing after this long, e.g. 60s", Some("60s"))
         .opt("sweep-clients", "comma list: one run per client count", None)
         .opt("pools", "server [engine].pools label recorded in serving entries", Some("1"))
-        .opt("bench-out", "merge a `serving` series into this schema-/4 file", None)
+        .opt("bench-out", "merge a `serving` series into this schema-/5 file", None)
         .flag("append-serving", "append to the file's serving series instead of replacing it")
         .opt("max-p99-ms", "fail the run if p99 exceeds this (0 = off)", Some("0"));
     let args = match cmd.parse(&argv) {
@@ -358,6 +373,13 @@ fn parse_workload(args: &ftgemm::util::cli::Args) -> Result<Workload> {
         Some(v) => v.parse().map_err(|_| anyhow!("--inject: bad integer {v:?}"))?,
         None => preset.map(|p| p.inject).unwrap_or(0),
     };
+    let seed_reuse_pct: usize = match args.get("seed-reuse") {
+        Some(v) => v.parse().map_err(|_| anyhow!("--seed-reuse: bad integer {v:?}"))?,
+        None => preset.map(|p| p.seed_reuse_pct).unwrap_or(0),
+    };
+    if seed_reuse_pct > 100 {
+        bail!("--seed-reuse is a percentage (0-100), got {seed_reuse_pct}");
+    }
     let rate = args.f64_or("rate", 50.0);
     if mode == Mode::Open && !(rate.is_finite() && rate > 0.0) {
         bail!("--rate must be a positive rate in open mode, got {rate}");
@@ -373,6 +395,7 @@ fn parse_workload(args: &ftgemm::util::cli::Args) -> Result<Workload> {
         deadline_ms: args.usize_or("deadline-ms", 0) as u64,
         inject,
         seed: args.usize_or("seed", 42) as u64,
+        seed_reuse_pct,
         duration_cap: parse_duration(args.str_or("duration-cap", "60s"))?,
     })
 }
@@ -629,7 +652,7 @@ fn open_reader(stream: TcpStream, pending: &Mutex<HashMap<u64, Instant>>, cap: I
     }
 }
 
-/// Merge the `serving` series into an existing schema-/4 pipeline bench
+/// Merge the `serving` series into an existing schema-/5 pipeline bench
 /// file (refusing to touch anything older — regenerate the benches first).
 /// With `append`, new entries extend the file's existing series — that is
 /// how the pools=1 and pools=N runs of the scaling gate end up in one
@@ -641,10 +664,10 @@ fn merge_serving(path: &str, entries: Json, append: bool) -> Result<()> {
         .with_context(|| format!("reading {path} (run `cargo bench --bench hotpath` first)"))?;
     let mut root = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
     let schema = root.path("schema").and_then(Json::as_str).unwrap_or("");
-    if schema != "ftgemm-bench-pipeline/4" {
+    if schema != "ftgemm-bench-pipeline/5" {
         bail!(
             "{path} has schema {schema:?}; loadgen only merges into \
-             ftgemm-bench-pipeline/4 — regenerate with `cargo bench --bench hotpath`"
+             ftgemm-bench-pipeline/5 — regenerate with `cargo bench --bench hotpath`"
         );
     }
     let mut serving = match (append, root.get("serving")) {
@@ -727,6 +750,7 @@ mod tests {
             deadline_ms: 250,
             inject: 2,
             seed: 9,
+            seed_reuse_pct: 0,
             duration_cap: Duration::from_secs(1),
         };
         let s0 = w.spec_for(0, 0);
@@ -740,6 +764,36 @@ mod tests {
         assert_eq!(s4.seed, 9 + 4);
         assert_eq!(s4.inject, 2);
         assert_eq!(s4.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn seed_reuse_selects_exactly_the_configured_fraction() {
+        let base = Workload {
+            addr: String::new(),
+            mode: Mode::Closed,
+            requests: 0,
+            rate: 1.0,
+            shapes: vec![64],
+            policies: vec![FtPolicy::None],
+            priorities: vec![Priority::Normal],
+            deadline_ms: 0,
+            inject: 0,
+            seed: 9,
+            seed_reuse_pct: 50,
+            duration_cap: Duration::from_secs(1),
+        };
+        // 0% and 100% are the degenerate patterns
+        let never = Workload { seed_reuse_pct: 0, ..clone_workload(&base) };
+        let always = Workload { seed_reuse_pct: 100, ..clone_workload(&base) };
+        for seq in 0..100u64 {
+            assert_eq!(never.spec_for(0, seq).seed, 9 + seq);
+            assert_eq!(always.spec_for(0, seq).seed, 9);
+        }
+        // 50%: exactly half of any 100-seq window reuses the base seed,
+        // and the pattern is deterministic per seq
+        let reused = (0..100u64).filter(|&s| base.spec_for(0, s).seed == 9).count();
+        assert_eq!(reused, 50);
+        assert_eq!(base.spec_for(0, 7).seed, base.spec_for(3, 7).seed);
     }
 
     #[test]
@@ -841,6 +895,7 @@ mod tests {
             .opt("policies", "", None)
             .opt("priorities", "", None)
             .opt("inject", "", None)
+            .opt("seed-reuse", "", None)
             .opt("mode", "", Some("closed"))
             .opt("addr", "", Some("x"))
             .opt("requests", "", Some("1"))
@@ -855,22 +910,26 @@ mod tests {
         assert_eq!(w.policies, vec![FtPolicy::Online, FtPolicy::None]);
         assert_eq!(w.priorities, vec![Priority::Normal, Priority::High]);
         assert_eq!(w.inject, 1);
+        assert_eq!(w.seed_reuse_pct, 50);
 
         // an explicit flag wins over the preset value on that axis only
-        let w = parse_workload(
-            &cmd.parse(&sv(&["--preset", "ci-smoke", "--mix", "huge", "--inject", "0"])).unwrap(),
-        )
-        .unwrap();
+        let over =
+            &["--preset", "ci-smoke", "--mix", "huge", "--inject", "0", "--seed-reuse", "0"];
+        let w = parse_workload(&cmd.parse(&sv(over)).unwrap()).unwrap();
         assert_eq!(w.shapes, vec![512]);
         assert_eq!(w.policies, vec![FtPolicy::Online, FtPolicy::None]);
         assert_eq!(w.inject, 0);
+        assert_eq!(w.seed_reuse_pct, 0);
 
         // no preset: the built-in defaults hold
         let w = parse_workload(&cmd.parse(&sv(&[])).unwrap()).unwrap();
         assert_eq!(w.shapes, vec![64, 128]);
         assert_eq!(w.policies, vec![FtPolicy::Online]);
         assert_eq!(w.inject, 0);
+        assert_eq!(w.seed_reuse_pct, 0);
 
         assert!(parse_workload(&cmd.parse(&sv(&["--preset", "nope"])).unwrap()).is_err());
+        // a reuse percentage over 100 is rejected
+        assert!(parse_workload(&cmd.parse(&sv(&["--seed-reuse", "101"])).unwrap()).is_err());
     }
 }

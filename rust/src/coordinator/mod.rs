@@ -55,6 +55,7 @@ use crate::metrics::recorder::{CounterSnapshot, Counters, LatencyRecorder, Laten
 use crate::runtime::backend::BackendInfo;
 use crate::runtime::engine::Engine;
 use crate::runtime::manifest::ArtifactKind;
+use crate::runtime::pack_cache::PackCacheStats;
 
 pub use plan::{ExecutionPlan, Planner};
 pub use request::{
@@ -209,6 +210,9 @@ pub struct CoordinatorStats {
     /// Per-pool (shard) state, pool order. One entry even with a single
     /// pool, so consumers can iterate unconditionally.
     pub pools: Vec<PoolStats>,
+    /// Packed-operand cache counters merged across every pool (`None`
+    /// when the cache is disabled on all pools).
+    pub pack_cache: Option<PackCacheStats>,
 }
 
 /// One engine pool's observable state inside [`CoordinatorStats`].
@@ -224,6 +228,17 @@ pub struct PoolStats {
     pub dispatched: u64,
     /// Of `dispatched`, how many were stolen from another pool's queue.
     pub steals: u64,
+    /// Of `routed`, how many landed on the pool their shape class (or
+    /// hot operand) was already pinned to — the warm-cache affinity
+    /// hit-rate numerator (`affinity_hits / routed`).
+    pub affinity_hits: u64,
+    /// Total queue wait (µs) of the stolen requests, measured
+    /// submission → theft; `steal_wait_us / steals` is the mean
+    /// steal latency the `metrics` verb reports.
+    pub steal_wait_us: u64,
+    /// This pool's packed-operand cache counters (`None` = cache
+    /// disabled via `pack_cache_mb = 0`).
+    pub pack_cache: Option<PackCacheStats>,
 }
 
 impl CoordinatorStats {
@@ -274,11 +289,30 @@ impl CoordinatorStats {
             po.set("routed", Json::Num(p.routed as f64));
             po.set("dispatched", Json::Num(p.dispatched as f64));
             po.set("steals", Json::Num(p.steals as f64));
+            po.set("affinity_hits", Json::Num(p.affinity_hits as f64));
+            po.set("steal_wait_us", Json::Num(p.steal_wait_us as f64));
+            if let Some(pc) = &p.pack_cache {
+                po.set("pack_cache", pack_cache_json(pc));
+            }
             pools.push(po);
         }
         o.set("pools", pools);
+        if let Some(pc) = &self.pack_cache {
+            o.set("pack_cache", pack_cache_json(pc));
+        }
         o
     }
+}
+
+fn pack_cache_json(s: &PackCacheStats) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut o = Json::obj();
+    o.set("hits", Json::Num(s.hits as f64));
+    o.set("misses", Json::Num(s.misses as f64));
+    o.set("evictions", Json::Num(s.evictions as f64));
+    o.set("bytes", Json::Num(s.bytes as f64));
+    o.set("entries", Json::Num(s.entries as f64));
+    o
 }
 
 /// Shared execution state: everything a dispatcher needs to run one
@@ -312,8 +346,13 @@ impl Core {
             Counters::bump(&self.counters.padded_requests);
         }
 
-        let out =
-            self.scheduler.run_shared_on(&plan, Arc::clone(&req.a), Arc::clone(&req.b), pool)?;
+        let out = self.scheduler.run_keyed_on(
+            &plan,
+            Arc::clone(&req.a),
+            Arc::clone(&req.b),
+            pool,
+            (req.key_a, req.key_b),
+        )?;
 
         let reverify = match cfg.host_verify {
             HostVerify::Off => false,
@@ -421,6 +460,7 @@ impl Coordinator {
     /// single source for the gateway's `metrics` verb and `ftgemm info`.
     pub fn stats(&self) -> CoordinatorStats {
         let engine_per_pool = self.core.engine.inflight_per_pool();
+        let cache_per_pool = self.core.engine.pack_cache_stats_per_pool();
         let pools = self
             .submission
             .pool_snapshots()
@@ -432,6 +472,9 @@ impl Coordinator {
                 routed: s.routed,
                 dispatched: s.dispatched,
                 steals: s.steals,
+                affinity_hits: s.affinity_hits,
+                steal_wait_us: s.steal_wait_us,
+                pack_cache: cache_per_pool.get(p).copied().flatten(),
             })
             .collect();
         CoordinatorStats {
@@ -443,6 +486,7 @@ impl Coordinator {
             counters: self.core.counters.snapshot(),
             latency: self.core.latency.summary(),
             pools,
+            pack_cache: self.core.engine.pack_cache_stats(),
         }
     }
 
@@ -467,8 +511,9 @@ impl Coordinator {
     /// (fail fast); everything else — planning, artifact resolution,
     /// execution, verification — happens on a dispatcher and settles the
     /// ticket.
-    pub fn submit(&self, req: GemmRequest) -> Result<Ticket> {
+    pub fn submit(&self, mut req: GemmRequest) -> Result<Ticket> {
         self.validate(&req)?;
+        self.derive_operand_ids(&mut req);
         self.submission.submit(req)
     }
 
@@ -479,7 +524,7 @@ impl Coordinator {
     /// is settled with the same error that is returned.
     pub(crate) fn submit_prepared(
         &self,
-        req: GemmRequest,
+        mut req: GemmRequest,
         completion: Completion,
         submitted: Instant,
     ) -> Result<()> {
@@ -487,7 +532,25 @@ impl Coordinator {
             completion.abort(TicketStatus::Failed, anyhow::anyhow!("{e:#}"));
             return Err(e);
         }
+        self.derive_operand_ids(&mut req);
         self.submission.push(req, completion, submitted)
+    }
+
+    /// Stamp ABA-safe pointer-identity operand ids on a request that
+    /// arrived without wire-level (seed) keys, so repeat submissions of
+    /// the same `Arc<Matrix>` operands hit the packed-operand cache.
+    /// No-op when every pool's cache is disabled — unkeyed tensors
+    /// bypass cache lookups entirely.
+    fn derive_operand_ids(&self, req: &mut GemmRequest) {
+        if !self.core.engine.pack_cache_enabled() {
+            return;
+        }
+        if req.key_a.is_none() {
+            req.key_a = Some(request::ptr_operand_id(&req.a));
+        }
+        if req.key_b.is_none() {
+            req.key_b = Some(request::ptr_operand_id(&req.b));
+        }
     }
 
     /// Mint a (ticket, completion) pair without enqueueing anything yet.

@@ -13,9 +13,11 @@
 //!
 //! [`Coordinator::submit`]: super::Coordinator::submit
 
+use std::collections::HashMap;
 use std::fmt;
 use std::str::FromStr;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -23,6 +25,7 @@ use anyhow::{anyhow, Result};
 use crate::abft::checksum::Thresholds;
 use crate::abft::injection::InjectionPlan;
 use crate::abft::matrix::Matrix;
+use crate::runtime::pack_cache::OperandId;
 
 use super::{FtPolicy, GemmResult};
 
@@ -171,6 +174,13 @@ pub struct GemmRequest {
     pub(crate) inj: InjectionPlan,
     pub(crate) route: Route,
     pub(crate) opts: RequestOptions,
+    /// Pack-cache content addresses for the operands, when known.
+    /// The gateway sets wire-level `Seed` ids (the request *is*
+    /// content-addressed on the wire); `Coordinator::submit` derives
+    /// ABA-safe `Ptr` ids for any still-unkeyed `Arc` operand when the
+    /// engine's pack cache is on. `None` opts the operand out.
+    pub(crate) key_a: Option<OperandId>,
+    pub(crate) key_b: Option<OperandId>,
 }
 
 impl GemmRequest {
@@ -186,6 +196,8 @@ impl GemmRequest {
             inj: InjectionPlan::none(),
             route: Route::Blocks,
             opts: RequestOptions::default(),
+            key_a: None,
+            key_b: None,
         }
     }
 
@@ -248,6 +260,21 @@ impl GemmRequest {
         self
     }
 
+    /// Attach explicit pack-cache content addresses for the operands
+    /// (the gateway uses the wire `(rows, cols, seed)` tuples). Operands
+    /// left `None` get an ABA-safe pointer-identity id derived at
+    /// submission when the engine's pack cache is on; pass `None, None`
+    /// after the fact to keep that default.
+    pub fn operand_ids(
+        mut self,
+        key_a: Option<OperandId>,
+        key_b: Option<OperandId>,
+    ) -> GemmRequest {
+        self.key_a = key_a;
+        self.key_b = key_b;
+        self
+    }
+
     /// Output shape `(m, n)` and reduction extent `k` of the request.
     pub fn shape(&self) -> (usize, usize, usize) {
         (self.a.rows(), self.b.cols(), self.a.cols())
@@ -264,6 +291,38 @@ impl GemmRequest {
     pub fn injections(&self) -> &InjectionPlan {
         &self.inj
     }
+}
+
+/// An ABA-safe pointer-identity [`OperandId`] for an `Arc`-shared
+/// operand: the allocation address plus a generation stamp.
+///
+/// Address equality alone is not identity — an operand can be dropped
+/// and its allocation reused by a *different* matrix at the same
+/// address, which would silently alias the dead operand's pack-cache
+/// entries. A process-wide registry of weak handles closes that hole:
+/// if the address is registered and its weak still upgrades to **this**
+/// allocation, the stored generation is reused (same operand, same id —
+/// that's the whole point of the cache); otherwise the slot is
+/// restamped from a monotonic counter, so a recycled address gets a
+/// fresh id and can never hit stale entries. Dead slots are pruned
+/// opportunistically once the registry grows past a small bound.
+pub(crate) fn ptr_operand_id(m: &Arc<Matrix>) -> OperandId {
+    static REG: OnceLock<Mutex<HashMap<usize, (Weak<Matrix>, u64)>>> = OnceLock::new();
+    static GEN: AtomicU64 = AtomicU64::new(0);
+    let addr = Arc::as_ptr(m) as usize;
+    let mut reg = REG.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    if reg.len() >= 1024 {
+        reg.retain(|_, (w, _)| w.strong_count() > 0);
+    }
+    let generation = match reg.get(&addr) {
+        Some((w, g)) if w.upgrade().is_some_and(|live| Arc::ptr_eq(&live, m)) => *g,
+        _ => {
+            let g = GEN.fetch_add(1, Ordering::Relaxed);
+            reg.insert(addr, (Arc::downgrade(m), g));
+            g
+        }
+    };
+    OperandId::Ptr { addr, gen: generation }
 }
 
 /// Request-scoped metadata returned alongside the [`GemmResult`].
@@ -566,6 +625,40 @@ pub(crate) fn ticket(id: u64) -> (Ticket, Completion) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ptr_operand_ids_are_stable_for_live_arcs_and_aba_safe() {
+        let a = Arc::new(Matrix::rand_uniform(8, 8, 1));
+        let id1 = ptr_operand_id(&a);
+        let id2 = ptr_operand_id(&a);
+        assert_eq!(id1, id2, "same live Arc must keep one id");
+        let b = Arc::new(Matrix::rand_uniform(8, 8, 2));
+        assert_ne!(ptr_operand_id(&b), id1, "distinct allocations get distinct ids");
+        // ABA: drop `a`, then mint new matrices until the allocator
+        // reuses its address (usually immediately). A recycled address
+        // must NOT resurrect the dead operand's id.
+        let addr_a = Arc::as_ptr(&a) as usize;
+        drop(a);
+        for seed in 3..64 {
+            let c = Arc::new(Matrix::rand_uniform(8, 8, seed));
+            let id3 = ptr_operand_id(&c);
+            if Arc::as_ptr(&c) as usize == addr_a {
+                assert_ne!(id3, id1, "recycled address aliased a dead operand's id");
+                return;
+            }
+        }
+        // Allocator never reused the address — nothing left to check.
+    }
+
+    #[test]
+    fn operand_ids_builder_sets_wire_keys() {
+        let a = Matrix::rand_uniform(8, 8, 1);
+        let b = Matrix::rand_uniform(8, 8, 2);
+        let id = OperandId::Seed { rows: 8, cols: 8, seed: 42 };
+        let req = GemmRequest::new(a, b).operand_ids(Some(id), None);
+        assert_eq!(req.key_a, Some(id));
+        assert_eq!(req.key_b, None);
+    }
 
     #[test]
     fn ft_level_parses_and_round_trips() {

@@ -32,6 +32,7 @@ use crate::abft::checksum::{self, ChecksumPair, Thresholds};
 use crate::abft::injection::InjectionPlan;
 use crate::abft::matrix::Matrix;
 use crate::runtime::engine::{Engine, ExecOutput, Tensor};
+use crate::runtime::pack_cache::{OperandId, OperandKey};
 use crate::util::pool::ThreadPool;
 
 use super::plan::{ExecutionPlan, KernelOp, NodeOp, PlanNode};
@@ -89,9 +90,9 @@ impl Scheduler {
             bail!("empty execution plan");
         }
         if is_single_node(plan) {
-            return self.run_single(plan, a, b, None);
+            return self.run_single(plan, a, b, None, (None, None));
         }
-        self.run_pooled(plan, Arc::new(a.clone()), Arc::new(b.clone()))
+        self.run_pooled(plan, Arc::new(a.clone()), Arc::new(b.clone()), (None, None))
     }
 
     /// Like [`Scheduler::run`] but with shared operands: the multi-node
@@ -118,13 +119,29 @@ impl Scheduler {
         b: Arc<Matrix>,
         pool: Option<usize>,
     ) -> Result<RunOutcome> {
+        self.run_keyed_on(plan, a, b, pool, (None, None))
+    }
+
+    /// [`Scheduler::run_shared_on`] with pack-cache content addresses
+    /// for the operands: every block node derives its window key from
+    /// the operand id, so the backend can share packed panels + fused
+    /// checksums across requests. `(None, None)` keys run identically
+    /// to [`Scheduler::run_shared_on`].
+    pub fn run_keyed_on(
+        &self,
+        plan: &ExecutionPlan,
+        a: Arc<Matrix>,
+        b: Arc<Matrix>,
+        pool: Option<usize>,
+        keys: (Option<OperandId>, Option<OperandId>),
+    ) -> Result<RunOutcome> {
         if plan.nodes.is_empty() {
             bail!("empty execution plan");
         }
         if is_single_node(plan) {
-            return self.run_single(plan, &a, &b, pool);
+            return self.run_single(plan, &a, &b, pool, keys);
         }
-        self.run_pooled(plan, a, b)
+        self.run_pooled(plan, a, b, keys)
     }
 
     /// Single-node fast path: no concurrency to buy, so skip the pool and
@@ -135,6 +152,7 @@ impl Scheduler {
         a: &Matrix,
         b: &Matrix,
         pool: Option<usize>,
+        keys: (Option<OperandId>, Option<OperandId>),
     ) -> Result<RunOutcome> {
         let values = Mutex::new(HashMap::new());
         let ctx = Ctx {
@@ -142,6 +160,8 @@ impl Scheduler {
             pool,
             a,
             b,
+            key_a: keys.0,
+            key_b: keys.1,
             thresholds: plan.thresholds,
             values: &values,
         };
@@ -165,12 +185,15 @@ impl Scheduler {
         plan: &ExecutionPlan,
         a: Arc<Matrix>,
         b: Arc<Matrix>,
+        keys: (Option<OperandId>, Option<OperandId>),
     ) -> Result<RunOutcome> {
         let total = plan.nodes.len();
         let ctx = Arc::new(OwnedCtx {
             engine: self.engine.clone(),
             a,
             b,
+            key_a: keys.0,
+            key_b: keys.1,
             thresholds: plan.thresholds,
             values: Mutex::new(HashMap::new()),
         });
@@ -273,6 +296,8 @@ struct OwnedCtx {
     engine: Engine,
     a: Arc<Matrix>,
     b: Arc<Matrix>,
+    key_a: Option<OperandId>,
+    key_b: Option<OperandId>,
     thresholds: Thresholds,
     values: Mutex<HashMap<usize, NodeValue>>,
 }
@@ -285,6 +310,8 @@ impl OwnedCtx {
             pool: None,
             a: &self.a,
             b: &self.b,
+            key_a: self.key_a,
+            key_b: self.key_b,
             thresholds: self.thresholds,
             values: &self.values,
         }
@@ -300,6 +327,10 @@ struct Ctx<'a> {
     pool: Option<usize>,
     a: &'a Matrix,
     b: &'a Matrix,
+    /// Pack-cache content addresses of `a`/`b` (`None` = unkeyed; the
+    /// backend then packs per request).
+    key_a: Option<OperandId>,
+    key_b: Option<OperandId>,
     thresholds: Thresholds,
     /// Inter-node values (the Ding C^f chain and encode outputs).
     values: &'a Mutex<HashMap<usize, NodeValue>>,
@@ -376,15 +407,37 @@ fn exec_block(
     // one row-wise copy each — §Perf).
     let a_blk = extract_padded(ctx.a, block.row0, block.k0, block.m, block.k, bk.m, bk.k);
     let b_blk = extract_padded(ctx.b, block.k0, block.col0, block.k, block.n, bk.k, bk.n);
+    // Content addresses of the two windows just extracted: operand id +
+    // window origin/extent + padded (bucket) dims — everything that
+    // determines the padded block's bytes, so equal keys are guaranteed
+    // bitwise-equal operands for the backend's pack cache.
+    let ka = ctx.key_a.map(|id| OperandKey {
+        id,
+        row0: block.row0,
+        col0: block.k0,
+        rows: block.m,
+        cols: block.k,
+        pad_rows: bk.m,
+        pad_cols: bk.k,
+    });
+    let kb = ctx.key_b.map(|id| OperandKey {
+        id,
+        row0: block.k0,
+        col0: block.col0,
+        rows: block.k,
+        cols: block.n,
+        pad_rows: bk.k,
+        pad_cols: bk.n,
+    });
     let mut done = NodeDone::new();
 
     let c_full = match kernel {
         KernelOp::Plain { artifact } => {
             done.launches = 1;
-            exec_gemm(ctx, artifact, a_blk, b_blk)?
+            exec_gemm(ctx, artifact, a_blk, b_blk, ka, kb)?
         }
         KernelOp::Fused { artifact, max_inj } => {
-            let (c_full, errs) = exec_ft(ctx, artifact, *max_inj, a_blk, b_blk, inj)?;
+            let (c_full, errs) = exec_ft(ctx, artifact, *max_inj, a_blk, b_blk, ka, kb, inj)?;
             done.detected = errs;
             done.corrected = errs;
             done.launches = 1;
@@ -401,14 +454,22 @@ fn exec_block(
                 // Operands are reused across recompute attempts, so this
                 // path clones (the retry loop is cold).
                 let (c_full, errs) = match detect {
-                    Some((artifact, max_inj)) => {
-                        exec_ft(ctx, artifact, *max_inj, a_blk.clone(), b_blk.clone(), &this_inj)?
-                    }
+                    Some((artifact, max_inj)) => exec_ft(
+                        ctx,
+                        artifact,
+                        *max_inj,
+                        a_blk.clone(),
+                        b_blk.clone(),
+                        ka,
+                        kb,
+                        &this_inj,
+                    )?,
                     None => {
                         let artifact = plain
                             .as_deref()
                             .ok_or_else(|| anyhow!("offline plan missing both kernels"))?;
-                        let mut c_full = exec_gemm(ctx, artifact, a_blk.clone(), b_blk.clone())?;
+                        let mut c_full =
+                            exec_gemm(ctx, artifact, a_blk.clone(), b_blk.clone(), ka, kb)?;
                         this_inj.apply_to(&mut c_full);
                         let pair = ChecksumPair::of_product(&a_blk, &b_blk);
                         let errs = match checksum::verify(&c_full, &pair, ctx.thresholds) {
@@ -435,27 +496,37 @@ fn exec_block(
     Ok(done)
 }
 
-fn exec_gemm(ctx: &Ctx<'_>, artifact: &str, a: Matrix, b: Matrix) -> Result<Matrix> {
+fn exec_gemm(
+    ctx: &Ctx<'_>,
+    artifact: &str,
+    a: Matrix,
+    b: Matrix,
+    ka: Option<OperandKey>,
+    kb: Option<OperandKey>,
+) -> Result<Matrix> {
     let (ar, ac, br, bc) = (a.rows(), a.cols(), b.rows(), b.cols());
     let out = ctx.engine.execute_on(
         ctx.pool,
         artifact,
         vec![
             // moves, not copies: the padded operand blocks are owned
-            Tensor::new(vec![ar, ac], a.into_data()),
-            Tensor::new(vec![br, bc], b.into_data()),
+            Tensor::new(vec![ar, ac], a.into_data()).with_key(ka),
+            Tensor::new(vec![br, bc], b.into_data()).with_key(kb),
         ],
     )?;
     take_matrix(ctx, artifact, out, "c")
 }
 
 /// Execute an FT artifact (fused or detect-only); returns (C, errcount).
+#[allow(clippy::too_many_arguments)]
 fn exec_ft(
     ctx: &Ctx<'_>,
     artifact: &str,
     max_inj: usize,
     a: Matrix,
     b: Matrix,
+    ka: Option<OperandKey>,
+    kb: Option<OperandKey>,
     inj: &InjectionPlan,
 ) -> Result<(Matrix, u64)> {
     if inj.len() > max_inj {
@@ -466,8 +537,8 @@ fn exec_ft(
         ctx.pool,
         artifact,
         vec![
-            Tensor::new(vec![ar, ac], a.into_data()),
-            Tensor::new(vec![br, bc], b.into_data()),
+            Tensor::new(vec![ar, ac], a.into_data()).with_key(ka),
+            Tensor::new(vec![br, bc], b.into_data()).with_key(kb),
             Tensor::new(vec![max_inj, 4], inj.to_tensor(max_inj)),
         ],
     )?;

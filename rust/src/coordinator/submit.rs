@@ -55,6 +55,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::codegen::select::select_class;
 use crate::metrics::recorder::Counters;
+use crate::runtime::pack_cache::OperandId;
 
 use super::request::{ticket, Completion, GemmRequest, Priority, RequestMeta, Ticket, TicketStatus};
 use super::Core;
@@ -130,6 +131,12 @@ pub(crate) struct PoolQueueStats {
     /// Dispatched requests this pool's dispatchers stole from another
     /// pool's heap.
     steals: AtomicU64,
+    /// Of `routed`, requests that followed an existing affinity pin
+    /// (operand or shape-class) onto this pool — warm-cache placements.
+    affinity_hits: AtomicU64,
+    /// Total submission→theft queue wait (µs) of this pool's stolen
+    /// requests; divide by `steals` for mean steal latency.
+    steal_wait_us: AtomicU64,
 }
 
 /// Point-in-time view of one pool's queue, for `Coordinator::stats()`.
@@ -139,6 +146,8 @@ pub(crate) struct PoolQueueSnapshot {
     pub routed: u64,
     pub dispatched: u64,
     pub steals: u64,
+    pub affinity_hits: u64,
+    pub steal_wait_us: u64,
 }
 
 struct SubmitState {
@@ -159,6 +168,11 @@ struct SubmitState {
     /// Shape-class -> pool cache-affinity pins (`ShapeClass::name()`
     /// keys; the class's executables are warm on that shard).
     affinity: Mutex<HashMap<&'static str, usize>>,
+    /// Operand -> pool pins: the pool whose packed-panel cache holds (or
+    /// is about to hold) that operand's panels. Outranks the shape-class
+    /// pin, same skew guard. Cleared wholesale at capacity — pins are
+    /// re-established on the next sighting, nothing is lost but warmth.
+    operand_affinity: Mutex<HashMap<OperandId, usize>>,
     /// Per-pool routing/steal counters, pool order.
     pool_stats: Vec<PoolQueueStats>,
 }
@@ -194,6 +208,7 @@ impl Submission {
             max_queue,
             steal_threshold: steal_threshold.max(1),
             affinity: Mutex::new(HashMap::new()),
+            operand_affinity: Mutex::new(HashMap::new()),
             pool_stats: (0..pools).map(|_| PoolQueueStats::default()).collect(),
         });
         let workers = (0..dispatchers)
@@ -236,6 +251,8 @@ impl Submission {
                 routed: s.routed.load(Ordering::SeqCst),
                 dispatched: s.dispatched.load(Ordering::SeqCst),
                 steals: s.steals.load(Ordering::SeqCst),
+                affinity_hits: s.affinity_hits.load(Ordering::SeqCst),
+                steal_wait_us: s.steal_wait_us.load(Ordering::SeqCst),
             })
             .collect()
     }
@@ -269,7 +286,7 @@ impl Submission {
             completion.abort(TicketStatus::Failed, anyhow!("coordinator is shut down"));
             bail!("coordinator is shut down");
         }
-        let pool = self.route(&q, class);
+        let (pool, affinity_hit) = self.route(&q, class, req.key_a.or(req.key_b));
         if self.state.max_queue > 0 && q.heaps[pool].len() >= self.state.max_queue {
             // Settled entries (canceled tickets, or deadline self-expiry
             // via poll/wait) are deleted lazily; don't let corpses hold
@@ -305,6 +322,9 @@ impl Submission {
         }
         Counters::bump(&self.core.counters.requests);
         Counters::bump(&self.state.pool_stats[pool].routed);
+        if affinity_hit {
+            Counters::bump(&self.state.pool_stats[pool].affinity_hits);
+        }
         if let Some(d) = deadline {
             // admitted: the ticket side can now expire itself (poll/wait)
             // even if no dispatcher ever reaches the entry
@@ -333,10 +353,16 @@ impl Submission {
     /// pinned pool's live backlog exceeds the least-loaded pool's by the
     /// steal threshold, in which case the pin moves (affinity
     /// invalidation under skew). Ties pick the lowest pool index.
-    fn route(&self, q: &QueueInner, class: &'static str) -> usize {
+    ///
+    /// A request carrying an operand id (`hot`) is pinned by operand
+    /// instead: the pool whose packed-panel cache holds that operand's
+    /// panels is preferred, under the same skew guard. The returned bool
+    /// is true when an existing pin of either kind was followed (the
+    /// `affinity_hits` numerator).
+    fn route(&self, q: &QueueInner, class: &'static str, hot: Option<OperandId>) -> (usize, bool) {
         let pools = q.heaps.len();
         if pools == 1 {
-            return 0;
+            return (0, false);
         }
         let depths: Vec<usize> = (0..pools).map(|p| q.live_depth(p)).collect();
         let least = depths
@@ -345,12 +371,27 @@ impl Submission {
             .min_by_key(|(_, d)| **d)
             .map(|(p, _)| p)
             .unwrap_or(0);
+        let balanced =
+            |p: usize| depths[p] < depths[least].saturating_add(self.state.steal_threshold);
+        if let Some(id) = hot {
+            let mut pins = self.state.operand_affinity.lock().unwrap();
+            if pins.len() >= 4096 {
+                pins.clear();
+            }
+            return match pins.get(&id).copied() {
+                Some(p) if balanced(p) => (p, true),
+                _ => {
+                    pins.insert(id, least);
+                    (least, false)
+                }
+            };
+        }
         let mut affinity = self.state.affinity.lock().unwrap();
         match affinity.get(class).copied() {
-            Some(p) if depths[p] < depths[least].saturating_add(self.state.steal_threshold) => p,
+            Some(p) if balanced(p) => (p, true),
             _ => {
                 affinity.insert(class, least);
-                least
+                (least, false)
             }
         }
     }
@@ -453,6 +494,9 @@ fn dispatcher_loop(core: &Arc<Core>, state: &Arc<SubmitState>, home: usize) {
         Counters::bump(&state.pool_stats[home].dispatched);
         if stolen {
             Counters::bump(&state.pool_stats[home].steals);
+            // u128→u64: a theft after 584k years of queue wait can saturate.
+            let waited = meta.queued.as_micros().min(u64::MAX as u128) as u64;
+            Counters::add(&state.pool_stats[home].steal_wait_us, waited);
         }
         // A panicking request must not kill the dispatcher (that would
         // silently shrink the admission bound) nor strand its waiter.

@@ -64,14 +64,15 @@ fn print_usage() {
            gemm       run one GEMM (--m --n --k --policy none|online|offline --inject N\n\
                       --workers W --pools P --backend reference|blocked|blocked-scalar\n\
                       --priority low|normal|high\n\
-                      --deadline-ms D)\n\
+                      --deadline-ms D --pack-cache-mb MB)\n\
            campaign   SEU injection campaign (--rounds --errors --policy --workers W\n\
                       --backend B)\n\
            figures    regenerate paper figures (--fig 9..22|table1 | --all) --out DIR\n\
            serve      GEMM serving gateway: TCP with a JSON wire protocol\n\
                       (--listen addr:port --threads N --max-frame-bytes B), or the\n\
                       legacy stdin line protocol when no listen address is given\n\
-                      (--config FILE --backend B --workers W --pools P)\n\
+                      (--config FILE --backend B --workers W --pools P\n\
+                      --pack-cache-mb MB)\n\
            table1     print Table 1 kernel parameters\n\
            help       this text"
     );
@@ -97,15 +98,29 @@ fn start_coordinator(
     workers: usize,
     pools: usize,
     backend: &str,
+    pack_cache_mb: Option<usize>,
 ) -> anyhow::Result<Coordinator> {
     let engine = Engine::start(EngineConfig {
         workers,
         pools,
         backend: backend.to_string(),
+        pack_cache_mb,
         ..Default::default()
     })?;
     let cfg = CoordinatorConfig { ft_level, ..Default::default() };
     Ok(Coordinator::new(engine, cfg))
+}
+
+/// Parse an optional `--pack-cache-mb` override (None = keep the config
+/// or built-in default; 0 = disable the cache).
+fn parse_pack_cache_mb(arg: Option<&str>) -> anyhow::Result<Option<usize>> {
+    match arg {
+        None => Ok(None),
+        Some(s) => s
+            .parse::<usize>()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("--pack-cache-mb: bad integer {s:?}")),
+    }
 }
 
 fn cmd_info(rest: &[String]) -> anyhow::Result<()> {
@@ -167,9 +182,29 @@ fn cmd_info(rest: &[String]) -> anyhow::Result<()> {
     );
     for (p, ps) in s.pools.iter().enumerate() {
         println!(
-            "  pool {p}: queue_depth={} engine_inflight={} routed={} dispatched={} steals={}",
-            ps.queue_depth, ps.engine_inflight, ps.routed, ps.dispatched, ps.steals
+            "  pool {p}: queue_depth={} engine_inflight={} routed={} dispatched={} steals={} \
+             affinity_hits={} steal_wait_us={}",
+            ps.queue_depth,
+            ps.engine_inflight,
+            ps.routed,
+            ps.dispatched,
+            ps.steals,
+            ps.affinity_hits,
+            ps.steal_wait_us
         );
+        if let Some(pc) = &ps.pack_cache {
+            println!(
+                "    pack cache: hits={} misses={} evictions={} entries={} bytes={}",
+                pc.hits, pc.misses, pc.evictions, pc.entries, pc.bytes
+            );
+        }
+    }
+    match &s.pack_cache {
+        Some(pc) => println!(
+            "pack cache (all pools): hits={} misses={} evictions={} entries={} bytes={}",
+            pc.hits, pc.misses, pc.evictions, pc.entries, pc.bytes
+        ),
+        None => println!("pack cache: disabled (pack_cache_mb = 0)"),
     }
     Ok(())
 }
@@ -187,6 +222,7 @@ fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
         .opt("backend", "execution backend reference|blocked|blocked-scalar", Some("reference"))
         .opt("priority", "dispatch priority low|normal|high", Some("normal"))
         .opt("deadline-ms", "fail if still queued after this long; 0 = none", Some("0"))
+        .opt("pack-cache-mb", "packed-operand cache MiB per pool; 0 disables", None)
         .opt("seed", "rng seed", Some("42"));
     let args = cmd.parse(rest)?;
     let (m, n, k) = (args.usize_or("m", 128), args.usize_or("n", 128), args.usize_or("k", 128));
@@ -202,6 +238,7 @@ fn cmd_gemm(rest: &[String]) -> anyhow::Result<()> {
         args.usize_or("workers", 1),
         args.usize_or("pools", 1),
         args.str_or("backend", "reference"),
+        parse_pack_cache_mb(args.get("pack-cache-mb"))?,
     )?;
     let a = Matrix::rand_uniform(m, k, seed);
     let b = Matrix::rand_uniform(k, n, seed + 1);
@@ -258,6 +295,7 @@ fn cmd_campaign(rest: &[String]) -> anyhow::Result<()> {
         args.usize_or("workers", 1),
         1,
         args.str_or("backend", "reference"),
+        None,
     )?;
     let campaign = FaultCampaign::new(
         coord,
@@ -339,6 +377,7 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .opt("backend", "override [engine].backend (reference|blocked|blocked-scalar)", None)
         .opt("workers", "override [engine].workers (workers per pool)", None)
         .opt("pools", "override [engine].pools (shard count)", None)
+        .opt("pack-cache-mb", "override [engine].pack_cache_mb (0 disables)", None)
         .opt("listen", "bind addr:port and serve the TCP wire protocol", None)
         .opt("threads", "connection-thread pool size (TCP mode)", None)
         .opt("max-frame-bytes", "per-frame byte bound (TCP mode)", None);
@@ -361,6 +400,9 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
             .parse()
             .map_err(|_| anyhow::anyhow!("--pools: bad integer {pools:?}"))?;
         anyhow::ensure!(engine_cfg.pools >= 1, "--pools must be >= 1");
+    }
+    if let Some(mb) = parse_pack_cache_mb(args.get("pack-cache-mb"))? {
+        engine_cfg.pack_cache_mb = Some(mb);
     }
     let engine = Engine::start(engine_cfg)?;
     let coord = Coordinator::new(engine, cfg.coordinator()?);

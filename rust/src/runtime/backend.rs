@@ -71,7 +71,7 @@ pub struct BackendInfo {
 }
 
 /// What a backend factory gets told about the engine constructing it.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct BackendCtx {
     /// Engine worker threads **per pool** — each gets its own backend
     /// instance.
@@ -81,6 +81,10 @@ pub struct BackendCtx {
     /// [`BackendCtx::total_workers`], not `workers`, or an N-pool engine
     /// oversubscribes cores by N× (the blocked backend does this).
     pub pools: usize,
+    /// This pool's shared packed-operand & checksum cache, `None` when
+    /// disabled (`pack_cache_mb = 0`). Backends that pack operands
+    /// (the blocked family) consult it for key-bearing input tensors.
+    pub pack_cache: Option<Arc<super::pack_cache::PackCache>>,
 }
 
 impl BackendCtx {
@@ -142,10 +146,10 @@ impl BackendRegistry {
                 kernel_isa: isa.name(),
             },
             Arc::new(move |ctx: &BackendCtx| {
-                Box::new(super::blocked::BlockedBackend::for_engine_isa(
-                    ctx.total_workers(),
-                    isa,
-                )) as Box<dyn Backend>
+                Box::new(
+                    super::blocked::BlockedBackend::for_engine_isa(ctx.total_workers(), isa)
+                        .with_pack_cache(ctx.pack_cache.clone()),
+                ) as Box<dyn Backend>
             }),
         );
         reg.register(
@@ -162,7 +166,8 @@ impl BackendRegistry {
                         ctx.total_workers(),
                         KernelIsa::Scalar,
                     )
-                    .with_name("blocked-scalar"),
+                    .with_name("blocked-scalar")
+                    .with_pack_cache(ctx.pack_cache.clone()),
                 ) as Box<dyn Backend>
             }),
         );
@@ -688,7 +693,7 @@ mod tests {
     fn registry_lists_builtins_and_resolves_default() {
         let reg = BackendRegistry::global();
         assert_eq!(reg.names(), vec!["blocked", "blocked-scalar", "reference"]);
-        let ctx = BackendCtx { workers: 2, pools: 1 };
+        let ctx = BackendCtx { workers: 2, pools: 1, pack_cache: None };
         let (info, factory) = reg.resolve("").unwrap();
         assert_eq!(info.name, "reference");
         assert_eq!(info.kernel_isa, "portable");
@@ -708,10 +713,11 @@ mod tests {
 
     #[test]
     fn backend_ctx_divides_cores_per_pool() {
-        assert_eq!(BackendCtx { workers: 2, pools: 3 }.total_workers(), 6);
-        assert_eq!(BackendCtx { workers: 4, pools: 1 }.total_workers(), 4);
+        let ctx = |workers, pools| BackendCtx { workers, pools, pack_cache: None };
+        assert_eq!(ctx(2, 3).total_workers(), 6);
+        assert_eq!(ctx(4, 1).total_workers(), 4);
         // zero fields clamp instead of zeroing the division denominator
-        assert_eq!(BackendCtx { workers: 0, pools: 0 }.total_workers(), 1);
+        assert_eq!(ctx(0, 0).total_workers(), 1);
     }
 
     #[test]

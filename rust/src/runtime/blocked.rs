@@ -61,6 +61,7 @@ use crate::util::pool::ThreadPool;
 use super::backend::{self, Backend};
 use super::engine::Tensor;
 use super::manifest::{Artifact, ArtifactKind};
+use super::pack_cache::{OperandKey, PackCache, PackedOperand, PanelKey, PanelRole};
 use super::simd::{self, KernelIsa};
 
 /// Below this FLOP count the pool fan-out costs more than it buys; the
@@ -78,6 +79,12 @@ pub struct BlockedBackend {
     /// Registry name this instance reports ("blocked", or
     /// "blocked-scalar" for the pinned-scalar registry entry).
     name: &'static str,
+    /// The engine pool's shared packed-operand & checksum cache
+    /// (`None` = pack per request). Consulted only for key-bearing
+    /// input tensors; cached panels/sums are immutable — the
+    /// verify/correct sweeps read them and write only the owned C
+    /// tiles, so a shared panel stays bitwise identical forever.
+    cache: Option<Arc<PackCache>>,
 }
 
 impl BlockedBackend {
@@ -129,6 +136,7 @@ impl BlockedBackend {
             threads,
             isa,
             name: "blocked",
+            cache: None,
         }
     }
 
@@ -136,6 +144,14 @@ impl BlockedBackend {
     /// resolve to the same type under a different name).
     pub(crate) fn with_name(mut self, name: &'static str) -> Self {
         self.name = name;
+        self
+    }
+
+    /// Attach the pool-shared packed-operand cache (`None` keeps
+    /// pack-per-request behavior). The engine wires this from
+    /// `BackendCtx::pack_cache` via the registry factories.
+    pub fn with_pack_cache(mut self, cache: Option<Arc<PackCache>>) -> Self {
+        self.cache = cache;
         self
     }
 
@@ -155,19 +171,122 @@ impl BlockedBackend {
 
     /// The multithreaded blocked GEMM (plain path and Ding panel updates).
     fn gemm(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        self.gemm_keyed(a, b, None, None)
+    }
+
+    /// [`BlockedBackend::gemm`] with pack-cache content addresses for the
+    /// operands: a keyed operand's packed panels are fetched from /
+    /// inserted into the pool cache (`prot = 0` entries, no fused sums).
+    fn gemm_keyed(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        key_a: Option<OperandKey>,
+        key_b: Option<OperandKey>,
+    ) -> Matrix {
         let (m, k, n) = (a.rows(), a.cols(), b.cols());
         assert_eq!(k, b.rows(), "inner dims");
         if m * n * k < PARALLEL_FLOP_FLOOR || m == 0 || n == 0 || k == 0 {
             return a.matmul(b);
         }
         let t = self.tiles(m, n, k);
-        let pa: Vec<Vec<f32>> = row_blocks(m, t.mc)
-            .map(|(i0, mb)| pack_a(a, i0, mb, t.mr))
-            .collect();
-        let pb: Vec<Vec<f32>> = col_blocks(n, t.nc)
-            .map(|(j0, nb)| pack_b(b, j0, nb, t.nr))
-            .collect();
-        self.compute_blocks(Arc::new(pa), Arc::new(pb), m, n, k, t)
+        let (pa, _) = self.packed_a(a, key_a, t, 0);
+        let (pb, _) = self.packed_b(b, key_b, t, 0);
+        self.compute_blocks(pa, pb, m, n, k, t)
+    }
+
+    /// A-side pack with cache lookup: returns the macro-block panels and
+    /// (for `prot > 0`) the per-protection-row-tile eᵀA sums, packed
+    /// fresh on a miss and shared from the pool cache on a hit. The
+    /// returned values are immutable — callers only read them.
+    fn packed_a(
+        &self,
+        a: &Matrix,
+        key: Option<OperandKey>,
+        t: HostTiles,
+        prot: usize,
+    ) -> (Arc<Vec<Vec<f32>>>, Arc<Vec<Vec<f32>>>) {
+        let slot = self.cache_slot(key, PanelRole::A, t.mc, t.mr, prot);
+        if let Some((cache, pk)) = &slot {
+            if let Some(hit) = cache.get(pk) {
+                return (hit.panels, hit.sums);
+            }
+        }
+        let (m, k) = (a.rows(), a.cols());
+        let mut ea: Vec<Vec<f32>> =
+            if prot == 0 { Vec::new() } else { vec![vec![0.0f32; k]; m.div_ceil(prot)] };
+        let mut pa = Vec::new();
+        for (i0, mb) in row_blocks(m, t.mc) {
+            pa.push(if prot == 0 {
+                pack_a(a, i0, mb, t.mr)
+            } else {
+                pack_a_encode(a, i0, mb, t.mr, prot, &mut ea, self.isa)
+            });
+        }
+        self.cache_fill(slot, Arc::new(pa), Arc::new(ea))
+    }
+
+    /// B-side counterpart of [`BlockedBackend::packed_a`]: column panels
+    /// plus per-protection-column-tile Be sums.
+    fn packed_b(
+        &self,
+        b: &Matrix,
+        key: Option<OperandKey>,
+        t: HostTiles,
+        prot: usize,
+    ) -> (Arc<Vec<Vec<f32>>>, Arc<Vec<Vec<f32>>>) {
+        let slot = self.cache_slot(key, PanelRole::B, t.nc, t.nr, prot);
+        if let Some((cache, pk)) = &slot {
+            if let Some(hit) = cache.get(pk) {
+                return (hit.panels, hit.sums);
+            }
+        }
+        let (k, n) = (b.rows(), b.cols());
+        let mut be: Vec<Vec<f32>> =
+            if prot == 0 { Vec::new() } else { vec![vec![0.0f32; k]; n.div_ceil(prot)] };
+        let mut pb = Vec::new();
+        for (j0, nb) in col_blocks(n, t.nc) {
+            pb.push(if prot == 0 {
+                pack_b(b, j0, nb, t.nr)
+            } else {
+                pack_b_encode(b, j0, nb, t.nr, prot, &mut be, self.isa)
+            });
+        }
+        self.cache_fill(slot, Arc::new(pb), Arc::new(be))
+    }
+
+    /// The cache + full [`PanelKey`] pair for one operand, or `None`
+    /// when either the cache is off or the operand carries no content
+    /// address (then packing is neither looked up nor published).
+    fn cache_slot(
+        &self,
+        key: Option<OperandKey>,
+        role: PanelRole,
+        block: usize,
+        micro: usize,
+        prot: usize,
+    ) -> Option<(Arc<PackCache>, PanelKey)> {
+        let cache = self.cache.as_ref()?;
+        let op = key?;
+        let pk = PanelKey { op, role, block, micro, isa: self.isa, prot };
+        Some((Arc::clone(cache), pk))
+    }
+
+    /// Publish a freshly-packed operand under its key (no-op without
+    /// one) and hand the shared form back to the caller.
+    fn cache_fill(
+        &self,
+        slot: Option<(Arc<PackCache>, PanelKey)>,
+        panels: Arc<Vec<Vec<f32>>>,
+        sums: Arc<Vec<Vec<f32>>>,
+    ) -> (Arc<Vec<Vec<f32>>>, Arc<Vec<Vec<f32>>>) {
+        if let Some((cache, pk)) = slot {
+            cache.insert(
+                pk,
+                PackedOperand { panels: Arc::clone(&panels), sums: Arc::clone(&sums) },
+            );
+        }
+        (panels, sums)
     }
 
     /// Fan the macro-tile jobs over the pool and assemble C.
@@ -214,6 +333,8 @@ impl BlockedBackend {
         art: &Artifact,
         a: Matrix,
         b: Matrix,
+        key_a: Option<OperandKey>,
+        key_b: Option<OperandKey>,
         injections: Vec<Injection>,
         correct: bool,
     ) -> Result<(Matrix, Vec<f32>, Vec<f32>, Vec<f32>)> {
@@ -235,27 +356,21 @@ impl BlockedBackend {
             && m * n * k >= PARALLEL_FLOP_FLOOR;
 
         let (mut c, ea, be) = if aligned {
-            let mut ea: Vec<Vec<f32>> = vec![vec![0.0f32; k]; gm];
-            let mut be: Vec<Vec<f32>> = vec![vec![0.0f32; k]; gn];
-            let mut pa = Vec::new();
-            for (i0, mb) in row_blocks(m, t.mc) {
-                pa.push(pack_a_encode(&a, i0, mb, t.mr, sub_m, &mut ea, self.isa));
-            }
-            let mut pb = Vec::new();
-            for (j0, nb) in col_blocks(n, t.nc) {
-                pb.push(pack_b_encode(&b, j0, nb, t.nr, sub_n, &mut be, self.isa));
-            }
-            let c = self.compute_blocks(Arc::new(pa), Arc::new(pb), m, n, k, t);
+            // Packing (with the encode fused in) flows through the pool
+            // cache for keyed operands — a hit reuses another request's
+            // panels *and* its per-tile operand sums, both immutable.
+            let (pa, ea) = self.packed_a(&a, key_a, t, sub_m);
+            let (pb, be) = self.packed_b(&b, key_b, t, sub_n);
+            let c = self.compute_blocks(pa, pb, m, n, k, t);
             (c, ea, be)
         } else {
-            (self.gemm(&a, &b), Vec::new(), Vec::new())
+            let c = self.gemm_keyed(&a, &b, key_a, key_b);
+            (c, Arc::new(Vec::new()), Arc::new(Vec::new()))
         };
 
         let mut errgrid = vec![0.0f32; gm * gn];
         let a = Arc::new(a);
         let b = Arc::new(b);
-        let ea = Arc::new(ea);
-        let be = Arc::new(be);
         // The shared per-interval sweep drives fault application and
         // writeback; this backend's verifier fans the touched tiles over
         // the pool (disjoint protection domains) and finishes checksums
@@ -334,12 +449,17 @@ impl Backend for BlockedBackend {
             ArtifactKind::FtGemm | ArtifactKind::FtDetect => {
                 let correct = art.kind == ArtifactKind::FtGemm;
                 let mut it = inputs.into_iter();
-                let a = backend::matrix_input(art, it.next())?;
-                let b = backend::matrix_input(art, it.next())?;
+                let ta = it.next();
+                let key_a = ta.as_ref().and_then(|t| t.key);
+                let a = backend::matrix_input(art, ta)?;
+                let tb = it.next();
+                let key_b = tb.as_ref().and_then(|t| t.key);
+                let b = backend::matrix_input(art, tb)?;
                 let inj =
                     it.next().ok_or_else(|| anyhow!("{}: missing inj input", art.name))?;
                 let injections = backend::decode_injections(&inj);
-                let (c, cr, cc, errgrid) = this.fused_ft(art, a, b, injections, correct)?;
+                let (c, cr, cc, errgrid) =
+                    this.fused_ft(art, a, b, key_a, key_b, injections, correct)?;
                 backend::build_outputs(
                     art,
                     [
@@ -351,6 +471,20 @@ impl Backend for BlockedBackend {
                     .into_iter()
                     .collect(),
                 )
+            }
+            // Same semantics as `execute_semantic`'s Gemm arm, but with
+            // the operands' content addresses preserved so the plain
+            // GEMM path shares packed panels across requests too.
+            ArtifactKind::Gemm | ArtifactKind::Stepwise => {
+                let mut it = inputs.into_iter();
+                let ta = it.next();
+                let key_a = ta.as_ref().and_then(|t| t.key);
+                let a = backend::matrix_input(art, ta)?;
+                let tb = it.next();
+                let key_b = tb.as_ref().and_then(|t| t.key);
+                let b = backend::matrix_input(art, tb)?;
+                let c = this.gemm_keyed(&a, &b, key_a, key_b);
+                backend::build_outputs(art, [("c", c.into_data())].into_iter().collect())
             }
             _ => backend::execute_semantic(art, inputs, this.thresholds, &|a, b| {
                 this.gemm(a, b)
@@ -747,6 +881,7 @@ mod tests {
     use crate::codegen::select::host_tiles;
     use crate::runtime::backend::ReferenceBackend;
     use crate::runtime::manifest::Manifest;
+    use crate::runtime::pack_cache::OperandId;
 
     fn tensor2(m: &Matrix) -> Tensor {
         Tensor::new(vec![m.rows(), m.cols()], m.data().to_vec())
@@ -842,8 +977,93 @@ mod tests {
                         assert_eq!(got.cc, want.cc, "{isa:?} cc tile ({ti},{tj})");
                     }
                 }
+
+                // Cached-vs-fresh: the same panels + sums served through
+                // the pool cache (fill pass, then hit pass) must stay
+                // BIT-identical to the freshly-encoded ones, per ISA —
+                // this is what keeps detection decisions and errcount
+                // grids unchanged when the cache is on.
+                let cache = Arc::new(PackCache::new(64 * 1024 * 1024));
+                let bk = BlockedBackend::with_threads_isa(1, isa)
+                    .with_pack_cache(Some(Arc::clone(&cache)));
+                let ka =
+                    Some(OperandKey::whole(OperandId::Seed { rows: m, cols: k, seed: 31 }, m, k));
+                let kb =
+                    Some(OperandKey::whole(OperandId::Seed { rows: k, cols: n, seed: 32 }, k, n));
+                let fresh_pa: Vec<Vec<f32>> =
+                    row_blocks(m, t.mc).map(|(i0, mb)| pack_a(&a, i0, mb, t.mr)).collect();
+                for pass in ["fill", "hit"] {
+                    let (pa_c, ea_c) = bk.packed_a(&a, ka, t, sub_m);
+                    let (_, be_c) = bk.packed_b(&b, kb, t, sub_n);
+                    assert_eq!(&*ea_c, &ea, "{isa:?} {pass}: cached eᵀA sums drifted");
+                    assert_eq!(&*be_c, &be, "{isa:?} {pass}: cached Be sums drifted");
+                    for (got_p, want_p) in pa_c.iter().zip(&fresh_pa) {
+                        assert_eq!(got_p, want_p, "{isa:?} {pass}: cached A panel drifted");
+                    }
+                }
+                let s = cache.stats();
+                assert_eq!(s.hits, 2, "{isa:?}: second pass must hit both roles, {s:?}");
+                assert_eq!(s.misses, 2, "{isa:?}: {s:?}");
             }
         }
+    }
+
+    #[test]
+    fn cached_ft_runs_stay_bitwise_identical_and_count_hits() {
+        // End-to-end pin of the cache's correctness contract: with the
+        // pool cache on and content-addressed operands, a repeated
+        // injected FT run reuses the packed panels + fused sums and
+        // still produces byte-identical C, cr, cc and errcount outputs
+        // (same instance, same ISA, so even C is bitwise stable).
+        let man = Manifest::builtin();
+        let cache = Arc::new(PackCache::new(256 * 1024 * 1024));
+        let mut cached =
+            BlockedBackend::with_threads(2).with_pack_cache(Some(Arc::clone(&cache)));
+        let mut fresh = BlockedBackend::with_threads(2);
+        let art = man.get("ftgemm_tb_medium").unwrap();
+        let a = Matrix::rand_uniform(art.m, art.k, 77);
+        let b = Matrix::rand_uniform(art.k, art.n, 78);
+        let mut rng = crate::util::rng::Pcg32::seeded(79);
+        let plan = InjectionPlan::random_seu(
+            art.m,
+            art.n,
+            art.k / 8,
+            art.verify_every,
+            art.sub_m,
+            art.sub_n,
+            3,
+            &mut rng,
+        );
+        let keyed = |mat: &Matrix, seed: u64| {
+            let (rows, cols) = (mat.rows(), mat.cols());
+            tensor2(mat)
+                .with_key(Some(OperandKey::whole(OperandId::Seed { rows, cols, seed }, rows, cols)))
+        };
+        let inputs = || {
+            vec![
+                keyed(&a, 77),
+                keyed(&b, 78),
+                Tensor::new(vec![art.max_inj, 4], plan.to_tensor(art.max_inj)),
+            ]
+        };
+        let want = fresh.execute(art, inputs()).unwrap();
+        let first = cached.execute(art, inputs()).unwrap();
+        let second = cached.execute(art, inputs()).unwrap();
+        for (idx, spec) in art.outputs.iter().enumerate() {
+            assert_eq!(first[idx].data, want[idx].data, "fill run drifted on {:?}", spec.role);
+            assert_eq!(second[idx].data, want[idx].data, "hit run drifted on {:?}", spec.role);
+        }
+        let s = cache.stats();
+        assert_eq!(s.hits, 2, "second run must hit both operands: {s:?}");
+        assert_eq!(s.misses, 2, "{s:?}");
+        assert!(s.entries == 2 && s.bytes > 0, "{s:?}");
+        // Unkeyed inputs bypass the cache entirely (no spurious entries).
+        let inj = Tensor::new(vec![art.max_inj, 4], plan.to_tensor(art.max_inj));
+        let bare = cached.execute(art, vec![tensor2(&a), tensor2(&b), inj]).unwrap();
+        for (idx, spec) in art.outputs.iter().enumerate() {
+            assert_eq!(bare[idx].data, want[idx].data, "unkeyed run drifted on {:?}", spec.role);
+        }
+        assert_eq!(cache.stats().entries, 2, "unkeyed run must not populate the cache");
     }
 
     #[test]

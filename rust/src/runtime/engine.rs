@@ -41,6 +41,7 @@ use crate::util::pool::oneshot;
 
 use super::backend::{Backend, BackendCtx, BackendInfo, BackendRegistry};
 use super::manifest::Manifest;
+use super::pack_cache::{OperandKey, PackCache, PackCacheStats};
 
 /// A host tensor: row-major f32 with an explicit shape. The engine's only
 /// data currency (all artifacts are pure-f32 by construction).
@@ -48,17 +49,28 @@ use super::manifest::Manifest;
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
+    /// Content address of the operand this tensor is a (window of a)
+    /// copy of, when the submitter knows one. Purely advisory: backends
+    /// with a pack cache use it to share packed panels + fused
+    /// checksums across requests; `None` (the default) opts out.
+    pub key: Option<OperandKey>,
 }
 
 impl Tensor {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
-        Tensor { shape, data }
+        Tensor { shape, data, key: None }
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
-        Tensor { shape, data: vec![0.0; n] }
+        Tensor { shape, data: vec![0.0; n], key: None }
+    }
+
+    /// Attach a pack-cache content address (see [`Tensor::key`]).
+    pub fn with_key(mut self, key: Option<OperandKey>) -> Self {
+        self.key = key;
+        self
     }
 
     pub fn scalar_sum(&self) -> f64 {
@@ -111,6 +123,22 @@ pub struct EngineConfig {
     /// executable cache, and inflight counter. 0 is treated as 1. Total
     /// worker threads = `workers * pools`.
     pub pools: usize,
+    /// Byte budget (in MiB) of the per-pool packed-operand & checksum
+    /// cache (each shard gets its own, next to its warm-executable
+    /// cache). `None` = the built-in default
+    /// ([`DEFAULT_PACK_CACHE_MB`]); `Some(0)` disables caching entirely
+    /// and restores pack-per-request behavior.
+    pub pack_cache_mb: Option<usize>,
+}
+
+/// Default per-pool pack-cache budget when the config leaves it unset.
+pub const DEFAULT_PACK_CACHE_MB: usize = 256;
+
+impl EngineConfig {
+    /// The resolved per-pool pack-cache budget in MiB (0 = disabled).
+    pub fn pack_cache_budget_mb(&self) -> usize {
+        self.pack_cache_mb.unwrap_or(DEFAULT_PACK_CACHE_MB)
+    }
 }
 
 /// Cumulative engine-side statistics (per worker; [`Engine::stats`]
@@ -169,6 +197,10 @@ struct Pool {
     workers: Vec<Worker>,
     /// Queued + running requests on this pool (shard-level load signal).
     inflight: Arc<AtomicUsize>,
+    /// This shard's packed-operand & checksum cache (`None` when
+    /// disabled). Shared by the pool's workers; disjoint across pools,
+    /// so affinity routing concentrates a shape class's panels here.
+    pack_cache: Option<Arc<PackCache>>,
 }
 
 struct Shared {
@@ -237,9 +269,13 @@ impl Engine {
         let inflight_total = Arc::new(AtomicUsize::new(0));
         let peak_inflight = Arc::new(AtomicUsize::new(0));
 
+        let pack_cache_mb = config.pack_cache_budget_mb();
         let mut pools = Vec::with_capacity(pools_n);
         for p in 0..pools_n {
             let pool_inflight = Arc::new(AtomicUsize::new(0));
+            // Per-shard cache: workers of one pool share it, pools stay
+            // disjoint (mirrors the warm-executable cache geometry).
+            let pack_cache = PackCache::from_config_mb(pack_cache_mb);
             let mut workers = Vec::with_capacity(n);
             for i in 0..n {
                 let (tx, rx) = channel::<Msg>();
@@ -250,13 +286,18 @@ impl Engine {
                 let thread_pool = Arc::clone(&pool_inflight);
                 let thread_total = Arc::clone(&inflight_total);
                 let thread_factory = Arc::clone(&factory);
+                let thread_cache = pack_cache.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("ftgemm-eng-{p}.{i}"))
                     .spawn(move || {
                         // Backends may hold thread-confined (Rc-based) client
                         // state, so construction happens here, in-thread, from
                         // the Send + Sync registry factory.
-                        let ctx = BackendCtx { workers: n, pools: pools_n };
+                        let ctx = BackendCtx {
+                            workers: n,
+                            pools: pools_n,
+                            pack_cache: thread_cache,
+                        };
                         let mut worker =
                             EngineWorker::new(thread_manifest, (*thread_factory)(&ctx));
                         let _ = ready_tx.send(Ok(()));
@@ -309,7 +350,7 @@ impl Engine {
                     handle: Mutex::new(Some(handle)),
                 });
             }
-            pools.push(Pool { workers, inflight: pool_inflight });
+            pools.push(Pool { workers, inflight: pool_inflight, pack_cache });
         }
 
         let engine = Engine {
@@ -372,6 +413,46 @@ impl Engine {
     /// the concurrency witness the pipeline tests and benches read.
     pub fn peak_inflight(&self) -> usize {
         self.shared.peak_inflight.load(Ordering::SeqCst)
+    }
+
+    /// Whether the per-pool packed-operand cache is on (`pack_cache_mb`
+    /// resolved to a non-zero budget). The coordinator skips operand-key
+    /// derivation entirely when this is false.
+    pub fn pack_cache_enabled(&self) -> bool {
+        self.shared.pools.iter().any(|p| p.pack_cache.is_some())
+    }
+
+    /// The resolved per-pool pack-cache byte budget (0 = disabled). The
+    /// gateway sizes its seed-materialization cache off the same knob so
+    /// `pack_cache_mb = 0` disables both halves at once.
+    pub fn pack_cache_budget_bytes(&self) -> usize {
+        self.shared
+            .pools
+            .iter()
+            .find_map(|p| p.pack_cache.as_ref().map(|c| c.budget_bytes()))
+            .unwrap_or(0)
+    }
+
+    /// Per-pool pack-cache counters, pool order (`None` = disabled).
+    pub fn pack_cache_stats_per_pool(&self) -> Vec<Option<PackCacheStats>> {
+        self.shared
+            .pools
+            .iter()
+            .map(|p| p.pack_cache.as_ref().map(|c| c.stats()))
+            .collect()
+    }
+
+    /// Pack-cache counters aggregated over every pool; `None` when the
+    /// cache is disabled.
+    pub fn pack_cache_stats(&self) -> Option<PackCacheStats> {
+        let per = self.pack_cache_stats_per_pool();
+        let mut agg = PackCacheStats::default();
+        let mut any = false;
+        for s in per.into_iter().flatten() {
+            agg.merge(&s);
+            any = true;
+        }
+        any.then_some(agg)
     }
 
     /// Requests currently queued or running across the pool (live load
@@ -756,6 +837,23 @@ mod tests {
         assert_eq!(eng.pool_inflight(0), 0);
         assert_eq!(eng.pool_inflight(1), 0);
         assert_eq!(eng.inflight_per_pool(), vec![0, 0]);
+    }
+
+    #[test]
+    fn pack_cache_defaults_on_per_pool_and_zero_disables() {
+        let eng = Engine::start(EngineConfig { pools: 2, ..Default::default() })
+            .expect("reference engine always starts");
+        assert!(eng.pack_cache_enabled(), "default budget must enable the cache");
+        let per = eng.pack_cache_stats_per_pool();
+        assert_eq!(per.len(), 2, "one cache per pool");
+        assert!(per.iter().all(|s| s.is_some()));
+        assert_eq!(eng.pack_cache_stats().unwrap(), PackCacheStats::default());
+
+        let off = Engine::start(EngineConfig { pack_cache_mb: Some(0), ..Default::default() })
+            .expect("reference engine always starts");
+        assert!(!off.pack_cache_enabled(), "pack_cache_mb = 0 must fully disable");
+        assert!(off.pack_cache_stats().is_none());
+        assert_eq!(off.pack_cache_stats_per_pool(), vec![None]);
     }
 
     #[test]

@@ -29,10 +29,14 @@ pub mod backend;
 pub mod blocked;
 pub mod engine;
 pub mod manifest;
+pub mod pack_cache;
 pub mod simd;
 
 pub use backend::{Backend, BackendFactory, BackendInfo, BackendRegistry, ReferenceBackend};
 pub use blocked::BlockedBackend;
+pub use pack_cache::{
+    OperandId, OperandKey, PackCache, PackCacheStats, PackedOperand, PanelKey, PanelRole,
+};
 pub use simd::KernelIsa;
 pub use engine::{Engine, EngineConfig, ExecOutput, ExecRequest, Pending};
 pub use manifest::{Artifact, ArtifactKind, Manifest, TensorSpec};

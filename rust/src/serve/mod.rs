@@ -152,6 +152,9 @@ struct Shared {
     counters: GatewayCounters,
     shutdown: AtomicBool,
     max_frame: usize,
+    /// Seed→operand materialization cache (the wire-side half of the
+    /// cross-request cache); `None` when `pack_cache_mb = 0`.
+    seed_cache: Option<proto::SeedCache>,
 }
 
 /// The running TCP gateway. Dropping it stops accepting, lets in-flight
@@ -173,11 +176,13 @@ impl Gateway {
         let addr = listener.local_addr().context("local_addr")?;
         listener.set_nonblocking(true).context("set_nonblocking")?;
 
+        let seed_cache = proto::SeedCache::with_budget(coord.engine().pack_cache_budget_bytes());
         let shared = Arc::new(Shared {
             coord,
             counters: GatewayCounters::default(),
             shutdown: AtomicBool::new(false),
             max_frame: cfg.max_frame_bytes,
+            seed_cache,
         });
 
         let (tx, rx) = mpsc::channel::<TcpStream>();
@@ -418,7 +423,7 @@ fn handle_frame(
             let id = spec.id;
             shared.counters.gemms.fetch_add(1, Ordering::Relaxed);
             conn.gemms += 1;
-            match shared.coord.submit(spec.into_request()) {
+            match shared.coord.submit(spec.into_request_with(shared.seed_cache.as_ref())) {
                 Ok(ticket) => WriteItem::Pending { id, ticket },
                 Err(e) => {
                     let msg = format!("{e:#}");
@@ -486,6 +491,13 @@ fn metrics_line(shared: &Shared, conn: &ConnStats) -> String {
     go.set("gemms", Json::Num(g.gemms as f64));
     go.set("responses", Json::Num(g.responses as f64));
     go.set("protocol_errors", Json::Num(g.protocol_errors as f64));
+    if let Some(c) = &shared.seed_cache {
+        let (entries, bytes) = c.usage();
+        let mut sc = Json::obj();
+        sc.set("entries", Json::Num(entries as f64));
+        sc.set("bytes", Json::Num(bytes as f64));
+        go.set("seed_cache", sc);
+    }
     o.set("gateway", go);
     let mut co = Json::obj();
     co.set("frames", Json::Num(conn.frames as f64));

@@ -25,6 +25,9 @@
 //!
 //! [`SeuModel`]: crate::faults::SeuModel
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use anyhow::Result;
 
 use crate::abft::checksum::Thresholds;
@@ -33,6 +36,7 @@ use crate::abft::matrix::Matrix;
 use crate::coordinator::{FtLevel, FtPolicy, GemmRequest, HostVerify, Priority, RequestOptions};
 use crate::faults::model::KernelGeom;
 use crate::faults::SeuModel;
+use crate::runtime::pack_cache::OperandId;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
@@ -187,6 +191,13 @@ impl GemmSpec {
         o.to_string()
     }
 
+    /// The B-operand seed (`A` uses `seed` itself). One definition, used
+    /// by materialization *and* the pack-cache operand id, so the id
+    /// always names exactly the content `rand_uniform` would produce.
+    fn seed_b(&self) -> u64 {
+        self.seed + 1
+    }
+
     /// The injection plan this spec asks for (explicit list wins; a bare
     /// `inject` count expands through the same [`SeuModel`] path as the
     /// CLI, so a given `(seed, inject)` reproduces exactly).
@@ -202,11 +213,41 @@ impl GemmSpec {
         SeuModel::PerGemm { count: self.inject }.plan(&geom, 0.0, &mut rng)
     }
 
+    /// The single seed-derivation path: operands *and* injected
+    /// coordinates for this spec, optionally through a [`SeedCache`]. A
+    /// cache hit skips both `Matrix::rand_uniform` calls and the
+    /// [`SeuModel`] expansion; hit or miss, the result is bit-identical
+    /// to a fresh derivation (the cache stores exactly what this
+    /// function would compute).
+    pub fn derive(&self, cache: Option<&SeedCache>) -> (Arc<Matrix>, Arc<Matrix>, InjectionPlan) {
+        match cache {
+            Some(c) => (
+                c.operand(self.m, self.k, self.seed),
+                c.operand(self.k, self.n, self.seed_b()),
+                c.plan(self),
+            ),
+            None => (
+                Arc::new(Matrix::rand_uniform(self.m, self.k, self.seed)),
+                Arc::new(Matrix::rand_uniform(self.k, self.n, self.seed_b())),
+                self.injection_plan(),
+            ),
+        }
+    }
+
     /// Materialize the server-side [`GemmRequest`]: seed-derived operands
-    /// plus every option the frame carried.
+    /// plus every option the frame carried. Operands are stamped with
+    /// their wire-level `Seed` content addresses, so the engine's packed-
+    /// operand cache recognizes repeat seeds with zero hashing of data.
     pub fn into_request(self) -> GemmRequest {
-        let a = Matrix::rand_uniform(self.m, self.k, self.seed);
-        let b = Matrix::rand_uniform(self.k, self.n, self.seed + 1);
+        self.into_request_with(None)
+    }
+
+    /// [`GemmSpec::into_request`] through an optional gateway
+    /// [`SeedCache`] (a hit reuses the shared operand `Arc`s).
+    pub fn into_request_with(self, cache: Option<&SeedCache>) -> GemmRequest {
+        let (a, b, plan) = self.derive(cache);
+        let key_a = OperandId::Seed { rows: self.m, cols: self.k, seed: self.seed };
+        let key_b = OperandId::Seed { rows: self.k, cols: self.n, seed: self.seed_b() };
         let thresholds = match (self.threshold_rel, self.threshold_abs) {
             (None, None) => None,
             (rel, abs) => {
@@ -222,8 +263,108 @@ impl GemmSpec {
             priority: self.priority,
             deadline: self.deadline_ms.map(std::time::Duration::from_millis),
         };
-        let plan = self.injection_plan();
-        GemmRequest::new(a, b).policy(self.policy).inject(plan).options(opts)
+        GemmRequest::new(a, b)
+            .policy(self.policy)
+            .inject(plan)
+            .options(opts)
+            .operand_ids(Some(key_a), Some(key_b))
+    }
+}
+
+/// Gateway-held LRU of seed-materialized operands plus memoized
+/// seed-expanded injection plans — the wire-side half of the
+/// cross-request cache. Keyed purely by wire content (`(rows, cols,
+/// seed)` for operands, the full `(m, n, k, seed, inject)` tuple for
+/// plans), so a repeated frame costs refcount bumps instead of
+/// `rand_uniform` + `SeuModel` work. Sized off the engine's
+/// `pack_cache_mb` budget: 0 disables it along with the engine half.
+pub struct SeedCache {
+    inner: Mutex<SeedCacheInner>,
+    budget: usize,
+}
+
+struct SeedCacheInner {
+    mats: HashMap<(usize, usize, u64), (Arc<Matrix>, u64)>,
+    bytes: usize,
+    tick: u64,
+    /// Seed-expanded plans; tiny (≤ MAX_INJECTIONS coords each), bounded
+    /// by entry count and cleared wholesale at capacity.
+    plans: HashMap<(usize, usize, usize, u64, usize), InjectionPlan>,
+}
+
+/// Entry bound for the memoized plan map.
+const MAX_CACHED_PLANS: usize = 4096;
+
+impl SeedCache {
+    /// `None` when `budget_bytes` is 0 — callers then derive fresh.
+    pub fn with_budget(budget_bytes: usize) -> Option<SeedCache> {
+        (budget_bytes > 0).then(|| SeedCache {
+            inner: Mutex::new(SeedCacheInner {
+                mats: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+                plans: HashMap::new(),
+            }),
+            budget: budget_bytes,
+        })
+    }
+
+    /// `rand_uniform(rows, cols, seed)`, shared: materialized at most
+    /// once while the entry stays resident. Oversized operands (bigger
+    /// than the whole budget) are returned uncached.
+    pub fn operand(&self, rows: usize, cols: usize, seed: u64) -> Arc<Matrix> {
+        let key = (rows, cols, seed);
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some((m, stamp)) = inner.mats.get_mut(&key) {
+            *stamp = tick;
+            return Arc::clone(m);
+        }
+        // Materialized under the lock: concurrent connections asking for
+        // the same seed must not race into a double fill, and holding it
+        // briefly beats handing every caller its own copy.
+        let mat = Arc::new(Matrix::rand_uniform(rows, cols, seed));
+        let cost = rows * cols * std::mem::size_of::<f32>();
+        if cost > self.budget {
+            return mat;
+        }
+        while inner.bytes + cost > self.budget {
+            let Some((&victim, _)) = inner.mats.iter().min_by_key(|(_, (_, t))| *t) else {
+                break;
+            };
+            if let Some((m, _)) = inner.mats.remove(&victim) {
+                inner.bytes -= m.rows() * m.cols() * std::mem::size_of::<f32>();
+            }
+        }
+        inner.bytes += cost;
+        inner.mats.insert(key, (Arc::clone(&mat), tick));
+        mat
+    }
+
+    /// The spec's injection plan, memoized when it is seed-expanded
+    /// (explicit lists and empty plans are trivial and bypass the map).
+    pub fn plan(&self, spec: &GemmSpec) -> InjectionPlan {
+        if !spec.injections.is_empty() || spec.inject == 0 {
+            return spec.injection_plan();
+        }
+        let key = (spec.m, spec.n, spec.k, spec.seed, spec.inject);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(plan) = inner.plans.get(&key) {
+            return plan.clone();
+        }
+        if inner.plans.len() >= MAX_CACHED_PLANS {
+            inner.plans.clear();
+        }
+        let plan = spec.injection_plan();
+        inner.plans.insert(key, plan.clone());
+        plan
+    }
+
+    /// (resident operand entries, resident operand bytes).
+    pub fn usage(&self) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        (inner.mats.len(), inner.bytes)
     }
 }
 
@@ -659,6 +800,53 @@ mod tests {
             Some(std::time::Duration::from_millis(100))
         );
         assert_eq!(req.injections().len(), 2);
+    }
+
+    #[test]
+    fn seed_derivation_is_shared_and_reproducible_through_the_cache() {
+        let spec = GemmSpec { seed: 11, inject: 3, ..GemmSpec::new(48, 40, 32) };
+        let cache = SeedCache::with_budget(16 << 20).unwrap();
+        let (a0, b0, p0) = spec.derive(None);
+        let (a1, b1, p1) = spec.derive(Some(&cache));
+        let (a2, b2, p2) = spec.derive(Some(&cache));
+        // one derivation path: cached and fresh agree exactly, so the
+        // (seed, inject) tuple pins both operands and coordinates
+        assert_eq!(a0.data(), a1.data());
+        assert_eq!(b0.data(), b1.data());
+        assert_eq!(p0.injections, p1.injections);
+        assert_eq!(p0.injections.len(), 3);
+        // a hit returns the same allocations — rand_uniform and the
+        // SeuModel expansion both skipped
+        assert!(Arc::ptr_eq(&a1, &a2));
+        assert!(Arc::ptr_eq(&b1, &b2));
+        assert_eq!(p1.injections, p2.injections);
+        let (entries, bytes) = cache.usage();
+        assert_eq!(entries, 2);
+        assert_eq!(bytes, (48 * 32 + 32 * 40) * 4);
+    }
+
+    #[test]
+    fn seed_cache_evicts_lru_under_its_byte_budget() {
+        let mat_bytes = 8 * 8 * 4;
+        let cache = SeedCache::with_budget(2 * mat_bytes).unwrap();
+        let a = cache.operand(8, 8, 1);
+        let _b = cache.operand(8, 8, 2);
+        let _ = cache.operand(8, 8, 1); // touch: seed 2 becomes LRU
+        let _c = cache.operand(8, 8, 3); // over budget: evicts seed 2
+        let (entries, bytes) = cache.usage();
+        assert_eq!(entries, 2);
+        assert_eq!(bytes, 2 * mat_bytes);
+        let a2 = cache.operand(8, 8, 1);
+        assert!(Arc::ptr_eq(&a, &a2), "recently-touched seed stayed resident");
+        assert!(SeedCache::with_budget(0).is_none(), "budget 0 disables");
+    }
+
+    #[test]
+    fn wire_requests_carry_seed_operand_ids() {
+        let spec = GemmSpec { seed: 7, ..GemmSpec::new(16, 8, 12) };
+        let req = spec.into_request();
+        assert_eq!(req.key_a, Some(OperandId::Seed { rows: 16, cols: 12, seed: 7 }));
+        assert_eq!(req.key_b, Some(OperandId::Seed { rows: 12, cols: 8, seed: 8 }));
     }
 
     #[test]

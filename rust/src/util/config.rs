@@ -218,6 +218,9 @@ impl Config {
             }
             cfg.pools = n;
         }
+        if let Some(mb) = self.usize("engine.pack_cache_mb")? {
+            cfg.pack_cache_mb = Some(mb);
+        }
         Ok(cfg)
     }
 
@@ -307,6 +310,7 @@ precompile = "gemm_medium, ftgemm_tb_medium"
 workers = 4
 pools = 2
 backend = "blocked"
+pack_cache_mb = 128                  # packed-operand cache per pool; 0 disables
 
 [coordinator]
 ft_level = "warp"
@@ -354,6 +358,7 @@ max_frame_bytes = 65536
         assert_eq!(eng.workers, 4);
         assert_eq!(eng.pools, 2);
         assert_eq!(eng.backend, "blocked");
+        assert_eq!(eng.pack_cache_mb, Some(128));
         let b = c.batcher().unwrap();
         assert_eq!(b.max_batch, 32);
         assert_eq!(b.batch_window, std::time::Duration::from_micros(500));
@@ -445,6 +450,14 @@ max_frame_bytes = 65536
         assert!(c.engine().is_err());
         let c = Config::parse("[engine]\npools = 4").unwrap();
         assert_eq!(c.engine().unwrap().pools, 4);
+        // 0 is a *valid* pack-cache budget: it means "disabled", distinct
+        // from the unset default
+        let c = Config::parse("[engine]\npack_cache_mb = 0").unwrap();
+        assert_eq!(c.engine().unwrap().pack_cache_mb, Some(0));
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.engine().unwrap().pack_cache_mb, None, "unset keeps the default budget");
+        let c = Config::parse("[engine]\npack_cache_mb = \"big\"").unwrap();
+        assert!(c.engine().is_err());
         // backend names are carried verbatim (resolution happens at
         // Engine::start, against whichever registry serves the config)
         let c = Config::parse("[engine]\nbackend = \"custom_embedder\"").unwrap();

@@ -783,6 +783,120 @@ fn prop_blocked_coordinator_matches_reference_on_irregular_shapes() {
 }
 
 // ---------------------------------------------------------------------
+// Cross-request packed-operand cache
+// ---------------------------------------------------------------------
+
+/// Randomized interleaving of pack-cache hits, misses, and evictions on a
+/// 2-pool blocked engine with a deliberately tiny (1 MiB) cache budget:
+/// every result must be element-wise *identical* to a cache-disabled
+/// blocked coordinator — cached panels and checksum sums are bitwise
+/// equal to freshly packed ones, so the downstream compute is too — and
+/// within tolerance of the host matmul, clean and injected alike, with
+/// fault accounting exactly equal. The run must actually exercise the
+/// cache: hits, misses, and evictions all observed, and every pool's
+/// resident bytes within the configured budget.
+#[test]
+fn prop_pack_cache_interleaving_preserves_blocked_results() {
+    use std::sync::Arc;
+
+    use ftgemm::coordinator::{Coordinator, CoordinatorConfig, FtPolicy, GemmRequest};
+    use ftgemm::runtime::{Engine, EngineConfig};
+
+    let cached_engine = Engine::start(EngineConfig {
+        backend: "blocked".into(),
+        workers: 1,
+        pools: 2,
+        pack_cache_mb: Some(1), // tiny: distinct operands must evict
+        ..Default::default()
+    })
+    .unwrap();
+    let cached = Coordinator::new(cached_engine.clone(), CoordinatorConfig::default());
+    let uncached = Coordinator::new(
+        Engine::start(EngineConfig {
+            backend: "blocked".into(),
+            workers: 1,
+            pools: 2,
+            pack_cache_mb: Some(0),
+            ..Default::default()
+        })
+        .unwrap(),
+        CoordinatorConfig::default(),
+    );
+
+    let check_round = |round: usize, n: usize, a: &Arc<Matrix>, b: &Arc<Matrix>| {
+        let inject = round % 2 == 0;
+        let inj = if inject {
+            InjectionPlan::single(n / 2, n / 2, 0, 4096.0)
+        } else {
+            InjectionPlan::none()
+        };
+        let req = || {
+            GemmRequest::new(Arc::clone(a), Arc::clone(b))
+                .policy(FtPolicy::Online)
+                .inject(inj.clone())
+        };
+        let got = cached.submit(req()).unwrap().wait().unwrap().result;
+        let want = uncached.submit(req()).unwrap().wait().unwrap().result;
+        // same backend and ISA, bitwise-identical packed panels and
+        // checksum sums: the cached result is exactly the fresh one
+        assert_eq!(got.c.max_abs_diff(&want.c), 0.0, "round {round} (n={n})");
+        assert_eq!(
+            (got.errors_detected, got.errors_corrected),
+            (want.errors_detected, want.errors_corrected),
+            "round {round} (n={n}): fault accounting diverged"
+        );
+        if inject {
+            assert!(got.errors_corrected >= 1, "round {round} (n={n}): uncorrected");
+        }
+        let host = a.matmul(b);
+        let tol = 5e-3 * (n as f32) / 64.0 + 1e-3 + if inject { 0.3 } else { 0.0 };
+        let diff = got.c.max_abs_diff(&host);
+        assert!(diff < tol, "round {round} (n={n}): host diff {diff}");
+    };
+
+    // a reusable operand pool: resubmitting the same Arcs is a hit, a
+    // fresh pair is a miss, and the byte budget forces evictions
+    let mut rng = Pcg32::seeded(0xCAC4E);
+    let sizes = [64usize, 128, 256];
+    let mut ops: Vec<(usize, Arc<Matrix>, Arc<Matrix>)> = Vec::new();
+    for round in 0..20usize {
+        let (n, a, b) = if !ops.is_empty() && rng.below(2) == 0 {
+            let pick = &ops[rng.usize_below(ops.len())];
+            (pick.0, Arc::clone(&pick.1), Arc::clone(&pick.2))
+        } else {
+            let n = sizes[rng.usize_below(sizes.len())];
+            let a = Arc::new(Matrix::rand_uniform(n, n, 0xCA00 + 2 * round as u64));
+            let b = Arc::new(Matrix::rand_uniform(n, n, 0xCA01 + 2 * round as u64));
+            ops.push((n, Arc::clone(&a), Arc::clone(&b)));
+            (n, a, b)
+        };
+        check_round(round, n, &a, &b);
+    }
+    // deterministic tail: enough distinct 256^3 pairs (~512 KiB of packed
+    // panels each) to overflow the 1 MiB per-pool budget regardless of
+    // how the random mix above reused, then a guaranteed-resident repeat
+    let mut last = None;
+    for extra in 0..4u64 {
+        let a = Arc::new(Matrix::rand_uniform(256, 256, 0xEE00 + 2 * extra));
+        let b = Arc::new(Matrix::rand_uniform(256, 256, 0xEE01 + 2 * extra));
+        check_round(100 + extra as usize, 256, &a, &b);
+        last = Some((a, b));
+    }
+    let (a, b) = last.unwrap();
+    check_round(200, 256, &a, &b); // just inserted: this repeat must hit
+
+    let stats = cached_engine.pack_cache_stats().expect("cache is enabled");
+    assert!(stats.hits > 0, "the interleaving never hit: {stats:?}");
+    assert!(stats.misses > 0, "the interleaving never missed: {stats:?}");
+    assert!(stats.evictions > 0, "the budget never forced an eviction: {stats:?}");
+    let budget = cached_engine.pack_cache_budget_bytes();
+    for (p, s) in cached_engine.pack_cache_stats_per_pool().into_iter().enumerate() {
+        let s = s.expect("per-pool cache is enabled");
+        assert!(s.bytes <= budget, "pool {p}: resident {} bytes over budget {budget}", s.bytes);
+    }
+}
+
+// ---------------------------------------------------------------------
 // Stats sanity used by bench reporting
 // ---------------------------------------------------------------------
 
