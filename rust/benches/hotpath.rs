@@ -221,6 +221,7 @@ fn bench_worker_pipeline() {
     println!("\n== pipeline worker/backend sweep ==\n{}", hq.summary());
 
     let repeat_cache = bench_repeat_cache(&a, &b, &mut hq);
+    let largek = bench_largek(&mut hq);
 
     let mut ideal = Json::Arr(Vec::new());
     let mut modeled = Json::Arr(Vec::new());
@@ -241,7 +242,7 @@ fn bench_worker_pipeline() {
     }
 
     let mut root = Json::obj();
-    root.set("schema", Json::Str("ftgemm-bench-pipeline/5".into()));
+    root.set("schema", Json::Str("ftgemm-bench-pipeline/6".into()));
     root.set(
         "shape",
         Json::Arr(vec![
@@ -260,6 +261,7 @@ fn bench_worker_pipeline() {
     root.set("live", live);
     root.set("ft_overhead", ft_overhead);
     root.set("repeat_cache", repeat_cache);
+    root.set("largek", largek);
     let gate_of = |name: &str| {
         gate_means
             .iter()
@@ -309,7 +311,10 @@ fn bench_worker_pipeline() {
              multi-pool throughput ratio loadgen derives from it (null until a two-shard-count \
              series exists); `repeat_cache` = the same Arc-shared operands resubmitted with the \
              packed-operand cache on vs off (first/cold vs steady-state wall time, and the \
-             steady-state speedup `bench-check --min-cache-speedup` gates on); regenerate with \
+             steady-state speedup `bench-check --min-cache-speedup` gates on); `largek` = \
+             deep-reduction shapes run directly on the blocked backend with the class-resolved \
+             KC vs pinned KC=k (the per-shape full/blocked ratio is what `bench-check \
+             --min-largek-speedup` gates on); regenerate with \
              `cargo bench --bench hotpath` then the loadgen smoke"
                 .into(),
         ),
@@ -318,6 +323,91 @@ fn bench_worker_pipeline() {
         Ok(()) => println!("wrote BENCH_pipeline.json"),
         Err(e) => eprintln!("could not write BENCH_pipeline.json: {e}"),
     }
+}
+
+/// The large-k series behind `bench-check --min-largek-speedup`: ad-hoc
+/// deep-reduction GEMMs executed directly on the blocked backend — the
+/// coordinator router would split `k` at the bucket depth, which is
+/// precisely the cache-residency effect this measures. Each shape runs
+/// once with the class-resolved KC (the blocked k-panel nest) and once
+/// pinned to KC = k (the pre-blocking full-depth fold, whose A/B panels
+/// overflow L1/L2 at these depths); the per-shape ratio `full / blocked`
+/// must clear the gate on every shape, so `min_speedup` is what the
+/// check enforces. Results are bitwise identical between the two
+/// configurations (the KC-invariance contract), so this is purely a
+/// residency comparison.
+fn bench_largek(hq: &mut Harness) -> Json {
+    use ftgemm::runtime::engine::Tensor;
+    use ftgemm::runtime::{Artifact, ArtifactKind, Backend, BlockedBackend, TensorSpec};
+    use std::path::PathBuf;
+
+    let spec = |shape: &[usize], role: &str| TensorSpec {
+        shape: shape.to_vec(),
+        dtype: "float32".into(),
+        role: role.into(),
+    };
+    let mut entries = Json::Arr(Vec::new());
+    let mut min_speedup = f64::INFINITY;
+    let mut isa_name = "unknown";
+    for &(m, n, k) in &[(256usize, 256usize, 8192usize), (64, 64, 8192)] {
+        let art = Artifact {
+            name: format!("bench_largek_{m}x{n}x{k}"),
+            file: PathBuf::from("<bench>"),
+            kind: ArtifactKind::Gemm,
+            bucket: "bench".into(),
+            m,
+            n,
+            k,
+            ks: 0,
+            inputs: vec![spec(&[m, k], ""), spec(&[k, n], "")],
+            outputs: vec![spec(&[m, n], "c")],
+            params: None,
+            ft_level: None,
+            max_inj: 0,
+            verify_every: 0,
+            sub_m: 0,
+            sub_n: 0,
+        };
+        let a = Matrix::rand_uniform(m, k, 40);
+        let b = Matrix::rand_uniform(k, n, 41);
+        let inputs = || {
+            vec![
+                Tensor::new(vec![m, k], a.data().to_vec()),
+                Tensor::new(vec![k, n], b.data().to_vec()),
+            ]
+        };
+        let mut blocked = BlockedBackend::with_threads(4);
+        let mut full = BlockedBackend::with_threads(4).with_kc(Some(k));
+        isa_name = blocked.kernel_isa().name();
+        black_box(blocked.execute(&art, inputs()).expect("largek warmup (blocked)"));
+        black_box(full.execute(&art, inputs()).expect("largek warmup (full)"));
+        let rb = hq.bench(&format!("largek/{m}x{n}x{k}/kc_blocked"), || {
+            black_box(blocked.execute(&art, inputs()).unwrap());
+        });
+        let rf = hq.bench(&format!("largek/{m}x{n}x{k}/kc_full"), || {
+            black_box(full.execute(&art, inputs()).unwrap());
+        });
+        let (blocked_s, full_s) = (rb.mean.as_secs_f64(), rf.mean.as_secs_f64());
+        let speedup = full_s / blocked_s;
+        min_speedup = min_speedup.min(speedup);
+        let mut e = Json::obj();
+        e.set(
+            "shape",
+            Json::Arr(vec![Json::Num(m as f64), Json::Num(n as f64), Json::Num(k as f64)]),
+        );
+        e.set("blocked_mean_s", Json::Num(blocked_s));
+        e.set("kc_full_mean_s", Json::Num(full_s));
+        e.set("speedup", Json::Num(speedup));
+        entries.push(e);
+        println!(
+            "largek {m}x{n}x{k}: KC-blocked {blocked_s:.4}s vs KC=k {full_s:.4}s ({speedup:.3}x)"
+        );
+    }
+    let mut out = Json::obj();
+    out.set("kernel_isa", Json::Str(isa_name.into()));
+    out.set("entries", entries);
+    out.set("min_speedup", Json::Num(min_speedup));
+    out
 }
 
 /// The repeat-operand series behind `bench-check --min-cache-speedup`:

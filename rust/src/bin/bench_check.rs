@@ -2,12 +2,13 @@
 //!
 //!     cargo run --release --bin bench-check -- [FILE] \
 //!         [--min-speedup X] [--min-simd-speedup Y] [--require-serving] \
-//!         [--require-scaling] [--min-pool-speedup Z] [--min-cache-speedup C]
+//!         [--require-scaling] [--min-pool-speedup Z] [--min-cache-speedup C] \
+//!         [--min-largek-speedup L]
 //!
 //! CI runs this right after `cargo bench --bench hotpath`, replacing the
 //! old silent upload-whatever-was-written flow with an enforced gate:
 //!
-//! * the file must parse and match schema `ftgemm-bench-pipeline/5` —
+//! * the file must parse and match schema `ftgemm-bench-pipeline/6` —
 //!   1024^3 shape, a non-empty `live` series with positive wall times,
 //!   all three backends measured at the workers=1 gate point, a
 //!   per-kernel-ISA `ft_overhead` (clean vs fused-FT) series, a
@@ -35,7 +36,13 @@
 //!   steady-state must be at least `--min-cache-speedup` (default 1.02)
 //!   times the cache-on steady-state, and the cache-on run must show
 //!   actual hits — a repeat-operand request path that re-packs on every
-//!   iteration fails the gate.
+//!   iteration fails the gate;
+//! * when the `largek` block is measured (it is `null` in the committed
+//!   placeholder — accepted with a notice), every deep-reduction shape's
+//!   KC-blocked run must be at least `--min-largek-speedup` (default
+//!   1.0) times faster than the same backend pinned to KC=k — the
+//!   cache-blocking win on panels that overflow L1/L2 is enforced, not
+//!   just measured.
 //!
 //! Failures are classified, not lumped: a **committed placeholder**
 //! (null `live`/`gate`, benches never ran) and a **stale schema** are
@@ -48,7 +55,7 @@ use std::process::ExitCode;
 use ftgemm::util::cli::Command;
 use ftgemm::util::json::Json;
 
-const SCHEMA: &str = "ftgemm-bench-pipeline/5";
+const SCHEMA: &str = "ftgemm-bench-pipeline/6";
 
 /// A sweep point must reach this fraction of the previous point's rps to
 /// count as "still climbing" — absorbs run-to-run noise on the way to the
@@ -71,6 +78,18 @@ struct Report {
     /// The validated repeat_cache block; `None` when still the null
     /// placeholder (the repeat-operand bench has not run).
     cache: Option<CacheGate>,
+    /// The validated largek block; `None` when still the null
+    /// placeholder (the deep-reduction bench has not run).
+    largek: Option<LargekGate>,
+}
+
+/// The validated `largek` summary (class-resolved KC vs pinned KC=k on
+/// deep-reduction shapes).
+struct LargekGate {
+    kernel_isa: String,
+    /// (m, n, k, blocked_mean_s, kc_full_mean_s, speedup) per shape.
+    entries: Vec<(usize, usize, usize, f64, f64, f64)>,
+    min_speedup: f64,
 }
 
 /// The validated `repeat_cache` summary (packed-operand cache on vs off
@@ -98,6 +117,7 @@ struct Gates {
     require_scaling: bool,
     min_pool_speedup: f64,
     min_cache_speedup: f64,
+    min_largek_speedup: f64,
 }
 
 fn main() -> ExitCode {
@@ -120,6 +140,11 @@ fn main() -> ExitCode {
             "min-cache-speedup",
             "required cache-off/cache-on steady-state ratio at the repeat-operand point",
             Some("1.02"),
+        )
+        .opt(
+            "min-largek-speedup",
+            "required KC-blocked vs KC=k speedup on every deep-reduction shape",
+            Some("1.0"),
         );
     let args = match cmd.parse(&argv) {
         Ok(args) => args,
@@ -135,6 +160,7 @@ fn main() -> ExitCode {
     let require_scaling = args.flag("require-scaling");
     let min_pool_speedup = args.f64_or("min-pool-speedup", 1.6);
     let min_cache_speedup = args.f64_or("min-cache-speedup", 1.02);
+    let min_largek_speedup = args.f64_or("min-largek-speedup", 1.0);
     let gates = Gates {
         min_speedup,
         min_simd,
@@ -142,6 +168,7 @@ fn main() -> ExitCode {
         require_scaling,
         min_pool_speedup,
         min_cache_speedup,
+        min_largek_speedup,
     };
     match check(path, &gates) {
         Ok(report) => {
@@ -193,6 +220,21 @@ fn main() -> ExitCode {
                      {:.4}s on, {} hits; gate {:.2}x)",
                     c.speedup, c.off_steady_s, c.on_steady_s, c.hits, gates.min_cache_speedup
                 ),
+            }
+            match &report.largek {
+                None => println!(
+                    "  largek gate: largek is the null placeholder — the deep-reduction \
+                     bench has not run against this file"
+                ),
+                Some(l) => {
+                    for (m, n, k, bs, fs, s) in &l.entries {
+                        println!(
+                            "  largek gate: {m}x{n}x{k} [{}] KC-blocked {bs:.4}s vs KC=k \
+                             {fs:.4}s ({s:.3}x; gate {:.2}x)",
+                            l.kernel_isa, gates.min_largek_speedup
+                        );
+                    }
+                }
             }
             ExitCode::SUCCESS
         }
@@ -309,6 +351,7 @@ fn check(path: &str, gates: &Gates) -> anyhow::Result<Report> {
     let serving = check_serving(&root, gates.require_serving)?;
     let scaling = check_scaling(&root, gates.require_scaling, gates.min_pool_speedup)?;
     let cache = check_repeat_cache(&root, gates.min_cache_speedup)?;
+    let largek = check_largek(&root, gates.min_largek_speedup)?;
 
     let blocked_speedup = reference / blocked;
     if blocked_speedup < gates.min_speedup {
@@ -335,7 +378,94 @@ fn check(path: &str, gates: &Gates) -> anyhow::Result<Report> {
         }
         Some(s)
     };
-    Ok(Report { blocked_speedup, simd_speedup, kernel_isa, overheads, serving, scaling, cache })
+    Ok(Report {
+        blocked_speedup,
+        simd_speedup,
+        kernel_isa,
+        overheads,
+        serving,
+        scaling,
+        cache,
+        largek,
+    })
+}
+
+/// Validate the `largek` block (schema /6): deep-reduction shapes run on
+/// the blocked backend with the class-resolved KC vs pinned KC=k. `null`
+/// means the bench has not run (the committed-placeholder state) —
+/// accepted with a notice; measured data must clear the
+/// `--min-largek-speedup` ratio on EVERY shape (one overflowing shape
+/// that regressed would otherwise hide behind a fast one).
+fn check_largek(root: &Json, min_largek_speedup: f64) -> anyhow::Result<Option<LargekGate>> {
+    use anyhow::{anyhow, bail};
+
+    let block = match root.path("largek") {
+        None => bail!("missing largek field (schema /6 requires it; null = not measured)"),
+        Some(Json::Null) => return Ok(None),
+        Some(v) => v,
+    };
+    let kernel_isa = block
+        .path("kernel_isa")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("largek: missing kernel_isa"))?
+        .to_string();
+    let entries = block
+        .path("entries")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("largek: entries is not an array"))?;
+    if entries.is_empty() {
+        bail!("largek: entries[] is empty — the deep-reduction bench wrote no shapes");
+    }
+    let mut out = Vec::new();
+    let mut min_seen = f64::INFINITY;
+    for (i, entry) in entries.iter().enumerate() {
+        let shape: Vec<usize> = entry
+            .path("shape")
+            .and_then(Json::as_arr)
+            .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        let [m, n, k] = shape[..] else {
+            bail!("largek.entries[{i}]: shape is not an [m, n, k] triple");
+        };
+        let num = |key: &str| {
+            entry
+                .path(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("largek.entries[{i}]: missing {key}"))
+        };
+        let blocked_s = num("blocked_mean_s")?;
+        let full_s = num("kc_full_mean_s")?;
+        let speedup = num("speedup")?;
+        for (name, v) in [("blocked_mean_s", blocked_s), ("kc_full_mean_s", full_s)] {
+            if !(v.is_finite() && v > 0.0) {
+                bail!("largek.entries[{i}]: {name} {v} is not a positive finite wall time");
+            }
+        }
+        if !speedup.is_finite() || (speedup - full_s / blocked_s).abs() > 1e-6 {
+            bail!(
+                "largek.entries[{i}]: speedup {speedup} inconsistent with full/blocked means \
+                 ({full_s:.4}s / {blocked_s:.4}s)"
+            );
+        }
+        if speedup < min_largek_speedup {
+            bail!(
+                "largek gate FAILED at point {m}x{n}x{k} (blocked backend, \
+                 [{kernel_isa}]): KC-blocked is only {speedup:.3}x the KC=k configuration \
+                 (KC=k {full_s:.4}s, blocked {blocked_s:.4}s; need >= {min_largek_speedup:.2}x)"
+            );
+        }
+        min_seen = min_seen.min(speedup);
+        out.push((m, n, k, blocked_s, full_s, speedup));
+    }
+    // The writer's own min_speedup must agree with the entries it wrote.
+    if let Some(written) = block.path("min_speedup").and_then(Json::as_f64) {
+        if !written.is_finite() || (written - min_seen).abs() > 1e-6 {
+            bail!("largek: min_speedup {written} inconsistent with entries (min {min_seen:.6})");
+        }
+    } else {
+        bail!("largek: missing min_speedup");
+    }
+    Ok(Some(LargekGate { kernel_isa, entries: out, min_speedup: min_seen }))
 }
 
 /// Validate the `repeat_cache` block (schema /5): the same Arc-shared

@@ -165,6 +165,37 @@ fn cmd_info(rest: &[String]) -> anyhow::Result<()> {
             info.name, info.kernel_isa, info.fused_ft, info.description
         );
     }
+    // Resolved host blocking: what the blocked backend would actually use
+    // for each shape-class bucket on each kernel ISA this host supports —
+    // including any FTGEMM_FORCE_KC/FTGEMM_FORCE_NC override in effect,
+    // since `host_tiles_for` reads them fresh per call.
+    println!("host blocking (macro MCxKCxNC, micro MRxNR per shape-class bucket):");
+    for (var, note) in [
+        ("FTGEMM_FORCE_KC", "overrides every class KC cap below (clamped to k)"),
+        ("FTGEMM_FORCE_NC", "overrides every class NC below (power of two >= 16)"),
+    ] {
+        if let Ok(v) = std::env::var(var) {
+            println!("  {var}={v} ({note})");
+        }
+    }
+    for b in ftgemm::codegen::select::BUCKETS {
+        for isa in ftgemm::runtime::KernelIsa::supported() {
+            let t = ftgemm::codegen::select::host_tiles_for(isa, b.m, b.n, b.k);
+            println!(
+                "  {:6} {:>4}x{:<4} k={:<4} [{:6}] MC={:<3} KC={:<3} NC={:<3} micro {}x{}",
+                b.name(),
+                b.m,
+                b.n,
+                b.k,
+                isa.name(),
+                t.mc,
+                t.kc,
+                t.nc,
+                t.mr,
+                t.nr
+            );
+        }
+    }
     // one CoordinatorStats snapshot — the same struct the gateway's
     // `metrics` verb reports
     let engine = Engine::start(EngineConfig::default())?;

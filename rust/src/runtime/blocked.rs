@@ -21,9 +21,16 @@
 //! [`codegen::select::host_tiles_for`](crate::codegen::select::host_tiles_for)
 //! — the same shape-class heuristic that picks kernel templates picks
 //! the host blocking, with the register micro-tile sized for the
-//! micro-kernel ISA the instance dispatches to. The ISA
-//! ([`KernelIsa`]) is detected **once at construction** — AVX2+FMA /
-//! AVX-512F (behind the `avx512` cargo feature) on x86-64, NEON on
+//! micro-kernel ISA the instance dispatches to. The macro-tile sweep is
+//! a true GotoBLAS-style three-loop nest: within each MC x NC macro
+//! tile, `k` is swept in ascending `KC`-sized reduction panels, the
+//! micro-kernels loading/storing their accumulator tiles from the macro
+//! tile between panels, so the per-panel working set (MC x KC A block +
+//! KC x NC B panel + the C tile) stays cache-resident at any `k` (see
+//! DESIGN.md "Blocking hierarchy"; `FTGEMM_FORCE_KC` /
+//! [`BlockedBackend::with_kc`] override the class-resolved depth). The
+//! ISA ([`KernelIsa`]) is detected **once at construction** — AVX2+FMA
+//! / AVX-512F (behind the `avx512` cargo feature) on x86-64, NEON on
 //! aarch64, scalar otherwise or under `FTGEMM_FORCE_SCALAR` — and the
 //! inner loops dispatch on the stored value, never per call. Threading
 //! rides the existing [`ThreadPool`]; each engine worker owns one
@@ -33,21 +40,31 @@
 //!
 //! Numerical contract (see DESIGN.md "Kernel dispatch" for the full
 //! statement): every output element is accumulated as a single
-//! ascending-`k` fold (register-resident across the whole reduction —
-//! `KC` is the full `k` at our bucket sizes), the **same fold order as
-//! the reference backend's host matmul**; the SIMD kernels keep that
-//! order and differ only in FMA's fused rounding per term. Carried
-//! checksums are **bit-identical** to the reference backend's on every
-//! ISA: B-side operand sums use the crate-wide canonical lane-split
-//! fold ([`simd::sum8`]) whether computed scalar, vector-resident in
-//! the packing loops, or on demand; A-side sums fold in ascending `i`
+//! ascending-`k` fold — the **same fold order as the reference
+//! backend's host matmul** — regardless of `KC`: between panels the
+//! accumulator tile round-trips through exact f32 stores/reloads, so
+//! splitting the reduction changes nothing bitwise (C is
+//! bit-identical across `KC` choices on a given ISA; the parity suite
+//! pins this). The SIMD kernels keep that order and differ from the
+//! reference only in FMA's fused rounding per term. Carried checksums
+//! are **bit-identical** to the reference backend's on every ISA and
+//! every `KC`: B-side operand sums use the crate-wide canonical
+//! lane-split fold ([`simd::sum8`]) whether computed scalar,
+//! vector-resident in the packing loops, or on demand — reduction
+//! panels partition the per-`kk` entries, so per-panel encode passes
+//! compose into the identical sums; A-side sums fold in ascending `i`
 //! on every path. The verify/correct sweep shares the reference
-//! implementation's checksum algebra verbatim. The parity property
-//! suite (`tests/properties.rs`) holds every kernel variant
-//! element-wise close to the reference backend — with exact
-//! errcount-grid equality — clean and injected, at all three FT levels.
+//! implementation's checksum algebra verbatim, and on the aligned
+//! fused path it is **pipelined per macro tile**: each pool job runs
+//! its own injected-interval sweeps on its just-computed tile
+//! (protection domains never span macro tiles there), overlapping
+//! verification with the remaining compute — the paper's
+//! fusion-overlap strategy. The parity property suite
+//! (`tests/properties.rs`) holds every kernel variant element-wise
+//! close to the reference backend — with exact errcount-grid equality
+//! — clean and injected, at all three FT levels and across `KC`.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -85,6 +102,11 @@ pub struct BlockedBackend {
     /// verify/correct sweeps read them and write only the owned C
     /// tiles, so a shared panel stays bitwise identical forever.
     cache: Option<Arc<PackCache>>,
+    /// Instance-level KC pin ([`BlockedBackend::with_kc`]); wins over
+    /// the `FTGEMM_FORCE_KC` env and the shape-class cap. Tests use
+    /// this instead of the env var so the parallel test harness stays
+    /// race-free.
+    force_kc: Option<usize>,
 }
 
 impl BlockedBackend {
@@ -137,6 +159,7 @@ impl BlockedBackend {
             isa,
             name: "blocked",
             cache: None,
+            force_kc: None,
         }
     }
 
@@ -155,6 +178,16 @@ impl BlockedBackend {
         self
     }
 
+    /// Pin the KC reduction-panel depth for this instance (clamped to
+    /// the actual `k` per request; `Some(0)` and `None` keep the
+    /// class-/env-resolved depth). Purely a residency knob: C, carried
+    /// checksums and errcount grids are bitwise independent of it —
+    /// which is exactly what the KC parity tests use this to prove.
+    pub fn with_kc(mut self, kc: Option<usize>) -> Self {
+        self.force_kc = kc.filter(|&v| v > 0);
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -164,9 +197,14 @@ impl BlockedBackend {
         self.isa
     }
 
-    /// ISA-aware tile parameters for one problem shape.
+    /// ISA-aware tile parameters for one problem shape, with the
+    /// instance KC pin applied.
     fn tiles(&self, m: usize, n: usize, k: usize) -> HostTiles {
-        host_tiles_for(self.isa, m, n, k)
+        let mut t = host_tiles_for(self.isa, m, n, k);
+        if let Some(kc) = self.force_kc {
+            t.kc = kc.min(k).max(1);
+        }
+        t
     }
 
     /// The multithreaded blocked GEMM (plain path and Ding panel updates).
@@ -206,7 +244,7 @@ impl BlockedBackend {
         t: HostTiles,
         prot: usize,
     ) -> (Arc<Vec<Vec<f32>>>, Arc<Vec<Vec<f32>>>) {
-        let slot = self.cache_slot(key, PanelRole::A, t.mc, t.mr, prot);
+        let slot = self.cache_slot(key, PanelRole::A, t.mc, t.mr, t.kc, prot);
         if let Some((cache, pk)) = &slot {
             if let Some(hit) = cache.get(pk) {
                 return (hit.panels, hit.sums);
@@ -218,9 +256,9 @@ impl BlockedBackend {
         let mut pa = Vec::new();
         for (i0, mb) in row_blocks(m, t.mc) {
             pa.push(if prot == 0 {
-                pack_a(a, i0, mb, t.mr)
+                pack_a(a, i0, mb, t.mr, t.kc)
             } else {
-                pack_a_encode(a, i0, mb, t.mr, prot, &mut ea, self.isa)
+                pack_a_encode(a, i0, mb, t.mr, t.kc, prot, &mut ea, self.isa)
             });
         }
         self.cache_fill(slot, Arc::new(pa), Arc::new(ea))
@@ -235,7 +273,7 @@ impl BlockedBackend {
         t: HostTiles,
         prot: usize,
     ) -> (Arc<Vec<Vec<f32>>>, Arc<Vec<Vec<f32>>>) {
-        let slot = self.cache_slot(key, PanelRole::B, t.nc, t.nr, prot);
+        let slot = self.cache_slot(key, PanelRole::B, t.nc, t.nr, t.kc, prot);
         if let Some((cache, pk)) = &slot {
             if let Some(hit) = cache.get(pk) {
                 return (hit.panels, hit.sums);
@@ -247,9 +285,9 @@ impl BlockedBackend {
         let mut pb = Vec::new();
         for (j0, nb) in col_blocks(n, t.nc) {
             pb.push(if prot == 0 {
-                pack_b(b, j0, nb, t.nr)
+                pack_b(b, j0, nb, t.nr, t.kc)
             } else {
-                pack_b_encode(b, j0, nb, t.nr, prot, &mut be, self.isa)
+                pack_b_encode(b, j0, nb, t.nr, t.kc, prot, &mut be, self.isa)
             });
         }
         self.cache_fill(slot, Arc::new(pb), Arc::new(be))
@@ -264,11 +302,12 @@ impl BlockedBackend {
         role: PanelRole,
         block: usize,
         micro: usize,
+        kc: usize,
         prot: usize,
     ) -> Option<(Arc<PackCache>, PanelKey)> {
         let cache = self.cache.as_ref()?;
         let op = key?;
-        let pk = PanelKey { op, role, block, micro, isa: self.isa, prot };
+        let pk = PanelKey { op, role, block, micro, kc, isa: self.isa, prot };
         Some((Arc::clone(cache), pk))
     }
 
@@ -289,7 +328,9 @@ impl BlockedBackend {
         (panels, sums)
     }
 
-    /// Fan the macro-tile jobs over the pool and assemble C.
+    /// Fan the macro-tile jobs over the pool and assemble C. Tiles come
+    /// back padded to whole micro-panels (row stride `nb.div_ceil(nr) *
+    /// nr`); only the live `mb x nb` window is copied out.
     fn compute_blocks(
         &self,
         pa: Arc<Vec<Vec<f32>>>,
@@ -309,15 +350,16 @@ impl BlockedBackend {
         let tiles = self.pool.map(jobs.clone(), move |(ri, ci)| {
             let (_, mb) = rows_c[ri];
             let (_, nb) = cols_c[ci];
-            compute_macro_tile(&pa[ri], &pb[ci], mb, nb, k, t.mr, t.nr, isa)
+            compute_macro_tile(&pa[ri], &pb[ci], mb, nb, k, t, isa)
         });
         let mut c = Matrix::zeros(m, n);
         for ((ri, ci), tile) in jobs.into_iter().zip(tiles) {
             let (i0, mb) = rows[ri];
             let (j0, nb) = cols[ci];
+            let np = nb.div_ceil(t.nr) * t.nr;
             for r in 0..mb {
                 let dst = &mut c.data_mut()[(i0 + r) * n + j0..(i0 + r) * n + j0 + nb];
-                dst.copy_from_slice(&tile[r * nb..r * nb + nb]);
+                dst.copy_from_slice(&tile[r * np..r * np + nb]);
             }
         }
         c
@@ -355,57 +397,158 @@ impl BlockedBackend {
             && t.nc % sub_n == 0
             && m * n * k >= PARALLEL_FLOP_FLOOR;
 
-        let (mut c, ea, be) = if aligned {
+        let (c, errgrid) = if aligned {
             // Packing (with the encode fused in) flows through the pool
             // cache for keyed operands — a hit reuses another request's
             // panels *and* its per-tile operand sums, both immutable.
             let (pa, ea) = self.packed_a(&a, key_a, t, sub_m);
             let (pb, be) = self.packed_b(&b, key_b, t, sub_n);
-            let c = self.compute_blocks(pa, pb, m, n, k, t);
-            (c, ea, be)
+            self.compute_blocks_ft(
+                pa,
+                pb,
+                Arc::new(a),
+                Arc::new(b),
+                m,
+                n,
+                k,
+                t,
+                art.verify_every,
+                sub_m,
+                sub_n,
+                &injections,
+                ea,
+                be,
+                correct,
+            )
         } else {
-            let c = self.gemm_keyed(&a, &b, key_a, key_b);
-            (c, Arc::new(Vec::new()), Arc::new(Vec::new()))
+            // Misaligned (custom-manifest) protection geometry: compute
+            // first, then drive the shared whole-matrix interval sweep,
+            // fanning the touched tiles over the pool with on-demand
+            // per-tile checksums — same values, computed at verify time
+            // instead of pack time.
+            let mut c = self.gemm_keyed(&a, &b, key_a, key_b);
+            let mut errgrid = vec![0.0f32; gm * gn];
+            let a = Arc::new(a);
+            let b = Arc::new(b);
+            backend::run_injection_sweeps(
+                art,
+                m,
+                n,
+                sub_m,
+                sub_n,
+                &mut c,
+                &injections,
+                &mut errgrid,
+                |jobs| {
+                    let th = self.thresholds;
+                    let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+                    self.pool.map(jobs, move |(ti, tj, mut tile)| {
+                        let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
+                        let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
+                        let carried = backend::tile_carried_checksums(&a2, &b2, r0, r1, c0, c1);
+                        let (corrections, detections) =
+                            backend::verify_correct_loop(&mut tile, &carried, th, correct);
+                        (ti, tj, tile, corrections, detections)
+                    })
+                },
+            );
+            (c, errgrid)
         };
-
-        let mut errgrid = vec![0.0f32; gm * gn];
-        let a = Arc::new(a);
-        let b = Arc::new(b);
-        // The shared per-interval sweep drives fault application and
-        // writeback; this backend's verifier fans the touched tiles over
-        // the pool (disjoint protection domains) and finishes checksums
-        // from the packed operand sums when fused encoding ran.
-        backend::run_injection_sweeps(
-            art,
-            m,
-            n,
-            sub_m,
-            sub_n,
-            &mut c,
-            &injections,
-            &mut errgrid,
-            |jobs| {
-                let th = self.thresholds;
-                let (a2, b2, ea2, be2) =
-                    (Arc::clone(&a), Arc::clone(&b), Arc::clone(&ea), Arc::clone(&be));
-                self.pool.map(jobs, move |(ti, tj, mut tile)| {
-                    let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
-                    let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
-                    let carried = if ea2.is_empty() {
-                        backend::tile_carried_checksums(&a2, &b2, r0, r1, c0, c1)
-                    } else {
-                        backend::carried_from_sums(&a2, &b2, r0, r1, c0, c1, &be2[tj], &ea2[ti])
-                    };
-                    let (corrections, detections) =
-                        backend::verify_correct_loop(&mut tile, &carried, th, correct);
-                    (ti, tj, tile, corrections, detections)
-                })
-            },
-        );
 
         let cr = c.row_sums();
         let cc = c.col_sums();
         Ok((c, cr, cc, errgrid))
+    }
+
+    /// The aligned fused path: one pool job per macro tile computes the
+    /// tile with the blocked k-panel nest, then runs its own
+    /// injected-interval verify/correct sweeps in place — verification
+    /// of finished tiles overlaps compute of the remaining ones (the
+    /// paper's fusion-overlap strategy) instead of whole-matrix passes
+    /// after the full sweep. Valid because on this path protection
+    /// domains never span macro tiles (`sub_m | mc`, `sub_n | nc`,
+    /// blocks step uniformly), so each tile's local sweeps observe
+    /// exactly the state the shared whole-matrix interval walker would;
+    /// the (C, errcount grid) pair is identical to
+    /// [`backend::run_injection_sweeps`] by construction.
+    #[allow(clippy::too_many_arguments)]
+    fn compute_blocks_ft(
+        &self,
+        pa: Arc<Vec<Vec<f32>>>,
+        pb: Arc<Vec<Vec<f32>>>,
+        a: Arc<Matrix>,
+        b: Arc<Matrix>,
+        m: usize,
+        n: usize,
+        k: usize,
+        t: HostTiles,
+        verify_every: usize,
+        sub_m: usize,
+        sub_n: usize,
+        injections: &[Injection],
+        ea: Arc<Vec<Vec<f32>>>,
+        be: Arc<Vec<Vec<f32>>>,
+        correct: bool,
+    ) -> (Matrix, Vec<f32>) {
+        let rows: Vec<(usize, usize)> = row_blocks(m, t.mc).collect();
+        let cols: Vec<(usize, usize)> = col_blocks(n, t.nc).collect();
+        let ncols = cols.len();
+        // Bucket each in-bounds injection with the macro tile that owns
+        // it (blocks step uniformly by mc/nc).
+        let mut per_job: Vec<Vec<Injection>> = vec![Vec::new(); rows.len() * ncols];
+        for inj in injections {
+            if inj.row < m && inj.col < n {
+                per_job[(inj.row / t.mc) * ncols + (inj.col / t.nc)].push(*inj);
+            }
+        }
+        let per_job = Arc::new(per_job);
+        let jobs: Vec<(usize, usize)> = (0..rows.len())
+            .flat_map(|ri| (0..ncols).map(move |ci| (ri, ci)))
+            .collect();
+        let (rows_c, cols_c) = (rows.clone(), cols.clone());
+        let isa = self.isa;
+        let th = self.thresholds;
+        let results = self.pool.map(jobs.clone(), move |(ri, ci)| {
+            let (i0, mb) = rows_c[ri];
+            let (j0, nb) = cols_c[ci];
+            let mut tile = compute_macro_tile(&pa[ri], &pb[ci], mb, nb, k, t, isa);
+            let np = nb.div_ceil(t.nr) * t.nr;
+            let counts = sweep_macro_tile(
+                &mut tile,
+                np,
+                i0,
+                j0,
+                m,
+                n,
+                sub_m,
+                sub_n,
+                verify_every,
+                &per_job[ri * ncols + ci],
+                &a,
+                &b,
+                &ea[..],
+                &be[..],
+                th,
+                correct,
+            );
+            (tile, counts)
+        });
+        let gn = n.div_ceil(sub_n);
+        let mut c = Matrix::zeros(m, n);
+        let mut errgrid = vec![0.0f32; m.div_ceil(sub_m) * gn];
+        for ((ri, ci), (tile, counts)) in jobs.into_iter().zip(results) {
+            let (i0, mb) = rows[ri];
+            let (j0, nb) = cols[ci];
+            let np = nb.div_ceil(t.nr) * t.nr;
+            for r in 0..mb {
+                let dst = &mut c.data_mut()[(i0 + r) * n + j0..(i0 + r) * n + j0 + nb];
+                dst.copy_from_slice(&tile[r * np..r * np + nb]);
+            }
+            for (ti, tj, cnt) in counts {
+                errgrid[ti * gn + tj] += cnt as f32;
+            }
+        }
+        (c, errgrid)
     }
 }
 
@@ -505,43 +648,60 @@ fn col_blocks(n: usize, nc: usize) -> impl Iterator<Item = (usize, usize)> {
     (0..n).step_by(nc.max(1)).map(move |j0| (j0, nc.min(n - j0)))
 }
 
+/// Ascending `(k0, kb)` reduction panels: `kb = kc` except possibly the
+/// last. Ascending order is load-bearing — it is what lets carried
+/// accumulators reproduce the reference backend's ascending-`k` fold.
+fn k_panels(k: usize, kc: usize) -> impl Iterator<Item = (usize, usize)> {
+    (0..k).step_by(kc.max(1)).map(move |k0| (k0, kc.max(1).min(k - k0)))
+}
+
 // ---------------------------------------------------------------------
 // Packing (with optional fused checksum encoding)
 // ---------------------------------------------------------------------
 
-/// Pack rows `[i0, i0+mb)` of A into MR-row micro-panels, k-major within a
-/// panel, zero-padded to a whole panel, feeding every stored element to
-/// `sink(i, kk, v)` — the single source of truth for both the A panel
-/// layout (panel `ip` occupies `[ip*k*mr, (ip+1)*k*mr)`, element
-/// `(kk, r) -> a[i0 + ip*mr + r][kk]`) and the encode fold order
-/// (ascending `i` per `(tile, kk)`, which
-/// [`backend::tile_carried_checksums`] mirrors).
+/// Pack rows `[i0, i0+mb)` of A into the k-panel-major micro-panel
+/// layout, zero-padded to whole MR-row panels, feeding every stored
+/// element to `sink(i, kk, v)` — the single source of truth for both the
+/// A block layout and the encode fold order (ascending `i` per
+/// `(tile, kk)`, which [`backend::tile_carried_checksums`] mirrors).
+///
+/// Layout: the buffer is ordered by `kc`-deep reduction panel first,
+/// then MR-row micro-panel — panel `p` (covering `kk` in `[k0, k0+kb)`)
+/// occupies `[ipanels*mr*k0, ipanels*mr*(k0+kb))`, and within it
+/// micro-panel `ip` holds element `(kk_local, r) -> a[i0+ip*mr+r][k0 +
+/// kk_local]` at `ip*kb*mr + kk_local*mr + r`. Each panel region is
+/// exactly the PR-3 layout with `k` replaced by `kb`, so the macro-tile
+/// sweep touches one contiguous MC x KC region per k-panel iteration.
 fn pack_a_sink(
     a: &Matrix,
     i0: usize,
     mb: usize,
     mr: usize,
+    kc: usize,
     mut sink: impl FnMut(usize, usize, f32),
 ) -> Vec<f32> {
     let k = a.cols();
-    let panels = mb.div_ceil(mr);
-    let mut out = vec![0.0f32; panels * k * mr];
-    for ip in 0..panels {
-        let base = ip * k * mr;
-        for r in 0..mr.min(mb - ip * mr) {
-            let i = i0 + ip * mr + r;
-            let row = a.row(i);
-            for (kk, &v) in row.iter().enumerate() {
-                out[base + kk * mr + r] = v;
-                sink(i, kk, v);
+    let ipanels = mb.div_ceil(mr);
+    let mut out = vec![0.0f32; ipanels * k * mr];
+    for (k0, kb) in k_panels(k, kc) {
+        let pbase = ipanels * mr * k0;
+        for ip in 0..ipanels {
+            let base = pbase + ip * kb * mr;
+            for r in 0..mr.min(mb - ip * mr) {
+                let i = i0 + ip * mr + r;
+                let row = &a.row(i)[k0..k0 + kb];
+                for (kk, &v) in row.iter().enumerate() {
+                    out[base + kk * mr + r] = v;
+                    sink(i, k0 + kk, v);
+                }
             }
         }
     }
     out
 }
 
-fn pack_a(a: &Matrix, i0: usize, mb: usize, mr: usize) -> Vec<f32> {
-    pack_a_sink(a, i0, mb, mr, |_i, _kk, _v| {})
+fn pack_a(a: &Matrix, i0: usize, mb: usize, mr: usize, kc: usize) -> Vec<f32> {
+    pack_a_sink(a, i0, mb, mr, kc, |_i, _kk, _v| {})
 }
 
 /// [`pack_a`] with the encode fused in: row-range sums per protection row
@@ -559,41 +719,49 @@ fn pack_a_encode(
     i0: usize,
     mb: usize,
     mr: usize,
+    kc: usize,
     sub_m: usize,
     ea: &mut [Vec<f32>],
     isa: KernelIsa,
 ) -> Vec<f32> {
     if !isa.is_simd() {
-        return pack_a_sink(a, i0, mb, mr, |i, kk, v| ea[i / sub_m][kk] += v);
+        return pack_a_sink(a, i0, mb, mr, kc, |i, kk, v| ea[i / sub_m][kk] += v);
     }
-    let out = pack_a(a, i0, mb, mr);
+    let out = pack_a(a, i0, mb, mr, kc);
+    let k = a.cols();
     let mut i = i0;
     while i < i0 + mb {
         let ti = i / sub_m;
         let r1 = ((ti + 1) * sub_m).min(i0 + mb);
-        encode_rows(a, i, r1, &mut ea[ti], isa);
+        // Reduction panels partition `kk`, so per-panel encode calls
+        // compose into the identical full-k checksum row (each ea entry
+        // is still one ascending-`i` fold).
+        for (k0, kb) in k_panels(k, kc) {
+            encode_rows(a, i, r1, k0, &mut ea[ti][k0..k0 + kb], isa);
+        }
         i = r1;
     }
     out
 }
 
-/// Vector-resident A-side row-run encode dispatcher (see
-/// [`pack_a_encode`]); the portable arm replays the scalar sink's
-/// ascending-`i`-per-`kk` order exactly.
-fn encode_rows(a: &Matrix, r0: usize, r1: usize, ea_row: &mut [f32], isa: KernelIsa) {
+/// Vector-resident A-side row-run encode dispatcher over one reduction
+/// panel (`ea_seg[kk] += a[i][kk0 + kk]`; see [`pack_a_encode`]); the
+/// portable arm replays the scalar sink's ascending-`i`-per-`kk` order
+/// exactly.
+fn encode_rows(a: &Matrix, r0: usize, r1: usize, kk0: usize, ea_seg: &mut [f32], isa: KernelIsa) {
     match isa {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: construction verified AVX2 (Avx512 implies it — see
         // `KernelIsa::supported`).
         KernelIsa::Avx2Fma | KernelIsa::Avx512 => unsafe {
-            simd::x86::encode_rows(a, r0, r1, ea_row)
+            simd::x86::encode_rows(a, r0, r1, kk0, ea_seg)
         },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: construction verified NEON.
-        KernelIsa::Neon => unsafe { simd::neon::encode_rows(a, r0, r1, ea_row) },
+        KernelIsa::Neon => unsafe { simd::neon::encode_rows(a, r0, r1, kk0, ea_seg) },
         _ => {
             for i in r0..r1 {
-                for (s, &v) in ea_row.iter_mut().zip(a.row(i)) {
+                for (s, &v) in ea_seg.iter_mut().zip(&a.row(i)[kk0..]) {
                     *s += v;
                 }
             }
@@ -601,38 +769,47 @@ fn encode_rows(a: &Matrix, r0: usize, r1: usize, ea_row: &mut [f32], isa: Kernel
     }
 }
 
-/// Pack columns `[j0, j0+nb)` of B into NR-column micro-panels, k-major
-/// within a panel, zero-padded, feeding every stored element to
-/// `sink(j, kk, v)` — the single source of truth for both the B panel
-/// layout (panel `jp` occupies `[jp*k*nr, (jp+1)*k*nr)`, element
-/// `(kk, c) -> b[kk][j0 + jp*nr + c]`) and the encode fold order
-/// (ascending `j` per `(tile, kk)`).
+/// Pack columns `[j0, j0+nb)` of B into the k-panel-major micro-panel
+/// layout, zero-padded to whole NR-column panels, feeding every stored
+/// element to `sink(j, kk, v)` — the single source of truth for both the
+/// B panel layout and the encode fold order (ascending `j` per
+/// `(tile, kk)`).
+///
+/// Layout mirrors [`pack_a_sink`]: reduction panel `p` (covering `kk` in
+/// `[k0, k0+kb)`) occupies `[jpanels*nr*k0, jpanels*nr*(k0+kb))`, and
+/// within it micro-panel `jp` holds element `(kk_local, c) ->
+/// b[k0+kk_local][j0+jp*nr+c]` at `jp*kb*nr + kk_local*nr + c` — each
+/// panel region is the PR-3 layout with `k` replaced by `kb`.
 fn pack_b_sink(
     b: &Matrix,
     j0: usize,
     nb: usize,
     nr: usize,
+    kc: usize,
     mut sink: impl FnMut(usize, usize, f32),
 ) -> Vec<f32> {
     let k = b.rows();
-    let panels = nb.div_ceil(nr);
-    let mut out = vec![0.0f32; panels * k * nr];
-    for kk in 0..k {
-        let row = b.row(kk);
-        for jp in 0..panels {
-            let base = jp * k * nr + kk * nr;
-            for c in 0..nr.min(nb - jp * nr) {
-                let j = j0 + jp * nr + c;
-                out[base + c] = row[j];
-                sink(j, kk, row[j]);
+    let jpanels = nb.div_ceil(nr);
+    let mut out = vec![0.0f32; jpanels * k * nr];
+    for (k0, kb) in k_panels(k, kc) {
+        let pbase = jpanels * nr * k0;
+        for kk in 0..kb {
+            let row = b.row(k0 + kk);
+            for jp in 0..jpanels {
+                let base = pbase + jp * kb * nr + kk * nr;
+                for c in 0..nr.min(nb - jp * nr) {
+                    let j = j0 + jp * nr + c;
+                    out[base + c] = row[j];
+                    sink(j, k0 + kk, row[j]);
+                }
             }
         }
     }
     out
 }
 
-fn pack_b(b: &Matrix, j0: usize, nb: usize, nr: usize) -> Vec<f32> {
-    pack_b_sink(b, j0, nb, nr, |_j, _kk, _v| {})
+fn pack_b(b: &Matrix, j0: usize, nb: usize, nr: usize, kc: usize) -> Vec<f32> {
+    pack_b_sink(b, j0, nb, nr, kc, |_j, _kk, _v| {})
 }
 
 /// [`pack_b`] with the encode fused in: column-range sums per protection
@@ -654,30 +831,39 @@ fn pack_b_encode(
     j0: usize,
     nb: usize,
     nr: usize,
+    kc: usize,
     sub_n: usize,
     be: &mut [Vec<f32>],
     isa: KernelIsa,
 ) -> Vec<f32> {
     let k = b.rows();
-    let panels = nb.div_ceil(nr);
-    let mut out = vec![0.0f32; panels * k * nr];
+    let jpanels = nb.div_ceil(nr);
+    let mut out = vec![0.0f32; jpanels * k * nr];
     let vector_path =
         isa.is_simd() && nr % simd::LANES == 0 && sub_n % simd::LANES == 0;
-    for kk in 0..k {
-        let row = b.row(kk);
-        let end = j0 + nb;
-        let mut j = j0;
-        while j < end {
-            let tj = j / sub_n;
-            let tend = ((tj + 1) * sub_n).min(end);
-            let seg = &row[j..tend];
-            let off0 = j - j0;
-            be[tj][kk] += if vector_path {
-                pack_colsum(seg, &mut out, off0, nr, k, kk, isa)
-            } else {
-                pack_colsum_portable(seg, &mut out, off0, nr, k, kk)
-            };
-            j = tend;
+    // Each per-(tile, kk) sum is computed entirely within the one
+    // reduction panel that owns its `kk`, in the canonical segment
+    // order — identical to the unpartitioned pass bit for bit. The
+    // colsum helpers see the panel region with `k` standing in as `kb`
+    // (each region is exactly the single-panel layout).
+    for (k0, kb) in k_panels(k, kc) {
+        let region = &mut out[jpanels * nr * k0..jpanels * nr * (k0 + kb)];
+        for kk in 0..kb {
+            let row = b.row(k0 + kk);
+            let end = j0 + nb;
+            let mut j = j0;
+            while j < end {
+                let tj = j / sub_n;
+                let tend = ((tj + 1) * sub_n).min(end);
+                let seg = &row[j..tend];
+                let off0 = j - j0;
+                be[tj][k0 + kk] += if vector_path {
+                    pack_colsum(seg, region, off0, nr, kb, kk, isa)
+                } else {
+                    pack_colsum_portable(seg, region, off0, nr, kb, kk)
+                };
+                j = tend;
+            }
         }
     }
     out
@@ -731,28 +917,42 @@ fn pack_colsum(
 // Macro tile + micro kernel
 // ---------------------------------------------------------------------
 
-/// One (mb x nb) macro tile from packed operands; returns the row-major
-/// tile buffer.
-#[allow(clippy::too_many_arguments)]
+/// One macro tile from packed operands, as the GotoBLAS-style k-panel
+/// nest: the outermost loop walks ascending `KC`-deep reduction panels,
+/// and within each panel the jp/ip micro-panel sweep runs the
+/// accumulate-into micro-kernels against that panel's contiguous MC x KC
+/// / KC x NC pack regions. Accumulators round-trip through the tile
+/// buffer between panels — exact f32 stores/reloads, so any `kc`
+/// reproduces the full-`k` register-resident fold bitwise.
+///
+/// The returned buffer is padded to whole micro-panels:
+/// `mb.div_ceil(mr)*mr` rows by `nb.div_ceil(nr)*nr` columns (row stride
+/// = the latter). Padded lanes multiply packed zeros and stay `0.0`;
+/// callers copy out the live `mb x nb` window.
 fn compute_macro_tile(
     pa: &[f32],
     pb: &[f32],
     mb: usize,
     nb: usize,
     k: usize,
-    mr: usize,
-    nr: usize,
+    t: HostTiles,
     isa: KernelIsa,
 ) -> Vec<f32> {
-    let mut out = vec![0.0f32; mb * nb];
+    let (mr, nr) = (t.mr, t.nr);
     let ipanels = mb.div_ceil(mr);
     let jpanels = nb.div_ceil(nr);
-    for jp in 0..jpanels {
-        let pbp = &pb[jp * k * nr..(jp + 1) * k * nr];
-        for ip in 0..ipanels {
-            let pap = &pa[ip * k * mr..(ip + 1) * k * mr];
-            let (r0, c0) = (ip * mr, jp * nr);
-            dispatch_micro(k, pap, pbp, &mut out, r0, c0, mb, nb, mr, nr, isa);
+    let np = jpanels * nr;
+    let mut out = vec![0.0f32; ipanels * mr * np];
+    for (k0, kb) in k_panels(k, t.kc) {
+        let pa_panel = &pa[ipanels * mr * k0..ipanels * mr * (k0 + kb)];
+        let pb_panel = &pb[jpanels * nr * k0..jpanels * nr * (k0 + kb)];
+        for jp in 0..jpanels {
+            let pbp = &pb_panel[jp * kb * nr..(jp + 1) * kb * nr];
+            for ip in 0..ipanels {
+                let pap = &pa_panel[ip * kb * mr..(ip + 1) * kb * mr];
+                let idx0 = ip * mr * np + jp * nr;
+                dispatch_micro(kb, pap, pbp, &mut out, idx0, np, mr, nr, isa);
+            }
         }
     }
     out
@@ -762,17 +962,17 @@ fn compute_macro_tile(
 /// geometry matches the kernel it was written for (always true for
 /// tiles from [`host_tiles_for`]); anything else — scalar ISA, custom
 /// geometry, or an ISA compiled out — takes the portable
-/// [`micro_into`]/[`micro_generic`] path.
+/// [`micro_into`]/[`micro_generic`] path. All kernels accumulate into
+/// the padded tile at `out[idx0 + r * stride ..]` (load, fold `kb`
+/// terms, store back).
 #[allow(clippy::too_many_arguments)]
 fn dispatch_micro(
-    k: usize,
+    kb: usize,
     pap: &[f32],
     pbp: &[f32],
     out: &mut [f32],
-    r0: usize,
-    c0: usize,
-    mb: usize,
-    nb: usize,
+    idx0: usize,
+    stride: usize,
     mr: usize,
     nr: usize,
     isa: KernelIsa,
@@ -781,48 +981,46 @@ fn dispatch_micro(
         #[cfg(target_arch = "x86_64")]
         (KernelIsa::Avx2Fma, 8, 8) => {
             // SAFETY: construction verified avx2+fma on this host.
-            let buf = unsafe { simd::x86::micro_8x8(k, pap, pbp) };
-            simd::write_clamped(&buf, 8, 8, out, r0, c0, mb, nb);
+            unsafe { simd::x86::micro_8x8(kb, pap, pbp, out, idx0, stride) }
         }
         #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
         (KernelIsa::Avx512, 8, 16) => {
             // SAFETY: construction verified avx512f on this host.
-            let buf = unsafe { simd::x86::micro_8x16(k, pap, pbp) };
-            simd::write_clamped(&buf, 8, 16, out, r0, c0, mb, nb);
+            unsafe { simd::x86::micro_8x16(kb, pap, pbp, out, idx0, stride) }
         }
         #[cfg(target_arch = "aarch64")]
         (KernelIsa::Neon, 8, 8) => {
             // SAFETY: construction verified NEON on this host.
-            let buf = unsafe { simd::neon::micro_8x8(k, pap, pbp) };
-            simd::write_clamped(&buf, 8, 8, out, r0, c0, mb, nb);
+            unsafe { simd::neon::micro_8x8(kb, pap, pbp, out, idx0, stride) }
         }
         _ => match (mr, nr) {
-            (8, 8) => micro_into::<8, 8>(k, pap, pbp, out, r0, c0, mb, nb),
-            (8, 4) => micro_into::<8, 4>(k, pap, pbp, out, r0, c0, mb, nb),
-            (4, 8) => micro_into::<4, 8>(k, pap, pbp, out, r0, c0, mb, nb),
-            (4, 4) => micro_into::<4, 4>(k, pap, pbp, out, r0, c0, mb, nb),
-            (8, 16) => micro_into::<8, 16>(k, pap, pbp, out, r0, c0, mb, nb),
-            _ => micro_generic(k, mr, nr, pap, pbp, out, r0, c0, mb, nb),
+            (8, 8) => micro_into::<8, 8>(kb, pap, pbp, out, idx0, stride),
+            (8, 4) => micro_into::<8, 4>(kb, pap, pbp, out, idx0, stride),
+            (4, 8) => micro_into::<4, 8>(kb, pap, pbp, out, idx0, stride),
+            (4, 4) => micro_into::<4, 4>(kb, pap, pbp, out, idx0, stride),
+            (8, 16) => micro_into::<8, 16>(kb, pap, pbp, out, idx0, stride),
+            _ => micro_generic(kb, mr, nr, pap, pbp, out, idx0, stride),
         },
     }
 }
 
-/// The register-tiled micro-kernel: an MR x NR accumulator array carried
-/// across the full reduction (single ascending-k fold per element — the
-/// reference backend's fold order), then clamped into the tile buffer.
-#[allow(clippy::too_many_arguments)]
+/// The register-tiled micro-kernel, panel-carried: load the MR x NR
+/// accumulator array from the padded tile, fold one reduction panel on
+/// top (ascending `kk` — chained panels reproduce the reference
+/// backend's single ascending-k fold per element exactly), store back.
 fn micro_into<const MR: usize, const NR: usize>(
-    k: usize,
+    kb: usize,
     pap: &[f32],
     pbp: &[f32],
     out: &mut [f32],
-    r0: usize,
-    c0: usize,
-    mb: usize,
-    nb: usize,
+    idx0: usize,
+    stride: usize,
 ) {
     let mut acc = [[0.0f32; NR]; MR];
-    for kk in 0..k {
+    for (r, acc_row) in acc.iter_mut().enumerate() {
+        acc_row.copy_from_slice(&out[idx0 + r * stride..idx0 + r * stride + NR]);
+    }
+    for kk in 0..kb {
         let af = &pap[kk * MR..kk * MR + MR];
         let bf = &pbp[kk * NR..kk * NR + NR];
         for r in 0..MR {
@@ -832,30 +1030,28 @@ fn micro_into<const MR: usize, const NR: usize>(
             }
         }
     }
-    let rows = MR.min(mb - r0);
-    let cols = NR.min(nb - c0);
-    for (r, acc_row) in acc.iter().enumerate().take(rows) {
-        let dst = &mut out[(r0 + r) * nb + c0..(r0 + r) * nb + c0 + cols];
-        dst.copy_from_slice(&acc_row[..cols]);
+    for (r, acc_row) in acc.iter().enumerate() {
+        out[idx0 + r * stride..idx0 + r * stride + NR].copy_from_slice(acc_row);
     }
 }
 
 /// Fallback for tile tables outside the monomorphized MR/NR set.
 #[allow(clippy::too_many_arguments)]
 fn micro_generic(
-    k: usize,
+    kb: usize,
     mr: usize,
     nr: usize,
     pap: &[f32],
     pbp: &[f32],
     out: &mut [f32],
-    r0: usize,
-    c0: usize,
-    mb: usize,
-    nb: usize,
+    idx0: usize,
+    stride: usize,
 ) {
     let mut acc = vec![0.0f32; mr * nr];
-    for kk in 0..k {
+    for r in 0..mr {
+        acc[r * nr..r * nr + nr].copy_from_slice(&out[idx0 + r * stride..idx0 + r * stride + nr]);
+    }
+    for kk in 0..kb {
         let af = &pap[kk * mr..kk * mr + mr];
         let bf = &pbp[kk * nr..kk * nr + nr];
         for r in 0..mr {
@@ -866,12 +1062,78 @@ fn micro_generic(
             }
         }
     }
-    let rows = mr.min(mb - r0);
-    let cols = nr.min(nb - c0);
-    for r in 0..rows {
-        let dst = &mut out[(r0 + r) * nb + c0..(r0 + r) * nb + c0 + cols];
-        dst.copy_from_slice(&acc[r * nr..r * nr + cols]);
+    for r in 0..mr {
+        out[idx0 + r * stride..idx0 + r * stride + nr].copy_from_slice(&acc[r * nr..r * nr + nr]);
     }
+}
+
+// ---------------------------------------------------------------------
+// Per-macro-tile verify pipelining
+// ---------------------------------------------------------------------
+
+/// Run one macro tile's injected-interval verify/correct sweeps in
+/// place on its padded tile buffer (row stride `np`, tile origin
+/// `(i0, j0)`): faults land per ascending verification interval, every
+/// touched protection tile is verified against carried checksums
+/// finished from the packed operand sums, and corrected values fold
+/// back before the next interval's faults apply. Returns the per-tile
+/// errcounts `(ti, tj, corrections + detections)` — exactly the
+/// macro-local slice of [`backend::run_injection_sweeps`], since on the
+/// aligned path protection domains never span macro tiles.
+#[allow(clippy::too_many_arguments)]
+fn sweep_macro_tile(
+    tile: &mut [f32],
+    np: usize,
+    i0: usize,
+    j0: usize,
+    m: usize,
+    n: usize,
+    sub_m: usize,
+    sub_n: usize,
+    verify_every: usize,
+    injections: &[Injection],
+    a: &Matrix,
+    b: &Matrix,
+    ea: &[Vec<f32>],
+    be: &[Vec<f32>],
+    th: Thresholds,
+    correct: bool,
+) -> Vec<(usize, usize, usize)> {
+    if injections.is_empty() {
+        return Vec::new();
+    }
+    let ve = verify_every.max(1);
+    let mut by_interval: BTreeMap<usize, Vec<Injection>> = BTreeMap::new();
+    for inj in injections {
+        by_interval.entry(inj.step / ve).or_default().push(*inj);
+    }
+    let mut out = Vec::new();
+    for injs in by_interval.values() {
+        let mut touched: HashSet<(usize, usize)> = HashSet::new();
+        for inj in injs {
+            tile[(inj.row - i0) * np + (inj.col - j0)] += inj.magnitude;
+            touched.insert((inj.row / sub_m, inj.col / sub_n));
+        }
+        for (ti, tj) in touched {
+            let (r0, r1) = (ti * sub_m, ((ti + 1) * sub_m).min(m));
+            let (c0, c1) = (tj * sub_n, ((tj + 1) * sub_n).min(n));
+            let mut snap = Matrix::from_fn(r1 - r0, c1 - c0, |i, j| {
+                tile[(r0 - i0 + i) * np + (c0 - j0 + j)]
+            });
+            let carried = backend::carried_from_sums(a, b, r0, r1, c0, c1, &be[tj], &ea[ti]);
+            let (corrections, detections) =
+                backend::verify_correct_loop(&mut snap, &carried, th, correct);
+            if corrections > 0 {
+                for i in 0..r1 - r0 {
+                    for j in 0..c1 - c0 {
+                        tile[(r0 - i0 + i) * np + (c0 - j0 + j)] = snap.at(i, j);
+                    }
+                }
+            }
+            out.push((ti, tj, corrections + detections));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -957,13 +1219,25 @@ mod tests {
             let (gm, gn) = (m / sub_m, n / sub_n);
             for isa in KernelIsa::supported() {
                 let t = host_tiles_for(isa, m, n, k);
-                let mut ea: Vec<Vec<f32>> = vec![vec![0.0f32; k]; gm];
-                let mut be: Vec<Vec<f32>> = vec![vec![0.0f32; k]; gn];
-                for (i0, mb) in row_blocks(m, t.mc) {
-                    pack_a_encode(&a, i0, mb, t.mr, sub_m, &mut ea, isa);
-                }
-                for (j0, nb) in col_blocks(n, t.nc) {
-                    pack_b_encode(&b, j0, nb, t.nr, sub_n, &mut be, isa);
+                // Reduction panels partition `kk`, so per-KC-panel encode
+                // passes must compose into THE SAME sums bit for bit at
+                // any KC — including a KC that divides nothing evenly.
+                let encode = |kc: usize| {
+                    let mut ea: Vec<Vec<f32>> = vec![vec![0.0f32; k]; gm];
+                    let mut be: Vec<Vec<f32>> = vec![vec![0.0f32; k]; gn];
+                    for (i0, mb) in row_blocks(m, t.mc) {
+                        pack_a_encode(&a, i0, mb, t.mr, kc, sub_m, &mut ea, isa);
+                    }
+                    for (j0, nb) in col_blocks(n, t.nc) {
+                        pack_b_encode(&b, j0, nb, t.nr, kc, sub_n, &mut be, isa);
+                    }
+                    (ea, be)
+                };
+                let (ea, be) = encode(t.kc);
+                for kc in [24usize, 64, k] {
+                    let (ea_kc, be_kc) = encode(kc);
+                    assert_eq!(ea_kc, ea, "{isa:?} KC={kc}: eᵀA sums drifted across KC");
+                    assert_eq!(be_kc, be, "{isa:?} KC={kc}: Be sums drifted across KC");
                 }
                 for ti in 0..gm {
                     for tj in 0..gn {
@@ -991,7 +1265,7 @@ mod tests {
                 let kb =
                     Some(OperandKey::whole(OperandId::Seed { rows: k, cols: n, seed: 32 }, k, n));
                 let fresh_pa: Vec<Vec<f32>> =
-                    row_blocks(m, t.mc).map(|(i0, mb)| pack_a(&a, i0, mb, t.mr)).collect();
+                    row_blocks(m, t.mc).map(|(i0, mb)| pack_a(&a, i0, mb, t.mr, t.kc)).collect();
                 for pass in ["fill", "hit"] {
                     let (pa_c, ea_c) = bk.packed_a(&a, ka, t, sub_m);
                     let (_, be_c) = bk.packed_b(&b, kb, t, sub_n);
@@ -1069,12 +1343,100 @@ mod tests {
     #[test]
     fn packing_layout_roundtrips() {
         let a = Matrix::from_fn(5, 3, |i, j| (i * 3 + j) as f32);
-        let pa = pack_a(&a, 1, 4, 4);
-        // panel 0, k=1, r=2 -> a[1 + 2][1] = a[3][1] = 10
+        // Full-depth KC (= k = 3): single reduction panel, the PR-3 layout.
+        let pa = pack_a(&a, 1, 4, 4, 3);
+        // micro-panel 0, kk=1, r=2 -> a[1 + 2][1] = a[3][1] = 10
         assert_eq!(pa[4 + 2], 10.0);
-        let pb = pack_b(&a.transpose(), 1, 4, 4);
-        // transpose is 3x5; panel 0, kk=1, c=2 -> bT[1][1 + 2] = a[3][1]
+        let pb = pack_b(&a.transpose(), 1, 4, 4, 3);
+        // transpose is 3x5; micro-panel 0, kk=1, c=2 -> bT[1][1 + 2] = a[3][1]
         assert_eq!(pb[4 + 2], 10.0);
+        // KC=2 splits k=3 into panels [0,2) and [2,3). The second panel's
+        // region starts at ipanels*mr*k0 = 1*4*2 = 8; element (kk_local=0,
+        // r=2) -> a[3][2] = 11 at 8 + 0*4 + 2.
+        let pa2 = pack_a(&a, 1, 4, 4, 2);
+        assert_eq!(pa2[..8], pa[..8], "first panel must be the kk<2 prefix layout");
+        assert_eq!(pa2[8 + 2], 11.0);
+        // B side mirrors: panel base jpanels*nr*k0 = 8, (kk_local=0, c=2)
+        // -> bT[2][1 + 2] = a[3][2] = 11.
+        let pb2 = pack_b(&a.transpose(), 1, 4, 4, 2);
+        assert_eq!(pb2[..8], pb[..8], "first panel must be the kk<2 prefix layout");
+        assert_eq!(pb2[8 + 2], 11.0);
+    }
+
+    #[test]
+    fn kc_blocking_is_bitwise_invariant_per_isa() {
+        // The tentpole numerical contract: between reduction panels the
+        // accumulator tile round-trips through exact f32 stores/reloads,
+        // so ANY KC reproduces the full-k register-resident fold bitwise
+        // — C must be byte-identical across KC choices on a given ISA.
+        let (m, k, n) = (128usize, 300usize, 96usize); // above the flop floor, ragged k
+        let a = Matrix::rand_uniform(m, k, 41);
+        let b = Matrix::rand_uniform(k, n, 42);
+        for isa in KernelIsa::supported() {
+            let full = BlockedBackend::with_threads_isa(2, isa)
+                .with_kc(Some(k))
+                .gemm(&a, &b);
+            for kc in [8usize, 64, 128, 300] {
+                let got = BlockedBackend::with_threads_isa(2, isa)
+                    .with_kc(Some(kc))
+                    .gemm(&a, &b);
+                assert_eq!(got.data(), full.data(), "{isa:?} KC={kc} drifted from KC=k");
+            }
+            // The class-resolved default depth is one of the same folds.
+            let default = BlockedBackend::with_threads_isa(2, isa).gemm(&a, &b);
+            assert_eq!(default.data(), full.data(), "{isa:?} default KC drifted");
+        }
+    }
+
+    #[test]
+    fn kc_partitioned_cache_matches_disabled_twin_under_eviction() {
+        // Satellite: KC-partitioned cached panels through hit/miss/evict
+        // churn stay bitwise identical to a cache-disabled twin, and
+        // panels packed at different KC never serve each other (PanelKey
+        // carries kc). The budget fits roughly one operand pair, so
+        // cycling three seed pairs forces evictions and re-fills.
+        let (m, k, n) = (96usize, 160usize, 96usize);
+        let budget = 2 * (m * k + k * n) * 4; // ~one pair + slack, in bytes
+        let cache = Arc::new(PackCache::new(budget));
+        let kc64 = BlockedBackend::with_threads(1)
+            .with_kc(Some(64))
+            .with_pack_cache(Some(Arc::clone(&cache)));
+        let twin64 = BlockedBackend::with_threads(1).with_kc(Some(64));
+        let key = |rows: usize, cols: usize, seed: u64| {
+            Some(OperandKey::whole(OperandId::Seed { rows, cols, seed }, rows, cols))
+        };
+        let pairs: Vec<(Matrix, Matrix, u64)> = (0..3)
+            .map(|s| {
+                let seed = 500 + s as u64 * 10;
+                (Matrix::rand_uniform(m, k, seed), Matrix::rand_uniform(k, n, seed + 1), seed)
+            })
+            .collect();
+        for round in 0..3 {
+            for (a, b, seed) in &pairs {
+                let got = kc64.gemm_keyed(a, b, key(m, k, *seed), key(k, n, *seed + 1));
+                let want = twin64.gemm_keyed(a, b, None, None);
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "round {round} seed {seed}: cached KC=64 run drifted from twin"
+                );
+            }
+        }
+        let churn = cache.stats();
+        assert!(churn.misses > 2, "eviction churn expected, stats {churn:?}");
+        // Same operands, same cache, KC=128: must MISS (distinct PanelKey
+        // kc), not reuse the KC=64 panels — and still match its twin.
+        let before = cache.stats();
+        let kc128 = BlockedBackend::with_threads(1)
+            .with_kc(Some(128))
+            .with_pack_cache(Some(Arc::clone(&cache)));
+        let twin128 = BlockedBackend::with_threads(1).with_kc(Some(128));
+        let (a, b, seed) = &pairs[2];
+        let got = kc128.gemm_keyed(a, b, key(m, k, *seed), key(k, n, *seed + 1));
+        assert_eq!(got.data(), twin128.gemm_keyed(a, b, None, None).data());
+        let after = cache.stats();
+        assert_eq!(after.hits, before.hits, "KC=128 must not hit KC=64 panels");
+        assert_eq!(after.misses, before.misses + 2, "both operands must re-pack at KC=128");
     }
 
     #[test]

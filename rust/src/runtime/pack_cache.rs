@@ -111,6 +111,12 @@ pub struct PanelKey {
     pub block: usize,
     /// Micro-tile extent: `mr` for A, `nr` for B.
     pub micro: usize,
+    /// Reduction-panel depth (KC) the panels were packed for. The
+    /// packed byte layout is k-panel-major, so two KC values lay the
+    /// same operand out differently — the key keeps them apart even
+    /// when every other field matches (e.g. an `FTGEMM_FORCE_KC` run
+    /// sharing a pool cache with default-depth traffic).
+    pub kc: usize,
     /// Kernel ISA the panels were packed for (panel layout and the
     /// canonical checksum fold order are ISA-keyed).
     pub isa: KernelIsa,
@@ -289,6 +295,7 @@ mod tests {
             role: PanelRole::A,
             block: 64,
             micro: 8,
+            kc: 64,
             isa: KernelIsa::Scalar,
             prot,
         }
@@ -324,6 +331,30 @@ mod tests {
         let mut k3 = key(1, 16);
         k3.role = PanelRole::B;
         assert!(c.get(&k3).is_none(), "role is part of the key");
+    }
+
+    #[test]
+    fn kc_is_part_of_the_key_so_cross_kc_collisions_are_impossible() {
+        // Panels packed at KC=64 and KC=128 have different byte layouts;
+        // a lookup at one depth must never serve the other's entry, for
+        // any combination of the remaining fields.
+        let c = PackCache::new(1 << 20);
+        for prot in [0usize, 16] {
+            c.insert(key(prot as u64, prot), value(100));
+            let mut other = key(prot as u64, prot);
+            other.kc = 128;
+            assert!(c.get(&other).is_none(), "KC must partition entries (prot {prot})");
+            other.kc = 64;
+            assert!(c.get(&other).is_some(), "matching KC must still hit (prot {prot})");
+        }
+        // And hashing/equality treat kc symmetrically: inserting the
+        // KC=128 twin creates a second live entry, not a replacement.
+        let mut twin = key(0, 0);
+        twin.kc = 128;
+        c.insert(twin, value(100));
+        assert!(c.get(&key(0, 0)).is_some());
+        assert!(c.get(&twin).is_some());
+        assert_eq!(c.stats().entries, 3);
     }
 
     #[test]

@@ -10,11 +10,15 @@
 //!   aarch64 NEON availability, overridable with `FTGEMM_FORCE_SCALAR`.
 //! * **Micro-kernels** — AVX2+FMA 8x8, AVX-512F 8x16 (behind the
 //!   `avx512` cargo feature: its intrinsics postdate the crate MSRV),
-//!   and NEON 8x8. Each carries the full MRxNR accumulator tile in
-//!   vector registers across the whole `k` reduction — the same single
-//!   ascending-`k` fold per element as the scalar `micro_into`, so the
-//!   only numerical divergence is FMA's fused rounding (one rounding
-//!   per multiply-add instead of two). See DESIGN.md "Kernel dispatch".
+//!   and NEON 8x8. Each loads the MRxNR accumulator tile from the macro
+//!   tile, carries it in vector registers across one `kc`-deep reduction
+//!   panel, and stores it back — f32 loads/stores are exact, so chaining
+//!   panels in ascending `k` produces the same single ascending-`k` fold
+//!   per element as a register-resident full-`k` sweep (and as the
+//!   scalar `micro_into`), bitwise, at any `kc`. The only numerical
+//!   divergence from the reference backend is FMA's fused rounding (one
+//!   rounding per multiply-add instead of two). See DESIGN.md "Kernel
+//!   dispatch" and "Blocking hierarchy".
 //! * **Canonical checksum folds** — [`fold8`]/[`sum8`] define ONE
 //!   lane-split summation order for the B-side operand sums (`B·e`),
 //!   used identically by the scalar path, the SIMD packing fast paths,
@@ -154,28 +158,6 @@ pub fn sum8(xs: &[f32]) -> f32 {
     fold8(lanes)
 }
 
-/// Clamped writeback shared by the SIMD micro-kernels: copy the full
-/// MRxNR accumulator buffer into the macro-tile output, trimming edge
-/// panels exactly like `micro_into`'s tail handling.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn write_clamped(
-    buf: &[f32],
-    mr: usize,
-    nr: usize,
-    out: &mut [f32],
-    r0: usize,
-    c0: usize,
-    mb: usize,
-    nb: usize,
-) {
-    let rows = mr.min(mb - r0);
-    let cols = nr.min(nb - c0);
-    for r in 0..rows {
-        let dst = &mut out[(r0 + r) * nb + c0..(r0 + r) * nb + c0 + cols];
-        dst.copy_from_slice(&buf[r * nr..r * nr + cols]);
-    }
-}
-
 // ---------------------------------------------------------------------
 // x86-64: AVX2+FMA (and feature-gated AVX-512F)
 // ---------------------------------------------------------------------
@@ -186,19 +168,33 @@ pub(crate) mod x86 {
     use crate::abft::matrix::Matrix;
     use core::arch::x86_64::*;
 
-    /// 8x8 AVX2+FMA micro-kernel: eight 8-lane C accumulators live in
-    /// registers across the full `k` reduction (single ascending-`k`
-    /// fold per element, FMA rounding), then spill row-major.
+    /// 8x8 AVX2+FMA micro-kernel, panel-carried: load the eight 8-lane C
+    /// accumulators from the macro tile (`out[idx0 + r * stride ..]`),
+    /// fold one `kc`-deep reduction panel on top in registers (ascending
+    /// `kk`, FMA rounding), and store them back. Exact f32 round trips
+    /// make a chain of these calls bitwise equal to one full-`k` sweep.
     ///
     /// # Safety
     /// Caller must have verified `avx2` and `fma` at backend
-    /// construction, and `pap`/`pbp` must hold at least `k * 8` packed
-    /// elements each.
+    /// construction; `pap`/`pbp` hold at least `kc * 8` packed elements
+    /// each, and `out[idx0 + r * stride .. + 8]` is in bounds for
+    /// `r < 8`.
     #[target_feature(enable = "avx2,fma")]
-    pub(crate) unsafe fn micro_8x8(k: usize, pap: &[f32], pbp: &[f32]) -> [f32; 64] {
-        debug_assert!(pap.len() >= k * 8 && pbp.len() >= k * 8);
+    pub(crate) unsafe fn micro_8x8(
+        kc: usize,
+        pap: &[f32],
+        pbp: &[f32],
+        out: &mut [f32],
+        idx0: usize,
+        stride: usize,
+    ) {
+        debug_assert!(pap.len() >= kc * 8 && pbp.len() >= kc * 8);
+        debug_assert!(idx0 + 7 * stride + 8 <= out.len());
         let mut acc = [_mm256_setzero_ps(); 8];
-        for kk in 0..k {
+        for (r, a) in acc.iter_mut().enumerate() {
+            *a = _mm256_loadu_ps(out.as_ptr().add(idx0 + r * stride));
+        }
+        for kk in 0..kc {
             let bv = _mm256_loadu_ps(pbp.as_ptr().add(kk * 8));
             let af = pap.as_ptr().add(kk * 8);
             for (r, a) in acc.iter_mut().enumerate() {
@@ -206,24 +202,36 @@ pub(crate) mod x86 {
                 *a = _mm256_fmadd_ps(av, bv, *a);
             }
         }
-        let mut buf = [0.0f32; 64];
         for (r, a) in acc.iter().enumerate() {
-            _mm256_storeu_ps(buf.as_mut_ptr().add(r * 8), *a);
+            _mm256_storeu_ps(out.as_mut_ptr().add(idx0 + r * stride), *a);
         }
-        buf
     }
 
-    /// 8x16 AVX-512F micro-kernel: eight 16-lane C accumulators.
+    /// 8x16 AVX-512F micro-kernel, panel-carried: eight 16-lane C
+    /// accumulators loaded from / stored back to the macro tile (same
+    /// carried-panel contract as [`micro_8x8`]).
     ///
     /// # Safety
-    /// Caller must have verified `avx512f`; `pap` holds `k * 8` and
-    /// `pbp` holds `k * 16` packed elements.
+    /// Caller must have verified `avx512f`; `pap` holds `kc * 8` and
+    /// `pbp` holds `kc * 16` packed elements, and
+    /// `out[idx0 + r * stride .. + 16]` is in bounds for `r < 8`.
     #[cfg(feature = "avx512")]
     #[target_feature(enable = "avx512f")]
-    pub(crate) unsafe fn micro_8x16(k: usize, pap: &[f32], pbp: &[f32]) -> [f32; 128] {
-        debug_assert!(pap.len() >= k * 8 && pbp.len() >= k * 16);
+    pub(crate) unsafe fn micro_8x16(
+        kc: usize,
+        pap: &[f32],
+        pbp: &[f32],
+        out: &mut [f32],
+        idx0: usize,
+        stride: usize,
+    ) {
+        debug_assert!(pap.len() >= kc * 8 && pbp.len() >= kc * 16);
+        debug_assert!(idx0 + 7 * stride + 16 <= out.len());
         let mut acc = [_mm512_setzero_ps(); 8];
-        for kk in 0..k {
+        for (r, a) in acc.iter_mut().enumerate() {
+            *a = _mm512_loadu_ps(out.as_ptr().add(idx0 + r * stride));
+        }
+        for kk in 0..kc {
             let bv = _mm512_loadu_ps(pbp.as_ptr().add(kk * 16));
             let af = pap.as_ptr().add(kk * 8);
             for (r, a) in acc.iter_mut().enumerate() {
@@ -231,11 +239,9 @@ pub(crate) mod x86 {
                 *a = _mm512_fmadd_ps(av, bv, *a);
             }
         }
-        let mut buf = [0.0f32; 128];
         for (r, a) in acc.iter().enumerate() {
-            _mm512_storeu_ps(buf.as_mut_ptr().add(r * 16), *a);
+            _mm512_storeu_ps(out.as_mut_ptr().add(idx0 + r * stride), *a);
         }
-        buf
     }
 
     /// Fused B-panel store + column-sum for one protection-tile row
@@ -283,29 +289,38 @@ pub(crate) mod x86 {
         fold8(lanes)
     }
 
-    /// Vector-resident A-side encode for one tile-bounded row run:
-    /// `ea_row[kk] += a[i][kk]` for `i` in `[r0, r1)`, with the 8-lane
-    /// accumulator (lanes = adjacent `kk`) held in a register across
-    /// the whole run. Per `kk` lane the adds land in ascending `i` —
-    /// the scalar sink's fold order, bit-exactly.
+    /// Vector-resident A-side encode for one tile-bounded row run over
+    /// one reduction panel: `ea_seg[kk] += a[i][kk0 + kk]` for `i` in
+    /// `[r0, r1)`, with the 8-lane accumulator (lanes = adjacent `kk`)
+    /// held in a register across the whole run. Per `kk` lane the adds
+    /// land in ascending `i` — the scalar sink's fold order, bit-exactly
+    /// — and panels partition `kk`, so per-panel calls compose into the
+    /// identical full-`k` checksum row.
     ///
     /// # Safety
-    /// Caller must have verified `avx2` at backend construction.
+    /// Caller must have verified `avx2` at backend construction, and
+    /// `kk0 + ea_seg.len() <= a.cols()`.
     #[target_feature(enable = "avx2")]
-    pub(crate) unsafe fn encode_rows(a: &Matrix, r0: usize, r1: usize, ea_row: &mut [f32]) {
-        let k = ea_row.len();
+    pub(crate) unsafe fn encode_rows(
+        a: &Matrix,
+        r0: usize,
+        r1: usize,
+        kk0: usize,
+        ea_seg: &mut [f32],
+    ) {
+        let kb = ea_seg.len();
         let mut kk = 0;
-        while kk + LANES <= k {
-            let mut acc = _mm256_loadu_ps(ea_row.as_ptr().add(kk));
+        while kk + LANES <= kb {
+            let mut acc = _mm256_loadu_ps(ea_seg.as_ptr().add(kk));
             for i in r0..r1 {
-                acc = _mm256_add_ps(acc, _mm256_loadu_ps(a.row(i).as_ptr().add(kk)));
+                acc = _mm256_add_ps(acc, _mm256_loadu_ps(a.row(i).as_ptr().add(kk0 + kk)));
             }
-            _mm256_storeu_ps(ea_row.as_mut_ptr().add(kk), acc);
+            _mm256_storeu_ps(ea_seg.as_mut_ptr().add(kk), acc);
             kk += LANES;
         }
-        for kk in kk..k {
+        for kk in kk..kb {
             for i in r0..r1 {
-                ea_row[kk] += a.row(i)[kk];
+                ea_seg[kk] += a.row(i)[kk0 + kk];
             }
         }
     }
@@ -321,19 +336,34 @@ pub(crate) mod neon {
     use crate::abft::matrix::Matrix;
     use core::arch::aarch64::*;
 
-    /// 8x8 NEON micro-kernel: eight rows of two 4-lane C accumulators
-    /// held in registers across the full `k` reduction (FMA rounding,
-    /// single ascending-`k` fold per element).
+    /// 8x8 NEON micro-kernel, panel-carried: eight rows of two 4-lane C
+    /// accumulators loaded from the macro tile, folded across one
+    /// `kc`-deep reduction panel (FMA rounding, ascending `kk`), and
+    /// stored back — the same exact-round-trip carried-panel contract as
+    /// the AVX2 kernel.
     ///
     /// # Safety
     /// NEON availability verified at backend construction; `pap`/`pbp`
-    /// hold at least `k * 8` packed elements each.
+    /// hold at least `kc * 8` packed elements each, and
+    /// `out[idx0 + r * stride .. + 8]` is in bounds for `r < 8`.
     #[target_feature(enable = "neon")]
-    pub(crate) unsafe fn micro_8x8(k: usize, pap: &[f32], pbp: &[f32]) -> [f32; 64] {
-        debug_assert!(pap.len() >= k * 8 && pbp.len() >= k * 8);
+    pub(crate) unsafe fn micro_8x8(
+        kc: usize,
+        pap: &[f32],
+        pbp: &[f32],
+        out: &mut [f32],
+        idx0: usize,
+        stride: usize,
+    ) {
+        debug_assert!(pap.len() >= kc * 8 && pbp.len() >= kc * 8);
+        debug_assert!(idx0 + 7 * stride + 8 <= out.len());
         let zero = vdupq_n_f32(0.0);
         let mut acc = [[zero; 2]; 8];
-        for kk in 0..k {
+        for (r, a) in acc.iter_mut().enumerate() {
+            a[0] = vld1q_f32(out.as_ptr().add(idx0 + r * stride));
+            a[1] = vld1q_f32(out.as_ptr().add(idx0 + r * stride + 4));
+        }
+        for kk in 0..kc {
             let b0 = vld1q_f32(pbp.as_ptr().add(kk * 8));
             let b1 = vld1q_f32(pbp.as_ptr().add(kk * 8 + 4));
             let af = pap.as_ptr().add(kk * 8);
@@ -343,12 +373,10 @@ pub(crate) mod neon {
                 a[1] = vfmaq_f32(a[1], b1, av);
             }
         }
-        let mut buf = [0.0f32; 64];
         for (r, a) in acc.iter().enumerate() {
-            vst1q_f32(buf.as_mut_ptr().add(r * 8), a[0]);
-            vst1q_f32(buf.as_mut_ptr().add(r * 8 + 4), a[1]);
+            vst1q_f32(out.as_mut_ptr().add(idx0 + r * stride), a[0]);
+            vst1q_f32(out.as_mut_ptr().add(idx0 + r * stride + 4), a[1]);
         }
-        buf
     }
 
     /// NEON twin of the AVX2 `pack_colsum`: two 4-lane accumulators
@@ -394,25 +422,35 @@ pub(crate) mod neon {
     }
 
     /// NEON twin of the AVX2 `encode_rows`: vector-resident A-side
-    /// row-run encode, ascending `i` per `kk` lane.
+    /// row-run encode over one reduction panel (`ea_seg[kk] +=
+    /// a[i][kk0 + kk]`), ascending `i` per `kk` lane; panels partition
+    /// `kk`, so per-panel calls compose into the identical full-`k`
+    /// checksum row.
     ///
     /// # Safety
-    /// NEON availability verified at backend construction.
+    /// NEON availability verified at backend construction, and
+    /// `kk0 + ea_seg.len() <= a.cols()`.
     #[target_feature(enable = "neon")]
-    pub(crate) unsafe fn encode_rows(a: &Matrix, r0: usize, r1: usize, ea_row: &mut [f32]) {
-        let k = ea_row.len();
+    pub(crate) unsafe fn encode_rows(
+        a: &Matrix,
+        r0: usize,
+        r1: usize,
+        kk0: usize,
+        ea_seg: &mut [f32],
+    ) {
+        let kb = ea_seg.len();
         let mut kk = 0;
-        while kk + 4 <= k {
-            let mut acc = vld1q_f32(ea_row.as_ptr().add(kk));
+        while kk + 4 <= kb {
+            let mut acc = vld1q_f32(ea_seg.as_ptr().add(kk));
             for i in r0..r1 {
-                acc = vaddq_f32(acc, vld1q_f32(a.row(i).as_ptr().add(kk)));
+                acc = vaddq_f32(acc, vld1q_f32(a.row(i).as_ptr().add(kk0 + kk)));
             }
-            vst1q_f32(ea_row.as_mut_ptr().add(kk), acc);
+            vst1q_f32(ea_seg.as_mut_ptr().add(kk), acc);
             kk += 4;
         }
-        for kk in kk..k {
+        for kk in kk..kb {
             for i in r0..r1 {
-                ea_row[kk] += a.row(i)[kk];
+                ea_seg[kk] += a.row(i)[kk0 + kk];
             }
         }
     }
@@ -459,6 +497,32 @@ mod tests {
         for isa in isas {
             assert!(!isa.name().is_empty());
         }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_micro_kernel_accumulates_across_panels_bit_identically() {
+        if !(std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma"))
+        {
+            return;
+        }
+        // The carried-accumulator contract: splitting the reduction into
+        // kc panels (exact f32 store/reload between them) must reproduce
+        // the single full-k sweep bitwise, for any split.
+        let k = 24usize;
+        let pap: Vec<f32> = (0..k * 8).map(|i| ((i * 37 % 61) as f32) * 0.125 - 3.0).collect();
+        let pbp: Vec<f32> = (0..k * 8).map(|i| ((i * 53 % 71) as f32) * 0.0625 - 2.0).collect();
+        let stride = 11usize; // deliberately != 8: padded-tile strides
+        let mut full = vec![0.5f32; 8 * stride];
+        let mut split = full.clone();
+        unsafe { x86::micro_8x8(k, &pap, &pbp, &mut full, 0, stride) };
+        for (k0, kb) in [(0usize, 10usize), (10, 9), (19, 5)] {
+            unsafe {
+                x86::micro_8x8(kb, &pap[k0 * 8..], &pbp[k0 * 8..], &mut split, 0, stride)
+            };
+        }
+        assert_eq!(full, split);
     }
 
     #[cfg(target_arch = "x86_64")]

@@ -716,6 +716,115 @@ fn prop_blocked_backend_is_elementwise_equal_to_reference() {
     }
 }
 
+/// Satellite pin for the KC-blocked loop nest: for every host-supported
+/// ISA and every reduction depth KC ∈ {64, 128, k}, the blocked backend
+/// pinned to that depth (via `with_kc` — instance-level, so the parallel
+/// test harness stays race-free) remains element-wise equal to the
+/// reference backend with EXACTLY equal errcount grids, clean and
+/// SEU-injected alike. On top of cross-backend parity, every output —
+/// C, the carried checksums, and the errcount grid — must be BITWISE
+/// identical across the three KC choices on a given ISA: between
+/// reduction panels the accumulator tile round-trips through exact f32
+/// stores/reloads and the per-KC-panel partial eᵀA/Be sums partition
+/// the canonical fold, so splitting the reduction can change nothing.
+#[test]
+fn prop_kc_blocking_preserves_parity_and_is_bitwise_stable() {
+    use ftgemm::runtime::engine::Tensor;
+    use ftgemm::runtime::{Backend, BlockedBackend, KernelIsa, Manifest, ReferenceBackend};
+
+    let man = Manifest::builtin();
+    let mut reference = ReferenceBackend::new();
+    // One artifact per kind/level/shape axis of interest: plain GEMM,
+    // the three FT levels, detect-only — mediums exercise ragged KC=64
+    // panels (256 % 64 == 0 but KC < k), the huge shape multi-block rows.
+    let names =
+        ["gemm_medium", "ftgemm_tb_medium", "ftgemm_warp_medium", "ftgemm_thread_huge", "ftdetect_medium"];
+    for isa in KernelIsa::supported() {
+        let mut rng = Pcg32::seeded(0x6C0DE);
+        for name in names {
+            let art = man.get(name).unwrap();
+            let is_ft = art.max_inj > 0;
+            let a = Matrix::rand_uniform(art.m, art.k, rng.next_u64());
+            let b = Matrix::rand_uniform(art.k, art.n, rng.next_u64());
+            let plan = if is_ft {
+                InjectionPlan::random_seu(
+                    art.m,
+                    art.n,
+                    art.k,
+                    art.verify_every,
+                    art.sub_m,
+                    art.sub_n,
+                    3,
+                    &mut rng,
+                )
+            } else {
+                InjectionPlan::none()
+            };
+            for clean in [true, false] {
+                if !clean && !is_ft {
+                    continue;
+                }
+                let inputs = || {
+                    let mut v = vec![
+                        Tensor::new(vec![art.m, art.k], a.data().to_vec()),
+                        Tensor::new(vec![art.k, art.n], b.data().to_vec()),
+                    ];
+                    if is_ft {
+                        let p = if clean { InjectionPlan::none() } else { plan.clone() };
+                        v.push(Tensor::new(vec![art.max_inj, 4], p.to_tensor(art.max_inj)));
+                    }
+                    v
+                };
+                let want = reference.execute(art, inputs()).unwrap();
+                let mut pinned: Option<Vec<Tensor>> = None;
+                for kc in [64usize, 128, art.k] {
+                    let mut blocked =
+                        BlockedBackend::with_threads_isa(4, isa).with_kc(Some(kc));
+                    let got = blocked.execute(art, inputs()).unwrap();
+                    for ((g, w), spec) in got.iter().zip(&want).zip(&art.outputs) {
+                        if spec.role == "errcount" {
+                            assert_eq!(
+                                g.data, w.data,
+                                "{name} [{}] KC={kc} clean={clean}: errcount grids diverged",
+                                isa.name()
+                            );
+                            continue;
+                        }
+                        let diff = g
+                            .data
+                            .iter()
+                            .zip(&w.data)
+                            .map(|(x, y)| (x - y).abs())
+                            .fold(0.0f32, f32::max);
+                        let tol =
+                            if spec.role == "c" { 1e-3 + 4e-6 * art.k as f32 } else { 0.1 };
+                        assert!(
+                            diff < tol,
+                            "{name} [{}] KC={kc} clean={clean}: {:?} diverged by {diff}",
+                            isa.name(),
+                            spec.role
+                        );
+                    }
+                    match &pinned {
+                        None => pinned = Some(got),
+                        Some(first) => {
+                            for ((g, f), spec) in got.iter().zip(first).zip(&art.outputs) {
+                                assert_eq!(
+                                    g.data, f.data,
+                                    "{name} [{}] KC={kc} clean={clean}: {:?} not bitwise \
+                                     stable across KC",
+                                    isa.name(),
+                                    spec.role
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// The serving-level parity witness: coordinators over a blocked-backend
 /// engine and a reference-backend engine agree (and agree with the host
 /// matmul) across randomized shapes including the irregular codegen
